@@ -1,0 +1,145 @@
+//! END-TO-END DRIVER — the full three-layer system on a real workload.
+//!
+//!     make artifacts && cargo run --release --example edge_serving
+//!
+//! Loads the multi-shot-trained ULN-S model (L2/L1: JAX + Pallas, AOT-
+//! lowered to HLO text), serves 20k batched classification requests of
+//! SynthMNIST images through the L3 coordinator (bounded queue → dynamic
+//! micro-batcher → worker pool) with BOTH engines:
+//!
+//!   * the native bit-packed Rust engine, and
+//!   * the PJRT engine executing the AOT artifact (Python not running!),
+//!
+//! cross-checks that the two agree prediction-for-prediction, and reports
+//! accuracy, throughput and latency percentiles. Results are recorded in
+//! EXPERIMENTS.md §E2E.
+
+use std::sync::mpsc;
+use std::time::Duration;
+use uleen::coordinator::batcher::BatcherConfig;
+use uleen::coordinator::server::{Server, ServerConfig};
+use uleen::data::synth_mnist;
+use uleen::runtime::{InferenceEngine, NativeEngine, PjrtEngine};
+
+fn serve(
+    label: &str,
+    make: impl Fn(usize) -> anyhow::Result<Box<dyn InferenceEngine>>,
+    ds: &uleen::data::Dataset,
+    requests: usize,
+    workers: usize,
+) -> anyhow::Result<Vec<usize>> {
+    let cfg = ServerConfig {
+        batcher: BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_micros(200),
+            capacity: 8192,
+        },
+        workers,
+    };
+    let server = Server::start(cfg, make)?;
+    let (tx, rx) = mpsc::channel();
+    let n_test = ds.n_test();
+    let mut id2idx = std::collections::HashMap::new();
+    let mut submitted = 0usize;
+    let mut received = 0usize;
+    let mut preds = vec![usize::MAX; requests];
+    let mut correct = 0usize;
+    // Closed-loop load: keep a bounded number of requests in flight so the
+    // reported latency is service latency, not open-loop queueing delay.
+    let window = 256usize;
+    macro_rules! recv_one {
+        () => {{
+            let (id, p, _) = rx.recv_timeout(Duration::from_secs(60))?;
+            let idx = id2idx[&id];
+            preds[idx] = p;
+            if p == ds.test_y[idx % n_test] as usize {
+                correct += 1;
+            }
+            received += 1;
+        }};
+    }
+    for i in 0..requests {
+        let row = ds.test_row(i % n_test).to_vec();
+        loop {
+            match server.submit(row.clone(), tx.clone()) {
+                Ok(id) => {
+                    id2idx.insert(id, i);
+                    submitted += 1;
+                    break;
+                }
+                Err(uleen::coordinator::batcher::SubmitError::Full) => {
+                    std::thread::sleep(Duration::from_micros(20));
+                }
+                Err(e) => anyhow::bail!("submit: {e:?}"),
+            }
+        }
+        while submitted - received > window {
+            recv_one!();
+        }
+    }
+    drop(tx);
+    while received < submitted {
+        recv_one!();
+    }
+    let rep = server.metrics.report(16);
+    server.shutdown();
+    println!(
+        "[{label}] {} req | acc {:.4} | {:.0} inf/s | p50/p99 latency {:.0}/{:.0} µs | batch fill {:.0}% | rejected {}",
+        submitted,
+        correct as f64 / submitted as f64,
+        rep.throughput_rps,
+        rep.latency_us_p50,
+        rep.latency_us_p99,
+        rep.mean_batch_fill * 100.0,
+        rep.rejected_full
+    );
+    Ok(preds)
+}
+
+fn main() -> anyhow::Result<()> {
+    let requests = 20_000;
+    // Same seed + split as training: test rows are indices 8000..10000 of
+    // the stream, DISJOINT from the model's training data.
+    let ds = synth_mnist(2024, 8000, 2000);
+    let (model, meta) = uleen::bench::load_model("uln_s.uln")?;
+    println!(
+        "model: {} ({:.1} KiB, trained acc {:.4})",
+        model.name,
+        model.size_kib(),
+        uleen::bench::meta_accuracy(&meta)
+    );
+
+    // Native engine serving.
+    let m = model.clone();
+    let native_preds = serve(
+        "native",
+        move |_| Ok(Box::new(NativeEngine::new(m.clone())) as Box<dyn InferenceEngine>),
+        &ds,
+        requests,
+        4,
+    )?;
+
+    // PJRT engine serving (the AOT artifact on the hot path).
+    let hlo = uleen::bench::artifacts_dir().join("uln_s_b16.hlo.txt");
+    let pjrt_preds = serve(
+        "pjrt-aot",
+        move |_| {
+            Ok(Box::new(PjrtEngine::load(&hlo, 16, 784)?) as Box<dyn InferenceEngine>)
+        },
+        &ds,
+        requests,
+        2,
+    )?;
+
+    let agree = native_preds
+        .iter()
+        .zip(pjrt_preds.iter())
+        .filter(|(a, b)| a == b)
+        .count();
+    println!(
+        "engine agreement: {agree}/{requests} predictions identical ({})",
+        if agree == requests { "exact ✓" } else { "MISMATCH ✗" }
+    );
+    anyhow::ensure!(agree == requests, "native and PJRT engines disagreed");
+    Ok(())
+}

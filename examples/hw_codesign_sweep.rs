@@ -1,0 +1,67 @@
+//! Hardware co-design sweep — the accuracy/energy/area interplay the paper
+//! highlights in §V-D ("ULEEN establishes an interplay between accuracy,
+//! efficiency, and area, which can be explored depending on the
+//! application").
+//!
+//!     cargo run --release --example hw_codesign_sweep
+//!
+//! Trains a grid of one-shot models on SynthMNIST, sizes an ASIC + FPGA
+//! instance for each, and prints the co-design frontier: for every
+//! accuracy level, the cheapest design that reaches it.
+
+use uleen::bench::table::{f1, f2, i0, pct, Table};
+use uleen::data::synth_mnist;
+use uleen::hw::arch::{AcceleratorInstance, Target};
+use uleen::train::oneshot::{train_oneshot, OneShotConfig};
+
+fn main() -> anyhow::Result<()> {
+    let ds = synth_mnist(2024, 4000, 1000);
+    let mut t = Table::new(
+        "HW co-design sweep (one-shot models on SynthMNIST)",
+        &["bits", "n", "entries", "Acc.%", "KiB", "ASIC nJ/inf", "ASIC mm²", "FPGA LUTs", "FPGA kIPS"],
+    );
+    let mut points = Vec::new();
+    for bits in [2usize, 4] {
+        for n in [12usize, 20] {
+            for entries in [128usize, 1024] {
+                let cfg = OneShotConfig {
+                    inputs_per_filter: n,
+                    entries_per_filter: entries,
+                    therm_bits: bits,
+                    ..Default::default()
+                };
+                let (model, _) = train_oneshot(&ds, &cfg);
+                let acc = model.evaluate(&ds.test_x, &ds.test_y, ds.num_features).accuracy();
+                let asic_inst = AcceleratorInstance::generate(&model, Target::Asic);
+                let asic = uleen::hw::asic::implement(&asic_inst);
+                let mut fpga_inst = AcceleratorInstance::generate(&model, Target::Fpga);
+                let fpga = uleen::hw::fpga::implement(&mut fpga_inst);
+                t.row(vec![
+                    format!("{bits}"),
+                    format!("{n}"),
+                    format!("{entries}"),
+                    pct(acc),
+                    f2(model.size_kib()),
+                    f1(asic.nj_per_inf),
+                    f2(asic.area_mm2),
+                    i0(fpga.luts as f64),
+                    i0(fpga.throughput_kips),
+                ]);
+                points.push((acc, asic.nj_per_inf, format!("b{bits}/n{n}/e{entries}")));
+            }
+        }
+    }
+    t.print();
+
+    // energy-accuracy frontier
+    points.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    let mut best = 0.0f64;
+    println!("energy-ordered frontier (design → accuracy, only improvements):");
+    for (acc, nj, label) in &points {
+        if *acc > best {
+            best = *acc;
+            println!("  {label:<16} {:.1} nJ/inf → {:.2}% accuracy", nj, acc * 100.0);
+        }
+    }
+    Ok(())
+}

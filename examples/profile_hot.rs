@@ -1,0 +1,12 @@
+fn main() -> anyhow::Result<()> {
+    use uleen::runtime::{InferenceEngine, NativeEngine};
+    let (model, _) = uleen::model::uln_format::load(std::path::Path::new("artifacts/uln_s.uln"))?;
+    let ds = uleen::data::synth_mnist(2024, 64, 256);
+    let mut native = NativeEngine::new(model);
+    let mut acc = 0usize;
+    for _ in 0..200 {
+        acc += native.classify(&ds.test_x, 256)?.iter().sum::<usize>();
+    }
+    println!("{acc}");
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Quickstart — train a ULEEN model from scratch in pure Rust (one-shot
+//! rule), evaluate it, prune it, save/load it, and size its hardware.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! No artifacts needed: everything here runs on the synthetic datasets
+//! generated in-process.
+
+use uleen::data::synth_uci::{synth_uci, uci_spec};
+use uleen::hw::arch::{AcceleratorInstance, Target};
+use uleen::model::uln_format;
+use uleen::train::oneshot::{train_oneshot, OneShotConfig};
+use uleen::train::prune::prune_model;
+use uleen::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    // 1. a dataset (synthetic stand-in for UCI Vowel — 10 features, 11 classes)
+    let ds = synth_uci(2024, uci_spec("vowel").unwrap());
+    println!("dataset: {} ({} train / {} test, {} classes)",
+        ds.name, ds.n_train(), ds.n_test(), ds.num_classes);
+
+    // 2. one-shot training: counting Bloom filters + bleaching
+    let cfg = OneShotConfig {
+        inputs_per_filter: 10,
+        entries_per_filter: 128,
+        therm_bits: 6,
+        ..Default::default()
+    };
+    let (mut model, report) = train_oneshot(&ds, &cfg);
+    let acc = model.evaluate(&ds.test_x, &ds.test_y, ds.num_features).accuracy();
+    println!("one-shot: bleach={} test_acc={:.4} size={:.2} KiB",
+        report.bleach, acc, model.size_kib());
+
+    // 3. prune 30% of RAM nodes per discriminator (correlation-ranked)
+    prune_model(&mut model, &ds, 0.3);
+    let acc_pruned = model.evaluate(&ds.test_x, &ds.test_y, ds.num_features).accuracy();
+    println!("pruned 30%: test_acc={:.4} size={:.2} KiB", acc_pruned, model.size_kib());
+
+    // 4. save / reload through the .uln interchange format
+    let path = std::env::temp_dir().join("quickstart_vowel.uln");
+    let mut meta = Json::obj();
+    meta.set("name", Json::Str("quickstart_vowel".into()))
+        .set("test_accuracy", Json::Num(acc_pruned));
+    uln_format::save(&model, &meta, &path)?;
+    let (reloaded, _) = uln_format::load(&path)?;
+    let acc_reload = reloaded.evaluate(&ds.test_x, &ds.test_y, ds.num_features).accuracy();
+    assert_eq!(acc_pruned, acc_reload, "save/load must be lossless");
+    println!("saved + reloaded: {} (accuracy identical)", path.display());
+
+    // 5. size the hardware for both targets
+    for target in [Target::Fpga, Target::Asic] {
+        let mut inst = AcceleratorInstance::generate(&reloaded, target);
+        match target {
+            Target::Fpga => {
+                let r = uleen::hw::fpga::implement(&mut inst);
+                println!("FPGA: {} LUTs, {:.1} MHz, {:.0} kIPS, {:.3} µJ/inf",
+                    r.luts, r.freq_mhz, r.throughput_kips, r.uj_per_inf_steady);
+            }
+            Target::Asic => {
+                let r = uleen::hw::asic::implement(&inst);
+                println!("ASIC: {:.2} mm², {:.0} kIPS, {:.1} nJ/inf",
+                    r.area_mm2, r.throughput_kips, r.nj_per_inf);
+            }
+        }
+    }
+    Ok(())
+}

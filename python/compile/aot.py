@@ -1,0 +1,239 @@
+"""AOT compile path — the ONE-TIME Python stage (`make artifacts`).
+
+Produces everything the Rust runtime needs, then gets out of the way:
+
+* `artifacts/data/*.uds`            — synthetic datasets (cross-checked
+                                      bit-identical with the Rust generators)
+* `artifacts/uln_{s,m,l}.uln`       — multi-shot-trained model zoo (Table I)
+* `artifacts/uln_l_noprune.uln`,
+  `artifacts/ms_single.uln`         — Fig 10 ablation points
+* `artifacts/pruned/uln_l_p*.uln`   — Fig 13 pruning sweep family
+* `artifacts/uci/uln_<ds>.uln`      — Table IV per-dataset models
+* `artifacts/uln_{s,m,l}_b{1,16}.hlo.txt` — inference graphs lowered to HLO
+  text (Pallas kernels inlined via interpret mode; HLO TEXT, not serialized
+  protos — xla_extension 0.5.1 rejects jax≥0.5's 64-bit ids)
+* `artifacts/zoo.json`              — metadata (accuracies, sizes, configs)
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts [--quick]
+"""
+
+import argparse
+import copy
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from compile import data as D
+from compile import encoding
+from compile import model as M
+from compile import train as T
+from compile import uln
+
+SEED = 2024
+MNIST_TRAIN, MNIST_TEST = 8000, 2000
+
+
+def to_hlo_text(fn, *example_args):
+    """Lower a jitted fn to HLO TEXT (see /opt/xla-example/gen_hlo.py)."""
+    from jax._src.lib import xla_client as xc
+
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default printer elides big literals as
+    # "{...}", which the text parser then reads back as garbage — the model
+    # tables/thresholds ARE large constants, so full printing is essential.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def binarized(model_dict):
+    return {
+        "thresholds": model_dict["thresholds"],
+        "submodels": [M.binarize_submodel(sm) for sm in model_dict["submodels"]],
+    }
+
+
+def export_model(model_dict, meta, path, therm_kind):
+    mb = binarized(model_dict)
+    uln.save(
+        {"thresholds": np.asarray(mb["thresholds"]),
+         "submodels": [{k: np.asarray(v) for k, v in sm.items()} for sm in mb["submodels"]]},
+        meta, path, therm_kind=therm_kind)
+    return mb
+
+
+def export_hlo(model_bin, batch, num_features, path, block_b):
+    x_spec = jax.ShapeDtypeStruct((batch, num_features), np.float32)
+
+    def fn(x):
+        return M.inference_forward(model_bin, x, use_pallas=True, block_b=block_b)
+
+    text = to_hlo_text(fn, x_spec)
+    with open(path, "w") as fh:
+        fh.write(text)
+    return len(text)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny epoch counts (CI smoke, NOT the real build)")
+    ap.add_argument("--skip-data", action="store_true")
+    args = ap.parse_args()
+    np.seterr(over="ignore")
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    os.makedirs(f"{out}/data", exist_ok=True)
+    os.makedirs(f"{out}/pruned", exist_ok=True)
+    os.makedirs(f"{out}/uci", exist_ok=True)
+    t_start = time.time()
+    zoo = {"seed": SEED, "mnist_train": MNIST_TRAIN, "mnist_test": MNIST_TEST,
+           "models": {}, "uci": {}, "pruned": [], "ablation": {}}
+
+    # ---------------- datasets ----------------
+    print("== datasets ==", flush=True)
+    mnist = D.synth_mnist(SEED, MNIST_TRAIN, MNIST_TEST)
+    if not args.skip_data:
+        D.save_uds(mnist, f"{out}/data/synth_mnist.uds")
+        print(f"  synth_mnist checksum={mnist.checksum():#018x}")
+        for spec in D.UCI_SPECS:
+            ds = D.synth_uci(SEED, spec)
+            D.save_uds(ds, f"{out}/data/synth_{spec.name}.uds")
+            print(f"  synth_{spec.name} checksum={ds.checksum():#018x}")
+
+    ep = (3, 1) if args.quick else (15, 4)  # (epochs, finetune)
+    ep_l = (2, 1) if args.quick else (10, 3)
+
+    # ---------------- model zoo (Table I) ----------------
+    print("== zoo ==", flush=True)
+    zoo_models = {}
+    for spec, (epochs, ft) in ((M.ULN_S, ep), (M.ULN_M, ep), (M.ULN_L, ep_l)):
+        md, info = T.train_multishot(
+            spec, mnist, epochs=epochs, finetune_epochs=ft, prune_ratio=0.0,
+            batch=64, lr=0.02, dropout_p=0.5)
+        # keep the unpruned state for the ablation + pruning sweep
+        md_noprune = copy.deepcopy(md)
+        T.prune(md, mnist.train_x, mnist.train_y, 0.3)
+        T.fit(md, mnist.train_x, mnist.train_y, mnist.test_x, mnist.test_y,
+              epochs=ft, batch=64, seed=11, lr=0.01, dropout_p=0.5)
+        acc = T.evaluate(md, mnist.test_x, mnist.test_y)
+        sub_meta = []
+        for s, sm in zip(spec.submodels, md["submodels"]):
+            # per-submodel standalone accuracy (paper Table I per-SM rows)
+            one = {"thresholds": md["thresholds"], "submodels": [sm]}
+            sacc = T.evaluate(one, mnist.test_x, mnist.test_y)
+            sub_meta.append({
+                "inputs_per_filter": s.inputs_per_filter,
+                "entries_per_filter": s.entries_per_filter,
+                "accuracy": sacc,
+            })
+        meta = {
+            "name": spec.name, "dataset": "synth_mnist", "trainer": "multishot",
+            "test_accuracy": acc, "therm_bits": spec.therm_bits,
+            "prune_ratio": 0.3, "submodels": sub_meta,
+            "size_kib": M.model_size_kib(md),
+        }
+        export_model(md, meta, f"{out}/{spec.name}.uln", spec.therm_kind)
+        zoo["models"][spec.name] = meta
+        zoo_models[spec.name] = (md, md_noprune, info)
+        print(f"  {spec.name}: acc={acc:.4f} size={meta['size_kib']:.1f} KiB", flush=True)
+
+    # ---------------- ablation models (Fig 10) ----------------
+    print("== ablation ==", flush=True)
+    uln_l_md, uln_l_noprune, _ = zoo_models["uln_l"]
+    acc_np = T.evaluate(uln_l_noprune, mnist.test_x, mnist.test_y)
+    export_model(uln_l_noprune,
+                 {"name": "uln_l_noprune", "dataset": "synth_mnist",
+                  "test_accuracy": acc_np,
+                  "size_kib": M.model_size_kib(uln_l_noprune)},
+                 f"{out}/uln_l_noprune.uln", M.ULN_L.therm_kind)
+    # single-submodel multi-shot (the "+Multi-shot" ablation point)
+    ms_spec = M.ModelSpec("ms_single", 2, (M.SubmodelSpec(16, 256),))
+    ms_md, ms_info = T.train_multishot(
+        ms_spec, mnist, epochs=ep[0], finetune_epochs=0, prune_ratio=0.0,
+        batch=64, lr=0.02, dropout_p=0.5)
+    export_model(ms_md,
+                 {"name": "ms_single", "dataset": "synth_mnist",
+                  "test_accuracy": ms_info["test_accuracy"],
+                  "size_kib": M.model_size_kib(ms_md)},
+                 f"{out}/ms_single.uln", ms_spec.therm_kind)
+    zoo["ablation"] = {
+        "ms_single": ms_info["test_accuracy"],
+        "uln_l_noprune": acc_np,
+        "uln_l": zoo["models"]["uln_l"]["test_accuracy"],
+    }
+
+    # ---------------- pruning sweep (Fig 13) ----------------
+    print("== pruning sweep ==", flush=True)
+    ratios = [0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 0.92, 0.94, 0.96, 0.98]
+    if args.quick:
+        ratios = [0.0, 0.3, 0.7, 0.9]
+    for r in ratios:
+        mdp = copy.deepcopy(uln_l_noprune)
+        if r > 0:
+            T.prune(mdp, mnist.train_x, mnist.train_y, r)
+            T.fit(mdp, mnist.train_x, mnist.train_y, epochs=1, batch=64,
+                  seed=13, lr=0.01, dropout_p=0.5, log=lambda s: None)
+        acc = T.evaluate(mdp, mnist.test_x, mnist.test_y)
+        size = M.model_size_kib(mdp)
+        tag = f"{int(round(r * 100)):02d}"
+        export_model(mdp, {"name": f"uln_l_p{tag}", "dataset": "synth_mnist",
+                           "test_accuracy": acc, "prune_ratio": r,
+                           "size_kib": size},
+                     f"{out}/pruned/uln_l_p{tag}.uln", M.ULN_L.therm_kind)
+        zoo["pruned"].append({"ratio": r, "accuracy": acc, "size_kib": size})
+        print(f"  p={r:.2f}: acc={acc:.4f} size={size:.1f} KiB", flush=True)
+
+    # ---------------- Table IV per-dataset models ----------------
+    print("== uci models ==", flush=True)
+    uci_epochs = {"letter": 12, "satimage": 12, "shuttle": 12}
+    for spec in D.UCI_SPECS:
+        ds = D.synth_uci(SEED, spec)
+        msub = (M.SubmodelSpec(6, 64), M.SubmodelSpec(9, 64), M.SubmodelSpec(12, 128))
+        mspec = M.ModelSpec(f"uln_{spec.name}", 8, msub)
+        epochs = uci_epochs.get(spec.name, 50)
+        if args.quick:
+            epochs = 2
+        md, info = T.train_multishot(
+            mspec, ds, epochs=epochs, finetune_epochs=max(2, epochs // 6),
+            prune_ratio=0.3, batch=32, lr=0.02, dropout_p=0.25,
+            log=lambda s: None)
+        meta = {"name": mspec.name, "dataset": ds.name, "trainer": "multishot",
+                "test_accuracy": info["test_accuracy"],
+                "size_kib": M.model_size_kib(md)}
+        export_model(md, meta, f"{out}/uci/uln_{spec.name}.uln", mspec.therm_kind)
+        zoo["uci"][spec.name] = meta
+        print(f"  {spec.name}: acc={info['test_accuracy']:.4f} "
+              f"size={meta['size_kib']:.2f} KiB", flush=True)
+
+    # ---------------- BNN baseline (Table II / Fig 11 accuracy) ----------
+    print("== bnn baseline ==", flush=True)
+    from compile import bnn
+
+    zoo["bnn"] = bnn.train_all(mnist, epochs=2 if args.quick else 8,
+                               log=lambda s: print(s, flush=True))
+
+    # ---------------- AOT lowering to HLO text ----------------
+    print("== hlo export ==", flush=True)
+    for name in ("uln_s", "uln_m", "uln_l"):
+        md, _, _ = zoo_models[name]
+        mb = binarized(md)
+        for batch, block in ((1, 1), (16, 8)):
+            path = f"{out}/{name}_b{batch}.hlo.txt"
+            nbytes = export_hlo(mb, batch, mnist.num_features, path, block)
+            print(f"  {path}: {nbytes} bytes", flush=True)
+
+    zoo["build_seconds"] = time.time() - t_start
+    with open(f"{out}/zoo.json", "w") as fh:
+        json.dump(zoo, fh, indent=1)
+    print(f"== done in {zoo['build_seconds']:.0f}s ==")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,314 @@
+"""Synthetic datasets — bit-identical mirror of rust/src/data/.
+
+The Rust side generates each sample from an independent PRNG stream
+(`Rng::for_item(seed, domain, index)`); here we vectorise those streams
+across samples with numpy uint64 arrays (wrapping arithmetic), consuming
+draws in EXACTLY the same per-sample order. Integer-only rasterization and
+IEEE-exact float derivations keep the two generators bit-identical — the
+cross-language checksum test (python/tests/test_data.py + rust data::io)
+enforces this.
+"""
+
+from dataclasses import dataclass
+
+import numpy as np
+
+U64 = np.uint64
+DOMAIN_MNIST = 0x4D4E4953
+DOMAIN_UCI = 0x55434931
+IMG_W = IMG_H = 28
+IMG_PIXELS = IMG_W * IMG_H
+Q = 256
+
+_SM_GAMMA = 0x9E3779B97F4A7C15
+_SM_M1 = 0xBF58476D1CE4E5B9
+_SM_M2 = 0x94D049BB133111EB
+
+
+def _sm_mix(z):
+    z = (z ^ (z >> U64(30))) * U64(_SM_M1)
+    z = (z ^ (z >> U64(27))) * U64(_SM_M2)
+    return z ^ (z >> U64(31))
+
+
+def _splitmix_next(state):
+    """One SplitMix64 step. Returns (new_state, output); both uint64 arrays."""
+    state = state + U64(_SM_GAMMA)
+    return state, _sm_mix(state)
+
+
+def _rotl(x, k):
+    return (x << U64(k)) | (x >> U64(64 - k))
+
+
+class VecRng:
+    """Vectorised Xoshiro256** — one independent stream per array lane.
+
+    Mirrors rust `util::rng::Rng` exactly (same seeding via SplitMix64).
+    """
+
+    def __init__(self, seeds):
+        s = np.asarray(seeds, dtype=np.uint64).copy()
+        lanes = []
+        for _ in range(4):
+            s, out = _splitmix_next(s)
+            lanes.append(out)
+        self.s = lanes  # list of 4 uint64 arrays
+
+    @classmethod
+    def for_item(cls, seed, domain, indices):
+        """Mirror of `Rng::for_item` for an array of item indices."""
+        idx = np.asarray(indices, dtype=np.uint64)
+        sm1 = U64(seed) ^ (U64(domain) * U64(0xA24BAED4963EE407))
+        _, a = _splitmix_next(np.broadcast_to(sm1, idx.shape).copy())
+        sm2 = a ^ (idx * U64(0x9FB21C651E98DF25))
+        _, b = _splitmix_next(sm2)
+        return cls(b)
+
+    def next_u64(self):
+        s0, s1, s2, s3 = self.s
+        r = _rotl(s1 * U64(5), 7) * U64(9)
+        t = s1 << U64(17)
+        s2 = s2 ^ s0
+        s3 = s3 ^ s1
+        s1 = s1 ^ s2
+        s0 = s0 ^ s3
+        s2 = s2 ^ t
+        s3 = _rotl(s3, 45)
+        self.s = [s0, s1, s2, s3]
+        return r
+
+    def below(self, bound):
+        return self.next_u64() % U64(bound)
+
+    def range_i64(self, lo, hi):
+        return lo + self.below(hi - lo + 1).astype(np.int64)
+
+    def f64(self):
+        return (self.next_u64() >> U64(11)).astype(np.float64) * (1.0 / (1 << 53))
+
+    def normal_clt(self):
+        acc = np.zeros(np.shape(self.s[0]), dtype=np.float64)
+        for _ in range(12):
+            acc = acc + self.f64()
+        return acc - 6.0
+
+
+# ---------------------------------------------------------------------------
+# SynthMNIST (mirror of rust/src/data/synth_mnist.rs)
+# ---------------------------------------------------------------------------
+
+DIGIT_SEGMENTS = {
+    0: [(9, 5, 18, 5), (18, 5, 19, 23), (19, 23, 9, 23), (9, 23, 8, 5), (8, 5, 9, 5)],
+    1: [(14, 4, 14, 24), (14, 4, 10, 9), (11, 24, 17, 24)],
+    2: [(8, 7, 12, 5), (12, 5, 18, 6), (18, 6, 19, 12), (19, 12, 8, 23), (8, 23, 20, 23)],
+    3: [(8, 5, 19, 5), (19, 5, 14, 13), (14, 13, 19, 17), (19, 17, 18, 22), (18, 22, 8, 23)],
+    4: [(16, 4, 7, 17), (7, 17, 21, 17), (17, 10, 17, 24)],
+    5: [(19, 5, 8, 5), (8, 5, 8, 13), (8, 13, 17, 13), (17, 13, 18, 18), (18, 18, 16, 23), (16, 23, 8, 23)],
+    6: [(18, 5, 11, 6), (11, 6, 9, 14), (9, 14, 9, 22), (9, 22, 18, 23), (18, 23, 19, 15), (19, 15, 9, 15)],
+    7: [(8, 5, 20, 5), (20, 5, 12, 24), (10, 14, 17, 14)],
+    8: [(9, 5, 18, 5), (18, 5, 18, 13), (18, 13, 9, 13), (9, 13, 9, 5), (9, 13, 8, 23), (8, 23, 19, 23), (19, 23, 18, 13)],
+    9: [(19, 14, 9, 14), (9, 14, 9, 6), (9, 6, 18, 5), (18, 5, 19, 14), (19, 14, 18, 24), (18, 24, 11, 24)],
+}
+
+# pixel-centre coordinates in Q8.8, flattened row-major like the rust loop
+_PXQ = (np.arange(IMG_W, dtype=np.int64) * Q + Q // 2)[None, :].repeat(IMG_H, axis=0).reshape(-1)
+_PYQ = (np.arange(IMG_H, dtype=np.int64) * Q + Q // 2)[:, None].repeat(IMG_W, axis=1).reshape(-1)
+
+MAX_NOISE = 40
+MAX_SEGS = 7
+
+# round(sin/cos(d deg)*256) for d in 0..=28 — mirror of rust SIN_Q/COS_Q
+SIN_Q = [0, 4, 9, 13, 18, 22, 27, 31, 36, 40, 45, 49, 53, 58, 62, 66, 71, 75,
+         79, 83, 88, 92, 96, 100, 104, 108, 112, 116, 120]
+COS_Q = [256, 256, 256, 256, 255, 255, 255, 254, 254, 253, 252, 251, 250, 249,
+         248, 247, 246, 245, 244, 242, 241, 239, 237, 236, 234, 232, 230, 228, 226]
+
+
+def _seg_dist2(pxq, pyq, ax, ay, bx, by):
+    """Vectorised (over pixels) squared distance to one segment; int64."""
+    abx, aby = bx - ax, by - ay
+    apx, apy = pxq - ax, pyq - ay
+    den = abx * abx + aby * aby
+    ap2 = apx * apx + apy * apy
+    if den == 0:
+        return ap2
+    num = apx * abx + apy * aby
+    bpx, bpy = pxq - bx, pyq - by
+    bp2 = bpx * bpx + bpy * bpy
+    mid = ap2 - (num * num) // den
+    return np.where(num <= 0, ap2, np.where(num >= den, bp2, mid))
+
+
+def synth_mnist_images(seed, start, count):
+    """Render samples [start, start+count) → (images u8 (count, 784), labels)."""
+    idx = np.arange(start, start + count, dtype=np.uint64)
+    labels = (idx % U64(10)).astype(np.uint16)
+    rng = VecRng.for_item(seed, DOMAIN_MNIST, idx)
+    dx = rng.range_i64(-2 * Q, 2 * Q)
+    dy = rng.range_i64(-2 * Q, 2 * Q)
+    scale = rng.range_i64(225, 287)
+    shear = rng.range_i64(-38, 38)
+    radius = rng.range_i64(260, 430)
+    angle = rng.range_i64(-20, 20)
+    seg_jit = [rng.range_i64(-300, 300) for _ in range(4 * MAX_SEGS)]
+    seg_drop = [rng.below(100) for _ in range(MAX_SEGS)]
+    n_noise = rng.range_i64(10, 40)
+    noise_draws = [rng.next_u64() for _ in range(2 * MAX_NOISE)]
+
+    imgs = np.zeros((count, IMG_PIXELS), dtype=np.uint8)
+    cx = cy = 14 * Q
+    for s in range(count):
+        template = DIGIT_SEGMENTS[int(labels[s])]
+        r2 = int(radius[s]) ** 2
+        best = np.full(IMG_PIXELS, np.iinfo(np.int64).max, dtype=np.int64)
+        sc, sh = int(scale[s]), int(shear[s])
+        ddx, ddy = int(dx[s]), int(dy[s])
+        a = int(angle[s])
+        sin_q = -SIN_Q[-a] if a < 0 else SIN_Q[a]
+        cos_q = COS_Q[abs(a)]
+        dropped = 0
+        for si, (x0, y0, x1, y1) in enumerate(template):
+            if int(seg_drop[si][s]) < 12 and len(template) - dropped > 2:
+                dropped += 1
+                continue
+
+            def tf(x, y, jx, jy):
+                xq = x * Q - cx
+                yq = y * Q - cy
+                xr = (xq * cos_q - yq * sin_q) // Q
+                yr = (xq * sin_q + yq * cos_q) // Q
+                xt = cx + (xr * sc + yr * sh) // Q + ddx + jx
+                yt = cy + (yr * sc) // Q + ddy + jy
+                return xt, yt
+
+            ax, ay = tf(x0, y0, int(seg_jit[4 * si][s]), int(seg_jit[4 * si + 1][s]))
+            bx, by = tf(x1, y1, int(seg_jit[4 * si + 2][s]), int(seg_jit[4 * si + 3][s]))
+            d2 = _seg_dist2(_PXQ, _PYQ, ax, ay, bx, by)
+            np.minimum(best, d2, out=best)
+        hit = best < r2
+        v = 255 * (r2 - best) // r2
+        v = np.where(best * 25 < r2 * 9, 255, v * 5 // 3)
+        img = np.where(hit, np.minimum(v, 255), 0).astype(np.uint8)
+        # salt noise, sequential like rust
+        nn = int(n_noise[s])
+        for t in range(nn):
+            pos = int(noise_draws[2 * t][s] % U64(IMG_PIXELS))
+            val = int(noise_draws[2 * t + 1][s] % U64(140))
+            img[pos] = min(255, int(img[pos]) + 40 + val)
+        imgs[s] = img
+    return imgs, labels
+
+
+# ---------------------------------------------------------------------------
+# SynthUCI (mirror of rust/src/data/synth_uci.rs)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class UciSpec:
+    name: str
+    id: int
+    features: int
+    classes: int
+    n_train: int
+    n_test: int
+    skew_permille: int
+    spread: float
+
+
+UCI_SPECS = [
+    UciSpec("ecoli", 1, 7, 8, 224, 112, 420, 0.33),
+    UciSpec("iris", 2, 4, 3, 100, 50, 0, 0.18),
+    UciSpec("letter", 3, 16, 26, 13000, 6500, 0, 0.42),
+    UciSpec("satimage", 4, 36, 6, 4435, 2000, 0, 0.40),
+    UciSpec("shuttle", 5, 9, 7, 8000, 2000, 800, 0.30),
+    UciSpec("vehicle", 6, 18, 4, 564, 282, 0, 0.52),
+    UciSpec("vowel", 7, 10, 11, 660, 330, 0, 0.35),
+    UciSpec("wine", 8, 13, 3, 118, 60, 0, 0.28),
+]
+
+
+def uci_spec(name):
+    for s in UCI_SPECS:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+def _uci_centroids(seed, spec):
+    rng = VecRng.for_item(seed, DOMAIN_UCI ^ spec.id, np.array([0], dtype=np.uint64))
+    vals = [float(rng.f64()[0]) for _ in range(spec.classes * spec.features)]
+    return np.array(vals, dtype=np.float64).reshape(spec.classes, spec.features)
+
+
+def synth_uci_samples(seed, spec, start, count):
+    """Samples with stream indices [1+start, 1+start+count) → (x f32, y u16)."""
+    idx = np.arange(1 + start, 1 + start + count, dtype=np.uint64)
+    rng = VecRng.for_item(seed, DOMAIN_UCI ^ spec.id, idx)
+    if spec.skew_permille > 0:
+        u = rng.below(1000)
+        v = rng.below(spec.classes - 1).astype(np.int64)
+        classes = np.where(u < U64(spec.skew_permille), 0, 1 + v).astype(np.uint16)
+    else:
+        classes = rng.below(spec.classes).astype(np.uint16)
+    cents = _uci_centroids(seed, spec)
+    x = np.zeros((count, spec.features), dtype=np.float64)
+    for f in range(spec.features):
+        noise = rng.normal_clt()
+        x[:, f] = cents[classes.astype(np.int64), f] + spec.spread * noise
+    return x.astype(np.float32), classes
+
+
+@dataclass
+class Dataset:
+    name: str
+    num_features: int
+    num_classes: int
+    train_x: np.ndarray  # (n_train, F) float32
+    train_y: np.ndarray  # (n_train,) uint16
+    test_x: np.ndarray
+    test_y: np.ndarray
+
+    def checksum(self):
+        """FNV-1a over raw bytes — mirror of rust `Dataset::checksum`."""
+        h = 0xCBF29CE484222325
+        for arr in (self.train_x, self.test_x):
+            for b in arr.reshape(-1).tobytes():
+                h = ((h ^ b) * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+        for arr in (self.train_y, self.test_y):
+            for b in arr.reshape(-1).tobytes():
+                h = ((h ^ b) * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+        return h
+
+
+def synth_mnist(seed, n_train, n_test):
+    tx, ty = synth_mnist_images(seed, 0, n_train)
+    ex, ey = synth_mnist_images(seed, n_train, n_test)
+    return Dataset(
+        "synth_mnist", IMG_PIXELS, 10,
+        tx.astype(np.float32), ty, ex.astype(np.float32), ey,
+    )
+
+
+def synth_uci(seed, spec):
+    tx, ty = synth_uci_samples(seed, spec, 0, spec.n_train)
+    ex, ey = synth_uci_samples(seed, spec, spec.n_train, spec.n_test)
+    return Dataset(f"synth_{spec.name}", spec.features, spec.classes, tx, ty, ex, ey)
+
+
+def save_uds(ds, path):
+    """Write the `.uds` binary format (mirror of rust data::io::save)."""
+    import struct
+
+    with open(path, "wb") as f:
+        f.write(b"UDS1")
+        name = ds.name.encode()
+        f.write(struct.pack("<I", len(name)))
+        f.write(name)
+        f.write(struct.pack("<IIII", ds.num_features, ds.num_classes,
+                            len(ds.train_y), len(ds.test_y)))
+        f.write(ds.train_x.astype("<f4").tobytes())
+        f.write(ds.train_y.astype("<u2").tobytes())
+        f.write(ds.test_x.astype("<f4").tobytes())
+        f.write(ds.test_y.astype("<u2").tobytes())
+        f.write(struct.pack("<Q", ds.checksum()))

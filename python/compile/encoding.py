@@ -1,0 +1,76 @@
+"""Thermometer encodings (paper §III-A2) — JAX/numpy side.
+
+Mirrors rust/src/encoding/thermometer.rs: linear thresholds split
+[min, max] into equal bins; Gaussian thresholds cut a fitted normal into
+t+1 equal-probability regions (Acklam inverse-CDF approximation — same
+constants as the Rust side).
+"""
+
+import numpy as np
+
+LINEAR, GAUSSIAN = 0, 1
+
+_A = [-3.969683028665376e+01, 2.209460984245205e+02, -2.759285104469687e+02,
+      1.383577518672690e+02, -3.066479806614716e+01, 2.506628277459239e+00]
+_B = [-5.447609879822406e+01, 1.615858368580409e+02, -1.556989798598866e+02,
+      6.680131188771972e+01, -1.328068155288572e+01]
+_C = [-7.784894002430293e-03, -3.223964580411365e-01, -2.400758277161838e+00,
+      -2.549732539343734e+00, 4.374664141464968e+00, 2.938163982698783e+00]
+_D = [7.784695709041462e-03, 3.224671290700398e-01, 2.445134137142996e+00,
+      3.754408661907416e+00]
+
+
+def inv_norm_cdf(p):
+    """Acklam's rational approximation of the standard normal quantile."""
+    if not 0.0 < p < 1.0:
+        raise ValueError("inv_norm_cdf domain")
+    plow = 0.02425
+    if p < plow:
+        q = np.sqrt(-2.0 * np.log(p))
+        return (((((_C[0] * q + _C[1]) * q + _C[2]) * q + _C[3]) * q + _C[4]) * q + _C[5]) / \
+               ((((_D[0] * q + _D[1]) * q + _D[2]) * q + _D[3]) * q + 1.0)
+    if p <= 1.0 - plow:
+        q = p - 0.5
+        r = q * q
+        return (((((_A[0] * r + _A[1]) * r + _A[2]) * r + _A[3]) * r + _A[4]) * r + _A[5]) * q / \
+               (((((_B[0] * r + _B[1]) * r + _B[2]) * r + _B[3]) * r + _B[4]) * r + 1.0)
+    q = np.sqrt(-2.0 * np.log(1.0 - p))
+    return -(((((_C[0] * q + _C[1]) * q + _C[2]) * q + _C[3]) * q + _C[4]) * q + _C[5]) / \
+           ((((_D[0] * q + _D[1]) * q + _D[2]) * q + _D[3]) * q + 1.0)
+
+
+def fit_thermometer(kind, data, bits):
+    """Fit per-input thresholds.
+
+    data: (n_samples, n_inputs) float array.
+    Returns thresholds float32 (n_inputs, bits), increasing along axis 1.
+    """
+    data = np.asarray(data, dtype=np.float64)
+    n, f = data.shape
+    thr = np.zeros((f, bits), dtype=np.float64)
+    if kind == LINEAR:
+        lo = data.min(axis=0)
+        hi = data.max(axis=0)
+        for i in range(bits):
+            thr[:, i] = lo + (hi - lo) * (i + 1.0) / (bits + 1.0)
+    elif kind == GAUSSIAN:
+        mean = data.mean(axis=0)
+        std = data.std(axis=0)  # population std, like the rust fit
+        for i in range(bits):
+            p = (i + 1.0) / (bits + 1.0)
+            z = inv_norm_cdf(p)
+            thr[:, i] = np.where(std > 0.0, mean + std * z, mean)
+    else:
+        raise ValueError(f"unknown thermometer kind {kind}")
+    return thr.astype(np.float32)
+
+
+def encode(x, thresholds):
+    """Thermometer-encode a batch: x (B, F) → bits (B, F*bits) in {0,1}.
+
+    Bit layout is input-major (input j's bits occupy [j*bits, (j+1)*bits)),
+    matching rust `ThermometerEncoder::encode`. Works under both numpy and
+    jax.numpy inputs (pure broadcasting).
+    """
+    b = (x[:, :, None] > thresholds[None, :, :])
+    return b.reshape(x.shape[0], -1)

@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: Bloom lookup + AND-reduce + per-class popcount.
+
+This is the paper's lockstep lookup stage (Fig 9): once the central hash
+block has produced all hash values, every discriminator's lookup units read
+their tables simultaneously, AND across the k probes, and the adder trees
+sum per-class responses (Fig 8).
+
+Hardware adaptation (DESIGN.md §5): all filter tables of a submodel are
+4–75 KiB total — they fit whole in VMEM, exactly like the paper keeps every
+table in on-chip LUT RAM with zero BRAM/off-chip traffic. The BlockSpec
+therefore maps `tables` as a single whole-array block (the "weights" never
+move during the kernel), while the batch dimension is tiled. The gather is
+a vectorised dynamic index (VPU); the final per-class reduction is a
+popcount-accumulate (the adder-tree analogue).
+
+interpret=True: see h3.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bloom_kernel(idx_ref, tables_ref, keep_ref, bias_ref, out_ref):
+    """One batch-tile of Bloom responses.
+
+    idx (TB, NF, k) int32 → out (TB, M) float32.
+    """
+    idx = idx_ref[...]  # (TB, NF, k)
+    tables = tables_ref[...]  # (M, NF, E)
+    keep = keep_ref[...]  # (M, NF)
+    bias = bias_ref[...]  # (M,)
+    vals = jnp.take_along_axis(
+        tables[None, :, :, :], idx[:, None, :, :], axis=-1
+    )  # (TB, M, NF, k)
+    fired = jnp.min(vals, axis=-1)  # AND over the k probes (binary tables)
+    out_ref[...] = jnp.sum(fired * keep[None], axis=-1) + bias[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def bloom_response(idx, tables, keep, bias, block_b=8):
+    """Pallas Bloom response: idx (B, NF, k) int32, tables (M, NF, E) f32,
+    keep (M, NF) f32, bias (M,) f32 → (B, M) f32."""
+    b, nf, k = idx.shape
+    m, nf2, e = tables.shape
+    assert nf == nf2, "filter-count mismatch"
+    assert b % block_b == 0, f"batch {b} not a multiple of block {block_b}"
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _bloom_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, nf, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((m, nf, e), lambda i: (0, 0, 0)),
+            pl.BlockSpec((m, nf), lambda i: (0, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
+        interpret=True,
+    )(idx.astype(jnp.int32), tables.astype(jnp.float32),
+      keep.astype(jnp.float32), bias.astype(jnp.float32))
+
+
+def vmem_bytes_estimate(block_b, m, nf, e, k):
+    """VMEM footprint of one grid step (bytes) — §Perf analysis."""
+    idx = block_b * nf * k * 4
+    tables = m * nf * e * 4  # f32 in the kernel; 1-bit in the real hardware
+    gathered = block_b * m * nf * k * 4
+    out = block_b * m * 4
+    return idx + tables + gathered + out

@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: H3 hashing (the paper's central hash block, Fig 9).
+
+Hardware adaptation (DESIGN.md §5): the paper's hash unit is an AND/XOR
+gate tree fed by a parameter register file shared across all Bloom filters
+of a submodel. On a TPU-shaped target this is a VPU-friendly masked
+XOR-reduction — no MXU involvement, mirroring the paper's "arithmetic-free"
+claim. The grid tiles the batch; hash parameters ride along as a
+whole-array block (they are tiny and live in VMEM for the whole kernel,
+like the Param RF).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered through the interpreter into plain
+HLO — numerics are identical, scheduling is simulated.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from compile.kernels.ref import xor_reduce
+
+
+def _h3_kernel(keys_ref, params_ref, out_ref):
+    """One batch-tile: keys (TB, NF, n) × params (k, n) → hashes (TB, NF, k)."""
+    keys = keys_ref[...].astype(jnp.int32)  # (TB, NF, n)
+    params = params_ref[...]  # (k, n)
+    masked = keys[:, :, None, :] * params[None, None, :, :]  # (TB, NF, k, n)
+    out_ref[...] = xor_reduce(masked, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def h3_hash(key_bits, params, block_b=8):
+    """Pallas H3 hash: key_bits (B, NF, n) {0,1} int32, params (k, n) int32
+    → (B, NF, k) int32. B must be a multiple of block_b (callers pad)."""
+    b, nf, n = key_bits.shape
+    k = params.shape[0]
+    assert b % block_b == 0, f"batch {b} not a multiple of block {block_b}"
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _h3_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, nf, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, nf, k), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nf, k), jnp.int32),
+        interpret=True,
+    )(key_bits.astype(jnp.int32), params.astype(jnp.int32))
+
+
+def vmem_bytes_estimate(block_b, nf, n, k):
+    """VMEM footprint of one grid step (bytes) — used by the §Perf analysis.
+
+    keys tile + params + masked intermediate + out tile, all int32.
+    """
+    keys = block_b * nf * n * 4
+    params = k * n * 4
+    masked = block_b * nf * k * n * 4
+    out = block_b * nf * k * 4
+    return keys + params + masked + out

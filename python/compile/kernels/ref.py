@@ -1,0 +1,75 @@
+"""Pure-jnp oracle for the L1 Pallas kernels — the CORE correctness signal.
+
+Every Pallas kernel in this package is pytest-asserted allclose/equal
+against these functions across shapes and dtypes (hypothesis sweeps in
+python/tests/test_kernels.py), and the Rust native engine is cross-checked
+against the same semantics through the `.uln` interchange.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def xor_reduce(x, axis):
+    """Bitwise-XOR reduction along `axis` (int32-safe)."""
+    return jax.lax.reduce(x, np.int32(0), jax.lax.bitwise_xor, (axis,))
+
+
+def h3_hash_ref(key_bits, params):
+    """H3 family hash of per-filter key bits.
+
+    key_bits: (..., n) int32 in {0,1}
+    params:   (k, n) int32 hash parameters (low out_bits used)
+    returns:  (..., k) int32 hash values — XOR-fold of params where bits set.
+    """
+    masked = key_bits[..., None, :] * params  # (..., k, n)
+    return xor_reduce(masked, masked.ndim - 1)
+
+
+def gather_keys_ref(bits, input_order):
+    """bits (B, I) → per-filter key bits (B, NF, n) via the shared mapping."""
+    return bits[:, input_order]
+
+
+def bloom_response_ref(idx, tables, keep, bias):
+    """Bloom lookup + AND-reduce + per-class popcount.
+
+    idx:    (B, NF, k) int32 hash indices
+    tables: (M, NF, E) float32 — binarized {0,1} (inference) or continuous
+            (training; caller applies the step themselves)
+    keep:   (M, NF) float32 {0,1} prune mask
+    bias:   (M,) float32
+    returns (B, M) float32 responses: sum_f keep*[min_k table[idx]] + bias.
+
+    For binary tables min-over-k == AND-over-k, matching the hardware's
+    1-bit AND accumulator (paper Fig 9).
+    """
+    # (B, M, NF, k) gather, broadcast over classes
+    vals = jnp.take_along_axis(
+        tables[None, :, :, :], idx[:, None, :, :], axis=-1
+    )
+    fired = jnp.min(vals, axis=-1)  # (B, M, NF)
+    return jnp.sum(fired * keep[None], axis=-1) + bias[None]
+
+
+def submodel_forward_ref(bits, input_order, params, tables, keep, bias):
+    """Full submodel forward from encoded bits (the fused reference)."""
+    keys = gather_keys_ref(bits, input_order)
+    h = h3_hash_ref(keys.astype(jnp.int32), params)
+    return bloom_response_ref(h, tables, keep, bias)
+
+
+def ensemble_forward_ref(bits, submodels):
+    """Sum of submodel responses (paper Fig 3 'Vectorized Addition').
+
+    submodels: list of dicts with keys input_order, params, tables, keep,
+    bias (binarized tables for inference).
+    """
+    resp = None
+    for sm in submodels:
+        r = submodel_forward_ref(
+            bits, sm["input_order"], sm["params"], sm["tables"], sm["keep"], sm["bias"]
+        )
+        resp = r if resp is None else resp + r
+    return resp

@@ -1,0 +1,172 @@
+"""L2 — the ULEEN ensemble model in JAX (paper §III, Fig 3).
+
+Two forwards over the same parameters:
+
+* `train_forward` — continuous Bloom filters (f32 entries in [-1,1]),
+  unit-step binarization through the straight-through estimator, dropout on
+  filter outputs; used by the multi-shot trainer (train.py).
+* `inference_forward` — binarized tables through the L1 Pallas kernels
+  (h3 + bloom); this is the graph that aot.py lowers to HLO text for the
+  Rust runtime. A `use_pallas=False` path exists for fast evaluation and
+  as an extra oracle.
+
+Parameters of one submodel (a dict, see `init_submodel`):
+  input_order (NF, n) int32 | params (k, n) int32 | tables (M, NF, E) f32
+  keep (M, NF) f32 {0,1}    | bias (M,) f32
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import encoding
+from compile.kernels import bloom as bloom_kernel
+from compile.kernels import h3 as h3_kernel
+from compile.kernels import ref
+
+
+@dataclass(frozen=True)
+class SubmodelSpec:
+    inputs_per_filter: int
+    entries_per_filter: int
+    k_hashes: int = 2
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    name: str
+    therm_bits: int
+    submodels: tuple  # tuple[SubmodelSpec, ...]
+    therm_kind: int = encoding.GAUSSIAN
+
+
+# Paper Table I configurations (sizes land within rounding of the paper's
+# KiB numbers because the geometry is identical).
+ULN_S = ModelSpec("uln_s", 2, (
+    SubmodelSpec(12, 64), SubmodelSpec(16, 64), SubmodelSpec(20, 64)))
+ULN_M = ModelSpec("uln_m", 3, (
+    SubmodelSpec(12, 64), SubmodelSpec(16, 128), SubmodelSpec(20, 256),
+    SubmodelSpec(28, 256), SubmodelSpec(36, 512)))
+ULN_L = ModelSpec("uln_l", 7, (
+    SubmodelSpec(12, 64), SubmodelSpec(16, 128), SubmodelSpec(20, 128),
+    SubmodelSpec(24, 256), SubmodelSpec(28, 256), SubmodelSpec(32, 512)))
+ZOO = {m.name: m for m in (ULN_S, ULN_M, ULN_L)}
+
+
+def num_filters(total_bits, n):
+    return -(-total_bits // n)  # ceil
+
+
+def init_submodel(rng, spec, total_bits, num_classes):
+    """Random mapping + hash parameters, tables U(-1,1) (paper §III-B2)."""
+    n = spec.inputs_per_filter
+    nf = num_filters(total_bits, n)
+    perm = rng.permutation(total_bits).astype(np.int32)
+    order = np.resize(perm, nf * n).reshape(nf, n)
+    out_bits = int(np.log2(spec.entries_per_filter))
+    params = rng.integers(0, spec.entries_per_filter, (spec.k_hashes, n)).astype(np.int32)
+    tables = rng.uniform(-1.0, 1.0, (num_classes, nf, spec.entries_per_filter)).astype(np.float32)
+    assert 1 << out_bits == spec.entries_per_filter
+    return {
+        "input_order": jnp.array(order),
+        "params": jnp.array(params),
+        "tables": jnp.array(tables),
+        "keep": jnp.ones((num_classes, nf), jnp.float32),
+        "bias": jnp.zeros((num_classes,), jnp.float32),
+    }
+
+
+def init_model(seed, spec, train_x, num_classes):
+    """Fit the encoder on training data and initialise every submodel."""
+    thresholds = encoding.fit_thermometer(spec.therm_kind, train_x, spec.therm_bits)
+    total_bits = thresholds.size
+    rng = np.random.default_rng(seed)
+    subs = [init_submodel(rng, s, total_bits, num_classes) for s in spec.submodels]
+    return {"thresholds": jnp.array(thresholds), "submodels": subs, "spec": spec}
+
+
+def step_ste(x):
+    """Unit step with straight-through gradient (paper §III-B2):
+    forward 1[x>=0], backward identity."""
+    hard = (x >= 0.0).astype(jnp.float32)
+    return x + jax.lax.stop_gradient(hard - x)
+
+
+def encode_bits(x, thresholds):
+    """Thermometer-encode a raw batch to int32 bits (B, I)."""
+    return encoding.encode(x, thresholds).astype(jnp.int32)
+
+
+def submodel_train_forward(sm, bits, dropout_mask=None):
+    """Continuous-filter response with STE binarization.
+
+    dropout_mask: optional (B?, M, NF) {0,1}/p mask applied to filter
+    outputs (paper: dropout p=0.5 on the outputs of the filters).
+    """
+    keys = ref.gather_keys_ref(bits, sm["input_order"]).astype(jnp.int32)
+    idx = ref.h3_hash_ref(keys, sm["params"])  # (B, NF, k)
+    vals = jnp.take_along_axis(
+        sm["tables"][None, :, :, :], idx[:, None, :, :], axis=-1
+    )  # (B, M, NF, k)
+    m = jnp.min(vals, axis=-1)  # continuous min over probes
+    fired = step_ste(m)  # (B, M, NF)
+    if dropout_mask is not None:
+        fired = fired * dropout_mask
+    return jnp.sum(fired * sm["keep"][None], axis=-1) + sm["bias"][None]
+
+
+def train_forward(submodels, bits, dropout_masks=None):
+    """Ensemble logits for training: sum of submodel responses."""
+    total = None
+    for i, sm in enumerate(submodels):
+        mask = None if dropout_masks is None else dropout_masks[i]
+        r = submodel_train_forward(sm, bits, mask)
+        total = r if total is None else total + r
+    return total
+
+
+def binarize_submodel(sm):
+    """Apply the unit step to the continuous tables (post-training)."""
+    out = dict(sm)
+    out["tables"] = (sm["tables"] >= 0.0).astype(jnp.float32)
+    return out
+
+
+def submodel_infer(sm_bin, bits, use_pallas, block_b):
+    keys = ref.gather_keys_ref(bits, sm_bin["input_order"]).astype(jnp.int32)
+    if use_pallas:
+        idx = h3_kernel.h3_hash(keys, sm_bin["params"], block_b=block_b)
+        return bloom_kernel.bloom_response(
+            idx, sm_bin["tables"], sm_bin["keep"], sm_bin["bias"], block_b=block_b
+        )
+    idx = ref.h3_hash_ref(keys, sm_bin["params"])
+    return ref.bloom_response_ref(idx, sm_bin["tables"], sm_bin["keep"], sm_bin["bias"])
+
+
+def inference_forward(model_bin, x, use_pallas=True, block_b=8):
+    """Raw pixels → per-class responses. `model_bin` has binarized tables.
+
+    This is the function AOT-lowered to HLO (aot.py): thermometer encode →
+    L1 Pallas kernels per submodel → vectorized addition.
+    """
+    bits = encode_bits(x, model_bin["thresholds"])
+    total = None
+    for sm in model_bin["submodels"]:
+        r = submodel_infer(sm, bits, use_pallas, block_b)
+        total = r if total is None else total + r
+    return total
+
+
+def predict(model_bin, x, use_pallas=False, block_b=8):
+    return jnp.argmax(inference_forward(model_bin, x, use_pallas, block_b), axis=-1)
+
+
+def model_size_kib(model_bin):
+    """Table bits of kept filters / 8192 — same accounting as the paper."""
+    bits = 0
+    for sm in model_bin["submodels"]:
+        kept = float(jnp.sum(sm["keep"]))
+        bits += kept * sm["tables"].shape[-1]
+    return bits / 8192.0

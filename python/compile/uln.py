@@ -1,0 +1,136 @@
+"""`.uln` model writer/reader — byte-compatible with rust
+`model::uln_format` (see that module's layout doc).
+
+The writer takes a *binarized* model dict (tables in {0,1}) from
+compile.model; the reader exists for round-trip tests and for loading
+models back into JAX (e.g. to AOT-lower a Rust-trained one-shot model).
+"""
+
+import json
+import struct
+
+import numpy as np
+
+MAGIC = b"ULN1"
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+MASK64 = 0xFFFFFFFFFFFFFFFF
+
+
+def _fnv1a(data):
+    h = FNV_OFFSET
+    for b in data:
+        h = ((h ^ b) * FNV_PRIME) & MASK64
+    return h
+
+
+def _pack_table_bits(row):
+    """{0,1} float/int array (E,) → little-endian bytes, LSB-first bits."""
+    bits = np.asarray(row) >= 0.5
+    return np.packbits(bits, bitorder="little").tobytes()
+
+
+def _unpack_table_bits(buf, entries):
+    bits = np.unpackbits(np.frombuffer(buf, dtype=np.uint8), bitorder="little")
+    return bits[:entries].astype(np.float32)
+
+
+def to_bytes(model_bin, meta, therm_kind):
+    """Serialize a binarized model dict to `.uln` bytes.
+
+    model_bin: {"thresholds": (F, t) f32, "submodels": [dict...]} with
+    binary tables. therm_kind: 0 linear / 1 gaussian.
+    """
+    thr = np.asarray(model_bin["thresholds"], dtype=np.float32)
+    f, t = thr.shape
+    out = bytearray()
+    out += MAGIC
+    out += struct.pack("<IIII", 1, therm_kind, f, t)
+    out += thr.reshape(-1).astype("<f4").tobytes()
+    subs = model_bin["submodels"]
+    out += struct.pack("<I", len(subs))
+    for sm in subs:
+        order = np.asarray(sm["input_order"], dtype=np.uint32)
+        params = np.asarray(sm["params"], dtype=np.uint64)
+        tables = np.asarray(sm["tables"], dtype=np.float32)
+        keep = np.asarray(sm["keep"], dtype=np.float32)
+        bias = np.asarray(sm["bias"], dtype=np.float64)
+        m, nf, e = tables.shape
+        k, n = params.shape
+        assert order.shape == (nf, n)
+        out += struct.pack("<IIIII", n, e, k, m, nf)
+        out += order.reshape(-1).astype("<u4").tobytes()
+        out += params.reshape(-1).astype("<u8").tobytes()
+        out += np.rint(bias).astype("<i4").tobytes()
+        for c in range(m):
+            keep_row = (keep[c] > 0.5).astype(np.uint8)
+            out += keep_row.tobytes()
+            for fidx in range(nf):
+                if keep_row[fidx]:
+                    out += _pack_table_bits(tables[c, fidx])
+    meta_bytes = json.dumps(meta, separators=(",", ":")).encode()
+    out += struct.pack("<I", len(meta_bytes))
+    out += meta_bytes
+    out += struct.pack("<Q", _fnv1a(out))
+    return bytes(out)
+
+
+def save(model_bin, meta, path, therm_kind=1):
+    with open(path, "wb") as fh:
+        fh.write(to_bytes(model_bin, meta, therm_kind))
+
+
+def from_bytes(data):
+    """Parse `.uln` bytes → (model_bin dict with numpy arrays, meta dict)."""
+    body, stored = data[:-8], struct.unpack("<Q", data[-8:])[0]
+    if _fnv1a(body) != stored:
+        raise ValueError(".uln checksum mismatch")
+    off = 0
+
+    def take(n):
+        nonlocal off
+        if off + n > len(body):
+            raise ValueError("truncated .uln")
+        s = body[off:off + n]
+        off += n
+        return s
+
+    if take(4) != MAGIC:
+        raise ValueError("bad magic")
+    version, kind, f, t = struct.unpack("<IIII", take(16))
+    if version != 1:
+        raise ValueError(f"unsupported version {version}")
+    thr = np.frombuffer(take(f * t * 4), dtype="<f4").reshape(f, t).copy()
+    (n_subs,) = struct.unpack("<I", take(4))
+    subs = []
+    for _ in range(n_subs):
+        n, e, k, m, nf = struct.unpack("<IIIII", take(20))
+        order = np.frombuffer(take(nf * n * 4), dtype="<u4").reshape(nf, n).astype(np.int32)
+        params = np.frombuffer(take(k * n * 8), dtype="<u8").reshape(k, n).astype(np.int64)
+        bias = np.frombuffer(take(m * 4), dtype="<i4").astype(np.float32)
+        tables = np.zeros((m, nf, e), dtype=np.float32)
+        keep = np.zeros((m, nf), dtype=np.float32)
+        tb = e // 8
+        for c in range(m):
+            keep_row = np.frombuffer(take(nf), dtype=np.uint8)
+            keep[c] = keep_row.astype(np.float32)
+            for fidx in range(nf):
+                if keep_row[fidx]:
+                    tables[c, fidx] = _unpack_table_bits(take(tb), e)
+        subs.append({
+            "input_order": order,
+            "params": params.astype(np.int32),
+            "tables": tables,
+            "keep": keep,
+            "bias": bias,
+        })
+    (meta_len,) = struct.unpack("<I", take(4))
+    meta = json.loads(take(meta_len).decode())
+    if off != len(body):
+        raise ValueError("trailing bytes")
+    return {"thresholds": thr, "submodels": subs}, meta
+
+
+def load(path):
+    with open(path, "rb") as fh:
+        return from_bytes(fh.read())

@@ -1,0 +1,118 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py), with
+hypothesis sweeping shapes/dtypes — the core kernel correctness signal."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bloom, h3, ref
+
+
+def rand_case(rng, b, nf, n, k, m, e, continuous=False):
+    bits = rng.integers(0, 2, (b, nf, n)).astype(np.int32)
+    params = rng.integers(0, e, (k, n)).astype(np.int32)
+    if continuous:
+        tables = rng.uniform(-1, 1, (m, nf, e)).astype(np.float32)
+    else:
+        tables = rng.integers(0, 2, (m, nf, e)).astype(np.float32)
+    keep = (rng.uniform(0, 1, (m, nf)) > 0.3).astype(np.float32)
+    bias = rng.integers(-3, 4, (m,)).astype(np.float32)
+    return bits, params, tables, keep, bias
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b_tiles=st.integers(1, 3),
+    block=st.sampled_from([1, 2, 4]),
+    nf=st.integers(1, 9),
+    n=st.integers(1, 24),
+    k=st.integers(1, 4),
+    log_e=st.integers(3, 8),
+    seed=st.integers(0, 2**31),
+)
+def test_h3_kernel_matches_ref(b_tiles, block, nf, n, k, log_e, seed):
+    rng = np.random.default_rng(seed)
+    b = b_tiles * block
+    e = 1 << log_e
+    bits, params, *_ = rand_case(rng, b, nf, n, k, 3, e)
+    got = np.array(h3.h3_hash(jnp.array(bits), jnp.array(params), block_b=block))
+    want = np.array(ref.h3_hash_ref(jnp.array(bits), jnp.array(params)))
+    np.testing.assert_array_equal(got, want)
+    assert got.dtype == np.int32
+    assert (got >= 0).all() and (got < e).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b_tiles=st.integers(1, 3),
+    block=st.sampled_from([1, 2, 4]),
+    nf=st.integers(1, 8),
+    k=st.integers(1, 3),
+    m=st.integers(2, 11),
+    log_e=st.integers(3, 7),
+    seed=st.integers(0, 2**31),
+)
+def test_bloom_kernel_matches_ref(b_tiles, block, nf, k, m, log_e, seed):
+    rng = np.random.default_rng(seed)
+    b = b_tiles * block
+    e = 1 << log_e
+    idx = rng.integers(0, e, (b, nf, k)).astype(np.int32)
+    _, _, tables, keep, bias = rand_case(rng, b, nf, 4, k, m, e)
+    got = np.array(bloom.bloom_response(
+        jnp.array(idx), jnp.array(tables), jnp.array(keep), jnp.array(bias),
+        block_b=block))
+    want = np.array(ref.bloom_response_ref(
+        jnp.array(idx), jnp.array(tables), jnp.array(keep), jnp.array(bias)))
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_h3_linearity_through_kernel():
+    """h(a xor b) == h(a) xor h(b) holds through the Pallas path too."""
+    rng = np.random.default_rng(1)
+    n, k, e = 16, 2, 64
+    params = rng.integers(0, e, (k, n)).astype(np.int32)
+    a = rng.integers(0, 2, (4, 1, n)).astype(np.int32)
+    b = rng.integers(0, 2, (4, 1, n)).astype(np.int32)
+    hx = np.array(h3.h3_hash(jnp.array(a ^ b), jnp.array(params), block_b=4))
+    ha = np.array(h3.h3_hash(jnp.array(a), jnp.array(params), block_b=4))
+    hb = np.array(h3.h3_hash(jnp.array(b), jnp.array(params), block_b=4))
+    np.testing.assert_array_equal(hx, ha ^ hb)
+
+
+def test_bloom_and_semantics():
+    """response counts filters where ALL k probed entries are 1."""
+    tables = np.zeros((1, 2, 8), np.float32)
+    tables[0, 0, [1, 2]] = 1.0  # filter 0: entries 1,2 set
+    tables[0, 1, 3] = 1.0       # filter 1: only entry 3
+    keep = np.ones((1, 2), np.float32)
+    bias = np.zeros((1,), np.float32)
+    idx = np.array([[[1, 2], [3, 3]],    # f0 both hit, f1 both hit → 2
+                    [[1, 0], [3, 3]],    # f0 one miss → 1
+                    [[0, 0], [0, 0]]],   # all miss → 0
+                   np.int32)
+    got = np.array(bloom.bloom_response(
+        jnp.array(idx), jnp.array(tables), jnp.array(keep), jnp.array(bias), block_b=3))
+    np.testing.assert_array_equal(got[:, 0], [2.0, 1.0, 0.0])
+
+
+def test_pruned_filters_do_not_count():
+    tables = np.ones((1, 3, 8), np.float32)
+    keep = np.array([[1.0, 0.0, 1.0]], np.float32)
+    bias = np.array([5.0], np.float32)
+    idx = np.zeros((1, 3, 2), np.int32)
+    got = np.array(bloom.bloom_response(
+        jnp.array(idx), jnp.array(tables), jnp.array(keep), jnp.array(bias), block_b=1))
+    assert got[0, 0] == 2.0 + 5.0
+
+
+def test_bad_batch_block_combination_rejected():
+    with pytest.raises(AssertionError):
+        h3.h3_hash(jnp.zeros((3, 2, 4), jnp.int32), jnp.zeros((2, 4), jnp.int32), block_b=2)
+
+
+def test_vmem_estimates_positive_and_scale():
+    small = h3.vmem_bytes_estimate(8, 16, 12, 2)
+    big = h3.vmem_bytes_estimate(8, 64, 12, 2)
+    assert 0 < small < big
+    assert bloom.vmem_bytes_estimate(8, 10, 131, 64, 2) > 0

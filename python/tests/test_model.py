@@ -1,0 +1,109 @@
+"""L2 model tests: STE semantics, forward equivalences, ensemble addition,
+binarization and size accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data as D
+from compile import model as M
+
+
+def setup_module():
+    np.seterr(over="ignore")
+
+
+def tiny_ds():
+    return D.synth_uci(11, D.uci_spec("iris"))
+
+
+def tiny_model(n_sub=2):
+    ds = tiny_ds()
+    subs = tuple(M.SubmodelSpec(6, 32) for _ in range(n_sub))
+    spec = M.ModelSpec("tiny", 4, subs)
+    return M.init_model(3, spec, ds.train_x, ds.num_classes), ds
+
+
+def test_step_ste_forward_and_gradient():
+    x = jnp.array([-0.5, -0.0, 0.0, 0.7])
+    y = M.step_ste(x)
+    np.testing.assert_array_equal(np.array(y), [0.0, 1.0, 1.0, 1.0])
+    g = jax.grad(lambda v: jnp.sum(M.step_ste(v)))(x)
+    np.testing.assert_array_equal(np.array(g), np.ones(4))
+
+
+def test_train_forward_equals_inference_when_binarized():
+    md, ds = tiny_model()
+    x = jnp.array(ds.test_x[:8])
+    bits = M.encode_bits(x, md["thresholds"])
+    # binarize tables → train_forward (no dropout) must equal the
+    # inference path on the binarized model.
+    for sm in md["submodels"]:
+        sm["tables"] = (sm["tables"] >= 0).astype(jnp.float32) * 2.0 - 1.0
+    logits_train = np.array(M.train_forward(md["submodels"], bits))
+    model_bin = {"thresholds": md["thresholds"],
+                 "submodels": [M.binarize_submodel(sm) for sm in md["submodels"]]}
+    logits_inf = np.array(M.inference_forward(model_bin, x, use_pallas=False))
+    np.testing.assert_array_equal(logits_train, logits_inf)
+
+
+def test_pallas_and_ref_inference_agree():
+    md, ds = tiny_model()
+    model_bin = {"thresholds": md["thresholds"],
+                 "submodels": [M.binarize_submodel(sm) for sm in md["submodels"]]}
+    x = jnp.array(ds.test_x[:8])
+    a = np.array(M.inference_forward(model_bin, x, use_pallas=False))
+    b = np.array(M.inference_forward(model_bin, x, use_pallas=True, block_b=4))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_ensemble_sums_submodels():
+    md, ds = tiny_model(n_sub=2)
+    model_bin = {"thresholds": md["thresholds"],
+                 "submodels": [M.binarize_submodel(sm) for sm in md["submodels"]]}
+    x = jnp.array(ds.test_x[:4])
+    full = np.array(M.inference_forward(model_bin, x, use_pallas=False))
+    parts = []
+    for sm in model_bin["submodels"]:
+        one = {"thresholds": md["thresholds"], "submodels": [sm]}
+        parts.append(np.array(M.inference_forward(one, x, use_pallas=False)))
+    np.testing.assert_allclose(full, parts[0] + parts[1])
+
+
+def test_zoo_specs_match_paper_table1():
+    assert M.ULN_S.therm_bits == 2 and len(M.ULN_S.submodels) == 3
+    assert M.ULN_M.therm_bits == 3 and len(M.ULN_M.submodels) == 5
+    assert M.ULN_L.therm_bits == 7 and len(M.ULN_L.submodels) == 6
+    assert [s.inputs_per_filter for s in M.ULN_L.submodels] == [12, 16, 20, 24, 28, 32]
+
+
+def test_model_size_accounting():
+    md, _ = tiny_model(n_sub=1)
+    # iris: 4 features × 4 bits = 16 bits; n=6 → NF=3; 3 classes × 3 × 32 bits
+    expected_kib = (3 * 3 * 32) / 8192
+    assert abs(M.model_size_kib(md) - expected_kib) < 1e-9
+    # pruning half the filters halves the size
+    md["submodels"][0]["keep"] = md["submodels"][0]["keep"].at[:, 0].set(0.0)
+    assert M.model_size_kib(md) < expected_kib
+
+
+def test_gradient_flows_to_tables_only_through_addressed_entries():
+    md, ds = tiny_model(n_sub=1)
+    x = jnp.array(ds.train_x[:16])
+    bits = M.encode_bits(x, md["thresholds"])
+    y = jnp.array(ds.train_y[:16].astype(np.int32))
+    sm = md["submodels"][0]
+
+    def loss(tab):
+        s = dict(sm)
+        s["tables"] = tab
+        logits = M.train_forward([s], bits)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+    g = np.array(jax.grad(loss)(sm["tables"]))
+    assert (g != 0).any(), "some gradient must flow"
+    # gradient sparsity: at most batch × NF × k entries per class touched
+    m, nf, e = g.shape
+    touched = (g != 0).sum()
+    assert touched <= 16 * nf * 2 * m, f"too many touched entries: {touched}"

@@ -1,0 +1,90 @@
+"""Multi-shot trainer tests: learning actually happens, pruning respects
+ratios + adds biases, augmentation shapes, encoder fit properties."""
+
+import numpy as np
+
+from compile import data as D
+from compile import encoding
+from compile import model as M
+from compile import train as T
+
+
+def setup_module():
+    np.seterr(over="ignore")
+
+
+def test_multishot_learns_iris():
+    ds = D.synth_uci(11, D.uci_spec("iris"))
+    spec = M.ModelSpec("t", 8, (M.SubmodelSpec(6, 64),))
+    md, info = T.train_multishot(spec, ds, epochs=30, finetune_epochs=0,
+                                 prune_ratio=0.0, batch=25, lr=0.02,
+                                 dropout_p=0.25, log=lambda s: None)
+    assert info["test_accuracy"] > 0.8, info["test_accuracy"]
+
+
+def test_loss_decreases():
+    ds = D.synth_uci(12, D.uci_spec("wine"))
+    spec = M.ModelSpec("t", 6, (M.SubmodelSpec(8, 64),))
+    md = M.init_model(3, spec, ds.train_x, ds.num_classes)
+    hist = T.fit(md, ds.train_x, ds.train_y, epochs=10, batch=16,
+                 lr=0.02, dropout_p=0.0, log=lambda s: None)
+    assert hist[-1]["loss"] < hist[0]["loss"] * 0.7
+
+
+def test_prune_respects_ratio_and_sets_bias():
+    ds = D.synth_uci(13, D.uci_spec("vowel"))
+    spec = M.ModelSpec("t", 6, (M.SubmodelSpec(6, 64),))
+    md, _ = T.train_multishot(spec, ds, epochs=8, finetune_epochs=0,
+                              prune_ratio=0.0, batch=32, log=lambda s: None)
+    nf = md["submodels"][0]["keep"].shape[1]
+    T.prune(md, ds.train_x, ds.train_y, ratio=0.5)
+    keep = np.asarray(md["submodels"][0]["keep"])
+    expect_kept = nf - int(nf * 0.5)
+    assert (keep.sum(axis=1) == expect_kept).all(), keep.sum(axis=1)
+
+
+def test_tables_stay_clipped():
+    ds = D.synth_uci(14, D.uci_spec("iris"))
+    spec = M.ModelSpec("t", 4, (M.SubmodelSpec(4, 32),))
+    md = M.init_model(3, spec, ds.train_x, ds.num_classes)
+    T.fit(md, ds.train_x, ds.train_y, epochs=5, batch=20, lr=0.1,
+          dropout_p=0.0, log=lambda s: None)
+    tab = np.asarray(md["submodels"][0]["tables"])
+    assert tab.min() >= -1.0 and tab.max() <= 1.0
+
+
+def test_augment_shifts_shapes_and_content():
+    imgs = np.zeros((3, 784), np.float32)
+    imgs[:, 28 * 14 + 14] = 255.0  # single bright pixel at (14,14)
+    labels = np.array([1, 2, 3], np.uint16)
+    ax, ay = T.augment_shifts(imgs, labels)
+    assert ax.shape == (15, 784)
+    assert (ay[:3] == labels).all() and (ay[3:6] == labels).all()
+    shifted = ax[3].reshape(28, 28)  # dx=+1 copy
+    assert shifted[14, 15] == 255.0
+
+
+def test_thermometer_fit_gaussian_properties():
+    rng = np.random.default_rng(0)
+    data = rng.normal(5.0, 2.0, (4000, 2))
+    thr = encoding.fit_thermometer(encoding.GAUSSIAN, data, 7)
+    assert thr.shape == (2, 7)
+    # middle threshold ≈ mean, symmetric spacing
+    assert abs(thr[0, 3] - 5.0) < 0.2
+    assert np.all(np.diff(thr, axis=1) > 0)
+    # ~12.5% of mass in each of the 8 regions
+    enc = encoding.encode(data[:, :1], thr[:1])
+    level = enc.reshape(-1, 7).sum(axis=1)
+    frac = [(level == i).mean() for i in range(8)]
+    assert all(abs(f - 0.125) < 0.03 for f in frac), frac
+
+
+def test_adam_moves_toward_minimum():
+    import jax.numpy as jnp
+    tab = jnp.array([[4.0]])
+    st = {"m": jnp.zeros_like(tab), "v": jnp.zeros_like(tab)}
+    x = tab
+    for t in range(1, 2000):
+        g = 2 * x  # d/dx x^2
+        x, st = T.adam_update(x, g, st, float(t), lr=0.01)
+    assert abs(float(x[0, 0])) < 0.05

@@ -1,0 +1,84 @@
+"""`.uln` interchange tests: roundtrip fidelity, corruption detection and
+semantic equivalence of the reloaded model."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import model as M
+from compile import uln
+
+
+def setup_module():
+    np.seterr(over="ignore")
+
+
+def make_binarized():
+    ds = D.synth_uci(11, D.uci_spec("wine"))
+    spec = M.ModelSpec("t", 4, (M.SubmodelSpec(6, 32), M.SubmodelSpec(9, 64)))
+    md = M.init_model(5, spec, ds.train_x, ds.num_classes)
+    # random binarized tables + a pruned filter + biases
+    rng = np.random.default_rng(0)
+    for sm in md["submodels"]:
+        m, nf, e = sm["tables"].shape
+        sm["tables"] = jnp.array(rng.integers(0, 2, (m, nf, e)).astype(np.float32))
+        keep = np.ones((m, nf), np.float32)
+        keep[1, 0] = 0.0
+        sm["keep"] = jnp.array(keep)
+        sm["bias"] = jnp.array(rng.integers(-2, 3, (m,)).astype(np.float32))
+    mb = {"thresholds": np.asarray(md["thresholds"]),
+          "submodels": [{k: np.asarray(v) for k, v in sm.items()} for sm in md["submodels"]]}
+    return mb, ds
+
+
+def test_roundtrip_preserves_arrays():
+    mb, _ = make_binarized()
+    data = uln.to_bytes(mb, {"name": "t", "test_accuracy": 0.5}, therm_kind=1)
+    back, meta = uln.from_bytes(data)
+    assert meta["name"] == "t"
+    np.testing.assert_array_equal(back["thresholds"], mb["thresholds"])
+    for a, b in zip(mb["submodels"], back["submodels"]):
+        np.testing.assert_array_equal(a["input_order"], b["input_order"])
+        np.testing.assert_array_equal(a["params"], b["params"])
+        np.testing.assert_array_equal(a["keep"], b["keep"])
+        np.testing.assert_array_equal(a["bias"], b["bias"])
+        # pruned filters come back zeroed; kept filters identical
+        keep = a["keep"][..., None]
+        np.testing.assert_array_equal(a["tables"] * keep, b["tables"] * keep)
+
+
+def test_roundtrip_preserves_predictions():
+    mb, ds = make_binarized()
+    data = uln.to_bytes(mb, {"name": "t"}, therm_kind=1)
+    back, _ = uln.from_bytes(data)
+    x = jnp.array(ds.test_x[:16])
+    def predict(model):
+        model_j = {"thresholds": jnp.array(model["thresholds"]),
+                   "submodels": [{k: jnp.array(v) for k, v in sm.items()}
+                                  for sm in model["submodels"]]}
+        return np.array(M.predict(model_j, x, use_pallas=False))
+    np.testing.assert_array_equal(predict(mb), predict(back))
+
+
+def test_corruption_detected():
+    mb, _ = make_binarized()
+    data = bytearray(uln.to_bytes(mb, {}, therm_kind=0))
+    data[len(data) // 2] ^= 0xFF
+    with pytest.raises(ValueError):
+        uln.from_bytes(bytes(data))
+
+
+def test_truncation_detected():
+    mb, _ = make_binarized()
+    data = uln.to_bytes(mb, {}, therm_kind=0)
+    with pytest.raises(ValueError):
+        uln.from_bytes(data[: len(data) - 10])
+
+
+def test_pack_unpack_bits():
+    row = np.array([1, 0, 0, 1, 1, 1, 0, 0, 1, 0, 0, 0, 0, 0, 0, 1], np.float32)
+    packed = uln._pack_table_bits(row)
+    assert len(packed) == 2
+    back = uln._unpack_table_bits(packed, 16)
+    np.testing.assert_array_equal(back, row)

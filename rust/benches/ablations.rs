@@ -1,0 +1,143 @@
+//! Ablation benches for the design choices the paper motivates in §V-A and
+//! §III (and DESIGN.md calls out): hash-function count per filter, the
+//! input bus-compression codec, ensemble size, and the cascade router's
+//! energy/accuracy trade.
+
+use uleen::bench::table::{f1, f2, pct, Table};
+use uleen::coordinator::router::{max_response_of, ModelRouter};
+use uleen::data::synth_mnist;
+use uleen::hw::arch::{AcceleratorInstance, Target};
+use uleen::runtime::{InferenceEngine, NativeEngine};
+use uleen::train::oneshot::{train_oneshot, OneShotConfig};
+
+fn main() -> anyhow::Result<()> {
+    let ds = synth_mnist(2024, 4000, 1000);
+
+    // --- ablation 1: hash functions per filter (paper: k=2 is the spot:
+    // k=1 collides, k>2 costs hardware with no accuracy) ---
+    let mut t = Table::new(
+        "Ablation — hash functions per Bloom filter (one-shot, SynthMNIST)",
+        &["k", "Acc.%", "Size KiB", "hash units (FPGA)", "ASIC nJ/inf"],
+    );
+    for k in [1usize, 2, 4] {
+        let (m, _) = train_oneshot(
+            &ds,
+            &OneShotConfig {
+                inputs_per_filter: 16,
+                entries_per_filter: 256,
+                k_hashes: k,
+                therm_bits: 2,
+                ..Default::default()
+            },
+        );
+        let acc = m.evaluate(&ds.test_x, &ds.test_y, ds.num_features).accuracy();
+        let inst = AcceleratorInstance::generate(&m, Target::Asic);
+        let rep = uleen::hw::asic::implement(&inst);
+        t.row(vec![
+            format!("{k}"),
+            pct(acc),
+            f2(m.size_kib()),
+            format!("{}", inst.total_hash_units()),
+            f1(rep.nj_per_inf),
+        ]);
+    }
+    t.print();
+
+    // --- ablation 2: input compression (paper §III-C) ---
+    let mut t = Table::new(
+        "Ablation — unary→binary input compression (bus traffic per inference)",
+        &["bits/input", "raw bits", "compressed bits", "II raw (cycles@112b)", "II compressed"],
+    );
+    for bits in [1usize, 2, 4, 7, 8] {
+        let raw = 784 * bits;
+        let comp = 784 * uleen::encoding::codec::compressed_bits_per_input(bits);
+        t.row(vec![
+            format!("{bits}"),
+            format!("{raw}"),
+            format!("{}", comp.min(raw)),
+            format!("{}", raw.div_ceil(112)),
+            format!("{}", comp.min(raw).div_ceil(112)),
+        ]);
+    }
+    t.print();
+
+    // --- ablation 3: ensemble size (merge k one-shot submodels) ---
+    let mut t = Table::new(
+        "Ablation — ensemble size (one-shot submodels, summed responses)",
+        &["submodels", "Acc.%", "Size KiB"],
+    );
+    let mut ensemble: Option<uleen::model::ensemble::UleenModel> = None;
+    for (i, n) in [12usize, 16, 20, 24].iter().enumerate() {
+        let (m, _) = train_oneshot(
+            &ds,
+            &OneShotConfig {
+                inputs_per_filter: *n,
+                entries_per_filter: 128,
+                therm_bits: 2,
+                seed: 100 + *n as u64,
+                ..Default::default()
+            },
+        );
+        match &mut ensemble {
+            None => ensemble = Some(m),
+            Some(e) => e.submodels.extend(m.submodels),
+        }
+        let e = ensemble.as_ref().unwrap();
+        let acc = e.evaluate(&ds.test_x, &ds.test_y, ds.num_features).accuracy();
+        t.row(vec![format!("{}", i + 1), pct(acc), f2(e.size_kib())]);
+    }
+    t.print();
+
+    // --- ablation 4: cascade router (energy proxy = expected table bits
+    // touched per request) ---
+    let mut engines: Vec<Box<dyn InferenceEngine>> = Vec::new();
+    let mut maxr = Vec::new();
+    let mut sizes = Vec::new();
+    for (n, e, bits) in [(12usize, 64usize, 2usize), (16, 256, 2), (16, 1024, 4)] {
+        let (m, _) = train_oneshot(
+            &ds,
+            &OneShotConfig {
+                inputs_per_filter: n,
+                entries_per_filter: e,
+                therm_bits: bits,
+                ..Default::default()
+            },
+        );
+        sizes.push(m.size_kib());
+        maxr.push(max_response_of(&m));
+        engines.push(Box::new(NativeEngine::new(m)));
+    }
+    let mut router = ModelRouter::new(engines, maxr);
+    let mut t = Table::new(
+        "Ablation — cascade router (small→large escalation on thin margins)",
+        &["margin thr", "Acc.%", "fast-path %", "mean KiB touched/req"],
+    );
+    for thr in [0.0f32, 0.03, 0.08, 10.0] {
+        router.margin_threshold = thr;
+        router.stats = Default::default();
+        let mut correct = 0usize;
+        let n_eval = 500usize;
+        for i in 0..n_eval {
+            let p = router.classify_cascade(ds.test_row(i))?;
+            if p == ds.test_y[i] as usize {
+                correct += 1;
+            }
+        }
+        let served = router.stats.served;
+        let touched: f64 = served
+            .iter()
+            .zip(sizes.iter())
+            .map(|(&s, &kib)| s as f64 * kib)
+            .sum::<f64>()
+            / n_eval as f64;
+        t.row(vec![
+            format!("{thr}"),
+            pct(correct as f64 / n_eval as f64),
+            pct(router.fast_path_fraction()),
+            f2(touched),
+        ]);
+    }
+    t.print();
+    println!("(shape: k=2 sweet spot; compression shrinks II for t≥4; ensembles improve with diminishing returns; cascades keep most requests on the cheap model)");
+    Ok(())
+}

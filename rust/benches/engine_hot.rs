@@ -1,0 +1,84 @@
+//! L3 hot-path microbenchmarks (§Perf): encode / gather+hash / lookup /
+//! full ensemble inference on the native engine, plus the PJRT engine for
+//! comparison when artifacts exist. This is the bench the optimization
+//! loop in EXPERIMENTS.md §Perf iterates against.
+
+use uleen::bench::harness::bench_fn;
+use uleen::data::synth_mnist;
+use uleen::model::ensemble::EnsembleScratch;
+use uleen::model::submodel::SubmodelScratch;
+use uleen::runtime::{InferenceEngine, NativeEngine, PjrtEngine};
+
+fn main() -> anyhow::Result<()> {
+    let ds = synth_mnist(2024, 64, 256);
+    let (model, _) = uleen::bench::load_model("uln_s.uln")?;
+    let n = 256usize;
+    println!("== engine_hot: native hot-path stages (ULN-S, {n} samples/iter) ==");
+
+    // stage 1: thermometer encode
+    let enc = model.encoder.clone();
+    let r = bench_fn("encode", 3, 30, n as f64, || {
+        for i in 0..n {
+            std::hint::black_box(enc.encode(ds.test_row(i)));
+        }
+    });
+    println!("{}", r.summary());
+
+    // stage 2: gather + hash (submodel 0)
+    let sm = model.submodels[0].clone();
+    let encoded: Vec<_> = (0..n).map(|i| enc.encode(ds.test_row(i))).collect();
+    let mut scratch = SubmodelScratch::default();
+    let r = bench_fn("gather+hash (SM0)", 3, 30, n as f64, || {
+        for e in &encoded {
+            sm.gather_keys(e, &mut scratch.keys);
+            sm.hash_keys(&scratch.keys, &mut scratch.idxs);
+            std::hint::black_box(&scratch.idxs);
+        }
+    });
+    println!("{}", r.summary());
+
+    // stage 3: full submodel responses (lookup included)
+    let mut out = vec![0i32; model.num_classes()];
+    let r = bench_fn("submodel responses (SM0)", 3, 30, n as f64, || {
+        for e in &encoded {
+            sm.responses(e, &mut scratch, &mut out);
+            std::hint::black_box(&out);
+        }
+    });
+    println!("{}", r.summary());
+
+    // stage 4: end-to-end ensemble predict from raw pixels
+    let mut es = EnsembleScratch::default();
+    let r = bench_fn("ensemble predict e2e", 3, 30, n as f64, || {
+        for i in 0..n {
+            std::hint::black_box(model.predict(ds.test_row(i), &mut es));
+        }
+    });
+    println!("{}", r.summary());
+    let native_ips = r.throughput_per_sec();
+
+    // engine-level batch API (what the coordinator calls)
+    let mut native = NativeEngine::new(model.clone());
+    let flat: Vec<f32> = ds.test_x[..n * 784].to_vec();
+    let r = bench_fn("NativeEngine.classify batch", 3, 30, n as f64, || {
+        std::hint::black_box(native.classify(&flat, n).unwrap());
+    });
+    println!("{}", r.summary());
+
+    // PJRT engine comparison (AOT graph through XLA)
+    let hlo = uleen::bench::artifacts_dir().join("uln_s_b16.hlo.txt");
+    if hlo.exists() {
+        let mut pjrt = PjrtEngine::load(&hlo, 16, 784)?;
+        let r = bench_fn("PjrtEngine.classify batch", 2, 10, n as f64, || {
+            std::hint::black_box(pjrt.classify(&flat, n).unwrap());
+        });
+        println!("{}", r.summary());
+        println!(
+            "native/pjrt speed ratio: {:.1}x (native bit-packed tables vs XLA f32 gathers)",
+            r.mean_ns / (n as f64) / (1e9 / native_ips)
+        );
+    } else {
+        println!("(skip PJRT: {} missing — run `make artifacts`)", hlo.display());
+    }
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Regenerates **Fig 11** — energy and inverse-throughput vs error Pareto
+//! fronts for ULEEN and FINN on the FPGA target, at batch=1 and batch=∞.
+
+use uleen::bench::paper;
+use uleen::bench::table::{f2, f3, pct, Table};
+
+fn main() -> anyhow::Result<()> {
+    let zoo = paper::load_zoo()?;
+    let mut rows = paper::uleen_fpga_rows(&zoo);
+    rows.extend(paper::finn_fpga_rows(paper::bnn_accuracies().as_ref()));
+
+    let mut t = Table::new(
+        "Fig 11 — energy & inverse throughput vs error (FPGA)",
+        &["Design", "Error %", "µJ/Inf b=1", "µJ/Inf b=∞", "1/Xput µs b=∞", "Latency µs (b=1)"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.name.clone(),
+            pct(1.0 - r.accuracy),
+            f3(r.uj_b1),
+            f3(r.uj_binf),
+            f3(1e3 / r.kips),
+            f2(r.latency_us),
+        ]);
+    }
+    t.print();
+
+    // Pareto front check: which designs are dominated on (error, energy)?
+    let mut pt = Table::new(
+        "Fig 11 Pareto front (error vs steady-state energy)",
+        &["Design", "On front?"],
+    );
+    for r in &rows {
+        let dominated = rows.iter().any(|o| {
+            !std::ptr::eq(o, r)
+                && (1.0 - o.accuracy) <= (1.0 - r.accuracy)
+                && o.uj_binf <= r.uj_binf
+                && ((1.0 - o.accuracy) < (1.0 - r.accuracy) || o.uj_binf < r.uj_binf)
+        });
+        pt.row(vec![r.name.clone(), if dominated { "dominated".into() } else { "FRONT".into() }]);
+    }
+    pt.print();
+    println!("(paper shape: every FINN design is dominated by a ULEEN design on energy at comparable error)");
+    Ok(())
+}

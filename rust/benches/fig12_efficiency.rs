@@ -1,0 +1,36 @@
+//! Regenerates **Fig 12** — power efficiency (inferences per Joule) for the
+//! ULEEN ASIC designs and the Bit Fusion configurations.
+
+use uleen::bench::paper;
+use uleen::bench::table::{i0, Table};
+
+fn main() -> anyhow::Result<()> {
+    let zoo = paper::load_zoo()?;
+    let rows: Vec<_> = paper::uleen_asic_rows(&zoo)
+        .into_iter()
+        .chain(paper::bitfusion_asic_rows())
+        .collect();
+
+    let mut t = Table::new(
+        "Fig 12 — power efficiency, inferences per Joule (45nm ASIC)",
+        &["Design", "Inf/J", "bar"],
+    );
+    let max_ipj = rows
+        .iter()
+        .map(|r| 1e9 / r.nj_per_inf)
+        .fold(0.0f64, f64::max);
+    for r in &rows {
+        let ipj = 1e9 / r.nj_per_inf;
+        // log-scale bar like the paper's figure
+        let bar_len = ((ipj.log10() - 2.0) / (max_ipj.log10() - 2.0) * 40.0).max(1.0) as usize;
+        t.row(vec![r.name.clone(), i0(ipj), "#".repeat(bar_len)]);
+    }
+    t.print();
+    let uln = rows.iter().find(|r| r.name == "ULN_L").unwrap();
+    let bf = rows.iter().find(|r| r.name == "BF32").unwrap();
+    println!(
+        "ULN-L is {:.0}x more efficient than the best Bit Fusion config (paper: 479-663x vs BF set)",
+        bf.nj_per_inf / uln.nj_per_inf
+    );
+    Ok(())
+}

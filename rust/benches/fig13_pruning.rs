@@ -1,0 +1,40 @@
+//! Regenerates **Fig 13** — pruned size vs error for ULN-L across pruning
+//! ratios 0–98%. Models come from the artifact sweep family (each pruned +
+//! briefly fine-tuned at build time); error is re-measured here natively.
+
+use uleen::bench::table::{f2, pct, Table};
+use uleen::data::synth_mnist;
+
+fn main() -> anyhow::Result<()> {
+    let ds = synth_mnist(2024, 8000, 2000);
+    let dir = uleen::bench::artifacts_dir().join("pruned");
+    let mut files: Vec<_> = std::fs::read_dir(&dir)
+        .map_err(|e| anyhow::anyhow!("{}: {e} — run `make artifacts`", dir.display()))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "uln"))
+        .collect();
+    files.sort();
+    let mut t = Table::new(
+        "Fig 13 — pruned size vs error (ULN-L, SynthMNIST)",
+        &["Prune %", "Size KiB", "Error %", "Acc.%"],
+    );
+    let mut prev_size = f64::INFINITY;
+    for f in &files {
+        let (model, meta) = uleen::model::uln_format::load(f)?;
+        let ratio = meta.get("prune_ratio").and_then(|j| j.as_f64()).unwrap_or(0.0);
+        let acc = model.evaluate(&ds.test_x, &ds.test_y, ds.num_features).accuracy();
+        let size = model.size_kib();
+        assert!(size <= prev_size + 1e-9 || ratio == 0.0, "size must shrink with pruning");
+        prev_size = size;
+        t.row(vec![
+            format!("{:.0}", ratio * 100.0),
+            f2(size),
+            pct(1.0 - acc),
+            pct(acc),
+        ]);
+    }
+    t.print();
+    println!("(paper shape: ~flat error to 30%, gradual to 80%, rapid decay past 90%)");
+    Ok(())
+}

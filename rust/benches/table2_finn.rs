@@ -1,0 +1,55 @@
+//! Regenerates **Table II** — ULEEN (FPGA) vs FINN SFC/MFC/LFC: latency,
+//! throughput, power, energy per inference (batch=1 and batch=∞), LUTs,
+//! BRAM, accuracy. ULEEN rows come from our accelerator generator + FPGA
+//! cost model on the trained artifacts; FINN rows from the analytic
+//! baseline anchored on published numbers (hw::finn).
+
+use uleen::bench::paper;
+use uleen::bench::table::{f1, f2, f3, i0, pct, Table};
+
+fn main() -> anyhow::Result<()> {
+    let zoo = paper::load_zoo()?;
+    let uleen_rows = paper::uleen_fpga_rows(&zoo);
+    let bnn = paper::bnn_accuracies();
+    let finn_rows = paper::finn_fpga_rows(bnn.as_ref());
+
+    let mut t = Table::new(
+        "Table II — ULEEN vs FINN on FPGA (Zynq Z-7045 class, 112-bit IF)",
+        &["Model", "Latency µs", "Xput kIPS", "Power W", "µJ/Inf b=1", "µJ/Inf b=∞", "LUT", "BRAM", "Acc.%"],
+    );
+    // paper pairs ULN-S↔SFC, ULN-M↔MFC, ULN-L↔LFC
+    for (u, f) in uleen_rows.iter().zip(finn_rows.iter()) {
+        for r in [u, f] {
+            t.row(vec![
+                r.name.clone(),
+                f2(r.latency_us),
+                i0(r.kips),
+                f2(r.power_w),
+                f3(r.uj_b1),
+                f3(r.uj_binf),
+                i0(r.luts),
+                f1(r.bram),
+                pct(r.accuracy),
+            ]);
+        }
+    }
+    t.print();
+
+    // headline ratios (paper: 1.4-2.6x latency, 1.2-2.6x throughput,
+    // 6.8-8.5x steady-state energy)
+    let mut rt = Table::new(
+        "Table II ratios — ULEEN improvement over paired FINN model",
+        &["Pair", "Latency x", "Xput x", "Energy b=∞ x", "Energy b=1 x"],
+    );
+    for (u, f) in uleen_rows.iter().zip(finn_rows.iter()) {
+        rt.row(vec![
+            format!("{} vs {}", u.name, f.name),
+            f2(f.latency_us / u.latency_us),
+            f2(u.kips / f.kips),
+            f2(f.uj_binf / u.uj_binf),
+            f2(f.uj_b1 / u.uj_b1),
+        ]);
+    }
+    rt.print();
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Regenerates **Table III** — ULEEN (45 nm ASIC, 192-bit IF, 500 MHz,
+//! batch=16) vs Bit Fusion BF8/BF16/BF32 running ternary LeNet-5.
+
+use uleen::bench::paper;
+use uleen::bench::table::{f1, f2, i0, pct, Table};
+
+fn main() -> anyhow::Result<()> {
+    let zoo = paper::load_zoo()?;
+    let uleen = paper::uleen_asic_rows(&zoo);
+    let bf = paper::bitfusion_asic_rows();
+
+    let mut t = Table::new(
+        "Table III — ULEEN vs Bit Fusion on 45nm ASIC (batch=16)",
+        &["Model", "Xput kIPS", "Power W", "nJ/Inf", "Area mm²", "Acc.%"],
+    );
+    for r in uleen.iter().chain(bf.iter()) {
+        t.row(vec![
+            r.name.clone(),
+            i0(r.kips),
+            f2(r.power_w),
+            f1(r.nj_per_inf),
+            f2(r.area_mm2),
+            pct(r.accuracy),
+        ]);
+    }
+    t.print();
+
+    // headline ratios vs ULN-L (paper: 479-663x energy, 2014-19549x xput)
+    let uln_l = uleen.last().unwrap();
+    let mut rt = Table::new(
+        "Table III ratios — ULN-L vs Bit Fusion configs",
+        &["Pair", "Xput x", "Energy x"],
+    );
+    for b in &bf {
+        rt.row(vec![
+            format!("ULN-L vs {}", b.name),
+            i0(uln_l.kips / b.kips),
+            i0(b.nj_per_inf / uln_l.nj_per_inf),
+        ]);
+    }
+    rt.print();
+    Ok(())
+}

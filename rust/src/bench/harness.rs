@@ -1,0 +1,90 @@
+//! Minimal timing harness: warmup, fixed repetitions, mean/std/percentiles.
+
+use crate::util::stats::{percentile, OnlineStats};
+use std::time::Instant;
+
+/// Timing outcome of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    /// items processed per iteration (for throughput reporting)
+    pub items_per_iter: f64,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> f64 {
+        if self.mean_ns <= 0.0 {
+            0.0
+        } else {
+            self.items_per_iter / (self.mean_ns * 1e-9)
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<32} {:>12.0} ns/iter (±{:.0}) p50={:.0} p99={:.0} → {:>12.0} items/s",
+            self.name,
+            self.mean_ns,
+            self.stddev_ns,
+            self.p50_ns,
+            self.p99_ns,
+            self.throughput_per_sec()
+        )
+    }
+}
+
+/// Time `f` with `warmup` throwaway runs then `iters` measured runs.
+/// `items_per_iter` feeds the derived throughput number.
+pub fn bench_fn(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    items_per_iter: f64,
+    mut f: impl FnMut(),
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = OnlineStats::new();
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        let ns = t0.elapsed().as_nanos() as f64;
+        stats.push(ns);
+        samples.push(ns);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: stats.mean(),
+        stddev_ns: stats.stddev(),
+        p50_ns: percentile(&mut samples.clone(), 0.5),
+        p99_ns: percentile(&mut samples, 0.99),
+        items_per_iter,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut acc = 0u64;
+        let r = bench_fn("spin", 2, 16, 1000.0, || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        assert!(acc > 0);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p99_ns >= r.p50_ns);
+        assert!(r.throughput_per_sec() > 0.0);
+    }
+}

@@ -1,0 +1,46 @@
+//! Bench harness (criterion is unavailable offline): wall-clock timing with
+//! warmup + repetitions, and markdown/CSV table emitters shared by every
+//! `rust/benches/*` target that regenerates a paper table or figure.
+
+pub mod harness;
+pub mod paper;
+pub mod table;
+
+pub use harness::{bench_fn, BenchResult};
+pub use table::Table;
+
+use std::path::{Path, PathBuf};
+
+/// Locate `artifacts/` from a bench binary (cwd = package root under
+/// `cargo bench`; fall back to CARGO_MANIFEST_DIR).
+pub fn artifacts_dir() -> PathBuf {
+    for cand in [
+        PathBuf::from("artifacts"),
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    ] {
+        if cand.is_dir() {
+            return cand;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+/// Load a `.uln` plus metadata, with a friendly error pointing at `make
+/// artifacts` when the file is missing.
+pub fn load_model(
+    rel: &str,
+) -> crate::Result<(crate::model::ensemble::UleenModel, crate::util::json::Json)> {
+    let path = artifacts_dir().join(rel);
+    if !path.exists() {
+        anyhow::bail!(
+            "artifact {} missing — run `make artifacts` first",
+            path.display()
+        );
+    }
+    crate::model::uln_format::load(&path)
+}
+
+/// Metadata accuracy field (test_accuracy) of a model artifact.
+pub fn meta_accuracy(meta: &crate::util::json::Json) -> f64 {
+    meta.get("test_accuracy").and_then(|j| j.as_f64()).unwrap_or(f64::NAN)
+}

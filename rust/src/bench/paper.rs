@@ -1,0 +1,146 @@
+//! Shared row-generation for the paper's tables/figures: Table II (FPGA vs
+//! FINN) and Table III (ASIC vs Bit Fusion) rows are produced here once and
+//! consumed by `table2_finn`, `table3_bitfusion`, `fig11_pareto` and
+//! `fig12_efficiency`.
+
+use crate::hw::arch::{AcceleratorInstance, Target};
+use crate::hw::{asic, bitfusion, finn, fpga};
+use crate::model::ensemble::UleenModel;
+use crate::util::json::Json;
+
+/// One FPGA comparison row (Table II / Fig 11).
+#[derive(Clone, Debug)]
+pub struct FpgaRow {
+    pub name: String,
+    pub is_baseline: bool,
+    pub latency_us: f64,
+    pub kips: f64,
+    pub power_w: f64,
+    pub uj_b1: f64,
+    pub uj_binf: f64,
+    pub luts: f64,
+    pub bram: f64,
+    pub accuracy: f64,
+}
+
+/// One ASIC comparison row (Table III / Fig 12).
+#[derive(Clone, Debug)]
+pub struct AsicRow {
+    pub name: String,
+    pub is_baseline: bool,
+    pub kips: f64,
+    pub power_w: f64,
+    pub nj_per_inf: f64,
+    pub area_mm2: f64,
+    pub accuracy: f64,
+}
+
+/// ULEEN zoo rows on the FPGA target.
+pub fn uleen_fpga_rows(models: &[(UleenModel, Json)]) -> Vec<FpgaRow> {
+    models
+        .iter()
+        .map(|(model, meta)| {
+            let mut inst = AcceleratorInstance::generate(model, Target::Fpga);
+            let rep = fpga::implement(&mut inst);
+            FpgaRow {
+                name: model.name.to_uppercase(),
+                is_baseline: false,
+                latency_us: rep.latency_us,
+                kips: rep.throughput_kips,
+                power_w: rep.power_w,
+                uj_b1: rep.uj_per_inf_single,
+                uj_binf: rep.uj_per_inf_steady,
+                luts: rep.luts as f64,
+                bram: rep.bram as f64,
+                accuracy: crate::bench::meta_accuracy(meta),
+            }
+        })
+        .collect()
+}
+
+/// FINN baseline rows. `bnn_accs` overrides accuracy with our
+/// SynthMNIST-trained BNN accuracies when available (zoo.json), else the
+/// published MNIST accuracy is reported (documented substitution).
+pub fn finn_fpga_rows(bnn_accs: Option<&[f64; 3]>) -> Vec<FpgaRow> {
+    [finn::SFC, finn::MFC, finn::LFC]
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let rep = finn::implement(t, 200.0);
+            let pubd = finn::published(t);
+            FpgaRow {
+                name: t.name.to_string(),
+                is_baseline: true,
+                latency_us: pubd.latency_us.unwrap_or(rep.latency_us),
+                kips: rep.kips,
+                power_w: rep.power_w,
+                uj_b1: rep.uj_per_inf_single,
+                uj_binf: rep.uj_per_inf_steady,
+                luts: pubd.luts.unwrap_or(7.2 * rep.synaptic_ops as f64 / rep.ii_cycles as f64),
+                bram: pubd.bram.unwrap_or(0.0),
+                accuracy: bnn_accs.map(|a| a[i]).unwrap_or(pubd.mnist_accuracy),
+            }
+        })
+        .collect()
+}
+
+/// ULEEN zoo rows on the ASIC target.
+pub fn uleen_asic_rows(models: &[(UleenModel, Json)]) -> Vec<AsicRow> {
+    models
+        .iter()
+        .map(|(model, meta)| {
+            let inst = AcceleratorInstance::generate(model, Target::Asic);
+            let rep = asic::implement(&inst);
+            AsicRow {
+                name: model.name.to_uppercase(),
+                is_baseline: false,
+                kips: rep.throughput_kips,
+                power_w: rep.power_w,
+                nj_per_inf: rep.nj_per_inf,
+                area_mm2: rep.area_mm2,
+                accuracy: crate::bench::meta_accuracy(meta),
+            }
+        })
+        .collect()
+}
+
+/// Bit Fusion baseline rows (analytic model at 45nm/500MHz).
+pub fn bitfusion_asic_rows() -> Vec<AsicRow> {
+    [bitfusion::BF8, bitfusion::BF16, bitfusion::BF32]
+        .iter()
+        .map(|c| {
+            let rep = bitfusion::implement(c, 500.0);
+            let pubd = bitfusion::published(c);
+            AsicRow {
+                name: c.name.to_string(),
+                is_baseline: true,
+                kips: rep.kips,
+                power_w: rep.power_w,
+                nj_per_inf: rep.nj_per_inf,
+                area_mm2: rep.area_mm2,
+                accuracy: pubd.mnist_accuracy,
+            }
+        })
+        .collect()
+}
+
+/// Load the ULN-S/M/L zoo from artifacts.
+pub fn load_zoo() -> crate::Result<Vec<(UleenModel, Json)>> {
+    ["uln_s.uln", "uln_m.uln", "uln_l.uln"]
+        .iter()
+        .map(|f| crate::bench::load_model(f))
+        .collect()
+}
+
+/// BNN accuracies from zoo.json if the python build trained them.
+pub fn bnn_accuracies() -> Option<[f64; 3]> {
+    let path = crate::bench::artifacts_dir().join("zoo.json");
+    let text = std::fs::read_to_string(path).ok()?;
+    let j = Json::parse(&text).ok()?;
+    let b = j.get("bnn")?;
+    Some([
+        b.get("sfc")?.as_f64()?,
+        b.get("mfc")?.as_f64()?,
+        b.get("lfc")?.as_f64()?,
+    ])
+}

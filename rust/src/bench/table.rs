@@ -1,0 +1,115 @@
+//! Markdown/CSV table emitter for the paper-regeneration benches.
+
+/// A simple column-aligned table with a title, printed as markdown.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let ncol = self.headers.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            width[i] = width[i].max(h.len());
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut s = format!("\n### {}\n\n", self.title);
+        let fmt_row = |cells: &[String], width: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(width) {
+                line.push_str(&format!(" {c:<w$} |"));
+            }
+            line.push('\n');
+            line
+        };
+        s.push_str(&fmt_row(&self.headers, &width));
+        s.push('|');
+        for w in &width {
+            s.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&fmt_row(r, &width));
+        }
+        s
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = self.headers.join(",");
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&r.join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.to_markdown());
+    }
+}
+
+/// Format helpers for consistent table cells.
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+pub fn f4(x: f64) -> String {
+    format!("{x:.4}")
+}
+pub fn i0(x: f64) -> String {
+    format!("{x:.0}")
+}
+pub fn pct(x: f64) -> String {
+    format!("{:.2}", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut t = Table::new("Demo", &["name", "value"]);
+        t.row(vec!["alpha".into(), "1".into()]);
+        t.row(vec!["b".into(), "12345".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| alpha | 1     |"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("name,value\n"));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

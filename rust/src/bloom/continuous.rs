@@ -1,0 +1,82 @@
+//! Continuous Bloom filter — f32 entries, unit-step binarization.
+//!
+//! Multi-shot training (paper §III-B2) happens in JAX (L2); this Rust
+//! mirror exists so the `.uln` import path and the binarization semantics
+//! can be cross-checked natively, and so the one-shot ↔ multi-shot code
+//! paths share an interface.
+
+use crate::bloom::binary::BinaryBloom;
+
+/// Continuous Bloom filter: entries in `[-1, 1]`; the filter responds 1
+/// iff the **minimum** addressed entry is ≥ 0 (unit step of the min).
+#[derive(Clone, Debug)]
+pub struct ContinuousBloom {
+    pub weights: Vec<f32>,
+}
+
+impl ContinuousBloom {
+    pub fn new(entries: usize, init: f32) -> Self {
+        assert!(entries.is_power_of_two());
+        Self { weights: vec![init; entries] }
+    }
+
+    pub fn entries(&self) -> usize {
+        self.weights.len()
+    }
+
+    #[inline]
+    pub fn min_indices(&self, idxs: &[u64]) -> f32 {
+        idxs.iter()
+            .map(|&i| self.weights[i as usize])
+            .fold(f32::INFINITY, f32::min)
+    }
+
+    /// Unit-step response: 1 iff min entry ≥ 0.
+    #[inline]
+    pub fn test_indices(&self, idxs: &[u64]) -> bool {
+        self.min_indices(idxs) >= 0.0
+    }
+
+    /// Binarize with the unit step (entry ≥ 0 → 1).
+    pub fn binarize(&self) -> BinaryBloom {
+        let mut f = BinaryBloom::zeros(self.entries());
+        for (i, &w) in self.weights.iter().enumerate() {
+            if w >= 0.0 {
+                f.table.set(i);
+            }
+        }
+        f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::h3::H3Family;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn step_semantics_on_min() {
+        let mut f = ContinuousBloom::new(8, -1.0);
+        f.weights[2] = 0.5;
+        f.weights[5] = 0.0;
+        assert!(f.test_indices(&[2, 5])); // min = 0.0 → 1
+        assert!(!f.test_indices(&[2, 5, 7])); // min = -1.0 → 0
+    }
+
+    #[test]
+    fn binarize_equivalence_exhaustive() {
+        let mut rng = Rng::new(20);
+        let fam = H3Family::random(&mut rng, 2, 12, 5);
+        let mut f = ContinuousBloom::new(32, -1.0);
+        for i in 0..32 {
+            f.weights[i] = (rng.f64() * 2.0 - 1.0) as f32;
+        }
+        let bin = f.binarize();
+        let mut idxs = vec![0u64; 2];
+        for key in 0..4096u64 {
+            fam.hash_all(key, &mut idxs);
+            assert_eq!(f.test_indices(&idxs), bin.test_indices(&idxs), "key {key}");
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! Counting Bloom filter with the paper's min-increment update and
+//! bleaching-threshold binarization (§III-A1, Fig 4).
+
+use crate::bloom::binary::BinaryBloom;
+use crate::hash::h3::H3Family;
+
+/// Counting Bloom filter: u16 counters (saturating), `k` hash positions.
+///
+/// Training update: find the minimum of the `k` addressed counters and
+/// increment **all counters equal to that minimum** (paper: "the smallest
+/// of its corresponding counter values is incremented (multiple counters
+/// in the event of a tie)"). Query: minimum of addressed counters; the
+/// filter responds 1 iff that minimum is ≥ the bleaching threshold `b`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CountingBloom {
+    pub counters: Vec<u16>,
+}
+
+impl CountingBloom {
+    pub fn zeros(entries: usize) -> Self {
+        assert!(entries.is_power_of_two(), "table size must be a power of two");
+        Self { counters: vec![0; entries] }
+    }
+
+    pub fn entries(&self) -> usize {
+        self.counters.len()
+    }
+
+    /// Min-increment training update on precomputed indices.
+    #[inline]
+    pub fn train_indices(&mut self, idxs: &[u64]) {
+        let min = idxs
+            .iter()
+            .map(|&i| self.counters[i as usize])
+            .min()
+            .expect("k >= 1");
+        if min == u16::MAX {
+            return; // saturated
+        }
+        for &i in idxs {
+            if self.counters[i as usize] == min {
+                self.counters[i as usize] = min + 1;
+            }
+        }
+    }
+
+    /// Minimum addressed counter — the value compared against `b`.
+    #[inline]
+    pub fn query_min_indices(&self, idxs: &[u64]) -> u16 {
+        idxs.iter()
+            .map(|&i| self.counters[i as usize])
+            .min()
+            .expect("k >= 1")
+    }
+
+    /// Response under bleaching threshold `b` ("possibly seen ≥ b times").
+    #[inline]
+    pub fn test_indices(&self, idxs: &[u64], b: u16) -> bool {
+        self.query_min_indices(idxs) >= b
+    }
+
+    /// Convenience key-based train (tests only).
+    pub fn train_key(&mut self, fam: &H3Family, key: u64) {
+        let mut idxs = vec![0u64; fam.k()];
+        fam.hash_all(key, &mut idxs);
+        self.train_indices(&idxs);
+    }
+
+    /// Convenience key-based query (tests only).
+    pub fn query_min_key(&self, fam: &H3Family, key: u64) -> u16 {
+        let mut idxs = vec![0u64; fam.k()];
+        fam.hash_all(key, &mut idxs);
+        self.query_min_indices(&idxs)
+    }
+
+    /// Binarize at bleaching threshold `b` → inference-time binary filter
+    /// (entry = 1 iff counter ≥ b).
+    pub fn binarize(&self, b: u16) -> BinaryBloom {
+        let mut f = BinaryBloom::zeros(self.entries());
+        for (i, &c) in self.counters.iter().enumerate() {
+            if c >= b {
+                f.table.set(i);
+            }
+        }
+        f
+    }
+
+    /// Largest counter value (upper bound for the bleaching search).
+    pub fn max_counter(&self) -> u16 {
+        self.counters.iter().copied().max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config};
+    use crate::util::rng::Rng;
+
+    fn fam(seed: u64) -> H3Family {
+        let mut rng = Rng::new(seed);
+        H3Family::random(&mut rng, 3, 16, 8)
+    }
+
+    #[test]
+    fn repeated_pattern_raises_min_count() {
+        let fam = fam(1);
+        let mut f = CountingBloom::zeros(256);
+        let key = 0xABCD & 0xFFFF;
+        for i in 1..=5 {
+            f.train_key(&fam, key);
+            assert_eq!(f.query_min_key(&fam, key), i as u16);
+        }
+    }
+
+    #[test]
+    fn min_increment_never_overshoots() {
+        // Property: after training a multiset of keys, the min-count of a
+        // key never exceeds the number of times it was trained (collisions
+        // can only inflate individual counters, not the minimum beyond the
+        // insertion count... actually collisions CAN inflate the min; the
+        // sound invariant is the Bloom-side one: min-count >= times trained).
+        check(
+            "counting-bloom-lower-bound",
+            &Config { cases: 64, ..Config::default() },
+            |rng, size| {
+                let fam = H3Family::random(rng, 2, 16, 7);
+                let keys: Vec<u64> =
+                    (0..size.min(40)).map(|_| rng.next_u64() & 0xFFFF).collect();
+                let reps = 1 + (rng.below(4) as usize);
+                (fam, keys, reps)
+            },
+            |(fam, keys, reps)| {
+                let mut f = CountingBloom::zeros(128);
+                for _ in 0..*reps {
+                    for &k in keys {
+                        f.train_key(fam, k);
+                    }
+                }
+                for &k in keys {
+                    let m = f.query_min_key(fam, k) as usize;
+                    let times = keys.iter().filter(|&&x| x == k).count() * reps;
+                    if m < times {
+                        return Err(format!(
+                            "min count {m} < train count {times} for key {k:#x}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn binarize_matches_threshold_query() {
+        check(
+            "binarize-equiv",
+            &Config { cases: 48, ..Config::default() },
+            |rng, size| {
+                let fam = H3Family::random(rng, 2, 16, 7);
+                let keys: Vec<u64> =
+                    (0..size.min(60)).map(|_| rng.next_u64() & 0xFFFF).collect();
+                let b = 1 + rng.below(3) as u16;
+                (fam, keys, b)
+            },
+            |(fam, keys, b)| {
+                let mut f = CountingBloom::zeros(128);
+                for &k in keys {
+                    f.train_key(fam, k);
+                }
+                let bin = f.binarize(*b);
+                let mut idxs = vec![0u64; fam.k()];
+                for probe in 0..256u64 {
+                    fam.hash_all(probe, &mut idxs);
+                    let via_count = f.test_indices(&idxs, *b);
+                    let via_bin = bin.test_indices(&idxs);
+                    if via_count != via_bin {
+                        return Err(format!("mismatch at probe {probe}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn bleaching_filters_rare_patterns() {
+        let fam = fam(3);
+        let mut f = CountingBloom::zeros(256);
+        let common = 0x1111u64 & 0xFFFF;
+        let rare = 0x2222u64 & 0xFFFF;
+        for _ in 0..10 {
+            f.train_key(&fam, common);
+        }
+        f.train_key(&fam, rare);
+        let b = 3;
+        let mut idxs = vec![0u64; fam.k()];
+        fam.hash_all(common, &mut idxs);
+        assert!(f.test_indices(&idxs, b));
+        fam.hash_all(rare, &mut idxs);
+        assert!(!f.test_indices(&idxs, b));
+    }
+
+    #[test]
+    fn counters_saturate_instead_of_wrapping() {
+        let fam = fam(4);
+        let mut f = CountingBloom::zeros(256);
+        f.counters.iter_mut().for_each(|c| *c = u16::MAX - 1);
+        for _ in 0..10 {
+            f.train_key(&fam, 1);
+        }
+        assert!(f.counters.iter().all(|&c| c >= u16::MAX - 1));
+    }
+}

@@ -1,0 +1,19 @@
+//! Bloom-filter RAM nodes (paper §III-A1).
+//!
+//! Three variants mirror the paper's training story:
+//! * [`BinaryBloom`] — the inference-time filter: bit-packed table, `k` H3
+//!   hashes, responds 1 iff **all** hashed positions are set.
+//! * [`CountingBloom`] — one-shot training: multi-bit counters with the
+//!   "increment the minimum (ties: all minima)" update, enabling
+//!   *bleaching* (threshold `b`).
+//! * [`ContinuousBloom`] — multi-shot training parity: f32 entries,
+//!   binarized by a unit step; the JAX side trains these, this struct
+//!   exists for cross-checking the binarization.
+
+pub mod binary;
+pub mod continuous;
+pub mod counting;
+
+pub use binary::BinaryBloom;
+pub use continuous::ContinuousBloom;
+pub use counting::CountingBloom;

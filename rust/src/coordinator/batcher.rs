@@ -1,0 +1,233 @@
+//! Bounded request queue + dynamic micro-batcher.
+//!
+//! Requests enter through [`BoundedQueue::submit`] (non-blocking reject on
+//! overflow = explicit backpressure) and leave in batches via
+//! [`BoundedQueue::next_batch`]: a worker takes up to `max_batch` requests,
+//! waiting at most `max_wait` after the first request arrives — the classic
+//! size-or-deadline batching rule the paper's fixed-batch accelerator
+//! implies for real deployments.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One inference request travelling through the coordinator.
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub features: Vec<f32>,
+    pub enqueued: Instant,
+    /// Completion channel: (request id, predicted class, response scores).
+    pub done: std::sync::mpsc::Sender<(u64, usize, Vec<f32>)>,
+}
+
+/// Why a submit was refused.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Queue at capacity — caller should back off (backpressure).
+    Full,
+    /// Server is shutting down.
+    Closed,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub capacity: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 16, max_wait: Duration::from_micros(200), capacity: 4096 }
+    }
+}
+
+struct State {
+    queue: VecDeque<Request>,
+    closed: bool,
+}
+
+/// MPMC bounded queue with condvar wakeups.
+pub struct BoundedQueue {
+    cfg: BatcherConfig,
+    state: Mutex<State>,
+    nonempty: Condvar,
+}
+
+impl BoundedQueue {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Self {
+            cfg,
+            state: Mutex::new(State { queue: VecDeque::new(), closed: false }),
+            nonempty: Condvar::new(),
+        }
+    }
+
+    pub fn config(&self) -> &BatcherConfig {
+        &self.cfg
+    }
+
+    /// Non-blocking submit; rejects when full (backpressure) or closed.
+    pub fn submit(&self, req: Request) -> Result<(), (SubmitError, Request)> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err((SubmitError::Closed, req));
+        }
+        if st.queue.len() >= self.cfg.capacity {
+            return Err((SubmitError::Full, req));
+        }
+        st.queue.push_back(req);
+        drop(st);
+        self.nonempty.notify_one();
+        Ok(())
+    }
+
+    /// Current depth (approximate — for metrics/backpressure decisions).
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    /// Take the next micro-batch: blocks until at least one request is
+    /// available (or closed+empty → None), then waits up to `max_wait` for
+    /// the batch to fill to `max_batch`.
+    pub fn next_batch(&self) -> Option<Vec<Request>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if !st.queue.is_empty() {
+                break;
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.nonempty.wait(st).unwrap();
+        }
+        // got the first request; optionally dwell for more
+        let deadline = Instant::now() + self.cfg.max_wait;
+        while st.queue.len() < self.cfg.max_batch && !st.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (next, timeout) = self
+                .nonempty
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = next;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let take = st.queue.len().min(self.cfg.max_batch);
+        Some(st.queue.drain(..take).collect())
+    }
+
+    /// Close the queue: no new submissions; workers drain what remains.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.nonempty.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::sync::Arc;
+
+    fn req(id: u64, tx: &mpsc::Sender<(u64, usize, Vec<f32>)>) -> Request {
+        Request { id, features: vec![0.0], enqueued: Instant::now(), done: tx.clone() }
+    }
+
+    #[test]
+    fn batch_respects_max_batch() {
+        let q = BoundedQueue::new(BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            capacity: 100,
+        });
+        let (tx, _rx) = mpsc::channel();
+        for i in 0..10 {
+            q.submit(req(i, &tx)).unwrap();
+        }
+        let b1 = q.next_batch().unwrap();
+        let b2 = q.next_batch().unwrap();
+        assert_eq!(b1.len(), 4);
+        assert_eq!(b2.len(), 4);
+        assert_eq!(b1[0].id, 0);
+        assert_eq!(b2[0].id, 4, "FIFO order preserved");
+    }
+
+    #[test]
+    fn backpressure_on_full_queue() {
+        let q = BoundedQueue::new(BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_micros(10),
+            capacity: 2,
+        });
+        let (tx, _rx) = mpsc::channel();
+        q.submit(req(0, &tx)).unwrap();
+        q.submit(req(1, &tx)).unwrap();
+        let err = q.submit(req(2, &tx)).unwrap_err();
+        assert_eq!(err.0, SubmitError::Full);
+    }
+
+    #[test]
+    fn close_rejects_and_drains() {
+        let q = BoundedQueue::new(BatcherConfig::default());
+        let (tx, _rx) = mpsc::channel();
+        q.submit(req(0, &tx)).unwrap();
+        q.close();
+        let err = q.submit(req(1, &tx)).unwrap_err();
+        assert_eq!(err.0, SubmitError::Closed);
+        // drains the remaining request, then None
+        assert_eq!(q.next_batch().unwrap().len(), 1);
+        assert!(q.next_batch().is_none());
+    }
+
+    #[test]
+    fn deadline_fires_with_partial_batch() {
+        let q = Arc::new(BoundedQueue::new(BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(5),
+            capacity: 100,
+        }));
+        let (tx, _rx) = mpsc::channel();
+        q.submit(req(0, &tx)).unwrap();
+        let t0 = Instant::now();
+        let b = q.next_batch().unwrap();
+        assert_eq!(b.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(4), "should dwell ~max_wait");
+    }
+
+    #[test]
+    fn concurrent_producers_no_loss_no_dup() {
+        let q = Arc::new(BoundedQueue::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(50),
+            capacity: 10_000,
+        }));
+        let (tx, _rx) = mpsc::channel();
+        let mut handles = Vec::new();
+        for p in 0..4u64 {
+            let q = q.clone();
+            let tx = tx.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..250u64 {
+                    q.submit(req(p * 1000 + i, &tx)).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        q.close();
+        let mut seen = std::collections::HashSet::new();
+        while let Some(batch) = q.next_batch() {
+            for r in batch {
+                assert!(seen.insert(r.id), "duplicate id {}", r.id);
+            }
+        }
+        assert_eq!(seen.len(), 1000, "all requests delivered exactly once");
+    }
+}

@@ -1,0 +1,106 @@
+//! `uleen serve` — run the serving coordinator on a trained model with a
+//! synthetic open-loop load and print the metrics report.
+
+use crate::coordinator::server::{Server, ServerConfig};
+use crate::coordinator::batcher::BatcherConfig;
+use crate::data::synth_mnist;
+use crate::model::uln_format;
+use crate::runtime::{NativeEngine, PjrtEngine};
+use crate::util::cli::Args;
+use std::path::Path;
+use std::sync::mpsc;
+use std::time::Duration;
+
+pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let model_path = args
+        .get("model")
+        .ok_or_else(|| anyhow::anyhow!("--model <file.uln> required"))?;
+    let batch = args.get_usize("batch", 16).map_err(anyhow::Error::msg)?;
+    let requests = args.get_usize("requests", 10_000).map_err(anyhow::Error::msg)?;
+    let workers = args.get_usize("workers", 4).map_err(anyhow::Error::msg)?;
+    let seed = args.get_u64("seed", 2024).map_err(anyhow::Error::msg)?;
+    let hlo = args.get("hlo");
+
+    let (model, _) = uln_format::load(Path::new(model_path))?;
+    let num_features = model.encoder.num_inputs;
+    let cfg = ServerConfig {
+        batcher: BatcherConfig {
+            max_batch: batch,
+            max_wait: Duration::from_micros(200),
+            capacity: 16384,
+        },
+        workers,
+    };
+    let server = if let Some(hlo_path) = hlo {
+        let hlo_path = hlo_path.to_string();
+        Server::start(cfg, move |_| {
+            Ok(Box::new(PjrtEngine::load(Path::new(&hlo_path), batch, num_features)?))
+        })?
+    } else {
+        Server::start(cfg, move |_| Ok(Box::new(NativeEngine::new(model.clone()))))?
+    };
+
+    // Open-loop load from the test split of SynthMNIST-like data (or the
+    // model's own feature width if it is not an image model).
+    let ds = if num_features == 784 {
+        synth_mnist(seed, 16, requests.min(4000))
+    } else {
+        // synthesize uniform feature noise for non-image models
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let n = requests.min(4000);
+        crate::data::Dataset {
+            name: "noise".into(),
+            num_features,
+            num_classes: 2,
+            train_x: vec![],
+            train_y: vec![],
+            test_x: (0..n * num_features).map(|_| rng.f64() as f32).collect(),
+            test_y: vec![0; n],
+        }
+    };
+    let (tx, rx) = mpsc::channel();
+    let mut correct = 0usize;
+    let mut submitted = 0usize;
+    let n_test = ds.n_test();
+    let mut id2label = std::collections::HashMap::new();
+    for i in 0..requests {
+        let row = ds.test_row(i % n_test).to_vec();
+        loop {
+            match server.submit(row.clone(), tx.clone()) {
+                Ok(id) => {
+                    id2label.insert(id, ds.test_y[i % n_test] as usize);
+                    submitted += 1;
+                    break;
+                }
+                Err(crate::coordinator::batcher::SubmitError::Full) => {
+                    std::thread::sleep(Duration::from_micros(50));
+                }
+                Err(e) => anyhow::bail!("submit failed: {e:?}"),
+            }
+        }
+    }
+    drop(tx);
+    for _ in 0..submitted {
+        let (id, pred, _) = rx.recv_timeout(Duration::from_secs(30))?;
+        if id2label.get(&id) == Some(&pred) {
+            correct += 1;
+        }
+    }
+    let report = server.metrics.report(batch);
+    server.shutdown();
+    println!("served {} requests on {} workers (batch {})", submitted, workers, batch);
+    println!(
+        "throughput: {:.0} inf/s | latency p50/p99: {:.1}/{:.1} µs | batch fill {:.0}%",
+        report.throughput_rps,
+        report.latency_us_p50,
+        report.latency_us_p99,
+        report.mean_batch_fill * 100.0
+    );
+    println!(
+        "accuracy on served traffic: {:.4} | rejected(full): {}",
+        correct as f64 / submitted as f64,
+        report.rejected_full
+    );
+    println!("json: {}", report.to_json().to_string());
+    Ok(())
+}

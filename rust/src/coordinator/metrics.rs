@@ -1,0 +1,151 @@
+//! Serving metrics: latency distribution, throughput, batch-fill factor,
+//! rejection counts — the numbers the E2E example and EXPERIMENTS.md report.
+
+use crate::util::stats::{percentile, OnlineStats};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+#[derive(Default)]
+struct Inner {
+    latencies_us: Vec<f64>,
+    batch_sizes: OnlineStats,
+    completed: u64,
+    rejected_full: u64,
+    rejected_closed: u64,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+}
+
+/// Thread-safe metrics sink shared by workers and producers.
+#[derive(Default)]
+pub struct ServerMetrics {
+    inner: Mutex<Inner>,
+}
+
+/// A finished-run summary (all derived numbers precomputed).
+#[derive(Clone, Debug)]
+pub struct MetricsReport {
+    pub completed: u64,
+    pub rejected_full: u64,
+    pub rejected_closed: u64,
+    pub wall_secs: f64,
+    pub throughput_rps: f64,
+    pub mean_batch_fill: f64,
+    pub latency_us_p50: f64,
+    pub latency_us_p99: f64,
+    pub latency_us_mean: f64,
+    pub latency_us_max: f64,
+}
+
+impl ServerMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn mark_start(&self) {
+        let mut g = self.inner.lock().unwrap();
+        if g.started.is_none() {
+            g.started = Some(Instant::now());
+        }
+    }
+
+    pub fn record_batch(&self, batch_size: usize, latencies: &[Duration]) {
+        let mut g = self.inner.lock().unwrap();
+        g.batch_sizes.push(batch_size as f64);
+        g.completed += latencies.len() as u64;
+        for l in latencies {
+            g.latencies_us.push(l.as_secs_f64() * 1e6);
+        }
+        g.finished = Some(Instant::now());
+    }
+
+    pub fn record_reject(&self, full: bool) {
+        let mut g = self.inner.lock().unwrap();
+        if full {
+            g.rejected_full += 1;
+        } else {
+            g.rejected_closed += 1;
+        }
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.inner.lock().unwrap().completed
+    }
+
+    pub fn report(&self, max_batch: usize) -> MetricsReport {
+        let g = self.inner.lock().unwrap();
+        let wall = match (g.started, g.finished) {
+            (Some(a), Some(b)) => (b - a).as_secs_f64(),
+            _ => 0.0,
+        };
+        let (p50, p99, mean, max) = if g.latencies_us.is_empty() {
+            (0.0, 0.0, 0.0, 0.0)
+        } else {
+            let mut v = g.latencies_us.clone();
+            let p50 = percentile(&mut v, 0.50);
+            let p99 = percentile(&mut v, 0.99);
+            let mean = v.iter().sum::<f64>() / v.len() as f64;
+            let max = v.last().copied().unwrap_or(0.0);
+            (p50, p99, mean, max)
+        };
+        MetricsReport {
+            completed: g.completed,
+            rejected_full: g.rejected_full,
+            rejected_closed: g.rejected_closed,
+            wall_secs: wall,
+            throughput_rps: if wall > 0.0 { g.completed as f64 / wall } else { 0.0 },
+            mean_batch_fill: if max_batch > 0 { g.batch_sizes.mean() / max_batch as f64 } else { 0.0 },
+            latency_us_p50: p50,
+            latency_us_p99: p99,
+            latency_us_mean: mean,
+            latency_us_max: max,
+        }
+    }
+}
+
+impl MetricsReport {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut j = Json::obj();
+        j.set("completed", Json::Num(self.completed as f64))
+            .set("rejected_full", Json::Num(self.rejected_full as f64))
+            .set("wall_secs", Json::Num(self.wall_secs))
+            .set("throughput_rps", Json::Num(self.throughput_rps))
+            .set("mean_batch_fill", Json::Num(self.mean_batch_fill))
+            .set("latency_us_p50", Json::Num(self.latency_us_p50))
+            .set("latency_us_p99", Json::Num(self.latency_us_p99))
+            .set("latency_us_mean", Json::Num(self.latency_us_mean));
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_computes_percentiles_and_throughput() {
+        let m = ServerMetrics::new();
+        m.mark_start();
+        let lats: Vec<Duration> = (1..=100).map(Duration::from_micros).collect();
+        m.record_batch(10, &lats[..50]);
+        m.record_batch(6, &lats[50..]);
+        let r = m.report(10);
+        assert_eq!(r.completed, 100);
+        assert!((r.latency_us_p50 - 50.0).abs() <= 1.0);
+        assert!((r.latency_us_p99 - 99.0).abs() <= 1.0);
+        assert!((r.mean_batch_fill - 0.8).abs() < 1e-9);
+        assert!(r.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn rejects_are_counted_separately() {
+        let m = ServerMetrics::new();
+        m.record_reject(true);
+        m.record_reject(true);
+        m.record_reject(false);
+        let r = m.report(16);
+        assert_eq!(r.rejected_full, 2);
+        assert_eq!(r.rejected_closed, 1);
+    }
+}

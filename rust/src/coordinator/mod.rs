@@ -1,0 +1,19 @@
+//! Layer-3 serving coordinator — the runtime system around the model.
+//!
+//! The paper's accelerator (Fig 8) operates in lockstep on whole input
+//! batches fed over a fixed-width bus; this module is the software
+//! coordinator a deployment would wrap around it (or around the native /
+//! PJRT engines): a bounded request queue with backpressure, a dynamic
+//! micro-batcher (size + deadline), a worker pool, and latency/throughput
+//! metrics. Threads + channels, no async runtime (tokio is unavailable
+//! offline; the lockstep batching model needs none).
+
+pub mod batcher;
+pub mod cli;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use batcher::{BatcherConfig, BoundedQueue, Request, SubmitError};
+pub use metrics::ServerMetrics;
+pub use server::{Server, ServerConfig};

@@ -1,0 +1,212 @@
+//! Model router — tiered dispatch across the ULN-S/M/L zoo.
+//!
+//! The paper's §V-D point is that ULEEN exposes an accuracy/efficiency/area
+//! *interplay*; a deployment exploits it by keeping several model sizes
+//! loaded and routing each request by its requirements. This router
+//! implements the two policies a serving stack actually needs:
+//!
+//! * **tier routing** — requests carry a [`Tier`] (latency-critical →
+//!   smallest model; accuracy-critical → largest);
+//! * **confidence escalation** — classify on the small model first and
+//!   escalate to the next tier when the response margin (top1 − top2,
+//!   normalized by filter count) is below a threshold. This mirrors
+//!   cascade inference and preserves the energy story: most requests take
+//!   the cheap path.
+
+use crate::runtime::InferenceEngine;
+
+/// Request service class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// lowest latency/energy: smallest model only
+    Fast,
+    /// balanced: middle model
+    Balanced,
+    /// best accuracy: largest model
+    Accurate,
+}
+
+/// Routing statistics (escalations tell you the cascade's cost).
+#[derive(Clone, Debug, Default)]
+pub struct RouterStats {
+    pub served: [u64; 3],
+    pub escalations: u64,
+}
+
+/// A tiered router over 1..=3 engines ordered small → large.
+pub struct ModelRouter {
+    engines: Vec<Box<dyn InferenceEngine>>,
+    /// per-engine maximum possible response (for margin normalization)
+    max_response: Vec<f32>,
+    pub stats: RouterStats,
+    /// escalate when (top1-top2)/max_response < threshold
+    pub margin_threshold: f32,
+}
+
+impl ModelRouter {
+    pub fn new(engines: Vec<Box<dyn InferenceEngine>>, max_response: Vec<f32>) -> Self {
+        assert!(!engines.is_empty() && engines.len() <= 3);
+        assert_eq!(engines.len(), max_response.len());
+        let f = engines[0].num_features();
+        let m = engines[0].num_classes();
+        for e in &engines {
+            assert_eq!(e.num_features(), f, "feature width mismatch across tiers");
+            assert_eq!(e.num_classes(), m, "class count mismatch across tiers");
+        }
+        Self { engines, max_response, stats: RouterStats::default(), margin_threshold: 0.05 }
+    }
+
+    fn tier_index(&self, tier: Tier) -> usize {
+        match tier {
+            Tier::Fast => 0,
+            Tier::Balanced => (self.engines.len() - 1).min(1),
+            Tier::Accurate => self.engines.len() - 1,
+        }
+    }
+
+    /// Route one sample at a fixed tier (no escalation).
+    pub fn classify_tier(&mut self, x: &[f32], tier: Tier) -> crate::Result<usize> {
+        let i = self.tier_index(tier);
+        self.stats.served[i] += 1;
+        Ok(self.engines[i].classify(x, 1)?[0])
+    }
+
+    /// Cascade: start at Fast; escalate while the decision margin is thin.
+    pub fn classify_cascade(&mut self, x: &[f32]) -> crate::Result<usize> {
+        let mut pred = 0usize;
+        for i in 0..self.engines.len() {
+            let resp = self.engines[i].responses(x, 1)?;
+            let (top1, top2, arg) = top2(&resp);
+            pred = arg;
+            let margin = (top1 - top2) / self.max_response[i].max(1.0);
+            self.stats.served[i] += 1;
+            if margin >= self.margin_threshold || i + 1 == self.engines.len() {
+                return Ok(pred);
+            }
+            self.stats.escalations += 1;
+        }
+        Ok(pred)
+    }
+
+    /// Fraction of cascade requests resolved by the first tier.
+    pub fn fast_path_fraction(&self) -> f64 {
+        let total = self.stats.served[0];
+        if total == 0 {
+            return 0.0;
+        }
+        (total - self.stats.escalations.min(total)) as f64 / total as f64
+    }
+}
+
+fn top2(resp: &[f32]) -> (f32, f32, usize) {
+    let mut best = f32::NEG_INFINITY;
+    let mut second = f32::NEG_INFINITY;
+    let mut arg = 0usize;
+    for (c, &r) in resp.iter().enumerate() {
+        if r > best {
+            second = best;
+            best = r;
+            arg = c;
+        } else if r > second {
+            second = r;
+        }
+    }
+    (best, second, arg)
+}
+
+/// Max possible response of a model = total kept filters + biases (used to
+/// normalize cascade margins).
+pub fn max_response_of(model: &crate::model::ensemble::UleenModel) -> f32 {
+    model
+        .submodels
+        .iter()
+        .map(|sm| {
+            let kept_max = sm
+                .discriminators
+                .iter()
+                .map(|d| d.kept())
+                .max()
+                .unwrap_or(0) as f32;
+            let bias_max = sm.bias.iter().copied().max().unwrap_or(0) as f32;
+            kept_max + bias_max
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_uci::{synth_uci, uci_spec};
+    use crate::runtime::NativeEngine;
+    use crate::train::oneshot::{train_oneshot, OneShotConfig};
+
+    fn zoo() -> (ModelRouter, crate::data::Dataset) {
+        let ds = synth_uci(5, uci_spec("vowel").unwrap());
+        let mut engines: Vec<Box<dyn InferenceEngine>> = Vec::new();
+        let mut maxr = Vec::new();
+        for (n, e, bits) in [(8usize, 64usize, 2usize), (10, 128, 4), (10, 256, 8)] {
+            let (m, _) = train_oneshot(
+                &ds,
+                &OneShotConfig {
+                    inputs_per_filter: n,
+                    entries_per_filter: e,
+                    therm_bits: bits,
+                    ..Default::default()
+                },
+            );
+            maxr.push(max_response_of(&m));
+            engines.push(Box::new(NativeEngine::new(m)));
+        }
+        (ModelRouter::new(engines, maxr), ds)
+    }
+
+    #[test]
+    fn tier_routing_uses_the_right_engine() {
+        let (mut r, ds) = zoo();
+        let x = ds.test_row(0);
+        r.classify_tier(x, Tier::Fast).unwrap();
+        r.classify_tier(x, Tier::Balanced).unwrap();
+        r.classify_tier(x, Tier::Accurate).unwrap();
+        assert_eq!(r.stats.served, [1, 1, 1]);
+    }
+
+    #[test]
+    fn cascade_resolves_everything_and_tracks_escalations() {
+        let (mut r, ds) = zoo();
+        let mut correct = 0;
+        for i in 0..ds.n_test() {
+            let p = r.classify_cascade(ds.test_row(i)).unwrap();
+            if p == ds.test_y[i] as usize {
+                correct += 1;
+            }
+        }
+        // every request hits tier 0; escalations bounded by requests
+        assert_eq!(r.stats.served[0] as usize, ds.n_test());
+        assert!(r.stats.escalations <= 2 * ds.n_test() as u64);
+        // cascade should not be (much) worse than the big model alone
+        let acc = correct as f64 / ds.n_test() as f64;
+        assert!(acc > 0.35, "cascade accuracy {acc}");
+    }
+
+    #[test]
+    fn zero_threshold_never_escalates() {
+        let (mut r, ds) = zoo();
+        r.margin_threshold = 0.0;
+        for i in 0..20 {
+            r.classify_cascade(ds.test_row(i)).unwrap();
+        }
+        assert_eq!(r.stats.escalations, 0);
+        assert_eq!(r.fast_path_fraction(), 1.0);
+    }
+
+    #[test]
+    fn huge_threshold_always_escalates_to_last_tier() {
+        let (mut r, ds) = zoo();
+        r.margin_threshold = 10.0;
+        for i in 0..10 {
+            r.classify_cascade(ds.test_row(i)).unwrap();
+        }
+        assert_eq!(r.stats.served[2], 10);
+        assert_eq!(r.stats.escalations, 20);
+    }
+}

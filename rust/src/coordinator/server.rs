@@ -1,0 +1,232 @@
+//! The serving loop: worker threads pull micro-batches from the bounded
+//! queue, run an [`InferenceEngine`], and complete requests. One engine
+//! instance per worker (engines are stateful: scratch buffers / PJRT
+//! executables), shared queue + metrics.
+
+use crate::coordinator::batcher::{BatcherConfig, BoundedQueue, Request, SubmitError};
+use crate::coordinator::metrics::ServerMetrics;
+use crate::runtime::InferenceEngine;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    pub batcher: BatcherConfig,
+    pub workers: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { batcher: BatcherConfig::default(), workers: 2 }
+    }
+}
+
+/// A running server. Submit requests with [`Server::submit`]; call
+/// [`Server::shutdown`] to drain and join workers.
+pub struct Server {
+    queue: Arc<BoundedQueue>,
+    pub metrics: Arc<ServerMetrics>,
+    workers: Vec<JoinHandle<()>>,
+    next_id: AtomicU64,
+    num_features: usize,
+}
+
+impl Server {
+    /// Spawn `cfg.workers` threads, each owning one engine from `make_engine`.
+    pub fn start(
+        cfg: ServerConfig,
+        make_engine: impl Fn(usize) -> crate::Result<Box<dyn InferenceEngine>>,
+    ) -> crate::Result<Self> {
+        let queue = Arc::new(BoundedQueue::new(cfg.batcher));
+        let metrics = Arc::new(ServerMetrics::new());
+        let mut workers = Vec::with_capacity(cfg.workers);
+        let mut num_features = 0;
+        for w in 0..cfg.workers {
+            let mut engine = make_engine(w)?;
+            num_features = engine.num_features();
+            let queue = queue.clone();
+            let metrics = metrics.clone();
+            workers.push(std::thread::spawn(move || {
+                worker_loop(&mut *engine, &queue, &metrics);
+            }));
+        }
+        Ok(Self { queue, metrics, workers, next_id: AtomicU64::new(0), num_features })
+    }
+
+    pub fn num_features(&self) -> usize {
+        self.num_features
+    }
+
+    /// Submit one request; the prediction arrives on `done`.
+    pub fn submit(
+        &self,
+        features: Vec<f32>,
+        done: mpsc::Sender<(u64, usize, Vec<f32>)>,
+    ) -> Result<u64, SubmitError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.metrics.mark_start();
+        let req = Request { id, features, enqueued: Instant::now(), done };
+        match self.queue.submit(req) {
+            Ok(()) => Ok(id),
+            Err((e, _req)) => {
+                self.metrics.record_reject(e == SubmitError::Full);
+                Err(e)
+            }
+        }
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.depth()
+    }
+
+    /// Drain and stop. Returns when every worker has exited.
+    pub fn shutdown(self) {
+        self.queue.close();
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    engine: &mut dyn InferenceEngine,
+    queue: &BoundedQueue,
+    metrics: &ServerMetrics,
+) {
+    let f = engine.num_features();
+    let mut flat: Vec<f32> = Vec::new();
+    while let Some(batch) = queue.next_batch() {
+        flat.clear();
+        let mut ok = true;
+        for r in &batch {
+            if r.features.len() != f {
+                ok = false;
+            }
+            flat.extend_from_slice(&r.features);
+        }
+        if !ok {
+            // malformed request in batch: fail the whole batch loudly by
+            // dropping completions (senders see disconnect); keep serving.
+            continue;
+        }
+        match engine.classify(&flat, batch.len()) {
+            Ok(preds) => {
+                let now = Instant::now();
+                let lats: Vec<_> = batch.iter().map(|r| now - r.enqueued).collect();
+                metrics.record_batch(batch.len(), &lats);
+                for (r, p) in batch.into_iter().zip(preds) {
+                    let _ = r.done.send((r.id, p, Vec::new()));
+                }
+            }
+            Err(_) => {
+                // engine failure: drop the batch (callers observe the
+                // closed channel); a real deployment would requeue.
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeEngine;
+    use crate::data::synth_uci::{synth_uci, uci_spec};
+    use crate::train::oneshot::{train_oneshot, OneShotConfig};
+    use std::time::Duration;
+
+    fn served_model() -> crate::model::ensemble::UleenModel {
+        let ds = synth_uci(5, uci_spec("iris").unwrap());
+        train_oneshot(&ds, &OneShotConfig::default()).0
+    }
+
+    #[test]
+    fn serves_requests_and_matches_direct_inference() {
+        let model = served_model();
+        let ds = synth_uci(5, uci_spec("iris").unwrap());
+        let expected: Vec<usize> = {
+            let mut s = crate::model::ensemble::EnsembleScratch::default();
+            (0..ds.n_test()).map(|i| model.predict(ds.test_row(i), &mut s)).collect()
+        };
+        let cfg = ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(100),
+                capacity: 1024,
+            },
+            workers: 3,
+        };
+        let m2 = model.clone();
+        let server = Server::start(cfg, move |_| {
+            Ok(Box::new(NativeEngine::new(m2.clone())))
+        })
+        .unwrap();
+        let (tx, rx) = mpsc::channel();
+        let mut id2row = std::collections::HashMap::new();
+        for i in 0..ds.n_test() {
+            let id = server.submit(ds.test_row(i).to_vec(), tx.clone()).unwrap();
+            id2row.insert(id, i);
+        }
+        drop(tx);
+        let mut got = vec![usize::MAX; ds.n_test()];
+        for _ in 0..ds.n_test() {
+            let (id, pred, _) = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            got[id2row[&id]] = pred;
+        }
+        server.shutdown();
+        assert_eq!(got, expected, "served predictions must equal direct inference");
+    }
+
+    #[test]
+    fn shutdown_drains_inflight() {
+        let model = served_model();
+        let server = Server::start(ServerConfig::default(), move |_| {
+            Ok(Box::new(NativeEngine::new(model.clone())))
+        })
+        .unwrap();
+        let (tx, rx) = mpsc::channel();
+        let n = 64;
+        for _ in 0..n {
+            server
+                .submit(vec![0.5; server.num_features()], tx.clone())
+                .unwrap();
+        }
+        drop(tx);
+        server.shutdown();
+        let mut count = 0;
+        while rx.try_recv().is_ok() {
+            count += 1;
+        }
+        assert_eq!(count, n, "all in-flight requests complete before shutdown");
+    }
+
+    #[test]
+    fn overload_rejects_with_backpressure() {
+        let model = served_model();
+        let cfg = ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(50),
+                capacity: 4,
+            },
+            workers: 1,
+        };
+        let server = Server::start(cfg, move |_| {
+            Ok(Box::new(NativeEngine::new(model.clone())))
+        })
+        .unwrap();
+        let (tx, _rx) = mpsc::channel();
+        let mut rejected = 0;
+        for _ in 0..256 {
+            if server
+                .submit(vec![0.5; server.num_features()], tx.clone())
+                .is_err()
+            {
+                rejected += 1;
+            }
+        }
+        assert!(rejected > 0, "tiny queue must reject under burst load");
+        server.shutdown();
+    }
+}

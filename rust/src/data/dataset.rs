@@ -1,0 +1,120 @@
+//! In-memory classification dataset (row-major f32 features, u16 labels).
+
+/// A train/test split of a classification dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub num_features: usize,
+    pub num_classes: usize,
+    pub train_x: Vec<f32>,
+    pub train_y: Vec<u16>,
+    pub test_x: Vec<f32>,
+    pub test_y: Vec<u16>,
+}
+
+impl Dataset {
+    pub fn n_train(&self) -> usize {
+        self.train_y.len()
+    }
+
+    pub fn n_test(&self) -> usize {
+        self.test_y.len()
+    }
+
+    pub fn train_row(&self, i: usize) -> &[f32] {
+        &self.train_x[i * self.num_features..(i + 1) * self.num_features]
+    }
+
+    pub fn test_row(&self, i: usize) -> &[f32] {
+        &self.test_x[i * self.num_features..(i + 1) * self.num_features]
+    }
+
+    /// Sanity checks used by loaders and tests.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.train_x.len() != self.n_train() * self.num_features {
+            return Err("train_x size mismatch".into());
+        }
+        if self.test_x.len() != self.n_test() * self.num_features {
+            return Err("test_x size mismatch".into());
+        }
+        for &y in self.train_y.iter().chain(self.test_y.iter()) {
+            if y as usize >= self.num_classes {
+                return Err(format!("label {y} out of range"));
+            }
+        }
+        Ok(())
+    }
+
+    /// FNV-1a checksum over the raw bytes — cross-language equality check.
+    pub fn checksum(&self) -> u64 {
+        let mut h = 0xcbf29ce484222325u64;
+        let mut eat = |b: u8| {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        };
+        for x in self.train_x.iter().chain(self.test_x.iter()) {
+            for b in x.to_le_bytes() {
+                eat(b);
+            }
+        }
+        for y in self.train_y.iter().chain(self.test_y.iter()) {
+            for b in y.to_le_bytes() {
+                eat(b);
+            }
+        }
+        h
+    }
+
+    /// Per-class counts over the training labels.
+    pub fn train_class_counts(&self) -> Vec<usize> {
+        let mut c = vec![0usize; self.num_classes];
+        for &y in &self.train_y {
+            c[y as usize] += 1;
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            name: "t".into(),
+            num_features: 2,
+            num_classes: 2,
+            train_x: vec![0.0, 1.0, 2.0, 3.0],
+            train_y: vec![0, 1],
+            test_x: vec![4.0, 5.0],
+            test_y: vec![1],
+        }
+    }
+
+    #[test]
+    fn validate_ok_and_rows() {
+        let d = tiny();
+        d.validate().unwrap();
+        assert_eq!(d.train_row(1), &[2.0, 3.0]);
+        assert_eq!(d.test_row(0), &[4.0, 5.0]);
+    }
+
+    #[test]
+    fn validate_catches_bad_labels_and_sizes() {
+        let mut d = tiny();
+        d.train_y[0] = 9;
+        assert!(d.validate().is_err());
+        let mut d = tiny();
+        d.train_x.pop();
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn checksum_changes_with_content() {
+        let a = tiny();
+        let mut b = tiny();
+        b.test_x[0] = 4.5;
+        assert_ne!(a.checksum(), b.checksum());
+        assert_eq!(a.checksum(), tiny().checksum());
+    }
+}

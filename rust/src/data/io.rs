@@ -1,0 +1,138 @@
+//! Dataset binary format (`artifacts/data/*.uds`) — the interchange used
+//! to verify that the Rust and Python generators produce identical data,
+//! and to let benches reuse datasets exported at artifact-build time.
+//!
+//! Layout (little-endian): magic `UDS1`, u32 name_len + name bytes,
+//! u32 num_features, u32 num_classes, u32 n_train, u32 n_test,
+//! f32 train_x, u16 train_y, f32 test_x, u16 test_y, u64 fnv checksum.
+
+use crate::data::Dataset;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"UDS1";
+
+pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(&mut f);
+    w.write_all(MAGIC)?;
+    let name = ds.name.as_bytes();
+    w.write_all(&(name.len() as u32).to_le_bytes())?;
+    w.write_all(name)?;
+    for v in [ds.num_features as u32, ds.num_classes as u32, ds.n_train() as u32, ds.n_test() as u32] {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    for x in &ds.train_x {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    for y in &ds.train_y {
+        w.write_all(&y.to_le_bytes())?;
+    }
+    for x in &ds.test_x {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    for y in &ds.test_y {
+        w.write_all(&y.to_le_bytes())?;
+    }
+    w.write_all(&ds.checksum().to_le_bytes())?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<Dataset> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?
+        .read_to_end(&mut bytes)?;
+    let mut off = 0usize;
+    let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
+        if *off + n > bytes.len() {
+            bail!("truncated dataset file at offset {off}");
+        }
+        let s = &bytes[*off..*off + n];
+        *off += n;
+        Ok(s)
+    };
+    if take(&mut off, 4)? != MAGIC {
+        bail!("bad magic in {}", path.display());
+    }
+    let u32_at = |off: &mut usize| -> Result<u32> {
+        Ok(u32::from_le_bytes(take(off, 4)?.try_into().unwrap()))
+    };
+    let name_len = u32_at(&mut off)? as usize;
+    let name = String::from_utf8(take(&mut off, name_len)?.to_vec())?;
+    let num_features = u32_at(&mut off)? as usize;
+    let num_classes = u32_at(&mut off)? as usize;
+    let n_train = u32_at(&mut off)? as usize;
+    let n_test = u32_at(&mut off)? as usize;
+    let mut train_x = Vec::with_capacity(n_train * num_features);
+    for _ in 0..n_train * num_features {
+        train_x.push(f32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()));
+    }
+    let mut train_y = Vec::with_capacity(n_train);
+    for _ in 0..n_train {
+        train_y.push(u16::from_le_bytes(take(&mut off, 2)?.try_into().unwrap()));
+    }
+    let mut test_x = Vec::with_capacity(n_test * num_features);
+    for _ in 0..n_test * num_features {
+        test_x.push(f32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()));
+    }
+    let mut test_y = Vec::with_capacity(n_test);
+    for _ in 0..n_test {
+        test_y.push(u16::from_le_bytes(take(&mut off, 2)?.try_into().unwrap()));
+    }
+    let stored_sum = u64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap());
+    let ds = Dataset { name, num_features, num_classes, train_x, train_y, test_x, test_y };
+    ds.validate().map_err(|e| anyhow::anyhow!(e))?;
+    let actual = ds.checksum();
+    if actual != stored_sum {
+        bail!("checksum mismatch: stored {stored_sum:#x}, computed {actual:#x}");
+    }
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_uci::{synth_uci, uci_spec};
+
+    #[test]
+    fn roundtrip() {
+        let ds = synth_uci(1, uci_spec("iris").unwrap());
+        let dir = std::env::temp_dir().join("uleen_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("iris.uds");
+        save(&ds, &p).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(ds.checksum(), back.checksum());
+        assert_eq!(ds.name, back.name);
+        assert_eq!(ds.num_classes, back.num_classes);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let ds = synth_uci(2, uci_spec("wine").unwrap());
+        let dir = std::env::temp_dir().join("uleen_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("wine.uds");
+        save(&ds, &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let ds = synth_uci(3, uci_spec("iris").unwrap());
+        let dir = std::env::temp_dir().join("uleen_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("trunc.uds");
+        save(&ds, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 16]).unwrap();
+        assert!(load(&p).is_err());
+    }
+}

@@ -1,0 +1,22 @@
+//! Synthetic datasets (substitution for MNIST + the eight UCI datasets —
+//! see DESIGN.md §2).
+//!
+//! All generators are **integer-deterministic and language-portable**: the
+//! Python compile path (`python/compile/data.py`) implements the same
+//! algorithms over the same PRNG streams, so both halves of the system
+//! train and evaluate on bit-identical data. Each sample is generated from
+//! its own derived PRNG stream (`Rng::for_item`), making generation order
+//! irrelevant and parallelizable.
+
+pub mod dataset;
+pub mod io;
+pub mod synth_mnist;
+pub mod synth_uci;
+
+pub use dataset::Dataset;
+pub use synth_mnist::synth_mnist;
+pub use synth_uci::{synth_uci, uci_specs, UciSpec};
+
+/// PRNG domain tags (shared with python/compile/data.py).
+pub const DOMAIN_MNIST: u64 = 0x4D4E4953; // "MNIS"
+pub const DOMAIN_UCI: u64 = 0x55434931; // "UCI1"

@@ -1,0 +1,313 @@
+//! SynthMNIST — procedural 28×28 digit images (MNIST substitution).
+//!
+//! Integer-only pipeline so Rust and Python render **bit-identical** images
+//! (DESIGN.md §2): digit stroke templates (polylines, Q8.8 fixed point) →
+//! per-sample affine jitter (translate/scale/shear from the sample's PRNG
+//! stream) → distance-field rasterization with integer arithmetic →
+//! salt-noise speckles. Labels are balanced (`label = index % 10`).
+
+use crate::data::{Dataset, DOMAIN_MNIST};
+use crate::util::rng::Rng;
+
+pub const IMG_W: usize = 28;
+pub const IMG_H: usize = 28;
+pub const IMG_PIXELS: usize = IMG_W * IMG_H;
+const Q: i64 = 256; // fixed-point scale
+
+/// Digit stroke templates in pixel coordinates (x0,y0,x1,y1). Mirrored
+/// exactly in python/compile/data.py — keep the two tables in sync.
+pub fn digit_segments(digit: usize) -> &'static [(i64, i64, i64, i64)] {
+    const D0: &[(i64, i64, i64, i64)] =
+        &[(9, 5, 18, 5), (18, 5, 19, 23), (19, 23, 9, 23), (9, 23, 8, 5), (8, 5, 9, 5)];
+    const D1: &[(i64, i64, i64, i64)] = &[(14, 4, 14, 24), (14, 4, 10, 9), (11, 24, 17, 24)];
+    const D2: &[(i64, i64, i64, i64)] =
+        &[(8, 7, 12, 5), (12, 5, 18, 6), (18, 6, 19, 12), (19, 12, 8, 23), (8, 23, 20, 23)];
+    const D3: &[(i64, i64, i64, i64)] = &[
+        (8, 5, 19, 5),
+        (19, 5, 14, 13),
+        (14, 13, 19, 17),
+        (19, 17, 18, 22),
+        (18, 22, 8, 23),
+    ];
+    const D4: &[(i64, i64, i64, i64)] = &[(16, 4, 7, 17), (7, 17, 21, 17), (17, 10, 17, 24)];
+    const D5: &[(i64, i64, i64, i64)] = &[
+        (19, 5, 8, 5),
+        (8, 5, 8, 13),
+        (8, 13, 17, 13),
+        (17, 13, 18, 18),
+        (18, 18, 16, 23),
+        (16, 23, 8, 23),
+    ];
+    const D6: &[(i64, i64, i64, i64)] = &[
+        (18, 5, 11, 6),
+        (11, 6, 9, 14),
+        (9, 14, 9, 22),
+        (9, 22, 18, 23),
+        (18, 23, 19, 15),
+        (19, 15, 9, 15),
+    ];
+    const D7: &[(i64, i64, i64, i64)] = &[(8, 5, 20, 5), (20, 5, 12, 24), (10, 14, 17, 14)];
+    const D8: &[(i64, i64, i64, i64)] = &[
+        (9, 5, 18, 5),
+        (18, 5, 18, 13),
+        (18, 13, 9, 13),
+        (9, 13, 9, 5),
+        (9, 13, 8, 23),
+        (8, 23, 19, 23),
+        (19, 23, 18, 13),
+    ];
+    const D9: &[(i64, i64, i64, i64)] = &[
+        (19, 14, 9, 14),
+        (9, 14, 9, 6),
+        (9, 6, 18, 5),
+        (18, 5, 19, 14),
+        (19, 14, 18, 24),
+        (18, 24, 11, 24),
+    ];
+    match digit {
+        0 => D0,
+        1 => D1,
+        2 => D2,
+        3 => D3,
+        4 => D4,
+        5 => D5,
+        6 => D6,
+        7 => D7,
+        8 => D8,
+        9 => D9,
+        _ => panic!("digit out of range"),
+    }
+}
+
+/// Squared point-to-segment distance, all Q8.8 integers. Non-negative
+/// integer division only (floor == trunc), so Rust/Python agree exactly.
+#[inline]
+fn seg_dist2(px: i64, py: i64, ax: i64, ay: i64, bx: i64, by: i64) -> i64 {
+    let abx = bx - ax;
+    let aby = by - ay;
+    let apx = px - ax;
+    let apy = py - ay;
+    let den = abx * abx + aby * aby;
+    if den == 0 {
+        return apx * apx + apy * apy;
+    }
+    let num = apx * abx + apy * aby;
+    if num <= 0 {
+        apx * apx + apy * apy
+    } else if num >= den {
+        let bpx = px - bx;
+        let bpy = py - by;
+        bpx * bpx + bpy * bpy
+    } else {
+        // |ap|^2 - num^2/den, num,den > 0: all magnitudes < 2^50 so num*num
+        // fits i64; non-negative floor division is identical across languages.
+        let ap2 = apx * apx + apy * apy;
+        ap2 - num * num / den
+    }
+}
+
+/// Maximum segments in any digit template (stream-alignment constant).
+pub const MAX_SEGS: usize = 7;
+
+/// round(sin(d°)*256) for d in 0..=28 — integer rotation table shared with
+/// the Python generator (transcendental-free determinism).
+const SIN_Q: [i64; 29] = [
+    0, 4, 9, 13, 18, 22, 27, 31, 36, 40, 45, 49, 53, 58, 62, 66, 71, 75, 79, 83, 88, 92, 96,
+    100, 104, 108, 112, 116, 120,
+];
+/// round(cos(d°)*256) for d in 0..=28.
+const COS_Q: [i64; 29] = [
+    256, 256, 256, 256, 255, 255, 255, 254, 254, 253, 252, 251, 250, 249, 248, 247, 246, 245,
+    244, 242, 241, 239, 237, 236, 234, 232, 230, 228, 226,
+];
+
+/// Render one sample deterministically from `(seed, index)`.
+///
+/// Draw order (mirrored EXACTLY in python/compile/data.py): dx, dy, scale,
+/// shear, radius, angle, 4×MAX_SEGS endpoint jitters, MAX_SEGS dropout
+/// draws, n_noise, then 2×n_noise noise draws.
+pub fn render_digit(seed: u64, index: u64) -> (Vec<u8>, u16) {
+    let label = (index % 10) as u16;
+    let mut rng = Rng::for_item(seed, DOMAIN_MNIST, index);
+    let dx = rng.range_i64(-2 * Q, 2 * Q);
+    let dy = rng.range_i64(-2 * Q, 2 * Q);
+    let scale = rng.range_i64(225, 287); // 0.88 .. 1.12 (×256)
+    let shear = rng.range_i64(-38, 38); // ±0.15 (×256)
+    let radius = rng.range_i64(260, 430); // stroke half-width ~1.0 .. 1.68 px
+    let angle = rng.range_i64(-20, 20); // rotation in degrees
+    let mut seg_jit = [0i64; 4 * MAX_SEGS];
+    for j in seg_jit.iter_mut() {
+        *j = rng.range_i64(-300, 300); // ±1.17 px endpoint wobble
+    }
+    let mut seg_drop = [0u64; MAX_SEGS];
+    for d in seg_drop.iter_mut() {
+        *d = rng.below(100);
+    }
+    let n_noise = rng.range_i64(10, 40);
+
+    let cx = 14 * Q;
+    let cy = 14 * Q;
+    let r2 = radius * radius;
+    let (sin_q, cos_q) = {
+        let a = angle.unsigned_abs() as usize;
+        (if angle < 0 { -SIN_Q[a] } else { SIN_Q[a] }, COS_Q[a])
+    };
+
+    // Transform template segments (rotate → scale/shear → translate), with
+    // per-endpoint wobble and random stroke dropout (≥2 segments kept).
+    let template = digit_segments(label as usize);
+    let mut segs: Vec<(i64, i64, i64, i64)> = Vec::with_capacity(template.len());
+    let mut dropped = 0usize;
+    for (si, &(x0, y0, x1, y1)) in template.iter().enumerate() {
+        if seg_drop[si] < 12 && template.len() - dropped > 2 {
+            dropped += 1;
+            continue;
+        }
+        let tf = |x: i64, y: i64, jx: i64, jy: i64| -> (i64, i64) {
+            let xq = x * Q - cx;
+            let yq = y * Q - cy;
+            // div_euclid == Python floor-division for positive divisors,
+            // keeping the two generators bit-identical on negatives.
+            let xr = (xq * cos_q - yq * sin_q).div_euclid(Q);
+            let yr = (xq * sin_q + yq * cos_q).div_euclid(Q);
+            let xt = cx + (xr * scale + yr * shear).div_euclid(Q) + dx + jx;
+            let yt = cy + (yr * scale).div_euclid(Q) + dy + jy;
+            (xt, yt)
+        };
+        let (ax, ay) = tf(x0, y0, seg_jit[4 * si], seg_jit[4 * si + 1]);
+        let (bx, by) = tf(x1, y1, seg_jit[4 * si + 2], seg_jit[4 * si + 3]);
+        segs.push((ax, ay, bx, by));
+    }
+
+    let mut img = vec![0u8; IMG_PIXELS];
+    for py in 0..IMG_H {
+        for px in 0..IMG_W {
+            let pxq = px as i64 * Q + Q / 2;
+            let pyq = py as i64 * Q + Q / 2;
+            let mut best = i64::MAX;
+            for &(ax, ay, bx, by) in &segs {
+                let d2 = seg_dist2(pxq, pyq, ax, ay, bx, by);
+                if d2 < best {
+                    best = d2;
+                }
+            }
+            if best < r2 {
+                // intensity = 255 * (r2 - d2) / r2, saturating ink response
+                let v = 255 * (r2 - best) / r2;
+                // sharpen: anything within 60% radius is full ink
+                let v = if best * 25 < r2 * 9 { 255 } else { v * 5 / 3 };
+                img[py * IMG_W + px] = v.min(255) as u8;
+            }
+        }
+    }
+    // Salt noise speckles.
+    for _ in 0..n_noise {
+        let pos = rng.below(IMG_PIXELS as u64) as usize;
+        let val = rng.below(140) as i64;
+        let nv = img[pos] as i64 + 40 + val;
+        img[pos] = nv.min(255) as u8;
+    }
+    (img, label)
+}
+
+/// Generate a SynthMNIST dataset: `n_train` + `n_test` samples. Test
+/// samples use indices `n_train..n_train+n_test` of the same stream family.
+pub fn synth_mnist(seed: u64, n_train: usize, n_test: usize) -> Dataset {
+    let mut train_x = Vec::with_capacity(n_train * IMG_PIXELS);
+    let mut train_y = Vec::with_capacity(n_train);
+    for i in 0..n_train {
+        let (img, y) = render_digit(seed, i as u64);
+        train_x.extend(img.iter().map(|&p| p as f32));
+        train_y.push(y);
+    }
+    let mut test_x = Vec::with_capacity(n_test * IMG_PIXELS);
+    let mut test_y = Vec::with_capacity(n_test);
+    for i in 0..n_test {
+        let (img, y) = render_digit(seed, (n_train + i) as u64);
+        test_x.extend(img.iter().map(|&p| p as f32));
+        test_y.push(y);
+    }
+    Dataset {
+        name: "synth_mnist".into(),
+        num_features: IMG_PIXELS,
+        num_classes: 10,
+        train_x,
+        train_y,
+        test_x,
+        test_y,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_rendering() {
+        let (a, la) = render_digit(42, 7);
+        let (b, lb) = render_digit(42, 7);
+        assert_eq!(a, b);
+        assert_eq!(la, lb);
+        let (c, _) = render_digit(42, 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn labels_are_balanced() {
+        let d = synth_mnist(1, 100, 20);
+        let counts = d.train_class_counts();
+        assert!(counts.iter().all(|&c| c == 10), "{counts:?}");
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn images_have_ink_and_background() {
+        for i in 0..20 {
+            let (img, _) = render_digit(3, i);
+            let ink = img.iter().filter(|&&p| p > 128).count();
+            let bg = img.iter().filter(|&&p| p == 0).count();
+            assert!(ink > 20, "sample {i}: too little ink ({ink})");
+            assert!(bg > 300, "sample {i}: too little background ({bg})");
+        }
+    }
+
+    #[test]
+    fn same_class_varies_between_samples() {
+        // jitter must actually vary the rendering
+        let (a, _) = render_digit(5, 0); // label 0
+        let (b, _) = render_digit(5, 10); // label 0 again
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // crude separability check: mean per-pixel L1 distance between
+        // class prototypes must exceed within-class distance.
+        let proto = |digit: u64| -> Vec<f64> {
+            let mut acc = vec![0f64; IMG_PIXELS];
+            for rep in 0..10 {
+                let (img, _) = render_digit(9, digit + rep * 10);
+                for (a, &p) in acc.iter_mut().zip(img.iter()) {
+                    *a += p as f64 / 10.0;
+                }
+            }
+            acc
+        };
+        let p1 = proto(1);
+        let p8 = proto(8);
+        let dist: f64 = p1.iter().zip(&p8).map(|(a, b)| (a - b).abs()).sum();
+        assert!(dist > 5000.0, "digit 1 vs 8 prototype distance {dist}");
+    }
+
+    #[test]
+    fn seg_dist2_basics() {
+        // point on segment → 0-ish; point off end → euclidean to endpoint
+        assert_eq!(seg_dist2(0, 0, 0, 0, 10 * Q, 0), 0);
+        let d = seg_dist2(-Q, 0, 0, 0, 10 * Q, 0);
+        assert_eq!(d, Q * Q);
+        // perpendicular distance
+        let d = seg_dist2(5 * Q, 3 * Q, 0, 0, 10 * Q, 0);
+        let err = (d - 9 * Q * Q).abs();
+        assert!(err <= 2 * Q * Q / 100 + 1, "err {err}");
+    }
+}

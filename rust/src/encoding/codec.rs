@@ -1,0 +1,90 @@
+//! Unary ↔ binary bus-compression codec (paper §III-C).
+//!
+//! The accelerator can optionally receive inputs with each `t`-bit unary
+//! thermometer value replaced by a `ceil(log2(t+1))`-bit binary count of
+//! set bits, reducing off-chip data movement; a decompression unit recovers
+//! the unary encoding on-chip. This module is the software model of that
+//! codec (also used by the coordinator to compute bus-cycle counts).
+
+use crate::util::bitvec::BitVec;
+
+/// Bits needed to carry the count for a `t`-bit thermometer value.
+pub fn compressed_bits_per_input(t: usize) -> usize {
+    // counts range over 0..=t → t+1 values
+    (usize::BITS - t.checked_add(1).unwrap().leading_zeros()) as usize - 1
+        + if (t + 1).is_power_of_two() { 0 } else { 1 }
+}
+
+/// Compress per-input mercury counts into a packed little-endian bitstream.
+pub fn compress(counts: &[u8], t: usize) -> BitVec {
+    let w = compressed_bits_per_input(t);
+    let mut out = BitVec::zeros(counts.len() * w);
+    for (j, &c) in counts.iter().enumerate() {
+        debug_assert!((c as usize) <= t);
+        for b in 0..w {
+            if (c >> b) & 1 == 1 {
+                out.set(j * w + b);
+            }
+        }
+    }
+    out
+}
+
+/// Decompress a packed count stream back to the unary thermometer bits
+/// (input-major, `t` bits per input) — the hardware decompressor's job.
+pub fn decompress(stream: &BitVec, num_inputs: usize, t: usize) -> BitVec {
+    let w = compressed_bits_per_input(t);
+    assert_eq!(stream.len(), num_inputs * w);
+    let mut out = BitVec::zeros(num_inputs * t);
+    for j in 0..num_inputs {
+        let mut c = 0usize;
+        for b in 0..w {
+            if stream.get(j * w + b) {
+                c |= 1 << b;
+            }
+        }
+        let c = c.min(t);
+        for i in 0..c {
+            out.set(j * t + i);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn width_formula() {
+        assert_eq!(compressed_bits_per_input(1), 1); // counts 0..=1
+        assert_eq!(compressed_bits_per_input(2), 2);
+        assert_eq!(compressed_bits_per_input(3), 2); // 4 values
+        assert_eq!(compressed_bits_per_input(7), 3);
+        assert_eq!(compressed_bits_per_input(8), 4);
+        assert_eq!(compressed_bits_per_input(15), 4);
+    }
+
+    #[test]
+    fn roundtrip_random_counts() {
+        let mut rng = Rng::new(21);
+        for t in [1usize, 2, 3, 4, 7, 8, 15] {
+            let counts: Vec<u8> =
+                (0..50).map(|_| rng.below((t + 1) as u64) as u8).collect();
+            let stream = compress(&counts, t);
+            let unary = decompress(&stream, counts.len(), t);
+            for (j, &c) in counts.iter().enumerate() {
+                for i in 0..t {
+                    assert_eq!(unary.get(j * t + i), i < c as usize, "t={t} j={j} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compression_actually_saves_for_large_t() {
+        // 7-bit thermometer → 3-bit counts: 2.33x bus saving.
+        assert!(compressed_bits_per_input(7) * 2 < 7);
+    }
+}

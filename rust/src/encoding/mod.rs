@@ -1,0 +1,9 @@
+//! Input encodings for weightless networks (paper §III-A2 and §III-C):
+//! linear and Gaussian thermometer encoders, plus the unary↔binary bus
+//! compression codec used by the accelerator's input interface.
+
+pub mod codec;
+pub mod thermometer;
+
+pub use codec::{compress, decompress, compressed_bits_per_input};
+pub use thermometer::{ThermometerEncoder, ThermometerKind};

@@ -1,0 +1,287 @@
+//! Thermometer encodings (paper §III-A2).
+//!
+//! A `t`-bit thermometer encoding compares a scalar input against `t`
+//! increasing thresholds; bit `i` is set iff `x > threshold_i`, so bits
+//! fill from least to most significant like mercury in a thermometer.
+//!
+//! * **Linear**: thresholds split `[min, max]` of the training data into
+//!   equal intervals (prior work's choice).
+//! * **Gaussian** (ULEEN's contribution): assume each input is normal with
+//!   the training mean/std and place thresholds at the quantiles that cut
+//!   the Gaussian into `t+1` equal-probability regions — more resolution
+//!   near the centre of the range, fewer bits wasted on outliers.
+
+use crate::util::bitvec::BitVec;
+
+/// Which threshold-placement rule to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ThermometerKind {
+    Linear,
+    Gaussian,
+}
+
+/// A fitted per-input thermometer encoder.
+///
+/// `thresholds[input * bits + i]` is the i-th (increasing) threshold of
+/// `input`. Encoded layout is input-major: bit `input * bits + i`.
+#[derive(Clone, Debug)]
+pub struct ThermometerEncoder {
+    pub kind: ThermometerKind,
+    pub num_inputs: usize,
+    pub bits: usize,
+    pub thresholds: Vec<f32>,
+}
+
+/// Inverse standard-normal CDF (Acklam's rational approximation,
+/// |relative error| < 1.15e-9). Only +,*,/, sqrt, ln — portable enough for
+/// threshold fitting (thresholds are stored as f32, crushing ULP noise).
+pub fn inv_norm_cdf(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "inv_norm_cdf domain");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -((((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0))
+    }
+}
+
+impl ThermometerEncoder {
+    /// Fit an encoder from training data: `data` is sample-major
+    /// (`num_samples × num_inputs` flattened).
+    pub fn fit(kind: ThermometerKind, data: &[f32], num_inputs: usize, bits: usize) -> Self {
+        assert!(bits >= 1);
+        assert!(!data.is_empty() && data.len() % num_inputs == 0);
+        let n = data.len() / num_inputs;
+        let mut thresholds = vec![0f32; num_inputs * bits];
+        for j in 0..num_inputs {
+            // mean/std and min/max of column j
+            let mut mean = 0.0f64;
+            let mut min = f64::INFINITY;
+            let mut max = f64::NEG_INFINITY;
+            for s in 0..n {
+                let x = data[s * num_inputs + j] as f64;
+                mean += x;
+                min = min.min(x);
+                max = max.max(x);
+            }
+            mean /= n as f64;
+            let mut var = 0.0f64;
+            for s in 0..n {
+                let d = data[s * num_inputs + j] as f64 - mean;
+                var += d * d;
+            }
+            var /= n as f64;
+            let std = var.sqrt();
+            for i in 0..bits {
+                let th = match kind {
+                    ThermometerKind::Linear => {
+                        // t thresholds splitting [min,max] into t+1 equal bins
+                        min + (max - min) * (i as f64 + 1.0) / (bits as f64 + 1.0)
+                    }
+                    ThermometerKind::Gaussian => {
+                        let p = (i as f64 + 1.0) / (bits as f64 + 1.0);
+                        // Degenerate column (constant) → all thresholds at mean.
+                        if std > 0.0 {
+                            mean + std * inv_norm_cdf(p)
+                        } else {
+                            mean
+                        }
+                    }
+                };
+                thresholds[j * bits + i] = th as f32;
+            }
+        }
+        Self { kind, num_inputs, bits, thresholds }
+    }
+
+    /// Total encoded bits per sample.
+    pub fn encoded_bits(&self) -> usize {
+        self.num_inputs * self.bits
+    }
+
+    /// Encode one sample (length `num_inputs`) into a bit-packed vector of
+    /// `encoded_bits()` bits, input-major.
+    pub fn encode(&self, sample: &[f32]) -> BitVec {
+        let mut out = BitVec::zeros(self.encoded_bits());
+        self.encode_into(sample, &mut out);
+        out
+    }
+
+    /// Zero-allocation encode into an existing vector (§Perf: the hot path
+    /// re-uses one buffer). Thermometer codes are contiguous runs of ones
+    /// from the LSB, so we binary-search the mercury level per input and
+    /// set whole bit-runs with word masks instead of per-bit stores.
+    pub fn encode_into(&self, sample: &[f32], out: &mut BitVec) {
+        assert_eq!(sample.len(), self.num_inputs);
+        assert_eq!(out.len(), self.encoded_bits());
+        out.clear_all();
+        let t = self.bits;
+        for (j, &x) in sample.iter().enumerate() {
+            let thr = &self.thresholds[j * t..(j + 1) * t];
+            // thresholds are sorted; for the small t used in practice a
+            // branchless linear count beats a binary search
+            let mut level = if t <= 24 {
+                thr.iter().map(|&th| (x > th) as usize).sum()
+            } else {
+                thr.partition_point(|&th| x > th)
+            };
+            // set bits [j*t, j*t + level) as word-masked runs
+            let mut pos = j * t;
+            while level > 0 {
+                let word = pos >> 6;
+                let off = pos & 63;
+                let take = level.min(64 - off);
+                let mask = if take == 64 { u64::MAX } else { ((1u64 << take) - 1) << off };
+                out.or_word(word, mask);
+                pos += take;
+                level -= take;
+            }
+        }
+    }
+
+    /// Encode a batch (sample-major flattened) into a vector of BitVecs.
+    pub fn encode_batch(&self, data: &[f32]) -> Vec<BitVec> {
+        assert_eq!(data.len() % self.num_inputs, 0);
+        data.chunks(self.num_inputs).map(|s| self.encode(s)).collect()
+    }
+
+    /// Per-input set-bit count (the "mercury level"), used by the bus
+    /// compression codec.
+    pub fn encode_counts(&self, sample: &[f32]) -> Vec<u8> {
+        assert_eq!(sample.len(), self.num_inputs);
+        (0..self.num_inputs)
+            .map(|j| {
+                let base = j * self.bits;
+                (0..self.bits)
+                    .filter(|&i| sample[j] > self.thresholds[base + i])
+                    .count() as u8
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inv_norm_cdf_known_points() {
+        assert!(inv_norm_cdf(0.5).abs() < 1e-9);
+        assert!((inv_norm_cdf(0.975) - 1.959964).abs() < 1e-5);
+        assert!((inv_norm_cdf(0.025) + 1.959964).abs() < 1e-5);
+        assert!((inv_norm_cdf(0.8413447460685429) - 1.0).abs() < 1e-6);
+        // deep tails use the other branch
+        assert!((inv_norm_cdf(0.001) + 3.0902).abs() < 1e-3);
+    }
+
+    #[test]
+    fn thermometer_monotone_in_input() {
+        let data: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let enc = ThermometerEncoder::fit(ThermometerKind::Linear, &data, 1, 8);
+        let mut prev = 0;
+        for x in [0.0f32, 10.0, 25.0, 50.0, 75.0, 99.0] {
+            let ones = enc.encode(&[x]).count_ones();
+            assert!(ones >= prev, "not monotone at {x}");
+            prev = ones;
+        }
+    }
+
+    #[test]
+    fn thermometer_bits_are_contiguous_from_lsb() {
+        let data: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        for kind in [ThermometerKind::Linear, ThermometerKind::Gaussian] {
+            let enc = ThermometerEncoder::fit(kind, &data, 1, 6);
+            for x in [3.0f32, 42.0, 77.0] {
+                let v = enc.encode(&[x]);
+                let ones = v.count_ones();
+                for i in 0..6 {
+                    assert_eq!(v.get(i), i < ones, "bit {i} of {x} ({kind:?})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gaussian_thresholds_increasing_and_centered() {
+        // Symmetric data around 10.0
+        let data: Vec<f32> = (0..1000)
+            .map(|i| 10.0 + ((i % 21) as f32 - 10.0) * 0.3)
+            .collect();
+        let enc = ThermometerEncoder::fit(ThermometerKind::Gaussian, &data, 1, 5);
+        for i in 1..5 {
+            assert!(enc.thresholds[i] > enc.thresholds[i - 1]);
+        }
+        // middle threshold of odd count = mean for symmetric quantiles
+        assert!((enc.thresholds[2] - 10.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn gaussian_denser_near_center_than_linear() {
+        let data: Vec<f32> = (0..1000).map(|i| (i % 256) as f32).collect();
+        let lin = ThermometerEncoder::fit(ThermometerKind::Linear, &data, 1, 7);
+        let gau = ThermometerEncoder::fit(ThermometerKind::Gaussian, &data, 1, 7);
+        let span = |t: &[f32]| t[4] - t[2]; // spacing around the median
+        assert!(span(&gau.thresholds) < span(&lin.thresholds));
+    }
+
+    #[test]
+    fn constant_column_does_not_panic() {
+        let data = vec![5.0f32; 40];
+        let enc = ThermometerEncoder::fit(ThermometerKind::Gaussian, &data, 2, 3);
+        let v = enc.encode(&[5.0, 5.0]);
+        assert_eq!(v.count_ones(), 0); // x > mean is false at equality
+        let v = enc.encode(&[6.0, 4.0]);
+        assert_eq!(v.count_ones(), 3);
+    }
+
+    #[test]
+    fn counts_agree_with_bits() {
+        let data: Vec<f32> = (0..300).map(|i| (i % 100) as f32).collect();
+        let enc = ThermometerEncoder::fit(ThermometerKind::Gaussian, &data, 3, 4);
+        let sample = [12.0f32, 55.0, 91.0];
+        let counts = enc.encode_counts(&sample);
+        let bits = enc.encode(&sample);
+        for j in 0..3 {
+            let ones = (0..4).filter(|&i| bits.get(j * 4 + i)).count() as u8;
+            assert_eq!(counts[j], ones);
+        }
+    }
+}

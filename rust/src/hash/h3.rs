@@ -1,0 +1,185 @@
+//! H3 universal hash family (Carter & Wegman 1979), paper §III-A1.
+//!
+//! An H3 hash of an `n`-bit key is `h(x) = XOR over { p_i : x_i = 1 }` for
+//! random parameters `p_i`. It is **arithmetic-free** — AND/XOR only —
+//! which is exactly why ULEEN uses it instead of MurmurHash: the hardware
+//! hash unit is a tree of AND/XOR gates.
+//!
+//! H3 is linear: `h(a ⊕ b) = h(a) ⊕ h(b)` — a property we exploit in tests.
+//! Keys are packed LSB-first into a `u64` (filters take ≤ 64 inputs; the
+//! paper's largest is 36).
+
+use crate::util::rng::Rng;
+
+/// One H3 hash function: `n` parameters of `out_bits` bits each.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct H3Hash {
+    /// One parameter per input bit; only the low `out_bits` are used.
+    pub params: Vec<u64>,
+    pub out_bits: u32,
+}
+
+impl H3Hash {
+    /// Draw a random member of the family.
+    pub fn random(rng: &mut Rng, n_inputs: usize, out_bits: u32) -> Self {
+        assert!(out_bits >= 1 && out_bits <= 63);
+        let mask = (1u64 << out_bits) - 1;
+        let params = (0..n_inputs).map(|_| rng.next_u64() & mask).collect();
+        Self { params, out_bits }
+    }
+
+    #[inline]
+    pub fn n_inputs(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Hash a key given as packed bits (bit `i` of `key` = input `i`).
+    #[inline]
+    pub fn hash(&self, key: u64) -> u64 {
+        let mut h = 0u64;
+        let mut k = key;
+        // Iterate only over set bits — the hot path is sparse-ish keys.
+        while k != 0 {
+            let i = k.trailing_zeros() as usize;
+            debug_assert!(i < self.params.len(), "key has bits beyond n_inputs");
+            h ^= self.params[i];
+            k &= k - 1;
+        }
+        h
+    }
+
+    /// Hash from a bool slice (slow path, used by reference code and tests).
+    pub fn hash_bits(&self, bits: &[bool]) -> u64 {
+        assert_eq!(bits.len(), self.params.len());
+        let mut h = 0u64;
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                h ^= self.params[i];
+            }
+        }
+        h
+    }
+}
+
+/// `k` independent H3 functions sharing an input width — one Bloom filter's
+/// worth of hashing. Parameters are shared across all filters in a submodel
+/// (paper §III-C: a central "Param RF" + hash block).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct H3Family {
+    pub fns: Vec<H3Hash>,
+}
+
+impl H3Family {
+    pub fn random(rng: &mut Rng, k: usize, n_inputs: usize, out_bits: u32) -> Self {
+        Self {
+            fns: (0..k).map(|_| H3Hash::random(rng, n_inputs, out_bits)).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.fns.len()
+    }
+
+    #[inline]
+    pub fn out_bits(&self) -> u32 {
+        self.fns[0].out_bits
+    }
+
+    /// All `k` hashes of a packed key.
+    #[inline]
+    pub fn hash_all(&self, key: u64, out: &mut [u64]) {
+        debug_assert_eq!(out.len(), self.fns.len());
+        for (o, f) in out.iter_mut().zip(self.fns.iter()) {
+            *o = f.hash(key);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config};
+
+    #[test]
+    fn zero_key_hashes_to_zero() {
+        let mut rng = Rng::new(1);
+        let h = H3Hash::random(&mut rng, 20, 10);
+        assert_eq!(h.hash(0), 0);
+    }
+
+    #[test]
+    fn output_fits_in_out_bits() {
+        let mut rng = Rng::new(2);
+        let h = H3Hash::random(&mut rng, 16, 7);
+        for i in 0..1000u64 {
+            assert!(h.hash((i * 0x9E37) & 0xFFFF) < 128);
+        }
+    }
+
+    #[test]
+    fn hash_matches_bool_slice_path() {
+        let mut rng = Rng::new(3);
+        let h = H3Hash::random(&mut rng, 24, 9);
+        let mut r = Rng::new(55);
+        for _ in 0..200 {
+            let key = r.next_u64() & ((1 << 24) - 1);
+            let bits: Vec<bool> = (0..24).map(|i| (key >> i) & 1 == 1).collect();
+            assert_eq!(h.hash(key), h.hash_bits(&bits));
+        }
+    }
+
+    #[test]
+    fn h3_linearity_property() {
+        // h(a ^ b) == h(a) ^ h(b) — the defining algebraic property.
+        check(
+            "h3-linearity",
+            &Config::default(),
+            |rng, size| {
+                let n = (size % 48) + 8;
+                let h = H3Hash::random(rng, n, 12);
+                let mask = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+                let a = rng.next_u64() & mask;
+                let b = rng.next_u64() & mask;
+                (h, a, b)
+            },
+            |(h, a, b)| {
+                if h.hash(a ^ b) == h.hash(*a) ^ h.hash(*b) {
+                    Ok(())
+                } else {
+                    Err("linearity violated".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn family_members_differ() {
+        let mut rng = Rng::new(4);
+        let fam = H3Family::random(&mut rng, 3, 16, 10);
+        let key = 0xBEEF & 0xFFFF;
+        let mut out = [0u64; 3];
+        fam.hash_all(key, &mut out);
+        assert!(out[0] != out[1] || out[1] != out[2]);
+    }
+
+    #[test]
+    fn distribution_is_roughly_uniform() {
+        let mut rng = Rng::new(6);
+        let h = H3Hash::random(&mut rng, 20, 6); // 64 buckets
+        let mut counts = [0u32; 64];
+        let mut r = Rng::new(7);
+        let n = 64_000;
+        for _ in 0..n {
+            let key = r.next_u64() & ((1 << 20) - 1);
+            counts[h.hash(key) as usize] += 1;
+        }
+        let expect = n as f64 / 64.0;
+        for (b, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64) > expect * 0.7 && (c as f64) < expect * 1.3,
+                "bucket {b} count {c} vs expect {expect}"
+            );
+        }
+    }
+}

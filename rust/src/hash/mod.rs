@@ -1,0 +1,9 @@
+//! Hash substrates: the arithmetic-free H3 family used by ULEEN's Bloom
+//! filters (paper §III-A1) and MurmurHash3 double-hashing used by the
+//! Bloom WiSARD baseline we compare against.
+
+pub mod h3;
+pub mod murmur;
+
+pub use h3::{H3Family, H3Hash};
+pub use murmur::{murmur3_32, DoubleHash};

@@ -1,0 +1,252 @@
+//! Accelerator instance generation (paper Figs 8–9): size the functional
+//! units of a ULEEN inference accelerator from a trained model, exactly as
+//! the paper's Mako-templated RTL generator does, and derive the analytic
+//! pipeline timing that `hw::pipeline` verifies cycle-by-cycle.
+
+use crate::encoding::codec::compressed_bits_per_input;
+use crate::model::ensemble::UleenModel;
+
+/// Deployment target (paper §IV-B).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Target {
+    /// Zynq Z-7045: 112-bit I/O, 200 MHz nominal.
+    Fpga,
+    /// FreePDK45: 192-bit I/O, 500 MHz.
+    Asic,
+}
+
+/// Interface/clock parameters for a target.
+#[derive(Clone, Copy, Debug)]
+pub struct AcceleratorConfig {
+    pub bus_bits: usize,
+    pub freq_mhz: f64,
+    /// Use the unary→binary input compression (paper §III-C): fewer bus
+    /// cycles, plus a decompression unit.
+    pub compress_input: bool,
+}
+
+impl AcceleratorConfig {
+    pub fn for_target(t: Target) -> Self {
+        match t {
+            // Same interface widths/frequencies as the paper's comparisons.
+            Target::Fpga => Self { bus_bits: 112, freq_mhz: 200.0, compress_input: true },
+            Target::Asic => Self { bus_bits: 192, freq_mhz: 500.0, compress_input: true },
+        }
+    }
+}
+
+/// Per-submodel functional-unit inventory.
+#[derive(Clone, Debug)]
+pub struct SubmodelUnits {
+    pub inputs_per_filter: usize,
+    pub entries_per_filter: usize,
+    pub k_hashes: usize,
+    pub num_filters: usize,
+    pub kept_filters: usize,
+    /// hash invocations per inference = num_filters * k (shared hash block)
+    pub hashes_per_inference: usize,
+    /// pipelined hash units instantiated (minimum that sustains the bus II)
+    pub hash_units: usize,
+    /// lookup units = kept filters across discriminators (pruned ones are
+    /// removed from the hardware, paper §III-A4)
+    pub lookup_units: usize,
+    pub out_bits: u32,
+}
+
+/// A fully-sized accelerator instance.
+#[derive(Clone, Debug)]
+pub struct AcceleratorInstance {
+    pub cfg: AcceleratorConfig,
+    pub num_classes: usize,
+    pub encoded_bits: usize,
+    /// bits moved over the bus per inference (compressed or raw)
+    pub input_bits_per_inference: usize,
+    pub submodels: Vec<SubmodelUnits>,
+    /// initiation interval in cycles (pipeline bottleneck stage)
+    pub ii_cycles: usize,
+    /// end-to-end latency in cycles for one inference
+    pub latency_cycles: usize,
+    /// effective clock (large FPGA designs derate — see `fpga::achievable_freq`)
+    pub freq_mhz: f64,
+}
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+fn log2_ceil(x: usize) -> usize {
+    (usize::BITS - x.max(1).leading_zeros()) as usize - if x.is_power_of_two() { 1 } else { 0 }
+}
+
+impl AcceleratorInstance {
+    /// Size an accelerator for `model` on `target` (paper's generator flow).
+    pub fn generate(model: &UleenModel, target: Target) -> Self {
+        let mut cfg = AcceleratorConfig::for_target(target);
+        let t = model.encoder.bits;
+        let num_inputs = model.encoder.num_inputs;
+        let encoded_bits = model.encoded_bits();
+        // Bus traffic per inference: raw unary bits, or binary counts.
+        let input_bits = if cfg.compress_input {
+            num_inputs * compressed_bits_per_input(t)
+        } else {
+            encoded_bits
+        };
+        // If compression doesn't help (t == 1), drop the decompressor.
+        if input_bits >= encoded_bits {
+            cfg.compress_input = false;
+        }
+        let input_bits_per_inference = input_bits.min(encoded_bits);
+        // Deserialization dominates the initiation interval: a new sample
+        // can start only when the previous one has streamed in (paper:
+        // "an entire input sample must be read in before computation can
+        // begin" + "performance ... bottlenecked by off-chip bandwidth").
+        let deser_cycles = ceil_div(input_bits_per_inference, cfg.bus_bits);
+        let ii_cycles = deser_cycles.max(1);
+
+        let mut submodels = Vec::new();
+        let mut max_hash_cycles = 0usize;
+        let mut max_adder_depth = 0usize;
+        for sm in &model.submodels {
+            let nf = sm.cfg.num_filters();
+            let hashes = nf * sm.cfg.k_hashes;
+            // minimum hash units that produce all hashes within one II
+            let hash_units = ceil_div(hashes, ii_cycles).max(1);
+            let kept: usize = sm.discriminators.iter().map(|d| d.kept()).sum();
+            submodels.push(SubmodelUnits {
+                inputs_per_filter: sm.cfg.inputs_per_filter,
+                entries_per_filter: sm.cfg.entries_per_filter,
+                k_hashes: sm.cfg.k_hashes,
+                num_filters: nf,
+                kept_filters: kept,
+                hashes_per_inference: hashes,
+                hash_units,
+                lookup_units: kept,
+                out_bits: sm.cfg.out_bits(),
+            });
+            max_hash_cycles = max_hash_cycles.max(ceil_div(hashes, hash_units));
+            max_adder_depth = max_adder_depth.max(log2_ceil(nf.max(1)) + 1);
+        }
+        const HASH_PIPE_DEPTH: usize = 3; // AND stage + XOR-tree stages
+        const LOOKUP_CYCLES: usize = 2; // k=2 probes through the 1-bit AND acc
+        let argmax_depth = log2_ceil(model.num_classes()) + 1;
+        let latency_cycles = ii_cycles // deserialize
+            + HASH_PIPE_DEPTH
+            + max_hash_cycles
+            + LOOKUP_CYCLES
+            + max_adder_depth
+            + 1 // bias add
+            + argmax_depth;
+        Self {
+            cfg,
+            num_classes: model.num_classes(),
+            encoded_bits,
+            input_bits_per_inference,
+            submodels,
+            ii_cycles,
+            latency_cycles,
+            freq_mhz: cfg.freq_mhz,
+        }
+    }
+
+    /// Peak throughput (inferences/second) at the instance's clock.
+    pub fn throughput(&self) -> f64 {
+        self.freq_mhz * 1e6 / self.ii_cycles as f64
+    }
+
+    /// Single-inference latency in microseconds.
+    pub fn latency_us(&self) -> f64 {
+        self.latency_cycles as f64 / self.freq_mhz
+    }
+
+    pub fn total_hash_units(&self) -> usize {
+        self.submodels.iter().map(|s| s.hash_units).sum()
+    }
+
+    pub fn total_lookup_units(&self) -> usize {
+        self.submodels.iter().map(|s| s.lookup_units).sum()
+    }
+
+    /// Total table bits stored on chip.
+    pub fn table_bits(&self) -> usize {
+        self.submodels
+            .iter()
+            .map(|s| s.lookup_units * s.entries_per_filter)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_uci::{synth_uci, uci_spec};
+    use crate::train::oneshot::{train_oneshot, OneShotConfig};
+
+    fn model() -> UleenModel {
+        let ds = synth_uci(3, uci_spec("vowel").unwrap());
+        train_oneshot(
+            &ds,
+            &OneShotConfig { inputs_per_filter: 10, entries_per_filter: 128, therm_bits: 6, ..Default::default() },
+        )
+        .0
+    }
+
+    #[test]
+    fn log2_ceil_values() {
+        assert_eq!(log2_ceil(1), 0);
+        assert_eq!(log2_ceil(2), 1);
+        assert_eq!(log2_ceil(3), 2);
+        assert_eq!(log2_ceil(8), 3);
+        assert_eq!(log2_ceil(9), 4);
+    }
+
+    #[test]
+    fn asic_is_faster_than_fpga() {
+        let m = model();
+        let f = AcceleratorInstance::generate(&m, Target::Fpga);
+        let a = AcceleratorInstance::generate(&m, Target::Asic);
+        assert!(a.throughput() > f.throughput());
+        assert!(a.latency_us() < f.latency_us());
+    }
+
+    #[test]
+    fn hash_units_sustain_the_bus() {
+        let m = model();
+        let inst = AcceleratorInstance::generate(&m, Target::Fpga);
+        for sm in &inst.submodels {
+            // units * II >= hashes needed (no hash stall)
+            assert!(sm.hash_units * inst.ii_cycles >= sm.hashes_per_inference);
+            // minimality: one fewer unit would stall
+            if sm.hash_units > 1 {
+                assert!((sm.hash_units - 1) * inst.ii_cycles < sm.hashes_per_inference);
+            }
+        }
+    }
+
+    #[test]
+    fn compression_reduces_bus_traffic_for_multibit_encodings() {
+        let m = model(); // 6-bit thermometer
+        let inst = AcceleratorInstance::generate(&m, Target::Fpga);
+        assert!(inst.input_bits_per_inference < inst.encoded_bits);
+        assert!(inst.cfg.compress_input);
+    }
+
+    #[test]
+    fn pruning_removes_lookup_units() {
+        let ds = synth_uci(3, uci_spec("vowel").unwrap());
+        let (mut m, _) = train_oneshot(
+            &ds,
+            &OneShotConfig { inputs_per_filter: 10, entries_per_filter: 128, therm_bits: 6, ..Default::default() },
+        );
+        let before = AcceleratorInstance::generate(&m, Target::Fpga).total_lookup_units();
+        crate::train::prune::prune_model(&mut m, &ds, 0.3);
+        let after = AcceleratorInstance::generate(&m, Target::Fpga).total_lookup_units();
+        assert!(after < before);
+    }
+
+    #[test]
+    fn latency_exceeds_ii() {
+        let inst = AcceleratorInstance::generate(&model(), Target::Asic);
+        assert!(inst.latency_cycles > inst.ii_cycles);
+        assert!(inst.latency_us() > 0.0);
+    }
+}

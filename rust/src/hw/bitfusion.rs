@@ -1,0 +1,131 @@
+//! Bit Fusion baseline (Sharma et al., ISCA'18) — the quantized-DNN ASIC
+//! ULEEN compares against in Table III / Fig 12.
+//!
+//! Bit Fusion runs a ternary (2-bit) LeNet-5 on a dynamically-composable
+//! systolic array. We model the three published configurations (BF8/16/32)
+//! from the dataflow: MAC count of the 2-bit LeNet-5, array utilization,
+//! SRAM traffic through the W/A/O buffers, at 45 nm / 500 MHz — the same
+//! technology constants as `hw::asic` so the comparison is apples-to-apples.
+
+/// One Bit Fusion configuration (systolic dims + buffer sizes).
+#[derive(Clone, Copy, Debug)]
+pub struct BitFusionConfig {
+    pub name: &'static str,
+    pub rows: usize,
+    pub cols: usize,
+    pub wbuf_kb: usize,
+    pub abuf_kb: usize,
+    pub obuf_kb: usize,
+}
+
+pub const BF8: BitFusionConfig =
+    BitFusionConfig { name: "BF8", rows: 8, cols: 8, wbuf_kb: 32, abuf_kb: 16, obuf_kb: 8 };
+pub const BF16: BitFusionConfig =
+    BitFusionConfig { name: "BF16", rows: 16, cols: 16, wbuf_kb: 64, abuf_kb: 32, obuf_kb: 16 };
+pub const BF32: BitFusionConfig =
+    BitFusionConfig { name: "BF32", rows: 32, cols: 32, wbuf_kb: 64, abuf_kb: 32, obuf_kb: 16 };
+
+/// Published Table III anchors (shaded rows).
+#[derive(Clone, Copy, Debug)]
+pub struct BitFusionPublished {
+    pub kips: f64,
+    pub power_w: f64,
+    pub nj_per_inf: f64,
+    pub area_mm2: f64,
+    pub mnist_accuracy: f64,
+}
+
+pub fn published(c: &BitFusionConfig) -> BitFusionPublished {
+    match c.name {
+        "BF8" => BitFusionPublished { kips: 2.0, power_w: 0.26, nj_per_inf: 129_731.0, area_mm2: 0.60, mnist_accuracy: 0.9935 },
+        "BF16" => BitFusionPublished { kips: 7.1, power_w: 0.81, nj_per_inf: 114_914.0, area_mm2: 1.59, mnist_accuracy: 0.9935 },
+        "BF32" => BitFusionPublished { kips: 19.1, power_w: 1.79, nj_per_inf: 93_589.0, area_mm2: 1.65, mnist_accuracy: 0.9935 },
+        _ => unreachable!(),
+    }
+}
+
+/// MACs per inference of LeNet-5 on 28×28 (conv + FC layers).
+pub fn lenet5_macs() -> usize {
+    // C1: 6 filters 5×5 over 28×28 (padded) → 28×28×6×25
+    let c1 = 28 * 28 * 6 * 25;
+    // C3: 16 filters 5×5×6 over 10×10 outputs
+    let c3 = 10 * 10 * 16 * 25 * 6;
+    // C5/FC1: 120 × (16×5×5)
+    let c5 = 120 * 400;
+    // FC2: 84×120, FC3: 10×84
+    let f6 = 84 * 120;
+    let out = 10 * 84;
+    c1 + c3 + c5 + f6 + out
+}
+
+#[derive(Clone, Debug)]
+pub struct BitFusionReport {
+    pub name: &'static str,
+    pub macs: usize,
+    pub kips: f64,
+    pub power_w: f64,
+    pub nj_per_inf: f64,
+    pub area_mm2: f64,
+}
+
+/// Analytic model at 45 nm / 500 MHz (batch 16 like the paper).
+///
+/// Calibration: published Bit Fusion runs imply ~1.5–2.6 % effective MAC
+/// utilization for ternary LeNet-5 on these configs (small conv layers,
+/// per-tile weight/activation refills through the small buffers stall the
+/// array). We model `util = 2.8 % · (PEs/64)^-0.2` — fit on BF8, predicts
+/// BF16/BF32 within ~15 %. Power is accelerator-level (PE array + SRAM +
+/// clock tree): `0.08 W + 2.8 mW · PEs^0.93` — the sublinear exponent
+/// reflects clock gating on the bigger arrays. Energy/inference follows as
+/// P / rate: at these utilizations the chip burns power for ~10^5 cycles
+/// per inference, which is exactly why the paper's numbers are in µJ.
+pub fn implement(c: &BitFusionConfig, freq_mhz: f64) -> BitFusionReport {
+    let macs = lenet5_macs();
+    let pes = (c.rows * c.cols) as f64;
+    let util = 0.028 / (pes / 64.0).powf(0.2);
+    let cycles = macs as f64 / (pes * util);
+    let kips = freq_mhz * 1e6 / cycles / 1e3;
+    let power = 0.08 + 0.0028 * pes.powf(0.93);
+    let nj = power / (kips * 1e3) * 1e9;
+    let sram_bits = (c.wbuf_kb + c.abuf_kb + c.obuf_kb) as f64 * 8192.0;
+    // Area: PEs + SRAM macro area at 45nm + control/DMA block
+    let area = pes * 2.5e-3 + sram_bits * 0.9e-6 + 0.12;
+    BitFusionReport { name: c.name, macs, kips, power_w: power, nj_per_inf: nj, area_mm2: area }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lenet_mac_count_is_right_order() {
+        let m = lenet5_macs();
+        assert!(m > 300_000 && m < 700_000, "macs={m}");
+    }
+
+    #[test]
+    fn bigger_arrays_are_faster() {
+        let a = implement(&BF8, 500.0);
+        let b = implement(&BF32, 500.0);
+        assert!(b.kips > a.kips);
+    }
+
+    #[test]
+    fn analytic_matches_published_within_3x() {
+        for c in [BF8, BF16, BF32] {
+            let rep = implement(&c, 500.0);
+            let pubd = published(&c);
+            let r_kips = rep.kips / pubd.kips;
+            let r_nj = rep.nj_per_inf / pubd.nj_per_inf;
+            assert!((0.33..3.0).contains(&r_kips), "{}: kips ratio {r_kips}", c.name);
+            assert!((0.33..3.0).contains(&r_nj), "{}: nJ ratio {r_nj}", c.name);
+        }
+    }
+
+    #[test]
+    fn microjoule_scale_energy() {
+        // The paper's headline: DNN inference costs ~100 µJ here vs ULEEN's nJ.
+        let rep = implement(&BF16, 500.0);
+        assert!(rep.nj_per_inf > 10_000.0, "nJ = {}", rep.nj_per_inf);
+    }
+}

@@ -1,0 +1,70 @@
+//! `uleen simulate` — size, simulate and cost a hardware instance for a
+//! trained model on an FPGA or ASIC target.
+
+use crate::hw::arch::{AcceleratorInstance, Target};
+use crate::hw::pipeline::simulate_stream;
+use crate::model::uln_format;
+use crate::util::cli::Args;
+use std::path::Path;
+
+pub fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let model_path = args
+        .get("model")
+        .ok_or_else(|| anyhow::anyhow!("--model <file.uln> required"))?;
+    let target = match args.get_or("target", "fpga") {
+        "fpga" => Target::Fpga,
+        "asic" => Target::Asic,
+        other => anyhow::bail!("unknown target '{other}' (fpga|asic)"),
+    };
+    let (model, meta) = uln_format::load(Path::new(model_path))?;
+    let mut inst = AcceleratorInstance::generate(&model, target);
+    println!("model: {} ({:.2} KiB tables)", model.name, model.size_kib());
+    if let Some(acc) = meta.get("test_accuracy").and_then(|j| j.as_f64()) {
+        println!("accuracy: {:.4}", acc);
+    }
+    println!(
+        "instance: {} submodels | {} hash units | {} lookup units | {} encoded bits ({} on bus)",
+        inst.submodels.len(),
+        inst.total_hash_units(),
+        inst.total_lookup_units(),
+        inst.encoded_bits,
+        inst.input_bits_per_inference
+    );
+    match target {
+        Target::Fpga => {
+            let rep = crate::hw::fpga::implement(&mut inst);
+            println!(
+                "FPGA: {} LUTs | {} BRAM | {:.0} MHz | {:.2} W",
+                rep.luts, rep.bram, rep.freq_mhz, rep.power_w
+            );
+            println!(
+                "      {:.2} µs latency | {:.0} kIPS | {:.3} µJ/inf (b=1) | {:.3} µJ/inf (b=∞)",
+                rep.latency_us, rep.throughput_kips, rep.uj_per_inf_single, rep.uj_per_inf_steady
+            );
+        }
+        Target::Asic => {
+            let rep = crate::hw::asic::implement(&inst);
+            println!(
+                "ASIC (45nm): {:.0} MHz | {:.2} W | {:.2} mm²",
+                rep.freq_mhz, rep.power_w, rep.area_mm2
+            );
+            println!(
+                "      {:.3} µs latency | {:.0} kIPS | {:.1} nJ/inf",
+                rep.latency_us, rep.throughput_kips, rep.nj_per_inf
+            );
+        }
+    }
+    let sim = simulate_stream(&inst, 1000);
+    println!(
+        "pipeline sim (1000 samples): II={:.1} cycles | fill latency {} cycles | stage util {}",
+        sim.steady_ii_cycles,
+        sim.first_latency_cycles,
+        sim.stage_names
+            .iter()
+            .zip(sim.utilization.iter())
+            .map(|(n, u)| format!("{n}={:.0}%", u * 100.0))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+    Ok(())
+}

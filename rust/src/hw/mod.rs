@@ -1,0 +1,29 @@
+//! Hardware co-design models (paper §III-C, §IV-B, §V-C/D).
+//!
+//! We cannot run Vivado or Cadence in this environment (DESIGN.md §2), so
+//! the paper's FPGA/ASIC numbers are regenerated from first-principles
+//! models of the architectures involved:
+//!
+//! * [`arch`] — sizes a ULEEN accelerator instance from a trained model:
+//!   hash units, lookup units, adder trees, bus interface (Figs 8/9).
+//! * [`pipeline`] — cycle-level simulator of the lockstep pipeline; the
+//!   analytic latency/throughput numbers are *verified against* simulated
+//!   cycles in tests.
+//! * [`fpga`] — Zynq Z-7045-class resource (LUT/BRAM) + power model.
+//! * [`asic`] — FreePDK45-class energy/area model.
+//! * [`finn`] — the FINN SFC/MFC/LFC BNN baseline (Table II, Fig 11).
+//! * [`bitfusion`] — the Bit Fusion ternary-LeNet-5 baseline (Table III,
+//!   Fig 12).
+//!
+//! Calibration constants are documented inline next to their source.
+
+pub mod arch;
+pub mod asic;
+pub mod bitfusion;
+pub mod cli;
+pub mod finn;
+pub mod fpga;
+pub mod pipeline;
+
+pub use arch::{AcceleratorConfig, AcceleratorInstance, Target};
+pub use pipeline::{simulate_stream, PipelineReport};

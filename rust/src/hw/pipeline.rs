@@ -1,0 +1,190 @@
+//! Cycle-level simulator of the lockstep inference pipeline (Fig 8).
+//!
+//! Stages: deserialize → hash → lockstep lookup → adder trees → bias/argmax.
+//! Each stage is pipelined with its own service time; a sample may enter a
+//! stage only when the previous sample has left it. The simulator verifies
+//! the analytic `ii_cycles` / `latency_cycles` derived in [`super::arch`]
+//! (tests assert they agree), and reports per-stage utilization for the
+//! bottleneck analysis in EXPERIMENTS.md.
+
+use crate::hw::arch::AcceleratorInstance;
+
+/// Per-stage timing: `cycles` is the per-sample occupancy (determines the
+/// II); `extra` is pipeline-fill latency the stage adds to every sample
+/// without occupying it per-sample (e.g. the hash units' internal 3-stage
+/// AND/XOR-tree pipeline).
+#[derive(Clone, Debug)]
+pub struct StageTimes {
+    pub names: Vec<&'static str>,
+    pub cycles: Vec<usize>,
+    pub extra: Vec<usize>,
+}
+
+impl StageTimes {
+    pub fn from_instance(inst: &AcceleratorInstance) -> Self {
+        let max_hash = inst
+            .submodels
+            .iter()
+            .map(|s| s.hashes_per_inference.div_ceil(s.hash_units))
+            .max()
+            .unwrap_or(1);
+        let max_nf = inst
+            .submodels
+            .iter()
+            .map(|s| s.num_filters)
+            .max()
+            .unwrap_or(1);
+        let log2 = |x: usize| {
+            (usize::BITS - x.max(1).leading_zeros()) as usize
+                - if x.is_power_of_two() { 1 } else { 0 }
+        };
+        Self {
+            names: vec!["deserialize", "hash", "lookup", "reduce", "argmax"],
+            cycles: vec![
+                inst.ii_cycles,
+                max_hash,     // per-unit hash stream occupancy
+                2,            // k probes through the AND accumulator
+                log2(max_nf) + 1 + 1, // adder tree + bias
+                log2(inst.num_classes) + 1,
+            ],
+            extra: vec![0, 3, 0, 0, 0], // hash-unit internal pipe fill
+        }
+    }
+
+    pub fn fill_latency(&self) -> usize {
+        self.cycles.iter().sum::<usize>() + self.extra.iter().sum::<usize>()
+    }
+}
+
+/// Simulation outcome for a stream of samples.
+#[derive(Clone, Debug)]
+pub struct PipelineReport {
+    pub samples: usize,
+    pub total_cycles: usize,
+    pub first_latency_cycles: usize,
+    pub steady_ii_cycles: f64,
+    /// fraction of total cycles each stage was busy
+    pub utilization: Vec<f64>,
+    pub stage_names: Vec<&'static str>,
+}
+
+/// Simulate `samples` back-to-back inferences through the pipeline.
+///
+/// Classic pipeline recurrence: sample i enters stage s at
+/// `max(done[i][s-1], done[i-1][s])` (in-order, no buffering between
+/// stages beyond the pipeline registers — the paper's lockstep design).
+pub fn simulate_stream(inst: &AcceleratorInstance, samples: usize) -> PipelineReport {
+    let st = StageTimes::from_instance(inst);
+    let n_stages = st.cycles.len();
+    let mut done_prev = vec![0usize; n_stages]; // completion times of sample i-1
+    let mut busy = vec![0usize; n_stages];
+    let mut first_latency = 0usize;
+    let mut last_done = 0usize;
+    let mut prev_done_total = 0usize;
+    let mut ii_acc = 0f64;
+    for i in 0..samples {
+        let mut t_avail = 0usize; // when this sample finished previous stage
+        for s in 0..n_stages {
+            let start = t_avail.max(done_prev[s]);
+            let finish = start + st.cycles[s];
+            busy[s] += st.cycles[s];
+            done_prev[s] = finish;
+            // pipeline-fill latency delays downstream availability but does
+            // not re-occupy the stage for the next sample
+            t_avail = finish + st.extra[s];
+        }
+        if i == 0 {
+            first_latency = t_avail;
+        } else {
+            ii_acc += (t_avail - prev_done_total) as f64;
+        }
+        prev_done_total = t_avail;
+        last_done = t_avail;
+    }
+    PipelineReport {
+        samples,
+        total_cycles: last_done,
+        first_latency_cycles: first_latency,
+        steady_ii_cycles: if samples > 1 {
+            ii_acc / (samples - 1) as f64
+        } else {
+            first_latency as f64
+        },
+        utilization: busy
+            .iter()
+            .map(|&b| b as f64 / last_done.max(1) as f64)
+            .collect(),
+        stage_names: st.names,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_uci::{synth_uci, uci_spec};
+    use crate::hw::arch::Target;
+    use crate::train::oneshot::{train_oneshot, OneShotConfig};
+
+    fn inst() -> AcceleratorInstance {
+        let ds = synth_uci(3, uci_spec("vowel").unwrap());
+        let (m, _) = train_oneshot(
+            &ds,
+            &OneShotConfig { inputs_per_filter: 10, entries_per_filter: 128, therm_bits: 6, ..Default::default() },
+        );
+        AcceleratorInstance::generate(&m, Target::Fpga)
+    }
+
+    #[test]
+    fn steady_state_ii_matches_bottleneck_stage() {
+        let inst = inst();
+        let rep = simulate_stream(&inst, 200);
+        let st = StageTimes::from_instance(&inst);
+        let bottleneck = *st.cycles.iter().max().unwrap();
+        assert!(
+            (rep.steady_ii_cycles - bottleneck as f64).abs() < 1e-9,
+            "simulated II {} vs bottleneck {}",
+            rep.steady_ii_cycles,
+            bottleneck
+        );
+    }
+
+    #[test]
+    fn first_latency_is_sum_of_stage_times() {
+        let inst = inst();
+        let rep = simulate_stream(&inst, 1);
+        let st = StageTimes::from_instance(&inst);
+        assert_eq!(rep.first_latency_cycles, st.fill_latency());
+    }
+
+    #[test]
+    fn analytic_latency_close_to_simulated() {
+        // arch.rs's closed-form latency must agree with the simulator
+        // within the small constant bookkeeping terms.
+        let inst = inst();
+        let rep = simulate_stream(&inst, 1);
+        let diff =
+            (rep.first_latency_cycles as i64 - inst.latency_cycles as i64).unsigned_abs();
+        assert!(diff <= 2, "analytic {} vs simulated {}", inst.latency_cycles, rep.first_latency_cycles);
+    }
+
+    #[test]
+    fn conservation_all_samples_complete_in_order() {
+        let inst = inst();
+        let n = 500;
+        let rep = simulate_stream(&inst, n);
+        assert_eq!(rep.samples, n);
+        // total = fill latency + (n-1) * II
+        let expected = rep.first_latency_cycles as f64
+            + (n as f64 - 1.0) * rep.steady_ii_cycles;
+        assert!((rep.total_cycles as f64 - expected).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bottleneck_stage_is_fully_utilized() {
+        let inst = inst();
+        let rep = simulate_stream(&inst, 1000);
+        let max_util = rep.utilization.iter().cloned().fold(0.0, f64::max);
+        assert!(max_util > 0.95, "bottleneck util {max_util}");
+        assert!(rep.utilization.iter().all(|&u| u <= 1.0 + 1e-9));
+    }
+}

@@ -1,0 +1,36 @@
+//! # ULEEN — Ultra Low-Energy Edge Neural Networks (full-system reproduction)
+//!
+//! This crate is the Layer-3 (runtime) half of a three-layer reproduction of
+//! *"ULEEN: A Novel Architecture for Ultra Low-Energy Edge Neural Networks"*
+//! (Susskind et al., cs.AR 2023):
+//!
+//! * **L1/L2** live in `python/compile/`: Pallas kernels for the
+//!   hash-and-lookup hot-spot and the JAX ensemble model (multi-shot STE
+//!   training), AOT-lowered once to `artifacts/*.hlo.txt`.
+//! * **L3 (this crate)** owns everything at runtime: a native bit-packed
+//!   weightless-neural-network inference engine, one-shot training with
+//!   bleaching, the serving coordinator (router / dynamic batcher / worker
+//!   pool), a PJRT runtime that loads the AOT artifacts, and the hardware
+//!   co-design models (cycle-level accelerator simulator, FPGA & 45 nm ASIC
+//!   cost models, FINN and Bit Fusion baselines) used to regenerate every
+//!   table and figure in the paper's evaluation.
+//!
+//! The public API is organised bottom-up: [`util`] and the substrates
+//! ([`encoding`], [`hash`], [`bloom`], [`data`]) → the model core
+//! ([`model`], [`train`]) → the runtime ([`runtime`], [`coordinator`]) →
+//! hardware co-design ([`hw`]) and the bench harness ([`bench`]).
+
+pub mod bench;
+pub mod bloom;
+pub mod coordinator;
+pub mod data;
+pub mod encoding;
+pub mod hash;
+pub mod hw;
+pub mod model;
+pub mod runtime;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

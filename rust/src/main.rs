@@ -1,0 +1,217 @@
+//! `uleen` — the Layer-3 coordinator binary.
+//!
+//! Subcommands cover the full lifecycle: dataset generation, one-shot
+//! training, evaluation, model inspection, hardware simulation and the
+//! serving loop. Multi-shot-trained models arrive as `artifacts/*.uln`
+//! from the Python compile path (`make artifacts`).
+
+use std::path::{Path, PathBuf};
+
+use uleen::data::{self, synth_mnist, synth_uci, uci_specs};
+use uleen::encoding::thermometer::ThermometerKind;
+use uleen::model::uln_format;
+use uleen::train::oneshot::{train_oneshot, OneShotConfig};
+use uleen::util::cli::{usage, Args, OptSpec};
+use uleen::util::json::Json;
+
+fn opt_specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "dataset", takes_value: true, help: "dataset name (synth_mnist, iris, letter, ...)" },
+        OptSpec { name: "seed", takes_value: true, help: "PRNG seed (default 2024)" },
+        OptSpec { name: "out", takes_value: true, help: "output file" },
+        OptSpec { name: "out-dir", takes_value: true, help: "output directory" },
+        OptSpec { name: "model", takes_value: true, help: "path to a .uln model" },
+        OptSpec { name: "inputs", takes_value: true, help: "inputs per filter (one-shot train)" },
+        OptSpec { name: "entries", takes_value: true, help: "entries per filter (one-shot train)" },
+        OptSpec { name: "bits", takes_value: true, help: "thermometer bits per input" },
+        OptSpec { name: "hashes", takes_value: true, help: "hash functions per filter (default 2)" },
+        OptSpec { name: "linear", takes_value: false, help: "linear thermometer (default gaussian)" },
+        OptSpec { name: "mnist-train", takes_value: true, help: "SynthMNIST train samples (default 8000)" },
+        OptSpec { name: "mnist-test", takes_value: true, help: "SynthMNIST test samples (default 2000)" },
+        OptSpec { name: "prune", takes_value: true, help: "pruning ratio after one-shot train" },
+        OptSpec { name: "batch", takes_value: true, help: "serving batch size (default 16)" },
+        OptSpec { name: "requests", takes_value: true, help: "serving request count (default 10000)" },
+        OptSpec { name: "workers", takes_value: true, help: "serving worker threads (default 4)" },
+        OptSpec { name: "hlo", takes_value: true, help: "HLO artifact for the PJRT runtime" },
+        OptSpec { name: "target", takes_value: true, help: "hardware target: fpga | asic" },
+        OptSpec { name: "verbose", takes_value: false, help: "extra logging" },
+    ]
+}
+
+fn subcommands() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("gen-data", "generate all synthetic datasets to --out-dir as .uds"),
+        ("checksum", "print the checksum of --dataset (cross-language check)"),
+        ("train-oneshot", "train a one-shot model on --dataset, save to --out"),
+        ("eval", "evaluate --model on --dataset"),
+        ("info", "describe a .uln model"),
+        ("simulate", "hardware-simulate --model on --target (fpga|asic)"),
+        ("serve", "run the serving coordinator on --model"),
+    ]
+}
+
+/// Materialize a dataset by name (generates on the fly; no files needed).
+fn load_dataset(name: &str, seed: u64, mnist_train: usize, mnist_test: usize) -> anyhow::Result<data::Dataset> {
+    if name == "synth_mnist" || name == "mnist" {
+        return Ok(synth_mnist(seed, mnist_train, mnist_test));
+    }
+    let bare = name.strip_prefix("synth_").unwrap_or(name);
+    match data::synth_uci::uci_spec(bare) {
+        Some(spec) => Ok(synth_uci(seed, spec)),
+        None => anyhow::bail!("unknown dataset '{name}'"),
+    }
+}
+
+fn cmd_gen_data(args: &Args) -> anyhow::Result<()> {
+    let out_dir = PathBuf::from(args.get_or("out-dir", "artifacts/data"));
+    std::fs::create_dir_all(&out_dir)?;
+    let seed = args.get_u64("seed", 2024).map_err(anyhow::Error::msg)?;
+    let mn_train = args.get_usize("mnist-train", 8000).map_err(anyhow::Error::msg)?;
+    let mn_test = args.get_usize("mnist-test", 2000).map_err(anyhow::Error::msg)?;
+    let ds = synth_mnist(seed, mn_train, mn_test);
+    data::io::save(&ds, &out_dir.join("synth_mnist.uds"))?;
+    println!("synth_mnist: checksum={:#018x}", ds.checksum());
+    for spec in uci_specs() {
+        let ds = synth_uci(seed, spec);
+        data::io::save(&ds, &out_dir.join(format!("synth_{}.uds", spec.name)))?;
+        println!("synth_{}: checksum={:#018x}", spec.name, ds.checksum());
+    }
+    Ok(())
+}
+
+fn cmd_checksum(args: &Args) -> anyhow::Result<()> {
+    let name = args.get("dataset").ok_or_else(|| anyhow::anyhow!("--dataset required"))?;
+    let seed = args.get_u64("seed", 2024).map_err(anyhow::Error::msg)?;
+    let mn_train = args.get_usize("mnist-train", 8000).map_err(anyhow::Error::msg)?;
+    let mn_test = args.get_usize("mnist-test", 2000).map_err(anyhow::Error::msg)?;
+    let ds = load_dataset(name, seed, mn_train, mn_test)?;
+    println!("{:#018x}", ds.checksum());
+    Ok(())
+}
+
+fn cmd_train_oneshot(args: &Args) -> anyhow::Result<()> {
+    let name = args.get("dataset").ok_or_else(|| anyhow::anyhow!("--dataset required"))?;
+    let seed = args.get_u64("seed", 2024).map_err(anyhow::Error::msg)?;
+    let mn_train = args.get_usize("mnist-train", 8000).map_err(anyhow::Error::msg)?;
+    let mn_test = args.get_usize("mnist-test", 2000).map_err(anyhow::Error::msg)?;
+    let ds = load_dataset(name, seed, mn_train, mn_test)?;
+    let cfg = OneShotConfig {
+        inputs_per_filter: args.get_usize("inputs", 16).map_err(anyhow::Error::msg)?,
+        entries_per_filter: args.get_usize("entries", 256).map_err(anyhow::Error::msg)?,
+        k_hashes: args.get_usize("hashes", 2).map_err(anyhow::Error::msg)?,
+        therm_bits: args.get_usize("bits", 4).map_err(anyhow::Error::msg)?,
+        therm_kind: if args.flag("linear") { ThermometerKind::Linear } else { ThermometerKind::Gaussian },
+        val_fraction: 0.1,
+        seed,
+    };
+    let (mut model, report) = train_oneshot(&ds, &cfg);
+    let prune_ratio = args.get_f64("prune", 0.0).map_err(anyhow::Error::msg)?;
+    if prune_ratio > 0.0 {
+        let reports = uleen::train::prune::prune_model(&mut model, &ds, prune_ratio);
+        for r in &reports {
+            println!(
+                "pruned {} -> {} filters ({:.1} -> {:.1} KiB)",
+                r.filters_before, r.filters_after, r.size_kib_before, r.size_kib_after
+            );
+        }
+    }
+    let conf = model.evaluate(&ds.test_x, &ds.test_y, ds.num_features);
+    println!(
+        "{name}: bleach={} val_acc={:.4} test_acc={:.4} size={:.2} KiB",
+        report.bleach,
+        report.val_accuracy,
+        conf.accuracy(),
+        model.size_kib()
+    );
+    if let Some(out) = args.get("out") {
+        let mut meta = Json::obj();
+        meta.set("name", Json::Str(model.name.clone()))
+            .set("dataset", Json::Str(name.to_string()))
+            .set("test_accuracy", Json::Num(conf.accuracy()))
+            .set("bleach", Json::Num(report.bleach as f64))
+            .set("trainer", Json::Str("oneshot-rust".into()));
+        uln_format::save(&model, &meta, Path::new(out))?;
+        println!("saved {out}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> anyhow::Result<()> {
+    let model_path = args.get("model").ok_or_else(|| anyhow::anyhow!("--model required"))?;
+    let name = args.get("dataset").ok_or_else(|| anyhow::anyhow!("--dataset required"))?;
+    let seed = args.get_u64("seed", 2024).map_err(anyhow::Error::msg)?;
+    let mn_train = args.get_usize("mnist-train", 8000).map_err(anyhow::Error::msg)?;
+    let mn_test = args.get_usize("mnist-test", 2000).map_err(anyhow::Error::msg)?;
+    let ds = load_dataset(name, seed, mn_train, mn_test)?;
+    let (model, _) = uln_format::load(Path::new(model_path))?;
+    let conf = model.evaluate(&ds.test_x, &ds.test_y, ds.num_features);
+    println!(
+        "{}: test_acc={:.4} size={:.2} KiB ({} submodels)",
+        model.name,
+        conf.accuracy(),
+        model.size_kib(),
+        model.submodels.len()
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let model_path = args.get("model").ok_or_else(|| anyhow::anyhow!("--model required"))?;
+    let (model, meta) = uln_format::load(Path::new(model_path))?;
+    println!("model: {}", model.name);
+    println!("meta:  {}", meta.to_string());
+    println!(
+        "encoder: {:?} x{} bits ({} inputs, {} encoded bits)",
+        model.encoder.kind,
+        model.encoder.bits,
+        model.encoder.num_inputs,
+        model.encoded_bits()
+    );
+    for (i, sm) in model.submodels.iter().enumerate() {
+        println!(
+            "  SM{i}: n={} entries={} k={} filters={} kept={} size={:.2} KiB bias={:?}",
+            sm.cfg.inputs_per_filter,
+            sm.cfg.entries_per_filter,
+            sm.cfg.k_hashes,
+            sm.cfg.num_filters(),
+            sm.discriminators.iter().map(|d| d.kept()).sum::<usize>(),
+            sm.size_kib(),
+            sm.bias
+        );
+    }
+    println!("total size: {:.2} KiB", model.size_kib());
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let spec = opt_specs();
+    let args = match Args::parse(&argv, &spec) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", usage("uleen", &subcommands(), &spec));
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_str() {
+        "gen-data" => cmd_gen_data(&args),
+        "checksum" => cmd_checksum(&args),
+        "train-oneshot" => cmd_train_oneshot(&args),
+        "eval" => cmd_eval(&args),
+        "info" => cmd_info(&args),
+        "simulate" => uleen::hw::cli::cmd_simulate(&args),
+        "serve" => uleen::coordinator::cli::cmd_serve(&args),
+        "" => {
+            println!("{}", usage("uleen", &subcommands(), &spec));
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'\n\n{}", usage("uleen", &subcommands(), &spec));
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,211 @@
+//! Bloom WiSARD (de Araújo et al., 2019) — the state-of-the-art memory-
+//! efficient WNN that ULEEN is compared against in Table IV and Fig 10.
+//!
+//! Faithful to the original: binary Bloom filters addressed by
+//! Kirsch–Mitzenmacher double hashing over MurmurHash3, one-shot set-on-
+//! seen training, **no bleaching** (which is exactly why it saturates on
+//! skewed data like Shuttle — paper §V-E).
+
+use crate::encoding::thermometer::ThermometerEncoder;
+use crate::hash::murmur::DoubleHash;
+use crate::util::bitvec::BitVec;
+use crate::util::rng::Rng;
+use crate::util::stats::Confusion;
+
+/// A Bloom WiSARD model.
+#[derive(Clone, Debug)]
+pub struct BloomWisard {
+    pub inputs_per_filter: usize,
+    pub entries_per_filter: usize,
+    pub num_classes: usize,
+    pub total_input_bits: usize,
+    pub input_order: Vec<u32>,
+    pub hash: DoubleHash,
+    /// tables[class][filter] — bit-packed Bloom tables.
+    pub tables: Vec<Vec<BitVec>>,
+    pub encoder: ThermometerEncoder,
+}
+
+impl BloomWisard {
+    pub fn num_filters(&self) -> usize {
+        self.total_input_bits.div_ceil(self.inputs_per_filter)
+    }
+
+    pub fn new(
+        rng: &mut Rng,
+        encoder: ThermometerEncoder,
+        inputs_per_filter: usize,
+        entries_per_filter: usize,
+        k_hashes: usize,
+        num_classes: usize,
+    ) -> Self {
+        let total_input_bits = encoder.encoded_bits();
+        let cfg = crate::model::submodel::SubmodelConfig {
+            inputs_per_filter,
+            entries_per_filter,
+            k_hashes,
+            num_classes,
+            total_input_bits,
+        };
+        let input_order = crate::model::submodel::Submodel::make_input_order(rng, &cfg);
+        let nf = total_input_bits.div_ceil(inputs_per_filter);
+        let tables = (0..num_classes)
+            .map(|_| (0..nf).map(|_| BitVec::zeros(entries_per_filter)).collect())
+            .collect();
+        let hash = DoubleHash::new(k_hashes, entries_per_filter as u32, rng.next_u32());
+        Self {
+            inputs_per_filter,
+            entries_per_filter,
+            num_classes,
+            total_input_bits,
+            input_order,
+            hash,
+            tables,
+            encoder,
+        }
+    }
+
+    fn keys(&self, encoded: &BitVec, keys: &mut Vec<u64>) {
+        let n = self.inputs_per_filter;
+        keys.clear();
+        for f in 0..self.num_filters() {
+            let mut key = 0u64;
+            for i in 0..n {
+                let src = self.input_order[f * n + i] as usize;
+                key |= (encoded.get(src) as u64) << i;
+            }
+            keys.push(key);
+        }
+    }
+
+    pub fn train_sample(&mut self, sample: &[f32], label: usize) {
+        let encoded = self.encoder.encode(sample);
+        let mut keys = Vec::new();
+        self.keys(&encoded, &mut keys);
+        let mut idxs = vec![0u32; self.hash.k];
+        for (f, &key) in keys.iter().enumerate() {
+            self.hash.indices(key, &mut idxs);
+            for &i in &idxs {
+                self.tables[label][f].set(i as usize);
+            }
+        }
+    }
+
+    pub fn train(&mut self, xs: &[f32], ys: &[u16], num_features: usize) {
+        for (i, &y) in ys.iter().enumerate() {
+            self.train_sample(&xs[i * num_features..(i + 1) * num_features], y as usize);
+        }
+    }
+
+    pub fn predict(&self, sample: &[f32]) -> usize {
+        let encoded = self.encoder.encode(sample);
+        let mut keys = Vec::new();
+        self.keys(&encoded, &mut keys);
+        let mut idxs = vec![0u32; self.hash.k];
+        let mut best = (i32::MIN, 0usize);
+        for c in 0..self.num_classes {
+            let mut acc = 0i32;
+            for (f, &key) in keys.iter().enumerate() {
+                self.hash.indices(key, &mut idxs);
+                if idxs.iter().all(|&i| self.tables[c][f].get(i as usize)) {
+                    acc += 1;
+                }
+            }
+            if acc > best.0 {
+                best = (acc, c);
+            }
+        }
+        best.1
+    }
+
+    pub fn evaluate(&self, xs: &[f32], ys: &[u16], num_features: usize) -> Confusion {
+        let mut conf = Confusion::new(self.num_classes);
+        for (i, &y) in ys.iter().enumerate() {
+            let p = self.predict(&xs[i * num_features..(i + 1) * num_features]);
+            conf.record(y as usize, p);
+        }
+        conf
+    }
+
+    pub fn size_kib(&self) -> f64 {
+        (self.num_classes * self.num_filters() * self.entries_per_filter) as f64 / 8.0 / 1024.0
+    }
+
+    /// Mean table occupancy — diagnoses saturation (paper §V-E).
+    pub fn mean_fill(&self) -> f64 {
+        let mut ones = 0usize;
+        let mut total = 0usize;
+        for class in &self.tables {
+            for t in class {
+                ones += t.count_ones();
+                total += t.len();
+            }
+        }
+        ones as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::thermometer::ThermometerKind;
+
+    fn encoder() -> ThermometerEncoder {
+        let data: Vec<f32> = (0..600).map(|i| (i % 100) as f32).collect();
+        ThermometerEncoder::fit(ThermometerKind::Linear, &data, 6, 4)
+    }
+
+    #[test]
+    fn recalls_training_samples() {
+        let mut rng = Rng::new(1);
+        let mut m = BloomWisard::new(&mut rng, encoder(), 8, 128, 2, 3);
+        let samples: Vec<Vec<f32>> = vec![
+            vec![5.0, 10.0, 90.0, 20.0, 30.0, 70.0],
+            vec![90.0, 80.0, 10.0, 60.0, 5.0, 15.0],
+            vec![30.0, 70.0, 20.0, 80.0, 95.0, 45.0],
+        ];
+        for (c, s) in samples.iter().enumerate() {
+            m.train_sample(s, c);
+        }
+        for (c, s) in samples.iter().enumerate() {
+            assert_eq!(m.predict(s), c);
+        }
+    }
+
+    #[test]
+    fn no_false_negatives_vs_direct_ram() {
+        // Bloom response must be a superset of direct-RAM response: a
+        // trained pattern always responds 1 (FPs allowed, FNs not).
+        let mut rng = Rng::new(2);
+        let mut m = BloomWisard::new(&mut rng, encoder(), 6, 64, 2, 2);
+        let mut r = Rng::new(3);
+        let samples: Vec<Vec<f32>> = (0..40)
+            .map(|_| (0..6).map(|_| r.below(100) as f32).collect())
+            .collect();
+        for s in &samples {
+            m.train_sample(s, 0);
+        }
+        // every trained sample gives the maximum response for class 0
+        for s in &samples {
+            let encoded = m.encoder.encode(s);
+            let mut keys = Vec::new();
+            m.keys(&encoded, &mut keys);
+            let mut idxs = vec![0u32; m.hash.k];
+            for (f, &key) in keys.iter().enumerate() {
+                m.hash.indices(key, &mut idxs);
+                assert!(
+                    idxs.iter().all(|&i| m.tables[0][f].get(i as usize)),
+                    "false negative"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn smaller_than_classic_wisard() {
+        let mut rng = Rng::new(4);
+        let m = BloomWisard::new(&mut rng, encoder(), 16, 256, 2, 3);
+        // classic 16-input RAM node would be 65536 bits; bloom uses 256
+        assert!(m.size_kib() < 1.0);
+    }
+}

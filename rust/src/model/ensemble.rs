@@ -1,0 +1,211 @@
+//! The full ULEEN model: a thermometer encoder + an ensemble of submodels
+//! whose per-class responses are summed ("Vectorized Addition" in Fig 3),
+//! with argmax prediction.
+
+use crate::encoding::thermometer::ThermometerEncoder;
+use crate::model::submodel::{Submodel, SubmodelScratch};
+use crate::util::bitvec::BitVec;
+use crate::util::stats::Confusion;
+
+/// A complete inference-ready ULEEN model.
+#[derive(Clone, Debug)]
+pub struct UleenModel {
+    pub name: String,
+    pub encoder: ThermometerEncoder,
+    pub submodels: Vec<Submodel>,
+}
+
+/// Per-thread scratch for ensemble inference.
+#[derive(Clone, Debug, Default)]
+pub struct EnsembleScratch {
+    pub sub: SubmodelScratch,
+    pub responses: Vec<i32>,
+    pub acc: Vec<i32>,
+}
+
+impl UleenModel {
+    pub fn num_classes(&self) -> usize {
+        self.submodels[0].cfg.num_classes
+    }
+
+    /// Encoded input width (must equal every submodel's total_input_bits).
+    pub fn encoded_bits(&self) -> usize {
+        self.encoder.encoded_bits()
+    }
+
+    /// Validate internal consistency (used after deserialization).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.submodels.is_empty() {
+            return Err("model has no submodels".into());
+        }
+        let classes = self.num_classes();
+        for (i, sm) in self.submodels.iter().enumerate() {
+            if sm.cfg.num_classes != classes {
+                return Err(format!("submodel {i} class-count mismatch"));
+            }
+            if sm.cfg.total_input_bits != self.encoded_bits() {
+                return Err(format!(
+                    "submodel {i} expects {} input bits, encoder provides {}",
+                    sm.cfg.total_input_bits,
+                    self.encoded_bits()
+                ));
+            }
+            if sm.input_order.len() != sm.cfg.num_filters() * sm.cfg.inputs_per_filter {
+                return Err(format!("submodel {i} input_order length mismatch"));
+            }
+            for d in &sm.discriminators {
+                if d.filters.len() != sm.cfg.num_filters() {
+                    return Err(format!("submodel {i} filter-count mismatch"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Ensemble responses for an already-encoded input.
+    pub fn responses_encoded<'a>(
+        &self,
+        encoded: &BitVec,
+        scratch: &'a mut EnsembleScratch,
+    ) -> &'a [i32] {
+        let m = self.num_classes();
+        scratch.acc.clear();
+        scratch.acc.resize(m, 0);
+        scratch.responses.resize(m, 0);
+        for sm in &self.submodels {
+            sm.responses(encoded, &mut scratch.sub, &mut scratch.responses);
+            for c in 0..m {
+                scratch.acc[c] += scratch.responses[c];
+            }
+        }
+        &scratch.acc
+    }
+
+    /// Predict the class of a raw (unencoded) sample.
+    pub fn predict(&self, sample: &[f32], scratch: &mut EnsembleScratch) -> usize {
+        let encoded = self.encoder.encode(sample);
+        self.predict_encoded(&encoded, scratch)
+    }
+
+    /// Predict from an encoded sample (argmax of summed responses; ties
+    /// break to the lowest class index, matching the hardware comparator).
+    pub fn predict_encoded(&self, encoded: &BitVec, scratch: &mut EnsembleScratch) -> usize {
+        let resp = self.responses_encoded(encoded, scratch);
+        let mut best = 0usize;
+        for (c, &r) in resp.iter().enumerate() {
+            if r > resp[best] {
+                best = c;
+            }
+        }
+        best
+    }
+
+    /// Evaluate accuracy over a feature matrix (row-major) with labels.
+    pub fn evaluate(&self, xs: &[f32], ys: &[u16], num_features: usize) -> Confusion {
+        assert_eq!(xs.len(), ys.len() * num_features);
+        let mut scratch = EnsembleScratch::default();
+        let mut conf = Confusion::new(self.num_classes());
+        for (i, &y) in ys.iter().enumerate() {
+            let row = &xs[i * num_features..(i + 1) * num_features];
+            let p = self.predict(row, &mut scratch);
+            conf.record(y as usize, p);
+        }
+        conf
+    }
+
+    /// Total model size in KiB (tables; the paper's accounting).
+    pub fn size_kib(&self) -> f64 {
+        self.submodels.iter().map(|s| s.size_kib()).sum()
+    }
+
+    /// Total hash computations per inference (hardware cost driver).
+    pub fn hashes_per_inference(&self) -> usize {
+        self.submodels.iter().map(|s| s.hashes_per_inference()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::thermometer::{ThermometerEncoder, ThermometerKind};
+    use crate::model::submodel::SubmodelConfig;
+    use crate::util::rng::Rng;
+
+    fn tiny_model(num_sub: usize) -> UleenModel {
+        let data: Vec<f32> = (0..400).map(|i| (i % 100) as f32).collect();
+        let encoder = ThermometerEncoder::fit(ThermometerKind::Gaussian, &data, 8, 4);
+        let mut rng = Rng::new(9);
+        let cfg = SubmodelConfig {
+            inputs_per_filter: 8,
+            entries_per_filter: 32,
+            k_hashes: 2,
+            num_classes: 3,
+            total_input_bits: 32,
+        };
+        let submodels = (0..num_sub)
+            .map(|_| Submodel::new_random(&mut rng, cfg))
+            .collect();
+        UleenModel { name: "tiny".into(), encoder, submodels }
+    }
+
+    #[test]
+    fn validate_accepts_consistent_model() {
+        tiny_model(2).validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_mismatched_encoder() {
+        let mut m = tiny_model(1);
+        m.submodels[0].cfg.total_input_bits = 64;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn ensemble_sums_submodel_responses() {
+        let mut m = tiny_model(2);
+        // bias one class in each submodel; ensemble must add them
+        m.submodels[0].bias[1] = 5;
+        m.submodels[1].bias[1] = 7;
+        let mut scratch = EnsembleScratch::default();
+        let sample = vec![50.0f32; 8];
+        let encoded = m.encoder.encode(&sample);
+        let resp = m.responses_encoded(&encoded, &mut scratch).to_vec();
+        let mut m0 = m.clone();
+        m0.submodels.truncate(1);
+        let r0 = m0.responses_encoded(&encoded, &mut scratch).to_vec();
+        let mut m1 = m.clone();
+        m1.submodels.remove(0);
+        let r1 = m1.responses_encoded(&encoded, &mut scratch).to_vec();
+        for c in 0..3 {
+            assert_eq!(resp[c], r0[c] + r1[c]);
+        }
+        assert!(resp[1] >= 12);
+    }
+
+    #[test]
+    fn predict_is_argmax_with_low_tie_break() {
+        let mut m = tiny_model(1);
+        m.submodels[0].bias = vec![2, 2, 0];
+        let mut scratch = EnsembleScratch::default();
+        // all-zero sample → empty-table responses are biases
+        let p = m.predict(&vec![-1e9f32; 8], &mut scratch);
+        assert_eq!(p, 0, "tie between class 0 and 1 breaks low");
+    }
+
+    #[test]
+    fn evaluate_counts_everything() {
+        let m = tiny_model(1);
+        let xs: Vec<f32> = (0..80).map(|i| (i % 100) as f32).collect();
+        let ys: Vec<u16> = (0..10).map(|i| (i % 3) as u16).collect();
+        let conf = m.evaluate(&xs, &ys, 8);
+        assert_eq!(conf.total(), 10);
+    }
+
+    #[test]
+    fn size_accounting() {
+        let m = tiny_model(2);
+        // 2 submodels × 3 classes × 4 filters × 32 bits = 768 bits
+        assert!((m.size_kib() - 768.0 / 8.0 / 1024.0).abs() < 1e-12);
+        assert_eq!(m.hashes_per_inference(), 2 * 4 * 2);
+    }
+}

@@ -1,0 +1,266 @@
+//! Flat compiled model — the §Perf-optimized inference representation.
+//!
+//! `UleenModel` keeps each filter's table as its own heap allocation
+//! (ergonomic for training/pruning, terrible for the inference cache):
+//! profiling showed the lookup stage dominating the hot path (~70% of
+//! per-sample time) with pointer-chasing through `Vec<Option<BinaryBloom>>`.
+//!
+//! [`FlatModel::compile`] re-lays every submodel into single contiguous
+//! buffers with **filter-major, class-minor** order — all classes' table
+//! words for a filter are adjacent, matching the traversal order of the
+//! response loop (hash filter once → probe every class). Pruned filters
+//! become all-zero table slots plus a keep-bit, so the inner loop is
+//! branchless on structure. Semantics are identical to the reference path
+//! (asserted by tests and the cross-engine integration suite).
+
+use crate::model::ensemble::UleenModel;
+use crate::model::submodel::SubmodelConfig;
+use crate::util::bitvec::BitVec;
+
+/// One submodel compiled to flat arrays.
+///
+/// The table storage is TRANSPOSED relative to the hardware's per-
+/// discriminator view: `class_masks[f * E + e]` is a bitmask over classes
+/// — bit `c` set iff discriminator `c`'s filter `f` is kept AND its table
+/// entry `e` is 1. One probe then costs ONE u32 load for all classes
+/// (instead of `classes` separate random loads), and the AND-over-k probes
+/// is a single word AND. Pruning folds into the masks for free.
+pub struct FlatSubmodel {
+    pub cfg: SubmodelConfig,
+    pub input_order: Vec<u32>,
+    /// H3 params flattened: [k][n] row-major (k rows of n params).
+    pub hash_params: Vec<u64>,
+    pub k: usize,
+    /// class-mask bitplanes, layout [filter][entry] (supports ≤32 classes)
+    pub class_masks: Vec<u32>,
+    pub bias: Vec<i32>,
+    /// Scatter-hash CSR (§Perf v3): instead of gathering every key bit,
+    /// iterate the SET bits of the encoded input once and XOR their hash
+    /// contributions into per-filter accumulators. `csr_off[src]..csr_off
+    /// [src+1]` indexes entries of `(filter, k params)` for input bit `src`
+    /// — H3 linearity makes the order irrelevant.
+    pub csr_off: Vec<u32>,
+    /// filter index per entry
+    pub csr_filter: Vec<u32>,
+    /// k hash-param words per entry (stride k, aligned with csr_filter)
+    pub csr_params: Vec<u64>,
+}
+
+/// A compiled inference-only model.
+pub struct FlatModel {
+    pub submodels: Vec<FlatSubmodel>,
+    pub num_classes: usize,
+}
+
+impl FlatModel {
+    pub fn compile(model: &UleenModel) -> Self {
+        let m = model.num_classes();
+        assert!(m <= 32, "flat engine supports up to 32 classes");
+        let submodels = model
+            .submodels
+            .iter()
+            .map(|sm| {
+                let nf = sm.cfg.num_filters();
+                let e = sm.cfg.entries_per_filter;
+                let mut class_masks = vec![0u32; nf * e];
+                for (c, disc) in sm.discriminators.iter().enumerate() {
+                    for (f, filt) in disc.filters.iter().enumerate() {
+                        if let Some(filt) = filt {
+                            for entry in 0..e {
+                                if filt.table.get(entry) {
+                                    class_masks[f * e + entry] |= 1 << c;
+                                }
+                            }
+                        }
+                    }
+                }
+                let k = sm.cfg.k_hashes;
+                let n = sm.cfg.inputs_per_filter;
+                let mut hash_params = vec![0u64; k * n];
+                for (j, h) in sm.hash.fns.iter().enumerate() {
+                    hash_params[j * n..(j + 1) * n].copy_from_slice(&h.params);
+                }
+                // Build the scatter CSR: slot s = f*n + i reads input bit
+                // input_order[s] and contributes params_j[i] to filter f's
+                // j-th hash.
+                let total_bits = sm.cfg.total_input_bits;
+                let mut per_src: Vec<Vec<(u32, Vec<u64>)>> = vec![Vec::new(); total_bits];
+                for f in 0..nf {
+                    for i in 0..n {
+                        let src = sm.input_order[f * n + i] as usize;
+                        let ps: Vec<u64> =
+                            (0..k).map(|j| hash_params[j * n + i]).collect();
+                        per_src[src].push((f as u32, ps));
+                    }
+                }
+                let mut csr_off = Vec::with_capacity(total_bits + 1);
+                let mut csr_filter = Vec::new();
+                let mut csr_params = Vec::new();
+                csr_off.push(0u32);
+                for src in 0..total_bits {
+                    for (f, ps) in &per_src[src] {
+                        csr_filter.push(*f);
+                        csr_params.extend_from_slice(ps);
+                    }
+                    csr_off.push(csr_filter.len() as u32);
+                }
+                FlatSubmodel {
+                    cfg: sm.cfg,
+                    input_order: sm.input_order.clone(),
+                    hash_params,
+                    k,
+                    class_masks,
+                    bias: sm.bias.clone(),
+                    csr_off,
+                    csr_filter,
+                    csr_params,
+                }
+            })
+            .collect();
+        Self { submodels, num_classes: m }
+    }
+
+    /// Per-class responses for an encoded input, accumulated into `out`
+    /// (caller zeroes). `scratch` holds the per-filter hash accumulators
+    /// (no allocation after warmup).
+    ///
+    /// §Perf v3 scatter-hash: H3 is linear, so instead of gathering `n`
+    /// bits per filter we stream the encoded input's SET bits once and XOR
+    /// each bit's precomputed contribution into its filter's `k` hash
+    /// accumulators (sequential CSR reads, work ∝ set bits ≈ I/2). The
+    /// class-mask probe then collapses the per-class Bloom AND into one
+    /// u32 AND per hash.
+    pub fn responses_encoded(
+        &self,
+        encoded: &BitVec,
+        scratch: &mut FlatScratch,
+        out: &mut [i32],
+    ) {
+        debug_assert_eq!(out.len(), self.num_classes);
+        let m = self.num_classes;
+        let enc_words = encoded.words();
+        for sm in &self.submodels {
+            let e = sm.cfg.entries_per_filter;
+            let nf = sm.cfg.num_filters();
+            let k = sm.k;
+            scratch.h.clear();
+            scratch.h.resize(nf * k, 0);
+            let h = &mut scratch.h[..];
+            // stream set bits of the encoded input
+            for (w_idx, &w) in enc_words.iter().enumerate() {
+                let mut w = w;
+                while w != 0 {
+                    let bit = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    let src = (w_idx << 6) | bit;
+                    let lo = unsafe { *sm.csr_off.get_unchecked(src) } as usize;
+                    let hi = unsafe { *sm.csr_off.get_unchecked(src + 1) } as usize;
+                    for t in lo..hi {
+                        let f = unsafe { *sm.csr_filter.get_unchecked(t) } as usize;
+                        let pbase = t * k;
+                        for j in 0..k {
+                            unsafe {
+                                *h.get_unchecked_mut(f * k + j) ^=
+                                    *sm.csr_params.get_unchecked(pbase + j);
+                            }
+                        }
+                    }
+                }
+            }
+            // probe class masks per filter
+            for f in 0..nf {
+                let mut mask = u32::MAX;
+                for j in 0..k {
+                    let idx = unsafe { *h.get_unchecked(f * k + j) } as usize;
+                    mask &= unsafe { *sm.class_masks.get_unchecked(f * e + idx) };
+                }
+                for (c, o) in out.iter_mut().enumerate().take(m) {
+                    *o += ((mask >> c) & 1) as i32;
+                }
+            }
+            for c in 0..m {
+                out[c] += sm.bias[c];
+            }
+        }
+    }
+
+    /// Argmax prediction from an encoded input (ties break low).
+    pub fn predict_encoded(&self, encoded: &BitVec, scratch: &mut FlatScratch) -> usize {
+        scratch.resp.clear();
+        scratch.resp.resize(self.num_classes, 0);
+        let mut resp = std::mem::take(&mut scratch.resp);
+        self.responses_encoded(encoded, scratch, &mut resp);
+        let mut best = 0usize;
+        for (c, &r) in resp.iter().enumerate() {
+            if r > resp[best] {
+                best = c;
+            }
+        }
+        scratch.resp = resp;
+        best
+    }
+}
+
+/// Reusable scratch for [`FlatModel`] inference.
+#[derive(Default)]
+pub struct FlatScratch {
+    /// per-filter hash accumulators (nf × k)
+    pub h: Vec<u64>,
+    pub resp: Vec<i32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_uci::{synth_uci, uci_spec};
+    use crate::model::ensemble::EnsembleScratch;
+    use crate::train::oneshot::{train_oneshot, OneShotConfig};
+    use crate::train::prune::prune_model;
+
+    #[test]
+    fn flat_matches_reference_responses_exactly() {
+        let ds = synth_uci(3, uci_spec("vowel").unwrap());
+        let (mut model, _) = train_oneshot(
+            &ds,
+            &OneShotConfig { inputs_per_filter: 10, entries_per_filter: 128, therm_bits: 6, ..Default::default() },
+        );
+        // include pruning + bias to exercise the keep/bias paths
+        prune_model(&mut model, &ds, 0.3);
+        let flat = FlatModel::compile(&model);
+        let mut s = EnsembleScratch::default();
+        let mut fs = FlatScratch::default();
+        let mut out = vec![0i32; model.num_classes()];
+        for i in 0..ds.n_test() {
+            let enc = model.encoder.encode(ds.test_row(i));
+            let want = model.responses_encoded(&enc, &mut s).to_vec();
+            out.iter_mut().for_each(|x| *x = 0);
+            flat.responses_encoded(&enc, &mut fs, &mut out);
+            assert_eq!(out, want, "sample {i}");
+        }
+    }
+
+    #[test]
+    fn flat_predictions_match_for_multi_submodel_models() {
+        let ds = synth_uci(9, uci_spec("wine").unwrap());
+        let (a, _) = train_oneshot(
+            &ds,
+            &OneShotConfig { inputs_per_filter: 8, entries_per_filter: 64, therm_bits: 4, seed: 1, ..Default::default() },
+        );
+        let (b, _) = train_oneshot(
+            &ds,
+            &OneShotConfig { inputs_per_filter: 12, entries_per_filter: 128, therm_bits: 4, seed: 2, ..Default::default() },
+        );
+        let mut ens = a.clone();
+        ens.submodels.extend(b.submodels.iter().cloned());
+        let flat = FlatModel::compile(&ens);
+        let mut s = EnsembleScratch::default();
+        let mut scratch = FlatScratch::default();
+        for i in 0..ds.n_test() {
+            let enc = ens.encoder.encode(ds.test_row(i));
+            assert_eq!(
+                flat.predict_encoded(&enc, &mut scratch),
+                ens.predict_encoded(&enc, &mut s)
+            );
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! The ULEEN model core (paper §III) plus the two prior-work baselines it
+//! is measured against:
+//!
+//! * [`submodel`] / [`ensemble`] — the ULEEN model: ensembles of WNN
+//!   submodels whose RAM nodes are Bloom filters with shared H3 hashing.
+//! * [`wisard`] — classic WiSARD (1981): direct 2^n-entry RAM nodes.
+//! * [`bloom_wisard`] — Bloom WiSARD (2019): Bloom-filter RAM nodes with
+//!   MurmurHash double hashing and *no* bleaching — the state of the art
+//!   ULEEN improves on (Table IV, Fig 10).
+//! * [`uln_format`] — the `.uln` binary interchange format shared with the
+//!   Python compile path.
+
+pub mod bloom_wisard;
+pub mod ensemble;
+pub mod flat;
+pub mod submodel;
+pub mod uln_format;
+pub mod wisard;
+
+pub use ensemble::UleenModel;
+pub use submodel::{Discriminator, Submodel, SubmodelConfig, SubmodelScratch};

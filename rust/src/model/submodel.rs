@@ -1,0 +1,290 @@
+//! One ULEEN submodel: `num_classes` discriminators over a shared
+//! pseudo-random input mapping, Bloom-filter RAM nodes, and a single shared
+//! H3 hash block (paper §III-C: hashing is computed once per input and
+//! reused by every discriminator — we mirror that structure exactly, which
+//! is also what makes the software hot path fast).
+
+use crate::bloom::binary::BinaryBloom;
+use crate::hash::h3::H3Family;
+use crate::util::bitvec::BitVec;
+use crate::util::rng::Rng;
+
+/// Hyperparameters of a submodel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SubmodelConfig {
+    /// Bits of encoded input consumed by each filter (paper `n`).
+    pub inputs_per_filter: usize,
+    /// Bloom-filter table entries (power of two).
+    pub entries_per_filter: usize,
+    /// Hash functions per filter (paper uses 2).
+    pub k_hashes: usize,
+    pub num_classes: usize,
+    /// Total encoded input bits (paper `I`).
+    pub total_input_bits: usize,
+}
+
+impl SubmodelConfig {
+    /// Number of filters per discriminator: ceil(I / n) (paper: N ≡ I/n;
+    /// we pad the mapping by wrapping when n does not divide I).
+    pub fn num_filters(&self) -> usize {
+        self.total_input_bits.div_ceil(self.inputs_per_filter)
+    }
+
+    pub fn out_bits(&self) -> u32 {
+        debug_assert!(self.entries_per_filter.is_power_of_two());
+        self.entries_per_filter.trailing_zeros()
+    }
+}
+
+/// One discriminator: a filter per slot; `None` = pruned away.
+#[derive(Clone, Debug)]
+pub struct Discriminator {
+    pub filters: Vec<Option<BinaryBloom>>,
+}
+
+impl Discriminator {
+    pub fn kept(&self) -> usize {
+        self.filters.iter().filter(|f| f.is_some()).count()
+    }
+}
+
+/// Reusable per-thread scratch for inference (no allocation on the hot path).
+#[derive(Clone, Debug, Default)]
+pub struct SubmodelScratch {
+    pub keys: Vec<u64>,
+    /// filter-major: idxs[f * k + j]
+    pub idxs: Vec<u64>,
+}
+
+/// A fully-assembled inference-time submodel.
+#[derive(Clone, Debug)]
+pub struct Submodel {
+    pub cfg: SubmodelConfig,
+    /// Pseudo-random input mapping, length `num_filters * inputs_per_filter`;
+    /// entry = index into the encoded input bit vector. Shared by all
+    /// discriminators (paper §II).
+    pub input_order: Vec<u32>,
+    /// H3 parameters shared by every filter in the submodel (paper §III-C).
+    pub hash: H3Family,
+    pub discriminators: Vec<Discriminator>,
+    /// Per-class bias added to the response (paper §III-A4; 0 if unpruned).
+    pub bias: Vec<i32>,
+}
+
+impl Submodel {
+    /// Build the shared input mapping: a permutation of `0..I`, wrapped to
+    /// fill `num_filters * n` slots when n does not divide I.
+    pub fn make_input_order(rng: &mut Rng, cfg: &SubmodelConfig) -> Vec<u32> {
+        let total = cfg.num_filters() * cfg.inputs_per_filter;
+        let perm = rng.permutation(cfg.total_input_bits);
+        (0..total)
+            .map(|i| perm[i % cfg.total_input_bits])
+            .collect()
+    }
+
+    /// Fresh all-zeros submodel with random mapping + hash parameters.
+    pub fn new_random(rng: &mut Rng, cfg: SubmodelConfig) -> Self {
+        let input_order = Self::make_input_order(rng, &cfg);
+        let hash = H3Family::random(rng, cfg.k_hashes, cfg.inputs_per_filter, cfg.out_bits());
+        let discriminators = (0..cfg.num_classes)
+            .map(|_| Discriminator {
+                filters: (0..cfg.num_filters())
+                    .map(|_| Some(BinaryBloom::zeros(cfg.entries_per_filter)))
+                    .collect(),
+            })
+            .collect();
+        Self { cfg, input_order, hash, discriminators, bias: vec![0; cfg.num_classes] }
+    }
+
+    /// Gather the per-filter keys from an encoded input (bit i of key f =
+    /// encoded[input_order[f*n + i]]).
+    pub fn gather_keys(&self, encoded: &BitVec, keys: &mut Vec<u64>) {
+        let n = self.cfg.inputs_per_filter;
+        let nf = self.cfg.num_filters();
+        keys.clear();
+        keys.reserve(nf);
+        debug_assert_eq!(encoded.len(), self.cfg.total_input_bits);
+        for f in 0..nf {
+            let base = f * n;
+            let mut key = 0u64;
+            for i in 0..n {
+                let src = self.input_order[base + i] as usize;
+                key |= (encoded.get(src) as u64) << i;
+            }
+            keys.push(key);
+        }
+    }
+
+    /// Hash all keys with the shared family (filter-major layout).
+    pub fn hash_keys(&self, keys: &[u64], idxs: &mut Vec<u64>) {
+        let k = self.cfg.k_hashes;
+        idxs.clear();
+        idxs.resize(keys.len() * k, 0);
+        for (f, &key) in keys.iter().enumerate() {
+            self.hash.hash_all(key, &mut idxs[f * k..(f + 1) * k]);
+        }
+    }
+
+    /// Per-class responses for an encoded input: popcount of filter hits
+    /// plus the class bias. `scratch` avoids per-call allocation.
+    pub fn responses(
+        &self,
+        encoded: &BitVec,
+        scratch: &mut SubmodelScratch,
+        out: &mut [i32],
+    ) {
+        debug_assert_eq!(out.len(), self.cfg.num_classes);
+        self.gather_keys(encoded, &mut scratch.keys);
+        self.hash_keys(&scratch.keys, &mut scratch.idxs);
+        let k = self.cfg.k_hashes;
+        for (c, disc) in self.discriminators.iter().enumerate() {
+            let mut acc = 0i32;
+            for (f, filter) in disc.filters.iter().enumerate() {
+                if let Some(filter) = filter {
+                    if filter.test_indices(&scratch.idxs[f * k..(f + 1) * k]) {
+                        acc += 1;
+                    }
+                }
+            }
+            out[c] = acc + self.bias[c];
+        }
+    }
+
+    /// Model size in bits: kept filter tables only (biases are counted by
+    /// the ensemble; matches the paper's "model size" accounting which
+    /// reports table storage).
+    pub fn size_bits(&self) -> usize {
+        self.discriminators
+            .iter()
+            .map(|d| d.kept() * self.cfg.entries_per_filter)
+            .sum()
+    }
+
+    pub fn size_kib(&self) -> f64 {
+        self.size_bits() as f64 / 8.0 / 1024.0
+    }
+
+    /// Total hash invocations per inference (for the hardware model):
+    /// filters × k, regardless of pruning (hashing is shared; pruned
+    /// filters still have their slots hashed — paper §V-F1 notes hashing
+    /// does not shrink with pruning).
+    pub fn hashes_per_inference(&self) -> usize {
+        self.cfg.num_filters() * self.cfg.k_hashes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SubmodelConfig {
+        SubmodelConfig {
+            inputs_per_filter: 8,
+            entries_per_filter: 64,
+            k_hashes: 2,
+            num_classes: 4,
+            total_input_bits: 64,
+        }
+    }
+
+    #[test]
+    fn num_filters_rounds_up() {
+        let mut c = cfg();
+        assert_eq!(c.num_filters(), 8);
+        c.inputs_per_filter = 10;
+        assert_eq!(c.num_filters(), 7); // ceil(64/10)
+        assert_eq!(c.out_bits(), 6);
+    }
+
+    #[test]
+    fn input_order_covers_all_bits() {
+        let mut rng = Rng::new(1);
+        let c = cfg();
+        let order = Submodel::make_input_order(&mut rng, &c);
+        assert_eq!(order.len(), 64);
+        let mut seen = vec![false; 64];
+        for &i in &order {
+            seen[i as usize] = true;
+        }
+        assert!(seen.iter().all(|&b| b), "permutation must cover all inputs");
+    }
+
+    #[test]
+    fn gather_keys_reflects_input_bits() {
+        let mut rng = Rng::new(2);
+        let sm = Submodel::new_random(&mut rng, cfg());
+        // all-ones input → all keys are full n-bit masks
+        let ones = BitVec::from_bools(&vec![true; 64]);
+        let mut keys = Vec::new();
+        sm.gather_keys(&ones, &mut keys);
+        assert!(keys.iter().all(|&k| k == 0xFF));
+        // all-zeros input → all keys zero
+        let zeros = BitVec::zeros(64);
+        sm.gather_keys(&zeros, &mut keys);
+        assert!(keys.iter().all(|&k| k == 0));
+    }
+
+    #[test]
+    fn responses_count_trained_patterns() {
+        let mut rng = Rng::new(3);
+        let mut sm = Submodel::new_random(&mut rng, cfg());
+        let sample = BitVec::from_bools(
+            &(0..64).map(|i| i % 3 == 0).collect::<Vec<_>>(),
+        );
+        // Manually "train" class 2 on this sample: set all its filters.
+        let mut scratch = SubmodelScratch::default();
+        sm.gather_keys(&sample, &mut scratch.keys);
+        sm.hash_keys(&scratch.keys, &mut scratch.idxs);
+        let k = sm.cfg.k_hashes;
+        for f in 0..sm.cfg.num_filters() {
+            let idxs = scratch.idxs[f * k..(f + 1) * k].to_vec();
+            sm.discriminators[2].filters[f]
+                .as_mut()
+                .unwrap()
+                .set_indices(&idxs);
+        }
+        let mut out = vec![0i32; 4];
+        sm.responses(&sample, &mut scratch, &mut out);
+        assert_eq!(out[2], sm.cfg.num_filters() as i32, "exact pattern → max response");
+        assert!(out[0] <= out[2] && out[1] <= out[2] && out[3] <= out[2]);
+    }
+
+    #[test]
+    fn pruned_filters_reduce_size_and_response() {
+        let mut rng = Rng::new(4);
+        let mut sm = Submodel::new_random(&mut rng, cfg());
+        // saturate every filter of class 0 so everything responds
+        for f in sm.discriminators[0].filters.iter_mut() {
+            let filt = f.as_mut().unwrap();
+            for i in 0..filt.entries() {
+                filt.table.set(i);
+            }
+        }
+        let full_size = sm.size_bits();
+        let mut scratch = SubmodelScratch::default();
+        let sample = BitVec::from_bools(&(0..64).map(|i| i % 2 == 0).collect::<Vec<_>>());
+        let mut out = vec![0i32; 4];
+        sm.responses(&sample, &mut scratch, &mut out);
+        assert_eq!(out[0], 8);
+        // prune half of class 0's filters
+        for f in 0..4 {
+            sm.discriminators[0].filters[f] = None;
+        }
+        sm.responses(&sample, &mut scratch, &mut out);
+        assert_eq!(out[0], 4);
+        assert_eq!(sm.size_bits(), full_size - 4 * 64);
+    }
+
+    #[test]
+    fn bias_shifts_response() {
+        let mut rng = Rng::new(5);
+        let mut sm = Submodel::new_random(&mut rng, cfg());
+        sm.bias[1] = 3;
+        let mut scratch = SubmodelScratch::default();
+        let mut out = vec![0i32; 4];
+        sm.responses(&BitVec::zeros(64), &mut scratch, &mut out);
+        // empty filters: responses are just biases... except key 0 hashes to
+        // index 0 for all H3 fns and table bit 0 is unset, so hits are 0.
+        assert_eq!(out[1] - out[0], 3);
+    }
+}

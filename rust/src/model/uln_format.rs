@@ -1,0 +1,377 @@
+//! `.uln` — the binary model interchange format between the Python compile
+//! path (multi-shot trained models, `python/compile/uln.py`) and this
+//! crate's native engine. Little-endian throughout.
+//!
+//! Layout:
+//! ```text
+//! magic "ULN1" | u32 version=1
+//! u32 encoder_kind (0=linear, 1=gaussian) | u32 num_inputs | u32 bits_per_input
+//! f32 thresholds[num_inputs * bits]
+//! u32 num_submodels
+//! per submodel:
+//!   u32 inputs_per_filter | u32 entries_per_filter | u32 k_hashes
+//!   u32 num_classes | u32 num_filters
+//!   u32 input_order[num_filters * inputs_per_filter]
+//!   u64 hash_params[k_hashes * inputs_per_filter]
+//!   i32 bias[num_classes]
+//!   per class:
+//!     u8 keep[num_filters]
+//!     for each kept filter: entries/8 bytes, LSB-first bit order
+//! u32 meta_len | meta JSON bytes
+//! u64 FNV-1a checksum of everything before it
+//! ```
+
+use crate::encoding::thermometer::{ThermometerEncoder, ThermometerKind};
+use crate::hash::h3::{H3Family, H3Hash};
+use crate::model::ensemble::UleenModel;
+use crate::model::submodel::{Discriminator, Submodel, SubmodelConfig};
+use crate::bloom::binary::BinaryBloom;
+use crate::util::bitvec::BitVec;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"ULN1";
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    bytes.iter().fold(0xcbf29ce484222325u64, |h, &b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    })
+}
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Serialize a model (with optional metadata JSON) to bytes.
+pub fn to_bytes(model: &UleenModel, meta: &Json) -> Vec<u8> {
+    let mut w = Writer { buf: Vec::new() };
+    w.buf.extend_from_slice(MAGIC);
+    w.u32(1);
+    w.u32(match model.encoder.kind {
+        ThermometerKind::Linear => 0,
+        ThermometerKind::Gaussian => 1,
+    });
+    w.u32(model.encoder.num_inputs as u32);
+    w.u32(model.encoder.bits as u32);
+    for &t in &model.encoder.thresholds {
+        w.f32(t);
+    }
+    w.u32(model.submodels.len() as u32);
+    for sm in &model.submodels {
+        w.u32(sm.cfg.inputs_per_filter as u32);
+        w.u32(sm.cfg.entries_per_filter as u32);
+        w.u32(sm.cfg.k_hashes as u32);
+        w.u32(sm.cfg.num_classes as u32);
+        w.u32(sm.cfg.num_filters() as u32);
+        for &o in &sm.input_order {
+            w.u32(o);
+        }
+        for f in &sm.hash.fns {
+            for &p in &f.params {
+                w.u64(p);
+            }
+        }
+        for &b in &sm.bias {
+            w.i32(b);
+        }
+        let table_bytes = sm.cfg.entries_per_filter / 8;
+        for disc in &sm.discriminators {
+            for f in &disc.filters {
+                w.buf.push(f.is_some() as u8);
+            }
+            for f in disc.filters.iter().flatten() {
+                let bytes = f.table.to_le_bytes();
+                w.buf.extend_from_slice(&bytes[..table_bytes]);
+            }
+        }
+    }
+    let meta_bytes = meta.to_string().into_bytes();
+    w.u32(meta_bytes.len() as u32);
+    w.buf.extend_from_slice(&meta_bytes);
+    let sum = fnv1a(&w.buf);
+    w.u64(sum);
+    w.buf
+}
+
+pub fn save(model: &UleenModel, meta: &Json, path: &Path) -> Result<()> {
+    std::fs::write(path, to_bytes(model, meta))
+        .with_context(|| format!("write {}", path.display()))
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.off + n > self.b.len() {
+            bail!("truncated .uln at offset {}", self.off);
+        }
+        let s = &self.b[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+/// Deserialize a model (+ metadata) from bytes.
+pub fn from_bytes(bytes: &[u8], name: &str) -> Result<(UleenModel, Json)> {
+    if bytes.len() < 12 {
+        bail!("file too small for .uln");
+    }
+    let (body, sum_bytes) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(sum_bytes.try_into().unwrap());
+    let actual = fnv1a(body);
+    if stored != actual {
+        bail!(".uln checksum mismatch: stored {stored:#x}, computed {actual:#x}");
+    }
+    let mut r = Reader { b: body, off: 0 };
+    if r.take(4)? != MAGIC {
+        bail!("bad .uln magic");
+    }
+    let version = r.u32()?;
+    if version != 1 {
+        bail!("unsupported .uln version {version}");
+    }
+    let kind = match r.u32()? {
+        0 => ThermometerKind::Linear,
+        1 => ThermometerKind::Gaussian,
+        k => bail!("bad encoder kind {k}"),
+    };
+    let num_inputs = r.u32()? as usize;
+    let bits = r.u32()? as usize;
+    if num_inputs == 0 || bits == 0 || num_inputs * bits > 1 << 26 {
+        bail!("implausible encoder dims {num_inputs}x{bits}");
+    }
+    let mut thresholds = Vec::with_capacity(num_inputs * bits);
+    for _ in 0..num_inputs * bits {
+        thresholds.push(r.f32()?);
+    }
+    let encoder = ThermometerEncoder { kind, num_inputs, bits, thresholds };
+    let num_submodels = r.u32()? as usize;
+    if num_submodels == 0 || num_submodels > 64 {
+        bail!("implausible submodel count {num_submodels}");
+    }
+    let mut submodels = Vec::with_capacity(num_submodels);
+    for si in 0..num_submodels {
+        let inputs_per_filter = r.u32()? as usize;
+        let entries_per_filter = r.u32()? as usize;
+        let k_hashes = r.u32()? as usize;
+        let num_classes = r.u32()? as usize;
+        let num_filters = r.u32()? as usize;
+        if !entries_per_filter.is_power_of_two() || entries_per_filter < 8 {
+            bail!("submodel {si}: bad table size {entries_per_filter}");
+        }
+        if inputs_per_filter == 0 || inputs_per_filter > 64 {
+            bail!("submodel {si}: bad inputs/filter {inputs_per_filter}");
+        }
+        let cfg = SubmodelConfig {
+            inputs_per_filter,
+            entries_per_filter,
+            k_hashes,
+            num_classes,
+            total_input_bits: num_inputs * bits,
+        };
+        if cfg.num_filters() != num_filters {
+            bail!(
+                "submodel {si}: filter count {num_filters} inconsistent with ceil({}/{})",
+                cfg.total_input_bits,
+                inputs_per_filter
+            );
+        }
+        let mut input_order = Vec::with_capacity(num_filters * inputs_per_filter);
+        for _ in 0..num_filters * inputs_per_filter {
+            let o = r.u32()?;
+            if o as usize >= cfg.total_input_bits {
+                bail!("submodel {si}: input_order entry {o} out of range");
+            }
+            input_order.push(o);
+        }
+        let out_bits = cfg.out_bits();
+        let mask = (1u64 << out_bits) - 1;
+        let mut fns = Vec::with_capacity(k_hashes);
+        for _ in 0..k_hashes {
+            let mut params = Vec::with_capacity(inputs_per_filter);
+            for _ in 0..inputs_per_filter {
+                let p = r.u64()?;
+                if p & !mask != 0 {
+                    bail!("submodel {si}: hash param exceeds out_bits");
+                }
+                params.push(p);
+            }
+            fns.push(H3Hash { params, out_bits });
+        }
+        let mut bias = Vec::with_capacity(num_classes);
+        for _ in 0..num_classes {
+            bias.push(r.i32()?);
+        }
+        let table_bytes = entries_per_filter / 8;
+        let mut discriminators = Vec::with_capacity(num_classes);
+        for _ in 0..num_classes {
+            let keep = r.take(num_filters)?.to_vec();
+            let mut filters = Vec::with_capacity(num_filters);
+            for &kept in &keep {
+                if kept != 0 {
+                    let raw = r.take(table_bytes)?;
+                    let mut padded = raw.to_vec();
+                    padded.resize(table_bytes.div_ceil(8) * 8, 0);
+                    let table = BitVec::from_le_bytes(&padded, entries_per_filter);
+                    filters.push(Some(BinaryBloom { table }));
+                } else {
+                    filters.push(None);
+                }
+            }
+            discriminators.push(Discriminator { filters });
+        }
+        submodels.push(Submodel {
+            cfg,
+            input_order,
+            hash: H3Family { fns },
+            discriminators,
+            bias,
+        });
+    }
+    let meta_len = r.u32()? as usize;
+    let meta_bytes = r.take(meta_len)?;
+    if r.off != body.len() {
+        bail!("trailing bytes in .uln body");
+    }
+    let meta = Json::parse(std::str::from_utf8(meta_bytes)?)
+        .map_err(|e| anyhow::anyhow!("bad .uln metadata: {e}"))?;
+    let model_name = meta
+        .get("name")
+        .and_then(|j| j.as_str())
+        .unwrap_or(name)
+        .to_string();
+    let model = UleenModel { name: model_name, encoder, submodels };
+    model.validate().map_err(|e| anyhow::anyhow!(e))?;
+    Ok((model, meta))
+}
+
+pub fn load(path: &Path) -> Result<(UleenModel, Json)> {
+    let bytes = std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+    let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("model");
+    from_bytes(&bytes, stem)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::thermometer::ThermometerKind;
+    use crate::util::rng::Rng;
+
+    fn sample_model() -> UleenModel {
+        let data: Vec<f32> = (0..400).map(|i| (i % 97) as f32).collect();
+        let encoder = ThermometerEncoder::fit(ThermometerKind::Gaussian, &data, 8, 4);
+        let mut rng = Rng::new(17);
+        let cfg = SubmodelConfig {
+            inputs_per_filter: 8,
+            entries_per_filter: 32,
+            k_hashes: 2,
+            num_classes: 3,
+            total_input_bits: 32,
+        };
+        let mut submodels = Vec::new();
+        for _ in 0..2 {
+            let mut sm = Submodel::new_random(&mut rng, cfg);
+            // random tables, a pruned filter and nonzero bias for coverage
+            for d in &mut sm.discriminators {
+                for f in d.filters.iter_mut() {
+                    let filt = f.as_mut().unwrap();
+                    for i in 0..filt.entries() {
+                        if rng.below(3) == 0 {
+                            filt.table.set(i);
+                        }
+                    }
+                }
+            }
+            sm.discriminators[1].filters[2] = None;
+            sm.bias = vec![1, -2, 3];
+            submodels.push(sm);
+        }
+        UleenModel { name: "roundtrip".into(), encoder, submodels }
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let m = sample_model();
+        let mut meta = Json::obj();
+        meta.set("name", Json::Str("roundtrip".into()))
+            .set("accuracy", Json::Num(0.91));
+        let bytes = to_bytes(&m, &meta);
+        let (back, meta2) = from_bytes(&bytes, "x").unwrap();
+        assert_eq!(back.name, "roundtrip");
+        assert_eq!(meta2.get("accuracy").unwrap().as_f64(), Some(0.91));
+        assert_eq!(back.submodels.len(), 2);
+        assert_eq!(back.encoder.thresholds, m.encoder.thresholds);
+        for (a, b) in m.submodels.iter().zip(back.submodels.iter()) {
+            assert_eq!(a.cfg, b.cfg);
+            assert_eq!(a.input_order, b.input_order);
+            assert_eq!(a.hash, b.hash);
+            assert_eq!(a.bias, b.bias);
+            for (da, db) in a.discriminators.iter().zip(b.discriminators.iter()) {
+                for (fa, fb) in da.filters.iter().zip(db.filters.iter()) {
+                    assert_eq!(fa, fb);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn predictions_survive_roundtrip() {
+        let m = sample_model();
+        let bytes = to_bytes(&m, &Json::obj());
+        let (back, _) = from_bytes(&bytes, "x").unwrap();
+        let mut s1 = crate::model::ensemble::EnsembleScratch::default();
+        let mut s2 = crate::model::ensemble::EnsembleScratch::default();
+        let mut rng = Rng::new(8);
+        for _ in 0..50 {
+            let sample: Vec<f32> = (0..8).map(|_| rng.below(97) as f32).collect();
+            assert_eq!(m.predict(&sample, &mut s1), back.predict(&sample, &mut s2));
+        }
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let m = sample_model();
+        let mut bytes = to_bytes(&m, &Json::obj());
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 1;
+        assert!(from_bytes(&bytes, "x").is_err());
+    }
+
+    #[test]
+    fn truncation_is_detected() {
+        let m = sample_model();
+        let bytes = to_bytes(&m, &Json::obj());
+        assert!(from_bytes(&bytes[..bytes.len() - 9], "x").is_err());
+    }
+}

@@ -1,0 +1,168 @@
+//! Classic WiSARD (Aleksander et al., 1981) — the paper's Fig 10 starting
+//! point: direct 2^n-entry RAM nodes, one-shot set-on-seen training, no
+//! hashing, no bleaching, no thermometer (callers choose the encoding).
+
+use crate::encoding::thermometer::ThermometerEncoder;
+use crate::model::submodel::SubmodelConfig;
+use crate::util::bitvec::BitVec;
+use crate::util::rng::Rng;
+use crate::util::stats::Confusion;
+
+/// A classic WiSARD model: per class, `num_filters` RAM nodes of 2^n bits.
+#[derive(Clone, Debug)]
+pub struct Wisard {
+    pub inputs_per_filter: usize,
+    pub num_classes: usize,
+    pub total_input_bits: usize,
+    pub input_order: Vec<u32>,
+    /// rams[class][filter] — direct-mapped 2^n-bit table.
+    pub rams: Vec<Vec<BitVec>>,
+    pub encoder: ThermometerEncoder,
+}
+
+impl Wisard {
+    pub fn num_filters(&self) -> usize {
+        self.total_input_bits.div_ceil(self.inputs_per_filter)
+    }
+
+    pub fn new(rng: &mut Rng, encoder: ThermometerEncoder, inputs_per_filter: usize, num_classes: usize) -> Self {
+        assert!(inputs_per_filter <= 28, "2^n RAM nodes get huge; use Bloom variants");
+        let total_input_bits = encoder.encoded_bits();
+        let cfg = SubmodelConfig {
+            inputs_per_filter,
+            entries_per_filter: 1 << inputs_per_filter,
+            k_hashes: 1,
+            num_classes,
+            total_input_bits,
+        };
+        let input_order = crate::model::submodel::Submodel::make_input_order(rng, &cfg);
+        let nf = total_input_bits.div_ceil(inputs_per_filter);
+        let rams = (0..num_classes)
+            .map(|_| (0..nf).map(|_| BitVec::zeros(1 << inputs_per_filter)).collect())
+            .collect();
+        Self { inputs_per_filter, num_classes, total_input_bits, input_order, rams, encoder }
+    }
+
+    fn keys(&self, encoded: &BitVec, keys: &mut Vec<u64>) {
+        let n = self.inputs_per_filter;
+        keys.clear();
+        for f in 0..self.num_filters() {
+            let mut key = 0u64;
+            for i in 0..n {
+                let src = self.input_order[f * n + i] as usize;
+                key |= (encoded.get(src) as u64) << i;
+            }
+            keys.push(key);
+        }
+    }
+
+    /// One-shot training: set the addressed bit in each RAM of the true
+    /// class's discriminator.
+    pub fn train_sample(&mut self, sample: &[f32], label: usize) {
+        let encoded = self.encoder.encode(sample);
+        let mut keys = Vec::new();
+        self.keys(&encoded, &mut keys);
+        for (f, &key) in keys.iter().enumerate() {
+            self.rams[label][f].set(key as usize);
+        }
+    }
+
+    pub fn train(&mut self, xs: &[f32], ys: &[u16], num_features: usize) {
+        for (i, &y) in ys.iter().enumerate() {
+            self.train_sample(&xs[i * num_features..(i + 1) * num_features], y as usize);
+        }
+    }
+
+    pub fn predict(&self, sample: &[f32]) -> usize {
+        let encoded = self.encoder.encode(sample);
+        let mut keys = Vec::new();
+        self.keys(&encoded, &mut keys);
+        let mut best = (i32::MIN, 0usize);
+        for c in 0..self.num_classes {
+            let mut acc = 0i32;
+            for (f, &key) in keys.iter().enumerate() {
+                acc += self.rams[c][f].get(key as usize) as i32;
+            }
+            if acc > best.0 {
+                best = (acc, c);
+            }
+        }
+        best.1
+    }
+
+    pub fn evaluate(&self, xs: &[f32], ys: &[u16], num_features: usize) -> Confusion {
+        let mut conf = Confusion::new(self.num_classes);
+        for (i, &y) in ys.iter().enumerate() {
+            let p = self.predict(&xs[i * num_features..(i + 1) * num_features]);
+            conf.record(y as usize, p);
+        }
+        conf
+    }
+
+    /// Table storage in KiB: classes × filters × 2^n bits.
+    pub fn size_kib(&self) -> f64 {
+        (self.num_classes * self.num_filters() * (1usize << self.inputs_per_filter)) as f64
+            / 8.0
+            / 1024.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::thermometer::ThermometerKind;
+
+    fn encoder() -> ThermometerEncoder {
+        let data: Vec<f32> = (0..600).map(|i| (i % 100) as f32).collect();
+        ThermometerEncoder::fit(ThermometerKind::Linear, &data, 6, 4)
+    }
+
+    #[test]
+    fn memorizes_training_samples() {
+        let mut rng = Rng::new(1);
+        let mut w = Wisard::new(&mut rng, encoder(), 6, 3);
+        let samples: Vec<Vec<f32>> = vec![
+            vec![5.0, 10.0, 90.0, 20.0, 30.0, 70.0],
+            vec![90.0, 80.0, 10.0, 60.0, 5.0, 15.0],
+            vec![50.0, 50.0, 50.0, 50.0, 50.0, 50.0],
+        ];
+        for (c, s) in samples.iter().enumerate() {
+            w.train_sample(s, c);
+        }
+        for (c, s) in samples.iter().enumerate() {
+            assert_eq!(w.predict(s), c, "exact training sample must be recalled");
+        }
+    }
+
+    #[test]
+    fn size_formula() {
+        let mut rng = Rng::new(2);
+        let w = Wisard::new(&mut rng, encoder(), 6, 3);
+        // 24 encoded bits / 6 = 4 filters; 3 * 4 * 64 bits = 768 bits
+        assert_eq!(w.num_filters(), 4);
+        assert!((w.size_kib() - 768.0 / 8192.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn saturation_hurts_discrimination() {
+        // With no bleaching, training *everything* into one class makes that
+        // class win everywhere — the saturation failure ULEEN fixes.
+        let mut rng = Rng::new(3);
+        let mut w = Wisard::new(&mut rng, encoder(), 6, 2);
+        let mut r = Rng::new(4);
+        for _ in 0..500 {
+            let s: Vec<f32> = (0..6).map(|_| (r.below(100)) as f32).collect();
+            w.train_sample(&s, 0);
+        }
+        // class 1 sees only one pattern
+        w.train_sample(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 1);
+        let mut wins0 = 0;
+        for _ in 0..100 {
+            let s: Vec<f32> = (0..6).map(|_| (r.below(100)) as f32).collect();
+            if w.predict(&s) == 0 {
+                wins0 += 1;
+            }
+        }
+        assert!(wins0 > 90, "saturated class should dominate, won {wins0}");
+    }
+}

@@ -1,0 +1,147 @@
+//! PJRT runtime — loads the AOT artifacts (`artifacts/*.hlo.txt`, lowered
+//! once by `python/compile/aot.py`) and executes them on the hot path.
+//!
+//! Interchange is HLO **text**: jax ≥ 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md). One compiled executable
+//! per (model, batch-size) pair; Python never runs at serving time.
+
+pub mod pjrt;
+
+pub use pjrt::PjrtEngine;
+
+use crate::model::ensemble::{EnsembleScratch, UleenModel};
+
+/// A batch classifier — implemented by both the native bit-packed engine
+/// and the PJRT-loaded AOT graph, so the coordinator and the benches can
+/// swap them freely (and cross-check one against the other).
+pub trait InferenceEngine: Send {
+    /// Human-readable engine label for logs/benches.
+    fn label(&self) -> String;
+    fn num_features(&self) -> usize;
+    fn num_classes(&self) -> usize;
+    /// Per-class responses for `n` samples (row-major `x`, length
+    /// `n * num_features`). Returns row-major `n * num_classes` scores.
+    fn responses(&mut self, x: &[f32], n: usize) -> crate::Result<Vec<f32>>;
+
+    /// Argmax classification built on `responses` (ties break low, like
+    /// the hardware comparator).
+    fn classify(&mut self, x: &[f32], n: usize) -> crate::Result<Vec<usize>> {
+        let m = self.num_classes();
+        let resp = self.responses(x, n)?;
+        Ok((0..n)
+            .map(|i| {
+                let row = &resp[i * m..(i + 1) * m];
+                let mut best = 0usize;
+                for (c, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = c;
+                    }
+                }
+                best
+            })
+            .collect())
+    }
+}
+
+/// The native Rust engine: bit-packed tables, shared H3 hash block,
+/// flat-compiled for the hot path (see `model::flat` — §Perf).
+pub struct NativeEngine {
+    pub model: UleenModel,
+    flat: crate::model::flat::FlatModel,
+    resp_scratch: Vec<i32>,
+    flat_scratch: crate::model::flat::FlatScratch,
+    encoded_buf: crate::util::bitvec::BitVec,
+    #[allow(dead_code)]
+    scratch: EnsembleScratch,
+}
+
+impl NativeEngine {
+    pub fn new(model: UleenModel) -> Self {
+        let flat = crate::model::flat::FlatModel::compile(&model);
+        let encoded_buf = crate::util::bitvec::BitVec::zeros(model.encoded_bits());
+        Self {
+            model,
+            flat,
+            resp_scratch: Vec::new(),
+            flat_scratch: crate::model::flat::FlatScratch::default(),
+            encoded_buf,
+            scratch: EnsembleScratch::default(),
+        }
+    }
+}
+
+impl InferenceEngine for NativeEngine {
+    fn label(&self) -> String {
+        format!("native:{}", self.model.name)
+    }
+
+    fn num_features(&self) -> usize {
+        self.model.encoder.num_inputs
+    }
+
+    fn num_classes(&self) -> usize {
+        self.model.num_classes()
+    }
+
+    fn responses(&mut self, x: &[f32], n: usize) -> crate::Result<Vec<f32>> {
+        let f = self.num_features();
+        anyhow::ensure!(x.len() == n * f, "bad input length");
+        let m = self.num_classes();
+        let mut out = Vec::with_capacity(n * m);
+        if self.encoded_buf.len() != self.model.encoded_bits() {
+            self.encoded_buf = crate::util::bitvec::BitVec::zeros(self.model.encoded_bits());
+        }
+        for i in 0..n {
+            self.model
+                .encoder
+                .encode_into(&x[i * f..(i + 1) * f], &mut self.encoded_buf);
+            self.resp_scratch.clear();
+            self.resp_scratch.resize(m, 0);
+            self.flat.responses_encoded(
+                &self.encoded_buf,
+                &mut self.flat_scratch,
+                &mut self.resp_scratch,
+            );
+            out.extend(self.resp_scratch.iter().map(|&r| r as f32));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_uci::{synth_uci, uci_spec};
+    use crate::train::oneshot::{train_oneshot, OneShotConfig};
+
+    #[test]
+    fn native_engine_matches_model_evaluate() {
+        let ds = synth_uci(5, uci_spec("iris").unwrap());
+        let (model, _) = train_oneshot(&ds, &OneShotConfig::default());
+        let conf = model.evaluate(&ds.test_x, &ds.test_y, ds.num_features);
+        let mut eng = NativeEngine::new(model);
+        let preds = eng.classify(&ds.test_x, ds.n_test()).unwrap();
+        let correct = preds
+            .iter()
+            .zip(ds.test_y.iter())
+            .filter(|(p, y)| **p == **y as usize)
+            .count();
+        assert_eq!(correct as f64 / ds.n_test() as f64, conf.accuracy());
+    }
+
+    #[test]
+    fn classify_tie_breaks_low() {
+        struct Fake;
+        impl InferenceEngine for Fake {
+            fn label(&self) -> String { "fake".into() }
+            fn num_features(&self) -> usize { 1 }
+            fn num_classes(&self) -> usize { 3 }
+            fn responses(&mut self, _x: &[f32], n: usize) -> crate::Result<Vec<f32>> {
+                Ok(vec![2.0, 2.0, 1.0].repeat(n))
+            }
+        }
+        let mut f = Fake;
+        assert_eq!(f.classify(&[0.0], 1).unwrap(), vec![0]);
+    }
+}

@@ -1,0 +1,102 @@
+//! The PJRT-backed engine: compile `artifacts/<model>_b<batch>.hlo.txt`
+//! on the CPU PJRT client and execute it for batched inference.
+
+use crate::runtime::InferenceEngine;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// An AOT inference graph loaded through the `xla` crate.
+pub struct PjrtEngine {
+    exe: xla::PjRtLoadedExecutable,
+    /// compiled (fixed) batch size — inputs are padded up to this
+    batch: usize,
+    num_features: usize,
+    num_classes: usize,
+    name: String,
+}
+
+// The xla crate's client/executable wrap thread-safe C++ objects; the
+// crate just doesn't declare it. We only move the engine whole across
+// threads (one engine per worker), never share references concurrently.
+unsafe impl Send for PjrtEngine {}
+
+impl PjrtEngine {
+    /// Load + compile an HLO-text artifact. `num_classes` is probed with a
+    /// zero-batch execution so mismatched artifacts fail at load time.
+    pub fn load(path: &Path, batch: usize, num_features: usize) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("PJRT compile")?;
+        let name = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("model")
+            .to_string();
+        let mut eng = Self { exe, batch, num_features, num_classes: 0, name };
+        // probe output shape
+        let probe = vec![0f32; batch * num_features];
+        let out = eng.run_padded(&probe)?;
+        anyhow::ensure!(
+            out.len() % batch == 0 && !out.is_empty(),
+            "unexpected output length {} for batch {batch}",
+            out.len()
+        );
+        eng.num_classes = out.len() / batch;
+        Ok(eng)
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Execute exactly one compiled batch (input length batch*features).
+    fn run_padded(&self, x: &[f32]) -> Result<Vec<f32>> {
+        debug_assert_eq!(x.len(), self.batch * self.num_features);
+        let lit = xla::Literal::vec1(x)
+            .reshape(&[self.batch as i64, self.num_features as i64])
+            .context("reshape input literal")?;
+        let result = self.exe.execute::<xla::Literal>(&[lit]).context("execute")?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetch result")?
+            .to_tuple1()
+            .context("unwrap 1-tuple (lowered with return_tuple=True)")?;
+        out.to_vec::<f32>().context("read f32 output")
+    }
+}
+
+impl InferenceEngine for PjrtEngine {
+    fn label(&self) -> String {
+        format!("pjrt:{}", self.name)
+    }
+
+    fn num_features(&self) -> usize {
+        self.num_features
+    }
+
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    fn responses(&mut self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+        let f = self.num_features;
+        anyhow::ensure!(x.len() == n * f, "bad input length");
+        let m = self.num_classes;
+        let mut out = Vec::with_capacity(n * m);
+        let mut padded = vec![0f32; self.batch * f];
+        let mut i = 0;
+        while i < n {
+            let take = (n - i).min(self.batch);
+            padded[..take * f].copy_from_slice(&x[i * f..(i + take) * f]);
+            padded[take * f..].fill(0.0);
+            let resp = self.run_padded(&padded)?;
+            out.extend_from_slice(&resp[..take * m]);
+            i += take;
+        }
+        Ok(out)
+    }
+}

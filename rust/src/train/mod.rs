@@ -1,0 +1,16 @@
+//! Training for the native engine (paper §III-B):
+//!
+//! * [`oneshot`] — the enhanced one-shot rule: counting Bloom filters +
+//!   bleaching threshold found by binary search on a validation split.
+//! * [`prune`] — post-training correlation pruning + integer bias learning
+//!   (§III-A4). (Fine-tuning after pruning is gradient-based and lives in
+//!   the JAX layer; the Rust side prunes one-shot models and re-biases.)
+//! * [`sweep`] — the hyperparameter sweep driver behind Fig 14.
+
+pub mod oneshot;
+pub mod prune;
+pub mod sweep;
+
+pub use oneshot::{train_oneshot, OneShotConfig, OneShotReport};
+pub use prune::{prune_model, prune_submodel, PruneReport};
+pub use sweep::{sweep_oneshot, SweepPoint};

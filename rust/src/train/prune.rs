@@ -1,0 +1,210 @@
+//! Correlation-based pruning + integer bias learning (paper §III-A4).
+//!
+//! For every RAM node we compute the phi coefficient (Pearson correlation
+//! of binary variables) between the filter's output and the "label ==
+//! this discriminator's class" indicator over the training set. The
+//! lowest-|phi| fraction of filters in **each discriminator** is removed,
+//! and an integer bias equal to the rounded mean response lost is added so
+//! discriminator response scales stay comparable.
+
+use crate::data::Dataset;
+use crate::model::ensemble::UleenModel;
+use crate::model::submodel::{Submodel, SubmodelScratch};
+
+/// What pruning did to one submodel.
+#[derive(Clone, Debug)]
+pub struct PruneReport {
+    pub ratio: f64,
+    pub filters_before: usize,
+    pub filters_after: usize,
+    pub size_kib_before: f64,
+    pub size_kib_after: f64,
+}
+
+/// Per-(class, filter) activation statistics on a dataset.
+struct ActStats {
+    /// hits[class][filter] split by label match: (n11, n10, n01, n00)
+    counts: Vec<(u64, u64, u64, u64)>,
+    /// mean activation of filter on samples OF its class: used for bias
+    mean_act_onclass: Vec<f64>,
+    nf: usize,
+}
+
+fn activation_stats(sm: &Submodel, encoder: &crate::encoding::thermometer::ThermometerEncoder, ds: &Dataset) -> ActStats {
+    let nf = sm.cfg.num_filters();
+    let m = sm.cfg.num_classes;
+    let k = sm.cfg.k_hashes;
+    let mut counts = vec![(0u64, 0u64, 0u64, 0u64); m * nf];
+    let mut on_hits = vec![0u64; m * nf];
+    let mut on_total = vec![0u64; m];
+    let mut scratch = SubmodelScratch::default();
+    for i in 0..ds.n_train() {
+        let encoded = encoder.encode(ds.train_row(i));
+        sm.gather_keys(&encoded, &mut scratch.keys);
+        sm.hash_keys(&scratch.keys, &mut scratch.idxs);
+        let label = ds.train_y[i] as usize;
+        on_total[label] += 1;
+        for (c, disc) in sm.discriminators.iter().enumerate() {
+            let is_class = c == label;
+            for f in 0..nf {
+                let fired = match &disc.filters[f] {
+                    Some(filt) => filt.test_indices(&scratch.idxs[f * k..(f + 1) * k]),
+                    None => false,
+                };
+                let e = &mut counts[c * nf + f];
+                match (fired, is_class) {
+                    (true, true) => e.0 += 1,
+                    (true, false) => e.1 += 1,
+                    (false, true) => e.2 += 1,
+                    (false, false) => e.3 += 1,
+                }
+                if fired && is_class {
+                    on_hits[c * nf + f] += 1;
+                }
+            }
+        }
+    }
+    let mean_act_onclass = (0..m * nf)
+        .map(|i| {
+            let c = i / nf;
+            if on_total[c] == 0 {
+                0.0
+            } else {
+                on_hits[i] as f64 / on_total[c] as f64
+            }
+        })
+        .collect();
+    ActStats { counts, mean_act_onclass, nf }
+}
+
+/// Phi coefficient from a 2×2 contingency table.
+fn phi(n11: u64, n10: u64, n01: u64, n00: u64) -> f64 {
+    let (a, b, c, d) = (n11 as f64, n10 as f64, n01 as f64, n00 as f64);
+    let den = ((a + b) * (c + d) * (a + c) * (b + d)).sqrt();
+    if den == 0.0 {
+        0.0
+    } else {
+        (a * d - b * c) / den
+    }
+}
+
+/// Prune `ratio` of the filters in each discriminator of `sm` (lowest
+/// |phi| first) and set integer biases compensating the lost mean
+/// response. Returns the report; mutates the submodel in place.
+pub fn prune_submodel(
+    sm: &mut Submodel,
+    encoder: &crate::encoding::thermometer::ThermometerEncoder,
+    ds: &Dataset,
+    ratio: f64,
+) -> PruneReport {
+    assert!((0.0..1.0).contains(&ratio));
+    let stats = activation_stats(sm, encoder, ds);
+    let nf = stats.nf;
+    let size_before = sm.size_kib();
+    let kept_before: usize = sm.discriminators.iter().map(|d| d.kept()).sum();
+    let n_prune = ((nf as f64) * ratio).floor() as usize;
+    for (c, disc) in sm.discriminators.iter_mut().enumerate() {
+        // rank live filters by |phi| ascending
+        let mut ranked: Vec<(f64, usize)> = (0..nf)
+            .filter(|&f| disc.filters[f].is_some())
+            .map(|f| {
+                let (a, b, cc, d) = stats.counts[c * nf + f];
+                (phi(a, b, cc, d).abs(), f)
+            })
+            .collect();
+        ranked.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+        let mut lost_response = 0.0f64;
+        for &(_, f) in ranked.iter().take(n_prune) {
+            disc.filters[f] = None;
+            lost_response += stats.mean_act_onclass[c * nf + f];
+        }
+        sm.bias[c] += lost_response.round() as i32;
+    }
+    let kept_after: usize = sm.discriminators.iter().map(|d| d.kept()).sum();
+    PruneReport {
+        ratio,
+        filters_before: kept_before,
+        filters_after: kept_after,
+        size_kib_before: size_before,
+        size_kib_after: sm.size_kib(),
+    }
+}
+
+/// Prune every submodel of an ensemble at the same ratio.
+pub fn prune_model(model: &mut UleenModel, ds: &Dataset, ratio: f64) -> Vec<PruneReport> {
+    let encoder = model.encoder.clone();
+    model
+        .submodels
+        .iter_mut()
+        .map(|sm| prune_submodel(sm, &encoder, ds, ratio))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_uci::{synth_uci, uci_spec};
+    use crate::train::oneshot::{train_oneshot, OneShotConfig};
+
+    #[test]
+    fn phi_known_values() {
+        assert!((phi(10, 0, 0, 10) - 1.0).abs() < 1e-12); // perfect correlation
+        assert!((phi(0, 10, 10, 0) + 1.0).abs() < 1e-12); // perfect anti
+        assert!(phi(5, 5, 5, 5).abs() < 1e-12); // independence
+        assert_eq!(phi(0, 0, 0, 0), 0.0); // degenerate
+    }
+
+    #[test]
+    fn pruning_reduces_size_proportionally_with_small_accuracy_cost() {
+        let ds = synth_uci(31, uci_spec("vowel").unwrap());
+        let cfg = OneShotConfig {
+            inputs_per_filter: 10,
+            entries_per_filter: 128,
+            therm_bits: 6,
+            ..Default::default()
+        };
+        let (mut model, _) = train_oneshot(&ds, &cfg);
+        let acc_before = model.evaluate(&ds.test_x, &ds.test_y, ds.num_features).accuracy();
+        let size_before = model.size_kib();
+        let nf = model.submodels[0].cfg.num_filters();
+        let expect_pruned = ((nf as f64) * 0.3).floor();
+        let reports = prune_model(&mut model, &ds, 0.3);
+        let acc_after = model.evaluate(&ds.test_x, &ds.test_y, ds.num_features).accuracy();
+        let size_after = model.size_kib();
+        let expect_after = size_before * (nf as f64 - expect_pruned) / nf as f64;
+        assert!(
+            (size_after - expect_after).abs() < 1e-9,
+            "size {size_before} -> {size_after}, expected {expect_after}"
+        );
+        assert!(
+            acc_after > acc_before - 0.08,
+            "pruning 30% cost too much accuracy: {acc_before} -> {acc_after}"
+        );
+        assert_eq!(reports.len(), 1);
+        assert!(reports[0].filters_after < reports[0].filters_before);
+    }
+
+    #[test]
+    fn heavy_pruning_degrades_gracefully() {
+        let ds = synth_uci(32, uci_spec("wine").unwrap());
+        let (mut model, _) = train_oneshot(
+            &ds,
+            &OneShotConfig { inputs_per_filter: 8, entries_per_filter: 64, therm_bits: 4, ..Default::default() },
+        );
+        let chance = 1.0 / ds.num_classes as f64;
+        prune_model(&mut model, &ds, 0.9);
+        let acc = model.evaluate(&ds.test_x, &ds.test_y, ds.num_features).accuracy();
+        // 90% pruning still leaves a working (if weak) model
+        assert!(acc > chance, "90%-pruned model below chance: {acc}");
+    }
+
+    #[test]
+    fn zero_ratio_is_identity() {
+        let ds = synth_uci(33, uci_spec("iris").unwrap());
+        let (mut model, _) = train_oneshot(&ds, &OneShotConfig::default());
+        let size = model.size_kib();
+        let rep = prune_model(&mut model, &ds, 0.0);
+        assert_eq!(model.size_kib(), size);
+        assert_eq!(rep[0].filters_before, rep[0].filters_after);
+    }
+}

@@ -1,0 +1,102 @@
+//! One-shot hyperparameter sweep (paper §V-F2 / Fig 14): grid over
+//! thermometer bits, inputs per filter and entries per filter; records the
+//! accuracy/size frontier.
+
+use crate::data::Dataset;
+use crate::encoding::thermometer::ThermometerKind;
+use crate::train::oneshot::{train_oneshot, OneShotConfig};
+
+/// One grid point's outcome.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub therm_bits: usize,
+    pub inputs_per_filter: usize,
+    pub entries_per_filter: usize,
+    pub size_kib: f64,
+    pub test_accuracy: f64,
+    pub bleach: u16,
+}
+
+/// Run the sweep. `grid` axes mirror the paper's sweep: thermometer bits,
+/// inputs/filter, entries/filter (hash count fixed at 2 per §V-A).
+pub fn sweep_oneshot(
+    ds: &Dataset,
+    bits_axis: &[usize],
+    inputs_axis: &[usize],
+    entries_axis: &[usize],
+    seed: u64,
+) -> Vec<SweepPoint> {
+    let mut out = Vec::new();
+    for &tb in bits_axis {
+        for &ipf in inputs_axis {
+            for &epf in entries_axis {
+                let cfg = OneShotConfig {
+                    inputs_per_filter: ipf,
+                    entries_per_filter: epf,
+                    k_hashes: 2,
+                    therm_bits: tb,
+                    therm_kind: ThermometerKind::Gaussian,
+                    val_fraction: 0.1,
+                    seed,
+                };
+                let (model, report) = train_oneshot(ds, &cfg);
+                let acc = model
+                    .evaluate(&ds.test_x, &ds.test_y, ds.num_features)
+                    .accuracy();
+                out.push(SweepPoint {
+                    therm_bits: tb,
+                    inputs_per_filter: ipf,
+                    entries_per_filter: epf,
+                    size_kib: model.size_kib(),
+                    test_accuracy: acc,
+                    bleach: report.bleach,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// "Best accuracy at size ≤ X" frontier used by Fig 14's left panel.
+pub fn accuracy_size_frontier(points: &[SweepPoint]) -> Vec<(f64, f64)> {
+    let mut sorted: Vec<&SweepPoint> = points.iter().collect();
+    sorted.sort_by(|a, b| a.size_kib.partial_cmp(&b.size_kib).unwrap());
+    let mut best = 0.0f64;
+    let mut out = Vec::new();
+    for p in sorted {
+        if p.test_accuracy > best {
+            best = p.test_accuracy;
+            out.push((p.size_kib, best));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_uci::{synth_uci, uci_spec};
+
+    #[test]
+    fn sweep_covers_grid_and_frontier_is_monotone() {
+        let ds = synth_uci(41, uci_spec("wine").unwrap());
+        let points = sweep_oneshot(&ds, &[2, 4], &[8, 12], &[64], 7);
+        assert_eq!(points.len(), 4);
+        let frontier = accuracy_size_frontier(&points);
+        assert!(!frontier.is_empty());
+        for w in frontier.windows(2) {
+            assert!(w[1].0 >= w[0].0 && w[1].1 >= w[0].1);
+        }
+    }
+
+    #[test]
+    fn more_encoding_bits_do_not_hurt_much() {
+        // Fig 14 middle panel shape: accuracy grows (with diminishing
+        // returns) in thermometer bits.
+        let ds = synth_uci(42, uci_spec("vehicle").unwrap());
+        let pts = sweep_oneshot(&ds, &[1, 6], &[9], &[128], 3);
+        let acc1 = pts[0].test_accuracy;
+        let acc6 = pts[1].test_accuracy;
+        assert!(acc6 >= acc1 - 0.05, "bits=1 {acc1} vs bits=6 {acc6}");
+    }
+}

@@ -1,0 +1,198 @@
+//! Bit-packed vector — the storage substrate for Bloom-filter tables and
+//! thermometer-encoded inputs. Backed by `u64` words; hot-path methods are
+//! `#[inline]` and branch-free where it matters.
+
+/// A fixed-length vector of bits packed into `u64` words.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitVec {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitVec {
+    /// All-zeros bit vector of `len` bits.
+    pub fn zeros(len: usize) -> Self {
+        Self {
+            words: vec![0u64; len.div_ceil(64)],
+            len,
+        }
+    }
+
+    /// Build from a bool slice.
+    pub fn from_bools(bits: &[bool]) -> Self {
+        let mut v = Self::zeros(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                v.set(i);
+            }
+        }
+        v
+    }
+
+    /// Build from raw words (trailing bits beyond `len` must be zero).
+    pub fn from_words(words: Vec<u64>, len: usize) -> Self {
+        debug_assert!(words.len() == len.div_ceil(64));
+        Self { words, len }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i >> 6] |= 1u64 << (i & 63);
+    }
+
+    #[inline]
+    pub fn clear(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i >> 6] &= !(1u64 << (i & 63));
+    }
+
+    #[inline]
+    pub fn assign(&mut self, i: usize, v: bool) {
+        if v {
+            self.set(i)
+        } else {
+            self.clear(i)
+        }
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Raw word storage (read-only).
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Zero every bit (keeps capacity).
+    #[inline]
+    pub fn clear_all(&mut self) {
+        self.words.iter_mut().for_each(|w| *w = 0);
+    }
+
+    /// OR a mask into word `w` (hot-path run setter; bounds-checked).
+    #[inline]
+    pub fn or_word(&mut self, w: usize, mask: u64) {
+        self.words[w] |= mask;
+    }
+
+    /// Bytes of storage actually used (for model-size accounting we use
+    /// `len/8` — the hardware stores exactly `len` bits).
+    pub fn storage_bits(&self) -> usize {
+        self.len
+    }
+
+    /// Iterate over bits as bools.
+    pub fn iter(&self) -> impl Iterator<Item = bool> + '_ {
+        (0..self.len).map(move |i| self.get(i))
+    }
+
+    /// In-place OR with another vector of the same length.
+    pub fn or_assign(&mut self, other: &BitVec) {
+        assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(other.words.iter()) {
+            *a |= *b;
+        }
+    }
+
+    /// In-place AND with another vector of the same length.
+    pub fn and_assign(&mut self, other: &BitVec) {
+        assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(other.words.iter()) {
+            *a &= *b;
+        }
+    }
+
+    /// Serialize to little-endian bytes (length is carried externally).
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.words.len() * 8);
+        for w in &self.words {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    /// Deserialize from little-endian bytes produced by [`to_le_bytes`].
+    pub fn from_le_bytes(bytes: &[u8], len: usize) -> Self {
+        let nwords = len.div_ceil(64);
+        assert!(bytes.len() >= nwords * 8, "short bitvec payload");
+        let words = (0..nwords)
+            .map(|i| u64::from_le_bytes(bytes[i * 8..i * 8 + 8].try_into().unwrap()))
+            .collect();
+        Self { words, len }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn set_get_clear_roundtrip() {
+        let mut v = BitVec::zeros(130);
+        assert_eq!(v.len(), 130);
+        v.set(0);
+        v.set(63);
+        v.set(64);
+        v.set(129);
+        assert!(v.get(0) && v.get(63) && v.get(64) && v.get(129));
+        assert!(!v.get(1) && !v.get(65) && !v.get(128));
+        assert_eq!(v.count_ones(), 4);
+        v.clear(64);
+        assert!(!v.get(64));
+        assert_eq!(v.count_ones(), 3);
+    }
+
+    #[test]
+    fn from_bools_matches_gets() {
+        let mut rng = Rng::new(3);
+        let bits: Vec<bool> = (0..200).map(|_| rng.below(2) == 1).collect();
+        let v = BitVec::from_bools(&bits);
+        for (i, &b) in bits.iter().enumerate() {
+            assert_eq!(v.get(i), b);
+        }
+        assert_eq!(v.count_ones(), bits.iter().filter(|&&b| b).count());
+    }
+
+    #[test]
+    fn byte_roundtrip_preserves_bits() {
+        let mut rng = Rng::new(9);
+        let bits: Vec<bool> = (0..777).map(|_| rng.below(2) == 1).collect();
+        let v = BitVec::from_bools(&bits);
+        let bytes = v.to_le_bytes();
+        let v2 = BitVec::from_le_bytes(&bytes, 777);
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn or_and_semantics() {
+        let a = BitVec::from_bools(&[true, false, true, false]);
+        let b = BitVec::from_bools(&[true, true, false, false]);
+        let mut o = a.clone();
+        o.or_assign(&b);
+        assert_eq!(o, BitVec::from_bools(&[true, true, true, false]));
+        let mut n = a.clone();
+        n.and_assign(&b);
+        assert_eq!(n, BitVec::from_bools(&[true, false, false, false]));
+    }
+}

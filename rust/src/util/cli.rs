@@ -1,0 +1,175 @@
+//! Minimal declarative CLI parser (clap is unavailable offline).
+//!
+//! Supports `binary <subcommand> --key value --flag` with typed getters and
+//! automatic usage text. Unknown options are an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand plus `--key value` options and
+/// boolean `--flag`s.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: String,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Declarative option spec used for parsing + usage text.
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. The first non-option token is the subcommand; the
+    /// remaining non-option tokens are positional.
+    pub fn parse(argv: &[String], spec: &[OptSpec]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                let (name, inline_val) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let s = spec
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}"))?;
+                if s.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} requires a value"))?
+                        }
+                    };
+                    out.opts.insert(name.to_string(), val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} does not take a value"));
+                    }
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_empty() {
+                out.subcommand = tok.clone();
+            } else {
+                out.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Render usage text for a spec table.
+pub fn usage(binary: &str, subcommands: &[(&str, &str)], spec: &[OptSpec]) -> String {
+    let mut s = format!("usage: {binary} <subcommand> [options]\n\nsubcommands:\n");
+    for (name, help) in subcommands {
+        s.push_str(&format!("  {name:<18} {help}\n"));
+    }
+    s.push_str("\noptions:\n");
+    for o in spec {
+        let v = if o.takes_value { " <v>" } else { "" };
+        s.push_str(&format!("  --{}{v:<6} {}\n", o.name, o.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "model", takes_value: true, help: "" },
+            OptSpec { name: "seed", takes_value: true, help: "" },
+            OptSpec { name: "verbose", takes_value: false, help: "" },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = Args::parse(&sv(&["train", "--model", "uln-s", "--verbose", "x.bin"]), &spec())
+            .unwrap();
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.get("model"), Some("uln-s"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["x.bin".to_string()]);
+    }
+
+    #[test]
+    fn inline_equals_form() {
+        let a = Args::parse(&sv(&["eval", "--seed=42"]), &spec()).unwrap();
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 42);
+    }
+
+    #[test]
+    fn unknown_option_is_error() {
+        assert!(Args::parse(&sv(&["t", "--bogus"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&sv(&["t", "--model"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn typed_getters_defaults_and_errors() {
+        let a = Args::parse(&sv(&["t", "--seed", "notanum"]), &spec()).unwrap();
+        assert!(a.get_u64("seed", 1).is_err());
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+    }
+}

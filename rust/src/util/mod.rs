@@ -1,0 +1,10 @@
+//! Foundation utilities built from scratch for the offline environment:
+//! deterministic PRNGs, bit-packed vectors, a minimal JSON codec, a CLI
+//! parser, a property-testing harness and basic statistics.
+
+pub mod bitvec;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,174 @@
+//! Basic statistics: online mean/variance, percentiles, timers and a
+//! confusion matrix — shared by the bench harness, the coordinator metrics
+//! and the evaluation code.
+
+use std::time::{Duration, Instant};
+
+/// Welford online mean/variance accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Percentile (nearest-rank) of an unsorted sample; `q` in `[0,1]`.
+pub fn percentile(samples: &mut [f64], q: f64) -> f64 {
+    assert!(!samples.is_empty());
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((samples.len() as f64 - 1.0) * q).round() as usize;
+    samples[idx.min(samples.len() - 1)]
+}
+
+/// Wall-clock timer with a convenient elapsed-seconds reading.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Confusion matrix for an `n`-class classifier.
+#[derive(Clone, Debug)]
+pub struct Confusion {
+    pub n_classes: usize,
+    /// counts[actual * n_classes + predicted]
+    counts: Vec<u64>,
+}
+
+impl Confusion {
+    pub fn new(n_classes: usize) -> Self {
+        Self { n_classes, counts: vec![0; n_classes * n_classes] }
+    }
+
+    pub fn record(&mut self, actual: usize, predicted: usize) {
+        self.counts[actual * self.n_classes + predicted] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn correct(&self) -> u64 {
+        (0..self.n_classes)
+            .map(|c| self.counts[c * self.n_classes + c])
+            .sum()
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        let t = self.total();
+        if t == 0 { 0.0 } else { self.correct() as f64 / t as f64 }
+    }
+
+    pub fn count(&self, actual: usize, predicted: usize) -> u64 {
+        self.counts[actual * self.n_classes + predicted]
+    }
+
+    /// Per-class recall (correct / actual-count), NaN-free (0 when empty).
+    pub fn recall(&self, class: usize) -> f64 {
+        let row: u64 = (0..self.n_classes)
+            .map(|p| self.counts[class * self.n_classes + p])
+            .sum();
+        if row == 0 {
+            0.0
+        } else {
+            self.count(class, class) as f64 / row as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_stats_match_closed_form() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut s = OnlineStats::new();
+        for &x in &xs {
+            s.push(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        // sample variance of the classic dataset = 32/7
+        assert!((s.variance() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+        assert_eq!(s.count(), 8);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let mut xs = vec![5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&mut xs, 0.0), 1.0);
+        assert_eq!(percentile(&mut xs, 0.5), 3.0);
+        assert_eq!(percentile(&mut xs, 1.0), 5.0);
+    }
+
+    #[test]
+    fn confusion_accuracy_and_recall() {
+        let mut c = Confusion::new(3);
+        c.record(0, 0);
+        c.record(0, 0);
+        c.record(0, 1);
+        c.record(1, 1);
+        c.record(2, 0);
+        assert_eq!(c.total(), 5);
+        assert_eq!(c.correct(), 3);
+        assert!((c.accuracy() - 0.6).abs() < 1e-12);
+        assert!((c.recall(0) - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(c.recall(1), 1.0);
+        assert_eq!(c.recall(2), 0.0);
+    }
+}

@@ -1,0 +1,175 @@
+//! Integration: the serving coordinator under load, concurrency and
+//! failure injection.
+
+use std::sync::mpsc;
+use std::time::Duration;
+use uleen::coordinator::batcher::{BatcherConfig, SubmitError};
+use uleen::coordinator::server::{Server, ServerConfig};
+use uleen::data::synth_uci::{synth_uci, uci_spec};
+use uleen::runtime::{InferenceEngine, NativeEngine};
+use uleen::train::oneshot::{train_oneshot, OneShotConfig};
+
+fn model() -> uleen::model::ensemble::UleenModel {
+    let ds = synth_uci(5, uci_spec("vowel").unwrap());
+    train_oneshot(
+        &ds,
+        &OneShotConfig { inputs_per_filter: 10, entries_per_filter: 128, therm_bits: 4, ..Default::default() },
+    )
+    .0
+}
+
+#[test]
+fn many_producers_many_workers_all_served_correctly() {
+    let m = model();
+    let ds = synth_uci(5, uci_spec("vowel").unwrap());
+    let expected: Vec<usize> = {
+        let mut s = uleen::model::ensemble::EnsembleScratch::default();
+        (0..ds.n_test()).map(|i| m.predict(ds.test_row(i), &mut s)).collect()
+    };
+    let cfg = ServerConfig {
+        batcher: BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(100),
+            capacity: 4096,
+        },
+        workers: 4,
+    };
+    let mc = m.clone();
+    let server = std::sync::Arc::new(
+        Server::start(cfg, move |_| Ok(Box::new(NativeEngine::new(mc.clone())) as Box<dyn InferenceEngine>)).unwrap(),
+    );
+    let (tx, rx) = mpsc::channel();
+    let reps = 8usize;
+    let mut handles = Vec::new();
+    let ds = std::sync::Arc::new(ds);
+    for _ in 0..4 {
+        let server = server.clone();
+        let tx = tx.clone();
+        let ds = ds.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut ids = Vec::new();
+            for r in 0..reps {
+                for i in 0..ds.n_test() {
+                    loop {
+                        match server.submit(ds.test_row(i).to_vec(), tx.clone()) {
+                            Ok(id) => {
+                                ids.push((id, i));
+                                break;
+                            }
+                            Err(SubmitError::Full) => std::thread::sleep(Duration::from_micros(10)),
+                            Err(e) => panic!("{e:?}"),
+                        }
+                    }
+                }
+                let _ = r;
+            }
+            ids
+        }));
+    }
+    drop(tx);
+    let mut id2row = std::collections::HashMap::new();
+    let mut total = 0usize;
+    for h in handles {
+        for (id, row) in h.join().unwrap() {
+            id2row.insert(id, row);
+            total += 1;
+        }
+    }
+    let mut served = 0usize;
+    while let Ok((id, pred, _)) = rx.recv_timeout(Duration::from_secs(20)) {
+        let row = id2row[&id];
+        assert_eq!(pred, expected[row], "request {id} row {row}");
+        served += 1;
+        if served == total {
+            break;
+        }
+    }
+    assert_eq!(served, total);
+    let report = server.metrics.report(8);
+    assert_eq!(report.completed as usize, total);
+    assert!(report.mean_batch_fill > 0.1);
+    std::sync::Arc::try_unwrap(server).ok().map(|s| s.shutdown());
+}
+
+#[test]
+fn worker_engine_failure_does_not_wedge_the_server() {
+    // An engine that fails on every Nth batch: the coordinator must keep
+    // serving the rest (failed batches observable as dropped channels).
+    struct Flaky {
+        calls: usize,
+    }
+    impl InferenceEngine for Flaky {
+        fn label(&self) -> String {
+            "flaky".into()
+        }
+        fn num_features(&self) -> usize {
+            4
+        }
+        fn num_classes(&self) -> usize {
+            2
+        }
+        fn responses(&mut self, _x: &[f32], n: usize) -> uleen::Result<Vec<f32>> {
+            self.calls += 1;
+            if self.calls % 3 == 0 {
+                anyhow::bail!("injected failure");
+            }
+            Ok(vec![1.0, 0.0].repeat(n))
+        }
+    }
+    let cfg = ServerConfig {
+        batcher: BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_micros(50),
+            capacity: 64,
+        },
+        workers: 1,
+    };
+    let server = Server::start(cfg, |_| Ok(Box::new(Flaky { calls: 0 }) as Box<dyn InferenceEngine>)).unwrap();
+    let (tx, rx) = mpsc::channel();
+    let n = 60;
+    for _ in 0..n {
+        loop {
+            match server.submit(vec![0.0; 4], tx.clone()) {
+                Ok(_) => break,
+                Err(SubmitError::Full) => std::thread::sleep(Duration::from_micros(20)),
+                Err(e) => panic!("{e:?}"),
+            }
+        }
+    }
+    drop(tx);
+    // collect whatever completes; must be nonzero and the server must shut
+    // down cleanly (no deadlock).
+    let mut ok = 0;
+    while rx.recv_timeout(Duration::from_millis(500)).is_ok() {
+        ok += 1;
+    }
+    assert!(ok > 0, "some batches must survive the flaky engine");
+    assert!(ok < n, "some batches must have failed (injection active)");
+    server.shutdown();
+}
+
+#[test]
+fn queue_depth_reflects_backlog_and_drains() {
+    let m = model();
+    let cfg = ServerConfig {
+        batcher: BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(1),
+            capacity: 1024,
+        },
+        workers: 1,
+    };
+    let server = Server::start(cfg, move |_| Ok(Box::new(NativeEngine::new(m.clone())) as Box<dyn InferenceEngine>)).unwrap();
+    let (tx, rx) = mpsc::channel();
+    for _ in 0..256 {
+        let _ = server.submit(vec![0.5; server.num_features()], tx.clone());
+    }
+    drop(tx);
+    let mut got = 0;
+    while rx.recv_timeout(Duration::from_secs(10)).is_ok() {
+        got += 1;
+    }
+    assert!(got > 0);
+    assert_eq!(server.queue_depth(), 0, "queue must drain");
+    server.shutdown();
+}

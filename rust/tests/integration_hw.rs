@@ -1,0 +1,94 @@
+//! Integration: hardware co-design models across module boundaries — the
+//! paper's qualitative claims must hold for models trained end-to-end.
+
+use uleen::data::synth_mnist;
+use uleen::hw::arch::{AcceleratorInstance, Target};
+use uleen::hw::pipeline::simulate_stream;
+use uleen::hw::{asic, bitfusion, finn, fpga};
+use uleen::train::oneshot::{train_oneshot, OneShotConfig};
+
+fn mnist_model(bits: usize, entries: usize) -> uleen::model::ensemble::UleenModel {
+    let ds = synth_mnist(55, 800, 100);
+    train_oneshot(
+        &ds,
+        &OneShotConfig { inputs_per_filter: 16, entries_per_filter: entries, therm_bits: bits, ..Default::default() },
+    )
+    .0
+}
+
+#[test]
+fn uleen_asic_beats_bitfusion_by_orders_of_magnitude() {
+    // The paper's headline Table III claim, as an invariant.
+    let m = mnist_model(2, 256);
+    let inst = AcceleratorInstance::generate(&m, Target::Asic);
+    let uleen = asic::implement(&inst);
+    for cfg in [bitfusion::BF8, bitfusion::BF16, bitfusion::BF32] {
+        let bf = bitfusion::implement(&cfg, 500.0);
+        let xput_ratio = uleen.throughput_kips / bf.kips;
+        let energy_ratio = bf.nj_per_inf / uleen.nj_per_inf;
+        assert!(xput_ratio > 100.0, "{}: xput ratio {xput_ratio}", cfg.name);
+        assert!(energy_ratio > 100.0, "{}: energy ratio {energy_ratio}", cfg.name);
+    }
+}
+
+#[test]
+fn uleen_fpga_energy_beats_finn_at_batch_infinity() {
+    let m = mnist_model(2, 256);
+    let mut inst = AcceleratorInstance::generate(&m, Target::Fpga);
+    let uleen = fpga::implement(&mut inst);
+    for t in [finn::SFC, finn::MFC, finn::LFC] {
+        let f = finn::implement(&t, 200.0);
+        assert!(
+            uleen.uj_per_inf_steady < f.uj_per_inf_steady,
+            "{}: ULEEN {} µJ vs FINN {} µJ",
+            t.name,
+            uleen.uj_per_inf_steady,
+            f.uj_per_inf_steady
+        );
+    }
+}
+
+#[test]
+fn pipeline_sim_agrees_with_analytic_model_across_design_space() {
+    for (bits, entries) in [(1usize, 64usize), (2, 256), (4, 1024), (8, 512)] {
+        let m = mnist_model(bits, entries);
+        for target in [Target::Fpga, Target::Asic] {
+            let inst = AcceleratorInstance::generate(&m, target);
+            let rep = simulate_stream(&inst, 64);
+            // simulated steady-state II can exceed the bus-analytic II only
+            // if a compute stage dominates; it must never be lower.
+            assert!(
+                rep.steady_ii_cycles + 1e-9 >= inst.ii_cycles as f64,
+                "sim II {} < analytic II {}",
+                rep.steady_ii_cycles,
+                inst.ii_cycles
+            );
+            let diff = (rep.first_latency_cycles as i64 - inst.latency_cycles as i64).abs();
+            assert!(diff <= 2, "latency mismatch {diff} (bits={bits} entries={entries})");
+        }
+    }
+}
+
+#[test]
+fn throughput_energy_tradeoff_is_monotone_in_model_size() {
+    // bigger tables ⇒ no faster, no lower-energy (hardware monotonicity)
+    let small = mnist_model(2, 64);
+    let large = mnist_model(6, 1024);
+    let i_small = AcceleratorInstance::generate(&small, Target::Asic);
+    let i_large = AcceleratorInstance::generate(&large, Target::Asic);
+    assert!(i_large.throughput() <= i_small.throughput());
+    assert!(
+        asic::energy_pj_per_inference(&i_large) > asic::energy_pj_per_inference(&i_small)
+    );
+}
+
+#[test]
+fn fpga_reports_zero_bram_and_plausible_luts_for_zoo_scale_models() {
+    let m = mnist_model(2, 64);
+    let mut inst = AcceleratorInstance::generate(&m, Target::Fpga);
+    let rep = fpga::implement(&mut inst);
+    assert_eq!(rep.bram, 0);
+    assert!(rep.luts > 1000 && rep.luts < 300_000, "LUTs {}", rep.luts);
+    // Z-7045 has 218k LUTs; our zoo must fit
+    assert!(rep.luts < 218_600);
+}

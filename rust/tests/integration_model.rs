@@ -1,0 +1,203 @@
+//! Integration: train → prune → save → load → eval across module
+//! boundaries, plus cross-baseline sanity (ULEEN vs WiSARD vs Bloom
+//! WiSARD orderings the paper relies on).
+
+use uleen::data::synth_uci::{synth_uci, uci_spec, UciSpec};
+use uleen::data::{synth_mnist, Dataset};
+use uleen::encoding::thermometer::{ThermometerEncoder, ThermometerKind};
+use uleen::model::bloom_wisard::BloomWisard;
+use uleen::model::uln_format;
+use uleen::train::oneshot::{train_oneshot, OneShotConfig};
+use uleen::train::prune::prune_model;
+use uleen::util::json::Json;
+use uleen::util::rng::Rng;
+
+fn small_mnist() -> Dataset {
+    synth_mnist(77, 1500, 400)
+}
+
+#[test]
+fn full_lifecycle_train_prune_save_load_eval() {
+    let ds = small_mnist();
+    let cfg = OneShotConfig {
+        inputs_per_filter: 16,
+        entries_per_filter: 256,
+        therm_bits: 2,
+        ..Default::default()
+    };
+    let (mut model, report) = train_oneshot(&ds, &cfg);
+    assert!(report.val_accuracy > 0.5);
+    let acc0 = model.evaluate(&ds.test_x, &ds.test_y, ds.num_features).accuracy();
+    assert!(acc0 > 0.6, "one-shot mnist acc {acc0}");
+    prune_model(&mut model, &ds, 0.3);
+    let acc1 = model.evaluate(&ds.test_x, &ds.test_y, ds.num_features).accuracy();
+    assert!(acc1 > acc0 - 0.1, "pruning cost too much: {acc0} -> {acc1}");
+    let dir = std::env::temp_dir().join("uleen_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("lifecycle.uln");
+    let mut meta = Json::obj();
+    meta.set("name", Json::Str("lifecycle".into()));
+    uln_format::save(&model, &meta, &path).unwrap();
+    let (back, _) = uln_format::load(&path).unwrap();
+    let acc2 = back.evaluate(&ds.test_x, &ds.test_y, ds.num_features).accuracy();
+    assert_eq!(acc1, acc2, "accuracy must survive the .uln roundtrip exactly");
+}
+
+#[test]
+fn bleaching_beats_no_bleaching_on_skewed_data() {
+    // The paper's Shuttle finding (§V-E): with 80% of training data in one
+    // class and small tables, the majority discriminator SATURATES without
+    // bleaching. Same geometry for both models; only counting+bleaching
+    // (and H3 vs Murmur) differ.
+    let spec = UciSpec { n_train: 8000, n_test: 1500, ..*uci_spec("shuttle").unwrap() };
+    let ds = synth_uci(5, &spec);
+    let (uleen_model, report) = train_oneshot(
+        &ds,
+        &OneShotConfig {
+            inputs_per_filter: 16,
+            entries_per_filter: 64,
+            therm_bits: 6,
+            therm_kind: ThermometerKind::Linear, // isolate the bleaching effect
+            ..Default::default()
+        },
+    );
+    let uleen_acc = uleen_model.evaluate(&ds.test_x, &ds.test_y, ds.num_features).accuracy();
+    let enc = ThermometerEncoder::fit(ThermometerKind::Linear, &ds.train_x, ds.num_features, 6);
+    let mut rng = Rng::new(9);
+    let mut bw = BloomWisard::new(&mut rng, enc, 16, 64, 2, ds.num_classes);
+    bw.train(&ds.train_x, &ds.train_y, ds.num_features);
+    let bw_acc = bw.evaluate(&ds.test_x, &ds.test_y, ds.num_features).accuracy();
+    assert!(bw.mean_fill() > 0.25, "baseline should be partially saturated: {}", bw.mean_fill());
+    assert!(
+        uleen_acc > bw_acc,
+        "bleaching (b={}) must rescue skewed data: uleen {uleen_acc} vs bloom-wisard {bw_acc}",
+        report.bleach
+    );
+}
+
+#[test]
+fn gaussian_encoding_beats_linear_on_normal_data_with_outliers() {
+    // The paper's §III-A2 rationale: with equal-interval thresholds, "a
+    // large number of bits may be dedicated to encoding outlying values".
+    // Build a 3-class dataset whose features ARE normal around class means
+    // plus rare extreme outliers — Gaussian quantile thresholds must win.
+    let mut rng = Rng::new(42);
+    let classes = 3usize;
+    let features = 6usize;
+    let gen = |rng: &mut Rng, n: usize| -> (Vec<f32>, Vec<u16>) {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..n {
+            let c = i % classes;
+            ys.push(c as u16);
+            for f in 0..features {
+                let mean = (c as f64 - 1.0) * 0.4 + f as f64 * 0.01;
+                let mut v = mean + 0.5 * rng.normal_clt();
+                // 2% extreme outliers stretch the linear range 50x
+                if rng.below(50) == 0 {
+                    v += if rng.below(2) == 0 { 60.0 } else { -60.0 };
+                }
+                xs.push(v as f32);
+            }
+        }
+        (xs, ys)
+    };
+    let (train_x, train_y) = gen(&mut rng, 1200);
+    let (test_x, test_y) = gen(&mut rng, 600);
+    let ds = uleen::data::Dataset {
+        name: "outliers".into(),
+        num_features: features,
+        num_classes: classes,
+        train_x,
+        train_y,
+        test_x,
+        test_y,
+    };
+    let acc_of = |kind| {
+        let (m, _) = train_oneshot(
+            &ds,
+            &OneShotConfig {
+                inputs_per_filter: 8,
+                entries_per_filter: 64,
+                therm_bits: 6,
+                therm_kind: kind,
+                ..Default::default()
+            },
+        );
+        m.evaluate(&ds.test_x, &ds.test_y, ds.num_features).accuracy()
+    };
+    let lin = acc_of(ThermometerKind::Linear);
+    let gau = acc_of(ThermometerKind::Gaussian);
+    assert!(
+        gau > lin,
+        "gaussian ({gau}) must beat linear ({lin}) when outliers stretch the range"
+    );
+}
+
+#[test]
+fn ensemble_of_weak_models_beats_members() {
+    // Core ensemble claim (§III-A3): combine one-shot submodels trained
+    // with different n by summing responses; the ensemble should beat the
+    // weakest member and generally match/beat the best.
+    let ds = small_mnist();
+    let mut models = Vec::new();
+    for n in [12usize, 16, 20] {
+        let (m, _) = train_oneshot(
+            &ds,
+            &OneShotConfig {
+                inputs_per_filter: n,
+                entries_per_filter: 128,
+                therm_bits: 2,
+                seed: 1000 + n as u64,
+                ..Default::default()
+            },
+        );
+        models.push(m);
+    }
+    let accs: Vec<f64> = models
+        .iter()
+        .map(|m| m.evaluate(&ds.test_x, &ds.test_y, ds.num_features).accuracy())
+        .collect();
+    // merge into one ensemble (same encoder config → same thermometer fit)
+    let mut ensemble = models[0].clone();
+    for m in &models[1..] {
+        ensemble.submodels.extend(m.submodels.iter().cloned());
+    }
+    ensemble.validate().unwrap();
+    let eacc = ensemble.evaluate(&ds.test_x, &ds.test_y, ds.num_features).accuracy();
+    let worst = accs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let best = accs.iter().cloned().fold(0.0f64, f64::max);
+    assert!(eacc > worst, "ensemble {eacc} must beat worst member {worst}");
+    assert!(eacc > best - 0.02, "ensemble {eacc} should be near/above best member {best}");
+}
+
+#[test]
+fn thermometer_bits_monotone_data_volume() {
+    // more encoding bits → more encoded input bits → more filters
+    let ds = synth_uci(3, uci_spec("wine").unwrap());
+    let (m2, _) = train_oneshot(
+        &ds,
+        &OneShotConfig { therm_bits: 2, inputs_per_filter: 8, entries_per_filter: 64, ..Default::default() },
+    );
+    let (m8, _) = train_oneshot(
+        &ds,
+        &OneShotConfig { therm_bits: 8, inputs_per_filter: 8, entries_per_filter: 64, ..Default::default() },
+    );
+    assert!(m8.encoded_bits() == 4 * m2.encoded_bits());
+    assert!(m8.size_kib() > m2.size_kib());
+}
+
+#[test]
+fn corrupted_uln_rejected_loudly() {
+    let ds = synth_uci(3, uci_spec("iris").unwrap());
+    let (model, _) = train_oneshot(&ds, &OneShotConfig::default());
+    let bytes = uln_format::to_bytes(&model, &Json::obj());
+    for i in [4usize, 20, bytes.len() / 2, bytes.len() - 12] {
+        let mut bad = bytes.clone();
+        bad[i] ^= 0x80;
+        assert!(
+            uln_format::from_bytes(&bad, "x").is_err(),
+            "corruption at byte {i} must be detected"
+        );
+    }
+}

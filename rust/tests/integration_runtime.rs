@@ -1,0 +1,70 @@
+//! Integration: the PJRT runtime against the native engine on the AOT
+//! artifacts. Skips (with a loud message) when `make artifacts` has not
+//! run — the numeric-agreement assertions are the heart of the
+//! three-layer story, so they must run in the full flow.
+
+use std::path::PathBuf;
+use uleen::data::synth_mnist;
+use uleen::runtime::{InferenceEngine, NativeEngine, PjrtEngine};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = uleen::bench::artifacts_dir();
+    if dir.join("uln_s.uln").exists() && dir.join("uln_s_b16.hlo.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts missing — run `make artifacts` for full coverage");
+        None
+    }
+}
+
+#[test]
+fn pjrt_matches_native_exactly_on_uln_s() {
+    let Some(dir) = artifacts() else { return };
+    let (model, _) = uleen::model::uln_format::load(&dir.join("uln_s.uln")).unwrap();
+    let ds = synth_mnist(2024, 16, 128);
+    let mut native = NativeEngine::new(model);
+    let mut pjrt = PjrtEngine::load(&dir.join("uln_s_b16.hlo.txt"), 16, 784).unwrap();
+    assert_eq!(pjrt.num_classes(), 10);
+    let rn = native.responses(&ds.test_x, ds.n_test()).unwrap();
+    let rp = pjrt.responses(&ds.test_x, ds.n_test()).unwrap();
+    assert_eq!(rn.len(), rp.len());
+    for (i, (a, b)) in rn.iter().zip(rp.iter()).enumerate() {
+        assert_eq!(a, b, "response {i} differs: native {a} vs pjrt {b}");
+    }
+}
+
+#[test]
+fn pjrt_batch1_artifact_works_and_agrees() {
+    let Some(dir) = artifacts() else { return };
+    if !dir.join("uln_s_b1.hlo.txt").exists() {
+        return;
+    }
+    let (model, _) = uleen::model::uln_format::load(&dir.join("uln_s.uln")).unwrap();
+    let ds = synth_mnist(2024, 16, 8);
+    let mut native = NativeEngine::new(model);
+    let mut b1 = PjrtEngine::load(&dir.join("uln_s_b1.hlo.txt"), 1, 784).unwrap();
+    let pn = native.classify(&ds.test_x, ds.n_test()).unwrap();
+    let p1 = b1.classify(&ds.test_x, ds.n_test()).unwrap();
+    assert_eq!(pn, p1);
+}
+
+#[test]
+fn pjrt_handles_partial_batches_via_padding() {
+    let Some(dir) = artifacts() else { return };
+    let (model, _) = uleen::model::uln_format::load(&dir.join("uln_s.uln")).unwrap();
+    let ds = synth_mnist(2024, 16, 21); // 21 = 16 + 5 (forces padding)
+    let mut native = NativeEngine::new(model);
+    let mut pjrt = PjrtEngine::load(&dir.join("uln_s_b16.hlo.txt"), 16, 784).unwrap();
+    let pn = native.classify(&ds.test_x, 21).unwrap();
+    let pp = pjrt.classify(&ds.test_x, 21).unwrap();
+    assert_eq!(pn, pp, "padding must not change predictions");
+}
+
+#[test]
+fn pjrt_rejects_malformed_artifacts() {
+    let dir = std::env::temp_dir().join("uleen_runtime_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let bad = dir.join("bad.hlo.txt");
+    std::fs::write(&bad, "this is not hlo").unwrap();
+    assert!(PjrtEngine::load(&bad, 4, 10).is_err());
+}

@@ -1,0 +1,197 @@
+//! Cross-module property tests (hand-rolled harness — see util::prop):
+//! invariants of the coordinator, codec, model and formats under random
+//! structured inputs.
+
+use uleen::bloom::counting::CountingBloom;
+use uleen::data::synth_uci::{synth_uci, uci_spec};
+use uleen::encoding::codec;
+use uleen::encoding::thermometer::{ThermometerEncoder, ThermometerKind};
+use uleen::hash::h3::H3Family;
+use uleen::model::uln_format;
+use uleen::train::oneshot::{train_oneshot, OneShotConfig};
+use uleen::util::json::Json;
+use uleen::util::prop::{check, Config};
+
+
+#[test]
+fn prop_codec_roundtrip_arbitrary_counts() {
+    check(
+        "codec-roundtrip",
+        &Config { cases: 200, ..Config::default() },
+        |rng, size| {
+            let t = 1 + rng.below(15) as usize;
+            let counts: Vec<u8> = (0..size.max(1))
+                .map(|_| rng.below((t + 1) as u64) as u8)
+                .collect();
+            (t, counts)
+        },
+        |(t, counts)| {
+            let stream = codec::compress(counts, *t);
+            let unary = codec::decompress(&stream, counts.len(), *t);
+            for (j, &c) in counts.iter().enumerate() {
+                for i in 0..*t {
+                    if unary.get(j * t + i) != (i < c as usize) {
+                        return Err(format!("bit ({j},{i}) wrong"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_thermometer_monotone_and_contiguous() {
+    check(
+        "thermometer-monotone",
+        &Config { cases: 100, ..Config::default() },
+        |rng, size| {
+            let n_inputs = 1 + size % 8;
+            let bits = 1 + rng.below(12) as usize;
+            let n = 20 + size;
+            let data: Vec<f32> = (0..n * n_inputs)
+                .map(|_| (rng.f64() * 100.0) as f32)
+                .collect();
+            let kind = if rng.below(2) == 0 {
+                ThermometerKind::Linear
+            } else {
+                ThermometerKind::Gaussian
+            };
+            let sample: Vec<f32> = (0..n_inputs).map(|_| (rng.f64() * 120.0 - 10.0) as f32).collect();
+            (kind, data, n_inputs, bits, sample)
+        },
+        |(kind, data, n_inputs, bits, sample)| {
+            let enc = ThermometerEncoder::fit(*kind, data, *n_inputs, *bits);
+            // thresholds increasing per input
+            for j in 0..*n_inputs {
+                for i in 1..*bits {
+                    let a = enc.thresholds[j * bits + i - 1];
+                    let b = enc.thresholds[j * bits + i];
+                    if b < a {
+                        return Err(format!("thresholds not sorted at ({j},{i})"));
+                    }
+                }
+            }
+            // unary contiguity: bits fill LSB-first
+            let v = enc.encode(sample);
+            for j in 0..*n_inputs {
+                let ones = (0..*bits).filter(|&i| v.get(j * bits + i)).count();
+                for i in 0..*bits {
+                    if v.get(j * bits + i) != (i < ones) {
+                        return Err(format!("non-contiguous unary at ({j},{i})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_counting_bloom_binarize_consistent_all_thresholds() {
+    check(
+        "counting-binarize-all-b",
+        &Config { cases: 60, ..Config::default() },
+        |rng, size| {
+            let fam = H3Family::random(rng, 2, 12, 6);
+            let keys: Vec<u64> = (0..size.max(2))
+                .map(|_| rng.next_u64() & 0xFFF)
+                .collect();
+            (fam, keys)
+        },
+        |(fam, keys)| {
+            let mut f = CountingBloom::zeros(64);
+            for &k in keys {
+                f.train_key(fam, k);
+            }
+            let mut idxs = vec![0u64; 2];
+            for b in 1..=f.max_counter().max(1) {
+                let bin = f.binarize(b);
+                for probe in 0..512u64 {
+                    fam.hash_all(probe, &mut idxs);
+                    if bin.test_indices(&idxs) != f.test_indices(&idxs, b) {
+                        return Err(format!("b={b} probe={probe}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_uln_roundtrip_random_models() {
+    // train tiny models with random hyperparameters; the .uln roundtrip
+    // must preserve every prediction.
+    check(
+        "uln-roundtrip",
+        &Config { cases: 10, ..Config::default() },
+        |rng, _size| {
+            let cfg = OneShotConfig {
+                inputs_per_filter: 4 + rng.below(20) as usize,
+                entries_per_filter: 1 << (3 + rng.below(6)),
+                k_hashes: 1 + rng.below(3) as usize,
+                therm_bits: 1 + rng.below(8) as usize,
+                therm_kind: if rng.below(2) == 0 {
+                    ThermometerKind::Linear
+                } else {
+                    ThermometerKind::Gaussian
+                },
+                val_fraction: 0.1,
+                seed: rng.next_u64(),
+            };
+            cfg
+        },
+        |cfg| {
+            let ds = synth_uci(7, uci_spec("wine").unwrap());
+            let (model, _) = train_oneshot(&ds, cfg);
+            let bytes = uln_format::to_bytes(&model, &Json::obj());
+            let (back, _) =
+                uln_format::from_bytes(&bytes, "prop").map_err(|e| e.to_string())?;
+            let mut s1 = uleen::model::ensemble::EnsembleScratch::default();
+            let mut s2 = uleen::model::ensemble::EnsembleScratch::default();
+            for i in 0..ds.n_test() {
+                let row = ds.test_row(i);
+                if model.predict(row, &mut s1) != back.predict(row, &mut s2) {
+                    return Err(format!("prediction {i} changed after roundtrip"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_response_bounded_by_kept_filters() {
+    // 0 - bias ≤ response ≤ kept_filters + bias for every input
+    check(
+        "response-bounds",
+        &Config { cases: 20, ..Config::default() },
+        |rng, _| {
+            let n = rng.next_u64();
+            n
+        },
+        |seed| {
+            let ds = synth_uci(3, uci_spec("iris").unwrap());
+            let cfg = OneShotConfig { seed: *seed, ..Default::default() };
+            let (model, _) = train_oneshot(&ds, &cfg);
+            let mut scratch = uleen::model::ensemble::EnsembleScratch::default();
+            for i in 0..ds.n_test() {
+                let enc = model.encoder.encode(ds.test_row(i));
+                let resp = model.responses_encoded(&enc, &mut scratch);
+                for (c, &r) in resp.iter().enumerate() {
+                    let max: i32 = model
+                        .submodels
+                        .iter()
+                        .map(|sm| sm.discriminators[c].kept() as i32 + sm.bias[c])
+                        .sum();
+                    let min: i32 = model.submodels.iter().map(|sm| sm.bias[c]).sum();
+                    if r < min || r > max {
+                        return Err(format!("response {r} outside [{min},{max}]"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
