@@ -1,42 +1,46 @@
-//! END-TO-END DRIVER — the full three-layer system on a real workload.
+//! END-TO-END DRIVER — the full system on a real workload.
 //!
-//!     make artifacts && cargo run --release --example edge_serving
+//!     cargo run --release --example edge_serving
+//!     make artifacts && cargo run --release --features pjrt --example edge_serving
 //!
-//! Loads the multi-shot-trained ULN-S model (L2/L1: JAX + Pallas, AOT-
-//! lowered to HLO text), serves 20k batched classification requests of
-//! SynthMNIST images through the L3 coordinator (bounded queue → dynamic
-//! micro-batcher → worker pool) with BOTH engines:
+//! Loads the multi-shot-trained ULN-S model when `make artifacts` has run
+//! (else a one-shot stand-in), serves 20k batched classification requests
+//! of SynthMNIST images through the L3 coordinator (bounded queue →
+//! dynamic micro-batcher → worker pool) with the available engines:
 //!
-//!   * the native bit-packed Rust engine, and
-//!   * the PJRT engine executing the AOT artifact (Python not running!),
+//!   * the native bit-packed Rust engine (per-worker engines),
+//!   * ONE sharded engine fanning each micro-batch across threads
+//!     (the bit-sliced batch kernel × data-parallel shards), and
+//!   * with `--features pjrt`: the PJRT engine executing the AOT artifact,
 //!
-//! cross-checks that the two agree prediction-for-prediction, and reports
-//! accuracy, throughput and latency percentiles. Results are recorded in
-//! EXPERIMENTS.md §E2E.
+//! cross-checks that the engines agree prediction-for-prediction, and
+//! reports accuracy, throughput and latency percentiles. Results are
+//! recorded in EXPERIMENTS.md §E2E.
 
 use std::sync::mpsc;
 use std::time::Duration;
 use uleen::coordinator::batcher::BatcherConfig;
 use uleen::coordinator::server::{Server, ServerConfig};
 use uleen::data::synth_mnist;
-use uleen::runtime::{InferenceEngine, NativeEngine, PjrtEngine};
+use uleen::runtime::{InferenceEngine, NativeEngine};
 
-fn serve(
-    label: &str,
-    make: impl Fn(usize) -> anyhow::Result<Box<dyn InferenceEngine>>,
-    ds: &uleen::data::Dataset,
-    requests: usize,
-    workers: usize,
-) -> anyhow::Result<Vec<usize>> {
-    let cfg = ServerConfig {
+fn config(workers: usize) -> ServerConfig {
+    ServerConfig {
         batcher: BatcherConfig {
-            max_batch: 16,
+            max_batch: 64, // one bit-sliced tile per micro-batch
             max_wait: Duration::from_micros(200),
             capacity: 8192,
         },
         workers,
-    };
-    let server = Server::start(cfg, make)?;
+    }
+}
+
+fn serve_on(
+    label: &str,
+    server: Server,
+    ds: &uleen::data::Dataset,
+    requests: usize,
+) -> anyhow::Result<Vec<usize>> {
     let (tx, rx) = mpsc::channel();
     let n_test = ds.n_test();
     let mut id2idx = std::collections::HashMap::new();
@@ -81,7 +85,7 @@ fn serve(
     while received < submitted {
         recv_one!();
     }
-    let rep = server.metrics.report(16);
+    let rep = server.metrics.report(64);
     server.shutdown();
     println!(
         "[{label}] {} req | acc {:.4} | {:.0} inf/s | p50/p99 latency {:.0}/{:.0} µs | batch fill {:.0}% | rejected {}",
@@ -101,45 +105,80 @@ fn main() -> anyhow::Result<()> {
     // Same seed + split as training: test rows are indices 8000..10000 of
     // the stream, DISJOINT from the model's training data.
     let ds = synth_mnist(2024, 8000, 2000);
-    let (model, meta) = uleen::bench::load_model("uln_s.uln")?;
-    println!(
-        "model: {} ({:.1} KiB, trained acc {:.4})",
-        model.name,
-        model.size_kib(),
-        uleen::bench::meta_accuracy(&meta)
-    );
+    let model = match uleen::bench::load_model("uln_s.uln") {
+        Ok((model, meta)) => {
+            println!(
+                "model: {} ({:.1} KiB, trained acc {:.4})",
+                model.name,
+                model.size_kib(),
+                uleen::bench::meta_accuracy(&meta)
+            );
+            model
+        }
+        Err(e) => {
+            println!("(no artifact: {e} — training a one-shot stand-in)");
+            let (model, rep) = uleen::train::oneshot::train_oneshot(
+                &ds,
+                &uleen::train::oneshot::OneShotConfig {
+                    inputs_per_filter: 16,
+                    entries_per_filter: 256,
+                    therm_bits: 4,
+                    ..Default::default()
+                },
+            );
+            println!(
+                "model: {} ({:.1} KiB, val acc {:.4})",
+                model.name,
+                model.size_kib(),
+                rep.val_accuracy
+            );
+            model
+        }
+    };
 
-    // Native engine serving.
+    // Native engine serving: 4 independent per-worker engines.
     let m = model.clone();
-    let native_preds = serve(
-        "native",
-        move |_| Ok(Box::new(NativeEngine::new(m.clone())) as Box<dyn InferenceEngine>),
-        &ds,
-        requests,
-        4,
-    )?;
+    let native = Server::start(config(4), move |_| {
+        Ok(Box::new(NativeEngine::new(m.clone())) as Box<dyn InferenceEngine>)
+    })?;
+    let native_preds = serve_on("native ×4 workers", native, &ds, requests)?;
+
+    // Sharded serving sweep: one engine, micro-batches fanned N ways.
+    for shards in [2usize, 4] {
+        let server = Server::start_sharded(config(1), model.clone(), shards)?;
+        let preds = serve_on(&format!("sharded ×{shards}"), server, &ds, requests)?;
+        anyhow::ensure!(
+            preds == native_preds,
+            "sharded({shards}) and native engines disagreed"
+        );
+    }
+    println!("engine agreement: native vs sharded — exact ✓");
 
     // PJRT engine serving (the AOT artifact on the hot path).
-    let hlo = uleen::bench::artifacts_dir().join("uln_s_b16.hlo.txt");
-    let pjrt_preds = serve(
-        "pjrt-aot",
-        move |_| {
-            Ok(Box::new(PjrtEngine::load(&hlo, 16, 784)?) as Box<dyn InferenceEngine>)
-        },
-        &ds,
-        requests,
-        2,
-    )?;
-
-    let agree = native_preds
-        .iter()
-        .zip(pjrt_preds.iter())
-        .filter(|(a, b)| a == b)
-        .count();
-    println!(
-        "engine agreement: {agree}/{requests} predictions identical ({})",
-        if agree == requests { "exact ✓" } else { "MISMATCH ✗" }
-    );
-    anyhow::ensure!(agree == requests, "native and PJRT engines disagreed");
+    #[cfg(feature = "pjrt")]
+    {
+        let hlo = uleen::bench::artifacts_dir().join("uln_s_b16.hlo.txt");
+        if hlo.exists() {
+            let server = Server::start(config(2), move |_| {
+                Ok(Box::new(uleen::runtime::PjrtEngine::load(&hlo, 16, 784)?)
+                    as Box<dyn InferenceEngine>)
+            })?;
+            let pjrt_preds = serve_on("pjrt-aot", server, &ds, requests)?;
+            let agree = native_preds
+                .iter()
+                .zip(pjrt_preds.iter())
+                .filter(|(a, b)| a == b)
+                .count();
+            println!(
+                "engine agreement: {agree}/{requests} predictions identical ({})",
+                if agree == requests { "exact ✓" } else { "MISMATCH ✗" }
+            );
+            anyhow::ensure!(agree == requests, "native and PJRT engines disagreed");
+        } else {
+            println!("(skip PJRT serving: {} missing — run `make artifacts`)", hlo.display());
+        }
+    }
+    #[cfg(not(feature = "pjrt"))]
+    println!("(skip PJRT serving: built without --features pjrt)");
     Ok(())
 }

@@ -1,19 +1,47 @@
 //! L3 hot-path microbenchmarks (§Perf): encode / gather+hash / lookup /
-//! full ensemble inference on the native engine, plus the PJRT engine for
-//! comparison when artifacts exist. This is the bench the optimization
-//! loop in EXPERIMENTS.md §Perf iterates against.
+//! full ensemble inference on the native engine, the bit-sliced batch
+//! kernel and the sharded engine, plus the PJRT engine for comparison when
+//! built with `--features pjrt` and artifacts exist. This is the bench the
+//! optimization loop in EXPERIMENTS.md §Perf iterates against.
+//!
+//! The headline number is the batch-kernel sweep: per-sample vs bit-sliced
+//! throughput at batch ≥ 256 (target: ≥ 4× single-thread), then the shard
+//! sweep on top of the batch kernel.
 
 use uleen::bench::harness::bench_fn;
 use uleen::data::synth_mnist;
 use uleen::model::ensemble::EnsembleScratch;
 use uleen::model::submodel::SubmodelScratch;
-use uleen::runtime::{InferenceEngine, NativeEngine, PjrtEngine};
+use uleen::runtime::{InferenceEngine, NativeEngine, ShardedEngine};
+#[cfg(feature = "pjrt")]
+use uleen::runtime::PjrtEngine;
+
+/// The multi-shot artifact when available, else a one-shot stand-in with
+/// the same shape class — the kernel sweeps must run in offline checkouts.
+fn load_or_train(ds: &uleen::data::Dataset) -> uleen::model::ensemble::UleenModel {
+    match uleen::bench::load_model("uln_s.uln") {
+        Ok((model, _)) => model,
+        Err(e) => {
+            println!("(no artifact: {e} — falling back to a one-shot model)");
+            uleen::train::oneshot::train_oneshot(
+                ds,
+                &uleen::train::oneshot::OneShotConfig {
+                    inputs_per_filter: 16,
+                    entries_per_filter: 256,
+                    therm_bits: 4,
+                    ..Default::default()
+                },
+            )
+            .0
+        }
+    }
+}
 
 fn main() -> anyhow::Result<()> {
-    let ds = synth_mnist(2024, 64, 256);
-    let (model, _) = uleen::bench::load_model("uln_s.uln")?;
+    let ds = synth_mnist(2024, 64, 1024);
+    let model = load_or_train(&ds);
     let n = 256usize;
-    println!("== engine_hot: native hot-path stages (ULN-S, {n} samples/iter) ==");
+    println!("== engine_hot: native hot-path stages ({}, {n} samples/iter) ==", model.name);
 
     // stage 1: thermometer encode
     let enc = model.encoder.clone();
@@ -57,28 +85,79 @@ fn main() -> anyhow::Result<()> {
     println!("{}", r.summary());
     let native_ips = r.throughput_per_sec();
 
-    // engine-level batch API (what the coordinator calls)
+    // == tentpole sweep: per-sample path vs bit-sliced batch kernel ==
+    println!("\n== batch sweep: per-sample vs bit-sliced kernel (single thread) ==");
+    let f = model.encoder.num_inputs;
     let mut native = NativeEngine::new(model.clone());
-    let flat: Vec<f32> = ds.test_x[..n * 784].to_vec();
+    let mut speedup_at = Vec::new();
+    for &bs in &[64usize, 256, 1024] {
+        let x = &ds.test_x[..bs * f];
+        // baseline: the scalar path, forced by n=1 submissions
+        let r1 = bench_fn(&format!("per-sample ×{bs}"), 2, 12, bs as f64, || {
+            for i in 0..bs {
+                std::hint::black_box(
+                    native.responses(&x[i * f..(i + 1) * f], 1).unwrap(),
+                );
+            }
+        });
+        println!("{}", r1.summary());
+        // bit-sliced: one call, 64-sample tiles
+        let rb = bench_fn(&format!("bit-sliced  ×{bs}"), 2, 12, bs as f64, || {
+            std::hint::black_box(native.responses(x, bs).unwrap());
+        });
+        println!("{}", rb.summary());
+        let speedup = rb.throughput_per_sec() / r1.throughput_per_sec().max(1e-9);
+        println!("  -> batch {bs}: bit-sliced kernel speedup {speedup:.1}x");
+        speedup_at.push((bs, speedup));
+    }
+    if let Some(&(bs, s)) = speedup_at.iter().find(|(bs, _)| *bs >= 256) {
+        println!(
+            "acceptance: {s:.1}x at batch {bs} (target ≥ 4x single-thread) {}",
+            if s >= 4.0 { "✓" } else { "✗ BELOW TARGET" }
+        );
+    }
+
+    // == shard sweep: the batch kernel fanned across threads ==
+    println!("\n== shard sweep: ShardedEngine.classify, batch 1024 ==");
+    let bs = 1024usize.min(ds.n_test());
+    let x = &ds.test_x[..bs * f];
+    for &shards in &[1usize, 2, 4, 8] {
+        let mut sh = ShardedEngine::new(model.clone(), shards);
+        let r = bench_fn(&format!("shards={shards} ×{bs}"), 2, 12, bs as f64, || {
+            std::hint::black_box(sh.classify(x, bs).unwrap());
+        });
+        println!("{}", r.summary());
+    }
+
+    // engine-level batch API (what the coordinator calls)
+    let flat: Vec<f32> = ds.test_x[..n * f].to_vec();
     let r = bench_fn("NativeEngine.classify batch", 3, 30, n as f64, || {
         std::hint::black_box(native.classify(&flat, n).unwrap());
     });
-    println!("{}", r.summary());
+    println!("\n{}", r.summary());
 
     // PJRT engine comparison (AOT graph through XLA)
-    let hlo = uleen::bench::artifacts_dir().join("uln_s_b16.hlo.txt");
-    if hlo.exists() {
-        let mut pjrt = PjrtEngine::load(&hlo, 16, 784)?;
-        let r = bench_fn("PjrtEngine.classify batch", 2, 10, n as f64, || {
-            std::hint::black_box(pjrt.classify(&flat, n).unwrap());
-        });
-        println!("{}", r.summary());
-        println!(
-            "native/pjrt speed ratio: {:.1}x (native bit-packed tables vs XLA f32 gathers)",
-            r.mean_ns / (n as f64) / (1e9 / native_ips)
-        );
-    } else {
-        println!("(skip PJRT: {} missing — run `make artifacts`)", hlo.display());
+    #[cfg(feature = "pjrt")]
+    {
+        let hlo = uleen::bench::artifacts_dir().join("uln_s_b16.hlo.txt");
+        if hlo.exists() {
+            let mut pjrt = PjrtEngine::load(&hlo, 16, 784)?;
+            let r = bench_fn("PjrtEngine.classify batch", 2, 10, n as f64, || {
+                std::hint::black_box(pjrt.classify(&flat, n).unwrap());
+            });
+            println!("{}", r.summary());
+            println!(
+                "native/pjrt speed ratio: {:.1}x (native bit-packed tables vs XLA f32 gathers)",
+                r.mean_ns / (n as f64) / (1e9 / native_ips)
+            );
+        } else {
+            println!("(skip PJRT: {} missing — run `make artifacts`)", hlo.display());
+        }
+    }
+    #[cfg(not(feature = "pjrt"))]
+    {
+        let _ = native_ips;
+        println!("(skip PJRT: built without --features pjrt)");
     }
     Ok(())
 }

@@ -5,7 +5,9 @@ use crate::coordinator::server::{Server, ServerConfig};
 use crate::coordinator::batcher::BatcherConfig;
 use crate::data::synth_mnist;
 use crate::model::uln_format;
-use crate::runtime::{NativeEngine, PjrtEngine};
+use crate::runtime::NativeEngine;
+#[cfg(feature = "pjrt")]
+use crate::runtime::PjrtEngine;
 use crate::util::cli::Args;
 use std::path::Path;
 use std::sync::mpsc;
@@ -18,6 +20,7 @@ pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let batch = args.get_usize("batch", 16).map_err(anyhow::Error::msg)?;
     let requests = args.get_usize("requests", 10_000).map_err(anyhow::Error::msg)?;
     let workers = args.get_usize("workers", 4).map_err(anyhow::Error::msg)?;
+    let shards = args.get_usize("shards", 0).map_err(anyhow::Error::msg)?;
     let seed = args.get_u64("seed", 2024).map_err(anyhow::Error::msg)?;
     let hlo = args.get("hlo");
 
@@ -31,13 +34,26 @@ pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         },
         workers,
     };
-    let server = if let Some(hlo_path) = hlo {
-        let hlo_path = hlo_path.to_string();
-        Server::start(cfg, move |_| {
-            Ok(Box::new(PjrtEngine::load(Path::new(&hlo_path), batch, num_features)?))
-        })?
-    } else {
-        Server::start(cfg, move |_| Ok(Box::new(NativeEngine::new(model.clone()))))?
+    #[cfg(not(feature = "pjrt"))]
+    if hlo.is_some() {
+        anyhow::bail!("--hlo needs the PJRT engine: rebuild with --features pjrt (and an xla dependency)");
+    }
+    if hlo.is_some() && shards > 0 {
+        anyhow::bail!("--hlo and --shards are mutually exclusive (sharding is native-only)");
+    }
+    let server = match hlo {
+        #[cfg(feature = "pjrt")]
+        Some(hlo_path) => {
+            let hlo_path = hlo_path.to_string();
+            Server::start(cfg, move |_| {
+                Ok(Box::new(PjrtEngine::load(Path::new(&hlo_path), batch, num_features)?))
+            })?
+        }
+        _ if shards > 0 => {
+            // one sharded engine fanning each micro-batch across threads
+            Server::start_sharded(cfg, model, shards)?
+        }
+        _ => Server::start(cfg, move |_| Ok(Box::new(NativeEngine::new(model.clone()))))?,
     };
 
     // Open-loop load from the test split of SynthMNIST-like data (or the

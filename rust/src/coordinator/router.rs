@@ -99,15 +99,11 @@ impl ModelRouter {
 }
 
 fn top2(resp: &[f32]) -> (f32, f32, usize) {
-    let mut best = f32::NEG_INFINITY;
+    let arg = crate::util::argmax_tie_low(resp);
+    let best = resp.get(arg).copied().unwrap_or(f32::NEG_INFINITY);
     let mut second = f32::NEG_INFINITY;
-    let mut arg = 0usize;
     for (c, &r) in resp.iter().enumerate() {
-        if r > best {
-            second = best;
-            best = r;
-            arg = c;
-        } else if r > second {
+        if c != arg && r > second {
             second = r;
         }
     }

@@ -55,6 +55,24 @@ impl Server {
         Ok(Self { queue, metrics, workers, next_id: AtomicU64::new(0), num_features })
     }
 
+    /// Start a server whose single worker owns one
+    /// [`ShardedEngine`](crate::runtime::ShardedEngine) fanning each
+    /// micro-batch across `shards` threads — the alternative to
+    /// `cfg.workers` independent engines when batches are large: one big
+    /// batch split N ways beats N engines pulling small batches, because
+    /// the bit-sliced kernel amortizes its CSR traversal over 64 samples.
+    pub fn start_sharded(
+        cfg: ServerConfig,
+        model: crate::model::ensemble::UleenModel,
+        shards: usize,
+    ) -> crate::Result<Self> {
+        let cfg = ServerConfig { workers: 1, ..cfg };
+        Self::start(cfg, move |_| {
+            Ok(Box::new(crate::runtime::ShardedEngine::new(model.clone(), shards))
+                as Box<dyn InferenceEngine>)
+        })
+    }
+
     pub fn num_features(&self) -> usize {
         self.num_features
     }
@@ -79,6 +97,13 @@ impl Server {
 
     pub fn queue_depth(&self) -> usize {
         self.queue.depth()
+    }
+
+    /// Stop accepting new requests — submitters observe
+    /// [`SubmitError::Closed`] — while workers keep draining the backlog.
+    /// Idempotent; call [`Server::shutdown`] afterwards to join workers.
+    pub fn close(&self) {
+        self.queue.close();
     }
 
     /// Drain and stop. Returns when every worker has exited.

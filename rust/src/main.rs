@@ -32,6 +32,7 @@ fn opt_specs() -> Vec<OptSpec> {
         OptSpec { name: "batch", takes_value: true, help: "serving batch size (default 16)" },
         OptSpec { name: "requests", takes_value: true, help: "serving request count (default 10000)" },
         OptSpec { name: "workers", takes_value: true, help: "serving worker threads (default 4)" },
+        OptSpec { name: "shards", takes_value: true, help: "serve with one sharded engine over N threads (default: per-worker engines)" },
         OptSpec { name: "hlo", takes_value: true, help: "HLO artifact for the PJRT runtime" },
         OptSpec { name: "target", takes_value: true, help: "hardware target: fpga | asic" },
         OptSpec { name: "verbose", takes_value: false, help: "extra logging" },

@@ -102,7 +102,7 @@ impl BloomWisard {
         let mut keys = Vec::new();
         self.keys(&encoded, &mut keys);
         let mut idxs = vec![0u32; self.hash.k];
-        let mut best = (i32::MIN, 0usize);
+        let mut resp = Vec::with_capacity(self.num_classes);
         for c in 0..self.num_classes {
             let mut acc = 0i32;
             for (f, &key) in keys.iter().enumerate() {
@@ -111,11 +111,9 @@ impl BloomWisard {
                     acc += 1;
                 }
             }
-            if acc > best.0 {
-                best = (acc, c);
-            }
+            resp.push(acc);
         }
-        best.1
+        crate::util::argmax_tie_low(&resp)
     }
 
     pub fn evaluate(&self, xs: &[f32], ys: &[u16], num_features: usize) -> Confusion {

@@ -91,13 +91,7 @@ impl UleenModel {
     /// break to the lowest class index, matching the hardware comparator).
     pub fn predict_encoded(&self, encoded: &BitVec, scratch: &mut EnsembleScratch) -> usize {
         let resp = self.responses_encoded(encoded, scratch);
-        let mut best = 0usize;
-        for (c, &r) in resp.iter().enumerate() {
-            if r > resp[best] {
-                best = c;
-            }
-        }
-        best
+        crate::util::argmax_tie_low(resp)
     }
 
     /// Evaluate accuracy over a feature matrix (row-major) with labels.

@@ -190,14 +190,149 @@ impl FlatModel {
         scratch.resp.resize(self.num_classes, 0);
         let mut resp = std::mem::take(&mut scratch.resp);
         self.responses_encoded(encoded, scratch, &mut resp);
-        let mut best = 0usize;
-        for (c, &r) in resp.iter().enumerate() {
-            if r > resp[best] {
-                best = c;
-            }
-        }
+        let best = crate::util::argmax_tie_low(&resp);
         scratch.resp = resp;
         best
+    }
+
+    /// Samples per bit-sliced tile: one per bit of the slice word.
+    pub const TILE: usize = 64;
+
+    /// Per-class responses for a batch of encoded inputs (§Perf v4
+    /// bit-sliced batch kernel). `out` is row-major `encoded.len() ×
+    /// num_classes` and is zeroed here. Bit-exact with per-sample
+    /// [`FlatModel::responses_encoded`] — asserted by the cross-engine
+    /// conformance proptests.
+    ///
+    /// Samples are processed in tiles of up to [`FlatModel::TILE`] = 64.
+    /// Within a tile everything is *sample-sliced*: word `slices[src]`
+    /// holds bit `src` of all 64 samples, and the H3 accumulators become
+    /// `out_bits` bit-planes per (filter, hash). H3 linearity turns the
+    /// per-sample XOR of parameters into whole-word XORs of sample slices
+    /// (bit `b` of a parameter set → XOR the slice into hash plane `b`),
+    /// so one CSR traversal — the memory-bound stage that dominates the
+    /// scalar path — serves all 64 samples.
+    pub fn responses_batch(
+        &self,
+        encoded: &[BitVec],
+        scratch: &mut FlatBatchScratch,
+        out: &mut [i32],
+    ) {
+        let m = self.num_classes;
+        assert_eq!(out.len(), encoded.len() * m);
+        out.iter_mut().for_each(|o| *o = 0);
+        let mut start = 0usize;
+        while start < encoded.len() {
+            let nt = (encoded.len() - start).min(Self::TILE);
+            self.responses_tile(
+                &encoded[start..start + nt],
+                scratch,
+                &mut out[start * m..(start + nt) * m],
+            );
+            start += nt;
+        }
+    }
+
+    /// One ≤64-sample tile of [`FlatModel::responses_batch`]. `out` is
+    /// row-major `tile.len() × num_classes`, pre-zeroed by the caller.
+    fn responses_tile(&self, tile: &[BitVec], scratch: &mut FlatBatchScratch, out: &mut [i32]) {
+        let nt = tile.len();
+        debug_assert!(nt >= 1 && nt <= Self::TILE);
+        let m = self.num_classes;
+        let total_bits = self.submodels[0].cfg.total_input_bits;
+        // Transpose the tile into sample slices: slices[src] bit s =
+        // encoded bit src of sample s. Streaming set bits keeps this at
+        // O(set bits), like the scalar scatter-hash loop.
+        scratch.slices.clear();
+        scratch.slices.resize(total_bits, 0);
+        for (s, enc) in tile.iter().enumerate() {
+            debug_assert_eq!(enc.len(), total_bits);
+            let sbit = 1u64 << s;
+            for (w_idx, &w) in enc.words().iter().enumerate() {
+                let mut w = w;
+                while w != 0 {
+                    let bit = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    scratch.slices[(w_idx << 6) | bit] |= sbit;
+                }
+            }
+        }
+        for sm in &self.submodels {
+            let e = sm.cfg.entries_per_filter;
+            let nf = sm.cfg.num_filters();
+            let k = sm.k;
+            let ob = sm.cfg.out_bits() as usize;
+            // the probe reassembles indices into u32 (4 Gi-entry filters
+            // are far beyond anything compile() could even allocate)
+            debug_assert!(ob <= 32, "batch kernel supports out_bits <= 32");
+            // Bit-sliced hashing: hash_slices[(f*k + j)*ob + b] bit s =
+            // bit b of sample s's j-th hash for filter f.
+            scratch.hash_slices.clear();
+            scratch.hash_slices.resize(nf * k * ob, 0);
+            for src in 0..total_bits {
+                let w = scratch.slices[src];
+                if w == 0 {
+                    continue;
+                }
+                let lo = sm.csr_off[src] as usize;
+                let hi = sm.csr_off[src + 1] as usize;
+                for t in lo..hi {
+                    let f = unsafe { *sm.csr_filter.get_unchecked(t) } as usize;
+                    let base = f * k * ob;
+                    let pbase = t * k;
+                    for j in 0..k {
+                        let mut p = unsafe { *sm.csr_params.get_unchecked(pbase + j) };
+                        let hb = base + j * ob;
+                        while p != 0 {
+                            let b = p.trailing_zeros() as usize;
+                            p &= p - 1;
+                            unsafe {
+                                *scratch.hash_slices.get_unchecked_mut(hb + b) ^= w;
+                            }
+                        }
+                    }
+                }
+            }
+            // Probe: per filter, reassemble each sample's table index from
+            // the hash bit-planes, then fold the k class-mask loads.
+            scratch.idx.clear();
+            scratch.idx.resize(nt, 0);
+            scratch.masks.clear();
+            scratch.masks.resize(nt, 0);
+            for f in 0..nf {
+                scratch.masks[..nt].fill(u32::MAX);
+                for j in 0..k {
+                    let idx = &mut scratch.idx[..nt];
+                    idx.fill(0);
+                    let hb = (f * k + j) * ob;
+                    for (b, &w) in scratch.hash_slices[hb..hb + ob].iter().enumerate() {
+                        let mut w = w;
+                        while w != 0 {
+                            let s = w.trailing_zeros() as usize;
+                            w &= w - 1;
+                            debug_assert!(s < nt);
+                            idx[s] |= 1 << b;
+                        }
+                    }
+                    for (s, mask) in scratch.masks[..nt].iter_mut().enumerate() {
+                        *mask &= unsafe {
+                            *sm.class_masks.get_unchecked(f * e + idx[s] as usize)
+                        };
+                    }
+                }
+                for (s, &mask) in scratch.masks[..nt].iter().enumerate() {
+                    let row = &mut out[s * m..(s + 1) * m];
+                    for (c, o) in row.iter_mut().enumerate() {
+                        *o += ((mask >> c) & 1) as i32;
+                    }
+                }
+            }
+            for s in 0..nt {
+                for c in 0..m {
+                    out[s * m + c] += sm.bias[c];
+                }
+            }
+        }
     }
 }
 
@@ -207,6 +342,22 @@ pub struct FlatScratch {
     /// per-filter hash accumulators (nf × k)
     pub h: Vec<u64>,
     pub resp: Vec<i32>,
+}
+
+/// Reusable scratch for the bit-sliced batch kernel
+/// ([`FlatModel::responses_batch`]). All buffers grow to the model's shape
+/// on first use and are reused afterwards (no allocation after warmup).
+#[derive(Default)]
+pub struct FlatBatchScratch {
+    /// sample slices of the encoded tile: `slices[src]` bit `s` = bit
+    /// `src` of tile sample `s` (length `total_input_bits`)
+    slices: Vec<u64>,
+    /// bit-sliced H3 accumulators: `[(f*k + j) * out_bits + b]`
+    hash_slices: Vec<u64>,
+    /// per-sample table index for one (filter, hash) during the probe
+    idx: Vec<u32>,
+    /// per-sample accumulated class mask for one filter
+    masks: Vec<u32>,
 }
 
 #[cfg(test)]
@@ -236,6 +387,60 @@ mod tests {
             out.iter_mut().for_each(|x| *x = 0);
             flat.responses_encoded(&enc, &mut fs, &mut out);
             assert_eq!(out, want, "sample {i}");
+        }
+    }
+
+    #[test]
+    fn batch_kernel_matches_scalar_path_bit_exactly() {
+        let ds = synth_uci(11, uci_spec("vowel").unwrap());
+        let (mut model, _) = train_oneshot(
+            &ds,
+            &OneShotConfig { inputs_per_filter: 10, entries_per_filter: 128, therm_bits: 6, ..Default::default() },
+        );
+        prune_model(&mut model, &ds, 0.25); // exercise pruned slots + bias
+        let flat = FlatModel::compile(&model);
+        let m = model.num_classes();
+        let mut fs = FlatScratch::default();
+        let mut bs = FlatBatchScratch::default();
+        // batch sizes straddling the 64-sample tile boundary, plus empty
+        for n in [0usize, 1, 63, 64, 65, 130] {
+            let n = n.min(ds.n_test());
+            let encoded: Vec<_> =
+                (0..n).map(|i| model.encoder.encode(ds.test_row(i))).collect();
+            let mut got = vec![0i32; n * m];
+            flat.responses_batch(&encoded, &mut bs, &mut got);
+            for (i, enc) in encoded.iter().enumerate() {
+                let mut want = vec![0i32; m];
+                flat.responses_encoded(enc, &mut fs, &mut want);
+                assert_eq!(&got[i * m..(i + 1) * m], &want[..], "n={n} sample {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_kernel_handles_multi_submodel_ensembles() {
+        let ds = synth_uci(13, uci_spec("wine").unwrap());
+        let (a, _) = train_oneshot(
+            &ds,
+            &OneShotConfig { inputs_per_filter: 8, entries_per_filter: 64, therm_bits: 4, seed: 7, ..Default::default() },
+        );
+        let (b, _) = train_oneshot(
+            &ds,
+            &OneShotConfig { inputs_per_filter: 12, entries_per_filter: 256, therm_bits: 4, seed: 8, ..Default::default() },
+        );
+        let mut ens = a.clone();
+        ens.submodels.extend(b.submodels.iter().cloned());
+        let flat = FlatModel::compile(&ens);
+        let m = ens.num_classes();
+        let n = ds.n_test();
+        let encoded: Vec<_> = (0..n).map(|i| ens.encoder.encode(ds.test_row(i))).collect();
+        let mut bs = FlatBatchScratch::default();
+        let mut got = vec![0i32; n * m];
+        flat.responses_batch(&encoded, &mut bs, &mut got);
+        let mut es = EnsembleScratch::default();
+        for (i, enc) in encoded.iter().enumerate() {
+            let want = ens.responses_encoded(enc, &mut es);
+            assert_eq!(&got[i * m..(i + 1) * m], want, "sample {i}");
         }
     }
 

@@ -77,17 +77,15 @@ impl Wisard {
         let encoded = self.encoder.encode(sample);
         let mut keys = Vec::new();
         self.keys(&encoded, &mut keys);
-        let mut best = (i32::MIN, 0usize);
-        for c in 0..self.num_classes {
-            let mut acc = 0i32;
-            for (f, &key) in keys.iter().enumerate() {
-                acc += self.rams[c][f].get(key as usize) as i32;
-            }
-            if acc > best.0 {
-                best = (acc, c);
-            }
-        }
-        best.1
+        let resp: Vec<i32> = (0..self.num_classes)
+            .map(|c| {
+                keys.iter()
+                    .enumerate()
+                    .map(|(f, &key)| self.rams[c][f].get(key as usize) as i32)
+                    .sum()
+            })
+            .collect();
+        crate::util::argmax_tie_low(&resp)
     }
 
     pub fn evaluate(&self, xs: &[f32], ys: &[u16], num_features: usize) -> Confusion {

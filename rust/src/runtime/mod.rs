@@ -1,14 +1,25 @@
-//! PJRT runtime — loads the AOT artifacts (`artifacts/*.hlo.txt`, lowered
-//! once by `python/compile/aot.py`) and executes them on the hot path.
+//! Inference engines behind one batch-classifier trait.
 //!
-//! Interchange is HLO **text**: jax ≥ 0.5 serializes HloModuleProto with
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see /opt/xla-example/README.md). One compiled executable
-//! per (model, batch-size) pair; Python never runs at serving time.
+//! * [`NativeEngine`] — the bit-packed native path: scalar scatter-hash
+//!   for single samples, the bit-sliced 64-sample-tile kernel for batches.
+//! * [`ShardedEngine`] — the batch kernel fanned across worker threads
+//!   with deterministic row-major stitching.
+//! * `PjrtEngine` (feature `pjrt`) — loads the AOT artifacts
+//!   (`artifacts/*.hlo.txt`, lowered once by `python/compile/aot.py`) and
+//!   executes them through XLA. Interchange is HLO **text**: jax ≥ 0.5
+//!   serializes HloModuleProto with 64-bit instruction ids that
+//!   xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//!   /opt/xla-example/README.md). One compiled executable per
+//!   (model, batch-size) pair; Python never runs at serving time. Gated
+//!   because the `xla` crate is unavailable offline.
 
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod sharded;
 
+#[cfg(feature = "pjrt")]
 pub use pjrt::PjrtEngine;
+pub use sharded::ShardedEngine;
 
 use crate::model::ensemble::{EnsembleScratch, UleenModel};
 
@@ -30,28 +41,27 @@ pub trait InferenceEngine: Send {
         let m = self.num_classes();
         let resp = self.responses(x, n)?;
         Ok((0..n)
-            .map(|i| {
-                let row = &resp[i * m..(i + 1) * m];
-                let mut best = 0usize;
-                for (c, &v) in row.iter().enumerate() {
-                    if v > row[best] {
-                        best = c;
-                    }
-                }
-                best
-            })
+            .map(|i| crate::util::argmax_tie_low(&resp[i * m..(i + 1) * m]))
             .collect())
     }
 }
 
 /// The native Rust engine: bit-packed tables, shared H3 hash block,
-/// flat-compiled for the hot path (see `model::flat` — §Perf).
+/// flat-compiled for the hot path (see `model::flat` — §Perf). Single
+/// samples take the scalar scatter-hash path; batches (`n > 1`) take the
+/// bit-sliced 64-sample-tile kernel ([`responses_batch`]) — both are
+/// bit-exact with the reference ensemble.
+///
+/// [`responses_batch`]: crate::model::flat::FlatModel::responses_batch
 pub struct NativeEngine {
     pub model: UleenModel,
     flat: crate::model::flat::FlatModel,
     resp_scratch: Vec<i32>,
     flat_scratch: crate::model::flat::FlatScratch,
+    batch_scratch: crate::model::flat::FlatBatchScratch,
     encoded_buf: crate::util::bitvec::BitVec,
+    /// reusable encoded tile for the batch kernel
+    encoded_batch: Vec<crate::util::bitvec::BitVec>,
     #[allow(dead_code)]
     scratch: EnsembleScratch,
 }
@@ -65,7 +75,9 @@ impl NativeEngine {
             flat,
             resp_scratch: Vec::new(),
             flat_scratch: crate::model::flat::FlatScratch::default(),
+            batch_scratch: crate::model::flat::FlatBatchScratch::default(),
             encoded_buf,
+            encoded_batch: Vec::new(),
             scratch: EnsembleScratch::default(),
         }
     }
@@ -88,9 +100,32 @@ impl InferenceEngine for NativeEngine {
         let f = self.num_features();
         anyhow::ensure!(x.len() == n * f, "bad input length");
         let m = self.num_classes();
+        let bits = self.model.encoded_bits();
+        if n > 1 {
+            // Bit-sliced batch kernel: one CSR traversal per 64 samples.
+            if self.encoded_batch.len() < n
+                || self.encoded_batch[0].len() != bits
+            {
+                self.encoded_batch =
+                    (0..n).map(|_| crate::util::bitvec::BitVec::zeros(bits)).collect();
+            }
+            for i in 0..n {
+                self.model
+                    .encoder
+                    .encode_into(&x[i * f..(i + 1) * f], &mut self.encoded_batch[i]);
+            }
+            self.resp_scratch.clear();
+            self.resp_scratch.resize(n * m, 0);
+            self.flat.responses_batch(
+                &self.encoded_batch[..n],
+                &mut self.batch_scratch,
+                &mut self.resp_scratch,
+            );
+            return Ok(self.resp_scratch.iter().map(|&r| r as f32).collect());
+        }
         let mut out = Vec::with_capacity(n * m);
-        if self.encoded_buf.len() != self.model.encoded_bits() {
-            self.encoded_buf = crate::util::bitvec::BitVec::zeros(self.model.encoded_bits());
+        if self.encoded_buf.len() != bits {
+            self.encoded_buf = crate::util::bitvec::BitVec::zeros(bits);
         }
         for i in 0..n {
             self.model

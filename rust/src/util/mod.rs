@@ -8,3 +8,43 @@ pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+
+/// Index of the largest element, ties breaking to the LOWEST index — the
+/// semantics of the paper's hardware comparator tree. This is THE argmax
+/// used by every classification path (reference ensemble, flat engine,
+/// batch kernel, engine trait, router) so they can never drift apart.
+/// Returns 0 for an empty slice.
+pub fn argmax_tie_low<T: PartialOrd>(xs: &[T]) -> usize {
+    let mut best = 0usize;
+    for i in 1..xs.len() {
+        if xs[i] > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::argmax_tie_low;
+
+    #[test]
+    fn argmax_picks_max_and_breaks_ties_low() {
+        assert_eq!(argmax_tie_low(&[1, 5, 3]), 1);
+        assert_eq!(argmax_tie_low(&[2, 2, 1]), 0, "tie breaks to lowest index");
+        assert_eq!(argmax_tie_low(&[0, 7, 7, 7]), 1);
+        assert_eq!(argmax_tie_low(&[-3i32, -1, -2]), 1);
+        assert_eq!(argmax_tie_low::<i32>(&[]), 0, "empty defaults to 0");
+        assert_eq!(argmax_tie_low(&[4.0f32]), 0);
+    }
+
+    #[test]
+    fn argmax_ignores_nan_like_incomparables() {
+        // NaN comparisons are false, so NaN never displaces the best —
+        // matching the f32 loop the engines used before extraction.
+        assert_eq!(argmax_tie_low(&[1.0f32, f32::NAN, 2.0]), 2);
+        // a NaN in slot 0 is never displaced (every comparison is false),
+        // exactly like the pre-extraction loops
+        assert_eq!(argmax_tie_low(&[f32::NAN, 1.0]), 0);
+    }
+}

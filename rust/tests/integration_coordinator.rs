@@ -149,6 +149,235 @@ fn worker_engine_failure_does_not_wedge_the_server() {
 }
 
 #[test]
+fn zero_length_submit_is_dropped_without_wedging_the_server() {
+    // A request with the wrong feature width (here: zero-length) poisons
+    // its micro-batch: the coordinator drops the batch's completions
+    // (senders disconnect) but must keep serving later traffic.
+    let m = model();
+    let cfg = ServerConfig {
+        batcher: BatcherConfig {
+            max_batch: 1, // isolate the malformed request in its own batch
+            max_wait: Duration::from_micros(10),
+            capacity: 64,
+        },
+        workers: 1,
+    };
+    let ds = synth_uci(5, uci_spec("vowel").unwrap());
+    let mc = m.clone();
+    let server = Server::start(cfg, move |_| {
+        Ok(Box::new(NativeEngine::new(mc.clone())) as Box<dyn InferenceEngine>)
+    })
+    .unwrap();
+    // bad request on its own channel: completion never arrives
+    let (bad_tx, bad_rx) = mpsc::channel();
+    server.submit(Vec::new(), bad_tx).unwrap();
+    // good requests afterwards must still be served
+    let (tx, rx) = mpsc::channel();
+    for i in 0..8 {
+        loop {
+            match server.submit(ds.test_row(i).to_vec(), tx.clone()) {
+                Ok(_) => break,
+                Err(SubmitError::Full) => std::thread::sleep(Duration::from_micros(20)),
+                Err(e) => panic!("{e:?}"),
+            }
+        }
+    }
+    drop(tx);
+    let mut served = 0;
+    while rx.recv_timeout(Duration::from_secs(5)).is_ok() {
+        served += 1;
+        if served == 8 {
+            break;
+        }
+    }
+    assert_eq!(served, 8, "server must keep serving after a malformed request");
+    assert!(
+        bad_rx.recv_timeout(Duration::from_secs(2)).is_err(),
+        "zero-length request must never complete (its sender is dropped)"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn queue_full_surfaces_submit_error_and_metrics() {
+    // With no workers the queue cannot drain, so capacity overflow is
+    // deterministic: the first `capacity` submits succeed, the next is
+    // rejected with SubmitError::Full and counted in the metrics.
+    let m = model();
+    let cfg = ServerConfig {
+        batcher: BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_micros(10),
+            capacity: 8,
+        },
+        workers: 0,
+    };
+    let server = Server::start(cfg, move |_| {
+        Ok(Box::new(NativeEngine::new(m.clone())) as Box<dyn InferenceEngine>)
+    })
+    .unwrap();
+    let (tx, _rx) = mpsc::channel();
+    for _ in 0..8 {
+        server.submit(vec![0.5; 4], tx.clone()).unwrap();
+    }
+    let err = server.submit(vec![0.5; 4], tx.clone()).unwrap_err();
+    assert_eq!(err, SubmitError::Full);
+    assert_eq!(server.queue_depth(), 8);
+    let report = server.metrics.report(4);
+    assert_eq!(report.rejected_full, 1);
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_while_producers_still_submitting_drains_accepted_requests() {
+    let m = model();
+    let cfg = ServerConfig {
+        batcher: BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(50),
+            capacity: 4096,
+        },
+        workers: 2,
+    };
+    let f = m.encoder.num_inputs;
+    let server = Server::start(cfg, move |_| {
+        Ok(Box::new(NativeEngine::new(m.clone())) as Box<dyn InferenceEngine>)
+    })
+    .unwrap();
+    let server = std::sync::Arc::new(server);
+    let (tx, rx) = mpsc::channel();
+    let producer = {
+        let server = server.clone();
+        let tx = tx.clone();
+        std::thread::spawn(move || {
+            let mut accepted = 0usize;
+            loop {
+                match server.submit(vec![0.5; f], tx.clone()) {
+                    Ok(_) => accepted += 1,
+                    Err(SubmitError::Closed) => break, // server closed mid-stream
+                    Err(SubmitError::Full) => std::thread::sleep(Duration::from_micros(5)),
+                }
+            }
+            accepted
+        })
+    };
+    drop(tx);
+    // let the producer get going, then close the intake mid-stream;
+    // workers keep draining whatever was accepted
+    std::thread::sleep(Duration::from_millis(5));
+    server.close();
+    let accepted = producer.join().unwrap();
+    let server = std::sync::Arc::try_unwrap(server)
+        .unwrap_or_else(|_| panic!("producer dropped its handle"));
+    server.shutdown();
+    // every ACCEPTED request must have completed (drain-on-shutdown)
+    let mut completed = 0usize;
+    while rx.try_recv().is_ok() {
+        completed += 1;
+    }
+    assert_eq!(completed, accepted, "shutdown must drain all accepted requests");
+    assert!(accepted > 0, "producer should have landed some requests before close");
+}
+
+#[test]
+fn router_escalation_stats_account_for_forced_low_margin_traffic() {
+    use uleen::coordinator::router::ModelRouter;
+
+    // Engines that always return a dead tie → margin 0 → every cascade
+    // request escalates through every tier; stats must add up exactly.
+    struct Flat0;
+    impl InferenceEngine for Flat0 {
+        fn label(&self) -> String {
+            "tie".into()
+        }
+        fn num_features(&self) -> usize {
+            3
+        }
+        fn num_classes(&self) -> usize {
+            4
+        }
+        fn responses(&mut self, _x: &[f32], n: usize) -> uleen::Result<Vec<f32>> {
+            Ok(vec![1.0, 1.0, 1.0, 1.0].repeat(n))
+        }
+    }
+    let engines: Vec<Box<dyn InferenceEngine>> =
+        vec![Box::new(Flat0), Box::new(Flat0), Box::new(Flat0)];
+    let mut router = ModelRouter::new(engines, vec![4.0, 4.0, 4.0]);
+    router.margin_threshold = 0.05;
+    let n = 25u64;
+    for _ in 0..n {
+        let p = router.classify_cascade(&[0.0, 0.0, 0.0]).unwrap();
+        assert_eq!(p, 0, "dead tie breaks to class 0 at every tier");
+    }
+    assert_eq!(router.stats.served, [n, n, n], "every tier sees every request");
+    assert_eq!(
+        router.stats.escalations,
+        2 * n,
+        "two escalations per request on a 3-tier zoo"
+    );
+    assert_eq!(router.fast_path_fraction(), 0.0);
+
+    // Sanity: a huge margin on tier 0 stops the cascade immediately.
+    struct Confident;
+    impl InferenceEngine for Confident {
+        fn label(&self) -> String {
+            "confident".into()
+        }
+        fn num_features(&self) -> usize {
+            3
+        }
+        fn num_classes(&self) -> usize {
+            4
+        }
+        fn responses(&mut self, _x: &[f32], n: usize) -> uleen::Result<Vec<f32>> {
+            Ok(vec![4.0, 0.0, 0.0, 0.0].repeat(n))
+        }
+    }
+    let engines: Vec<Box<dyn InferenceEngine>> =
+        vec![Box::new(Confident), Box::new(Flat0)];
+    let mut router = ModelRouter::new(engines, vec![4.0, 4.0]);
+    for _ in 0..10 {
+        assert_eq!(router.classify_cascade(&[0.0, 0.0, 0.0]).unwrap(), 0);
+    }
+    assert_eq!(router.stats.served, [10, 0, 0]);
+    assert_eq!(router.stats.escalations, 0);
+    assert_eq!(router.fast_path_fraction(), 1.0);
+}
+
+#[test]
+fn sharded_server_serves_identically_to_per_worker_engines() {
+    let m = model();
+    let ds = synth_uci(5, uci_spec("vowel").unwrap());
+    let expected: Vec<usize> = {
+        let mut s = uleen::model::ensemble::EnsembleScratch::default();
+        (0..ds.n_test()).map(|i| m.predict(ds.test_row(i), &mut s)).collect()
+    };
+    let cfg = ServerConfig {
+        batcher: BatcherConfig {
+            max_batch: 32,
+            max_wait: Duration::from_micros(100),
+            capacity: 4096,
+        },
+        workers: 4, // overridden to 1 by start_sharded
+    };
+    let server = Server::start_sharded(cfg, m, 3).unwrap();
+    let (tx, rx) = mpsc::channel();
+    let mut id2row = std::collections::HashMap::new();
+    for i in 0..ds.n_test() {
+        let id = server.submit(ds.test_row(i).to_vec(), tx.clone()).unwrap();
+        id2row.insert(id, i);
+    }
+    drop(tx);
+    let mut got = vec![usize::MAX; ds.n_test()];
+    for _ in 0..ds.n_test() {
+        let (id, pred, _) = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        got[id2row[&id]] = pred;
+    }
+    server.shutdown();
+    assert_eq!(got, expected, "sharded serving must match direct inference");
+}
+
+#[test]
 fn queue_depth_reflects_backlog_and_drains() {
     let m = model();
     let cfg = ServerConfig {

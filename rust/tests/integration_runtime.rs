@@ -2,6 +2,11 @@
 //! artifacts. Skips (with a loud message) when `make artifacts` has not
 //! run — the numeric-agreement assertions are the heart of the
 //! three-layer story, so they must run in the full flow.
+//!
+//! The whole suite is gated on the `pjrt` feature (the `xla` crate is
+//! unavailable offline); native↔native conformance lives in proptests.rs.
+
+#![cfg(feature = "pjrt")]
 
 use std::path::PathBuf;
 use uleen::data::synth_mnist;

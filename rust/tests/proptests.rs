@@ -7,8 +7,11 @@ use uleen::data::synth_uci::{synth_uci, uci_spec};
 use uleen::encoding::codec;
 use uleen::encoding::thermometer::{ThermometerEncoder, ThermometerKind};
 use uleen::hash::h3::H3Family;
+use uleen::model::flat::{FlatBatchScratch, FlatModel, FlatScratch};
 use uleen::model::uln_format;
+use uleen::runtime::{InferenceEngine, NativeEngine, ShardedEngine};
 use uleen::train::oneshot::{train_oneshot, OneShotConfig};
+use uleen::util::argmax_tie_low;
 use uleen::util::json::Json;
 use uleen::util::prop::{check, Config};
 
@@ -154,6 +157,90 @@ fn prop_uln_roundtrip_random_models() {
                 let row = ds.test_row(i);
                 if model.predict(row, &mut s1) != back.predict(row, &mut s2) {
                     return Err(format!("prediction {i} changed after roundtrip"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Cross-engine conformance: every native inference path must agree
+/// BIT-EXACTLY on every sample — the reference ensemble
+/// (`UleenModel::predict`), the flat scalar kernel
+/// (`FlatModel::predict_encoded`), the bit-sliced batch kernel
+/// (`responses_batch` + argmax), and the sharded engine
+/// (`ShardedEngine::classify`). Batch sizes straddle the 64-sample tile
+/// boundary (0, 1, 63, 64, 65) and half the generated models are pruned
+/// (all-zero table slots + bias correction on the hot path).
+#[test]
+fn prop_all_native_engines_agree_bit_exactly() {
+    check(
+        "cross-engine-conformance",
+        &Config { cases: 8, ..Config::default() },
+        |rng, _size| {
+            let cfg = OneShotConfig {
+                inputs_per_filter: 4 + rng.below(16) as usize,
+                entries_per_filter: 1 << (4 + rng.below(5)),
+                k_hashes: 1 + rng.below(3) as usize,
+                therm_bits: 1 + rng.below(6) as usize,
+                therm_kind: if rng.below(2) == 0 {
+                    ThermometerKind::Linear
+                } else {
+                    ThermometerKind::Gaussian
+                },
+                val_fraction: 0.1,
+                seed: rng.next_u64(),
+            };
+            let prune = if rng.below(2) == 0 { 0.0 } else { 0.3 };
+            let shards = 1 + rng.below(6) as usize;
+            (cfg, prune, shards)
+        },
+        |(cfg, prune, shards)| {
+            let ds = synth_uci(17, uci_spec("vowel").unwrap());
+            let (mut model, _) = train_oneshot(&ds, cfg);
+            if *prune > 0.0 {
+                uleen::train::prune::prune_model(&mut model, &ds, *prune);
+            }
+            let flat = FlatModel::compile(&model);
+            let m = model.num_classes();
+            let mut es = uleen::model::ensemble::EnsembleScratch::default();
+            let mut fs = FlatScratch::default();
+            let mut bs = FlatBatchScratch::default();
+            let mut native = NativeEngine::new(model.clone());
+            let mut sharded = ShardedEngine::new(model.clone(), *shards);
+            for n in [0usize, 1, 63, 64, 65] {
+                let n = n.min(ds.n_test());
+                let x = &ds.test_x[..n * ds.num_features];
+                // reference + flat scalar predictions per row
+                let mut want = Vec::with_capacity(n);
+                let encoded: Vec<_> =
+                    (0..n).map(|i| model.encoder.encode(ds.test_row(i))).collect();
+                for (i, enc) in encoded.iter().enumerate() {
+                    let p_ref = model.predict(ds.test_row(i), &mut es);
+                    let p_flat = flat.predict_encoded(enc, &mut fs);
+                    if p_ref != p_flat {
+                        return Err(format!("flat != reference at n={n} row {i}"));
+                    }
+                    want.push(p_ref);
+                }
+                // bit-sliced batch kernel argmax
+                let mut resp = vec![0i32; n * m];
+                flat.responses_batch(&encoded, &mut bs, &mut resp);
+                for i in 0..n {
+                    let p = argmax_tie_low(&resp[i * m..(i + 1) * m]);
+                    if p != want[i] {
+                        return Err(format!("batch kernel != reference at n={n} row {i}"));
+                    }
+                }
+                // NativeEngine (dispatches to the batch kernel for n > 1)
+                let p_native = native.classify(x, n).map_err(|e| e.to_string())?;
+                if p_native != want {
+                    return Err(format!("NativeEngine != reference at n={n}"));
+                }
+                // ShardedEngine (row-major stitching across threads)
+                let p_sharded = sharded.classify(x, n).map_err(|e| e.to_string())?;
+                if p_sharded != want {
+                    return Err(format!("ShardedEngine({shards}) != reference at n={n}"));
                 }
             }
             Ok(())

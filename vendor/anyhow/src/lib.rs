@@ -1,0 +1,228 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored crate
+//! provides the exact subset of anyhow's surface the workspace uses:
+//! [`Error`], [`Result`], the [`Context`] extension trait, and the
+//! `anyhow!` / `bail!` / `ensure!` macros. Error values carry a flattened
+//! cause chain of strings (root first); `{e}` prints the outermost
+//! message, `{e:#}` the whole chain joined with `: `, and `{e:?}` an
+//! anyhow-style "Caused by:" listing. As in the real crate, `Error`
+//! deliberately does NOT implement `std::error::Error`, which is what
+//! makes the blanket `From<E: std::error::Error>` conversion coherent.
+
+use std::fmt;
+
+/// A flattened dynamic error: a cause chain of rendered messages.
+pub struct Error {
+    /// Cause chain, root cause first; the last entry is the outermost
+    /// context (what plain `Display` shows).
+    chain: Vec<String>,
+}
+
+/// `Result<T, anyhow::Error>` (the error type defaults like the real crate).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (used by the [`Context`] trait).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.push(context.to_string());
+        self
+    }
+
+    /// The cause chain, outermost first (mirrors `anyhow::Error::chain`
+    /// closely enough for diagnostics).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().rev().map(String::as_str)
+    }
+
+    fn outermost(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("unknown error")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            for (i, msg) in self.chain.iter().rev().enumerate() {
+                if i > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{msg}")?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.outermost())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.outermost())?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for msg in self.chain.iter().rev().skip(1) {
+                write!(f, "\n    {msg}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Self {
+        let mut chain = vec![err.to_string()];
+        let mut src = err.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        chain.reverse(); // store root cause first
+        Error { chain }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results
+/// and options, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: Into<Error>,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a displayable value, or a format
+/// string with arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::core::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{Context, Error, Result};
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_shows_outermost_context_only() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| "reading config".to_string())
+            .unwrap_err();
+        assert_eq!(e.to_string(), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: gone");
+    }
+
+    #[test]
+    fn debug_lists_cause_chain() {
+        let e: Error = Err::<(), _>(io_err()).context("outer").unwrap_err();
+        let d = format!("{e:?}");
+        assert!(d.starts_with("outer"), "{d}");
+        assert!(d.contains("Caused by:"), "{d}");
+        assert!(d.contains("gone"), "{d}");
+    }
+
+    #[test]
+    fn option_context_and_question_mark_conversion() {
+        fn inner() -> Result<u32> {
+            let v: Option<u32> = None;
+            let x = v.context("missing value")?;
+            Ok(x)
+        }
+        assert_eq!(inner().unwrap_err().to_string(), "missing value");
+
+        fn io() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(io().unwrap_err().to_string(), "gone");
+    }
+
+    #[test]
+    fn macros_build_and_bail() {
+        fn f(x: u32) -> Result<u32> {
+            crate::ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                crate::bail!("three is right out");
+            }
+            Err(crate::anyhow!("fell through with {}", x))
+        }
+        assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
+        assert_eq!(f(3).unwrap_err().to_string(), "three is right out");
+        assert_eq!(f(1).unwrap_err().to_string(), "fell through with 1");
+        let from_string = crate::anyhow!(String::from("owned message"));
+        assert_eq!(from_string.to_string(), "owned message");
+    }
+
+    #[test]
+    fn ensure_without_message_reports_condition() {
+        fn f() -> Result<()> {
+            let n = 1;
+            crate::ensure!(n > 5);
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("n > 5"));
+    }
+}
