@@ -1,18 +1,30 @@
 //! L3 hot-path microbenchmarks (§Perf): encode / gather+hash / lookup /
 //! full ensemble inference on the native engine, the bit-sliced batch
-//! kernel and the sharded engine, plus the PJRT engine for comparison when
-//! built with `--features pjrt` and artifacts exist. This is the bench the
-//! optimization loop in EXPERIMENTS.md §Perf iterates against.
+//! kernel, the fused slice path and the sharded engine, plus the PJRT
+//! engine for comparison when built with `--features pjrt` and artifacts
+//! exist. This is the bench the optimization loop in EXPERIMENTS.md
+//! §Perf iterates against.
 //!
-//! The headline number is the batch-kernel sweep: per-sample vs bit-sliced
-//! throughput at batch ≥ 256 (target: ≥ 4× single-thread), then the shard
-//! sweep on top of the batch kernel.
+//! Headline numbers: the batch-kernel sweep (per-sample vs bit-sliced
+//! throughput at batch ≥ 256, target ≥ 4× single-thread) and the fused
+//! sweep (fused slice path vs the PR-1 encode+transpose+kernel sequence
+//! at batch 256, target ≥ 1.5×), then the shard sweep on top.
+//!
+//! Flags (after `--`, e.g. `cargo bench --bench engine_hot -- --json`):
+//! * `--json`  — also emit `BENCH_engine_hot.json` (stage → ns/sample,
+//!   samples/s, plus the acceptance ratios) so the perf trajectory is
+//!   machine-readable across PRs.
+//! * `--smoke` — low iteration counts and trimmed sweeps; a release-mode
+//!   CI run that still exercises every stage under optimization.
 
-use uleen::bench::harness::bench_fn;
+use uleen::bench::harness::{bench_fn, BenchResult};
 use uleen::data::synth_mnist;
 use uleen::model::ensemble::EnsembleScratch;
+use uleen::model::flat::{FlatBatchScratch, FlatModel};
 use uleen::model::submodel::SubmodelScratch;
 use uleen::runtime::{InferenceEngine, NativeEngine, ShardedEngine};
+use uleen::util::bitvec::BitVec;
+use uleen::util::json::Json;
 #[cfg(feature = "pjrt")]
 use uleen::runtime::PjrtEngine;
 
@@ -37,104 +49,173 @@ fn load_or_train(ds: &uleen::data::Dataset) -> uleen::model::ensemble::UleenMode
     }
 }
 
+/// Record + print one stage result.
+fn record(report: &mut Vec<(String, BenchResult)>, r: BenchResult) {
+    println!("{}", r.summary());
+    report.push((r.name.clone(), r));
+}
+
 fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_out = args.iter().any(|a| a == "--json");
+    // (warmup, iters) pairs: full-fidelity vs CI smoke
+    let (w_hot, i_hot) = if smoke { (1, 3) } else { (3, 30) };
+    let (w_swp, i_swp) = if smoke { (1, 2) } else { (2, 12) };
+
     let ds = synth_mnist(2024, 64, 1024);
     let model = load_or_train(&ds);
     let n = 256usize;
-    println!("== engine_hot: native hot-path stages ({}, {n} samples/iter) ==", model.name);
+    let mut report: Vec<(String, BenchResult)> = Vec::new();
+    println!(
+        "== engine_hot: native hot-path stages ({}, {n} samples/iter{}) ==",
+        model.name,
+        if smoke { ", SMOKE" } else { "" }
+    );
 
     // stage 1: thermometer encode
     let enc = model.encoder.clone();
-    let r = bench_fn("encode", 3, 30, n as f64, || {
+    let r = bench_fn("encode", w_hot, i_hot, n as f64, || {
         for i in 0..n {
             std::hint::black_box(enc.encode(ds.test_row(i)));
         }
     });
-    println!("{}", r.summary());
+    record(&mut report, r);
 
     // stage 2: gather + hash (submodel 0)
     let sm = model.submodels[0].clone();
     let encoded: Vec<_> = (0..n).map(|i| enc.encode(ds.test_row(i))).collect();
     let mut scratch = SubmodelScratch::default();
-    let r = bench_fn("gather+hash (SM0)", 3, 30, n as f64, || {
+    let r = bench_fn("gather+hash (SM0)", w_hot, i_hot, n as f64, || {
         for e in &encoded {
             sm.gather_keys(e, &mut scratch.keys);
             sm.hash_keys(&scratch.keys, &mut scratch.idxs);
             std::hint::black_box(&scratch.idxs);
         }
     });
-    println!("{}", r.summary());
+    record(&mut report, r);
 
     // stage 3: full submodel responses (lookup included)
     let mut out = vec![0i32; model.num_classes()];
-    let r = bench_fn("submodel responses (SM0)", 3, 30, n as f64, || {
+    let r = bench_fn("submodel responses (SM0)", w_hot, i_hot, n as f64, || {
         for e in &encoded {
             sm.responses(e, &mut scratch, &mut out);
             std::hint::black_box(&out);
         }
     });
-    println!("{}", r.summary());
+    record(&mut report, r);
 
     // stage 4: end-to-end ensemble predict from raw pixels
     let mut es = EnsembleScratch::default();
-    let r = bench_fn("ensemble predict e2e", 3, 30, n as f64, || {
+    let r = bench_fn("ensemble predict e2e", w_hot, i_hot, n as f64, || {
         for i in 0..n {
             std::hint::black_box(model.predict(ds.test_row(i), &mut es));
         }
     });
-    println!("{}", r.summary());
-    let native_ips = r.throughput_per_sec();
+    record(&mut report, r);
+    let native_ips = report.last().unwrap().1.throughput_per_sec();
 
-    // == tentpole sweep: per-sample path vs bit-sliced batch kernel ==
+    // == batch sweep: per-sample path vs bit-sliced batch kernel ==
     println!("\n== batch sweep: per-sample vs bit-sliced kernel (single thread) ==");
     let f = model.encoder.num_inputs;
+    let m = model.num_classes();
     let mut native = NativeEngine::new(model.clone());
     let mut speedup_at = Vec::new();
-    for &bs in &[64usize, 256, 1024] {
+    let batches: &[usize] = if smoke { &[256] } else { &[64, 256, 1024] };
+    for &bs in batches {
         let x = &ds.test_x[..bs * f];
         // baseline: the scalar path, forced by n=1 submissions
-        let r1 = bench_fn(&format!("per-sample ×{bs}"), 2, 12, bs as f64, || {
+        let r1 = bench_fn(&format!("per-sample ×{bs}"), w_swp, i_swp, bs as f64, || {
             for i in 0..bs {
                 std::hint::black_box(
                     native.responses(&x[i * f..(i + 1) * f], 1).unwrap(),
                 );
             }
         });
-        println!("{}", r1.summary());
-        // bit-sliced: one call, 64-sample tiles
-        let rb = bench_fn(&format!("bit-sliced  ×{bs}"), 2, 12, bs as f64, || {
+        let t1 = r1.throughput_per_sec();
+        record(&mut report, r1);
+        // bit-sliced + fused encode: one call, 64-sample tiles
+        let rb = bench_fn(&format!("bit-sliced  ×{bs}"), w_swp, i_swp, bs as f64, || {
             std::hint::black_box(native.responses(x, bs).unwrap());
         });
-        println!("{}", rb.summary());
-        let speedup = rb.throughput_per_sec() / r1.throughput_per_sec().max(1e-9);
+        let tb = rb.throughput_per_sec();
+        record(&mut report, rb);
+        let speedup = tb / t1.max(1e-9);
         println!("  -> batch {bs}: bit-sliced kernel speedup {speedup:.1}x");
         speedup_at.push((bs, speedup));
     }
-    if let Some(&(bs, s)) = speedup_at.iter().find(|(bs, _)| *bs >= 256) {
-        println!(
-            "acceptance: {s:.1}x at batch {bs} (target ≥ 4x single-thread) {}",
-            if s >= 4.0 { "✓" } else { "✗ BELOW TARGET" }
-        );
-    }
+    let bitsliced_speedup = speedup_at
+        .iter()
+        .find(|(bs, _)| *bs >= 256)
+        .map(|&(bs, s)| {
+            println!(
+                "acceptance: {s:.1}x at batch {bs} (target ≥ 4x single-thread) {}",
+                if s >= 4.0 { "✓" } else { "✗ BELOW TARGET" }
+            );
+            s
+        });
 
-    // == shard sweep: the batch kernel fanned across threads ==
+    // == fused sweep: PR-1 encode+transpose+kernel vs the fused slice path ==
+    // The PR-1 batch path materialized one BitVec per sample
+    // (`encode_into`) and transposed the tile into sample slices inside
+    // `responses_batch`; the fused path encodes straight into the slice
+    // layout. Same model, same rows, bit-exact outputs — pure overhead
+    // delta.
+    println!("\n== fused sweep: encode+transpose+kernel vs fused slices, batch 256 ==");
+    let bs = 256usize;
+    let x = &ds.test_x[..bs * f];
+    let flat = FlatModel::compile(&model);
+    let bits = model.encoded_bits();
+    let mut enc_bufs: Vec<BitVec> = (0..bs).map(|_| BitVec::zeros(bits)).collect();
+    let mut pr1_scratch = FlatBatchScratch::default();
+    let mut resp = vec![0i32; bs * m];
+    let r_pr1 = bench_fn("pr1 encode+transpose ×256", w_swp, i_swp, bs as f64, || {
+        for i in 0..bs {
+            enc.encode_into(&x[i * f..(i + 1) * f], &mut enc_bufs[i]);
+        }
+        flat.responses_batch(&enc_bufs, &mut pr1_scratch, &mut resp);
+        std::hint::black_box(&resp);
+    });
+    let t_pr1 = r_pr1.throughput_per_sec();
+    record(&mut report, r_pr1);
+    let mut fused_scratch = FlatBatchScratch::default();
+    let r_fused = bench_fn("fused slice path   ×256", w_swp, i_swp, bs as f64, || {
+        flat.responses_batch_fused(&enc, x, bs, &mut fused_scratch, &mut resp);
+        std::hint::black_box(&resp);
+    });
+    let t_fused = r_fused.throughput_per_sec();
+    record(&mut report, r_fused);
+    let fused_speedup = t_fused / t_pr1.max(1e-9);
+    println!(
+        "acceptance: fused {fused_speedup:.2}x vs PR-1 sequence at batch {bs} (target ≥ 1.5x) {}",
+        if fused_speedup >= 1.5 { "✓" } else { "✗ BELOW TARGET" }
+    );
+
+    // == shard sweep: the fused kernel fanned across the persistent pool ==
     println!("\n== shard sweep: ShardedEngine.classify, batch 1024 ==");
     let bs = 1024usize.min(ds.n_test());
     let x = &ds.test_x[..bs * f];
-    for &shards in &[1usize, 2, 4, 8] {
+    let shard_counts: &[usize] = if smoke { &[2] } else { &[1, 2, 4, 8] };
+    for &shards in shard_counts {
         let mut sh = ShardedEngine::new(model.clone(), shards);
-        let r = bench_fn(&format!("shards={shards} ×{bs}"), 2, 12, bs as f64, || {
+        let r = bench_fn(&format!("shards={shards} ×{bs}"), w_swp, i_swp, bs as f64, || {
             std::hint::black_box(sh.classify(x, bs).unwrap());
         });
-        println!("{}", r.summary());
+        record(&mut report, r);
+        assert_eq!(
+            sh.threads_spawned(),
+            shards,
+            "persistent pool must spawn exactly once"
+        );
     }
 
     // engine-level batch API (what the coordinator calls)
-    let flat: Vec<f32> = ds.test_x[..n * f].to_vec();
-    let r = bench_fn("NativeEngine.classify batch", 3, 30, n as f64, || {
-        std::hint::black_box(native.classify(&flat, n).unwrap());
+    let flat_x: Vec<f32> = ds.test_x[..n * f].to_vec();
+    let r = bench_fn("NativeEngine.classify batch", w_hot, i_hot, n as f64, || {
+        std::hint::black_box(native.classify(&flat_x, n).unwrap());
     });
-    println!("\n{}", r.summary());
+    println!();
+    record(&mut report, r);
 
     // PJRT engine comparison (AOT graph through XLA)
     #[cfg(feature = "pjrt")]
@@ -143,12 +224,12 @@ fn main() -> anyhow::Result<()> {
         if hlo.exists() {
             let mut pjrt = PjrtEngine::load(&hlo, 16, 784)?;
             let r = bench_fn("PjrtEngine.classify batch", 2, 10, n as f64, || {
-                std::hint::black_box(pjrt.classify(&flat, n).unwrap());
+                std::hint::black_box(pjrt.classify(&flat_x, n).unwrap());
             });
-            println!("{}", r.summary());
+            record(&mut report, r);
             println!(
                 "native/pjrt speed ratio: {:.1}x (native bit-packed tables vs XLA f32 gathers)",
-                r.mean_ns / (n as f64) / (1e9 / native_ips)
+                report.last().unwrap().1.mean_ns / (n as f64) / (1e9 / native_ips)
             );
         } else {
             println!("(skip PJRT: {} missing — run `make artifacts`)", hlo.display());
@@ -158,6 +239,29 @@ fn main() -> anyhow::Result<()> {
     {
         let _ = native_ips;
         println!("(skip PJRT: built without --features pjrt)");
+    }
+
+    // == machine-readable trajectory (ROADMAP follow-up d) ==
+    if json_out {
+        let mut stages = Json::obj();
+        for (name, r) in &report {
+            let mut o = Json::obj();
+            o.set("ns_per_sample", Json::Num(r.mean_ns / r.items_per_iter.max(1.0)));
+            o.set("samples_per_sec", Json::Num(r.throughput_per_sec()));
+            stages.set(name, o);
+        }
+        let mut doc = Json::obj();
+        doc.set("bench", Json::Str("engine_hot".into()));
+        doc.set("model", Json::Str(model.name.clone()));
+        doc.set("smoke", Json::Bool(smoke));
+        doc.set("stages", stages);
+        if let Some(s) = bitsliced_speedup {
+            doc.set("bitsliced_speedup_b256", Json::Num(s));
+        }
+        doc.set("fused_speedup_vs_pr1_b256", Json::Num(fused_speedup));
+        let path = "BENCH_engine_hot.json";
+        std::fs::write(path, doc.to_string())?;
+        println!("(wrote {path})");
     }
     Ok(())
 }

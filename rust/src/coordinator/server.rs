@@ -60,7 +60,11 @@ impl Server {
     /// micro-batch across `shards` threads — the alternative to
     /// `cfg.workers` independent engines when batches are large: one big
     /// batch split N ways beats N engines pulling small batches, because
-    /// the bit-sliced kernel amortizes its CSR traversal over 64 samples.
+    /// the fused bit-sliced kernel amortizes its CSR traversal over 64
+    /// samples. The engine's worker pool spawns once here and is reused
+    /// across every micro-batch for the server's lifetime (zero thread
+    /// spawns on the serving hot path); it joins when the worker drops
+    /// the engine during [`Server::shutdown`].
     pub fn start_sharded(
         cfg: ServerConfig,
         model: crate::model::ensemble::UleenModel,

@@ -32,6 +32,22 @@ pub struct ThermometerEncoder {
     pub thresholds: Vec<f32>,
 }
 
+/// Mercury level of one input: how many of its (sorted, increasing)
+/// thresholds the value exceeds. This is THE thermometer comparison —
+/// every encode path (`encode_into`, `encode_counts`,
+/// `encode_tile_slices`) goes through it so the branchless-count vs
+/// `partition_point` cutover lives in exactly one place.
+#[inline]
+pub fn level(x: f32, thr: &[f32]) -> usize {
+    // thresholds are sorted; for the small t used in practice a
+    // branchless linear count beats a binary search
+    if thr.len() <= 24 {
+        thr.iter().map(|&th| (x > th) as usize).sum()
+    } else {
+        thr.partition_point(|&th| x > th)
+    }
+}
+
 /// Inverse standard-normal CDF (Acklam's rational approximation,
 /// |relative error| < 1.15e-9). Only +,*,/, sqrt, ln — portable enough for
 /// threshold fitting (thresholds are stored as f32, crushing ULP noise).
@@ -156,13 +172,7 @@ impl ThermometerEncoder {
         let t = self.bits;
         for (j, &x) in sample.iter().enumerate() {
             let thr = &self.thresholds[j * t..(j + 1) * t];
-            // thresholds are sorted; for the small t used in practice a
-            // branchless linear count beats a binary search
-            let mut level = if t <= 24 {
-                thr.iter().map(|&th| (x > th) as usize).sum()
-            } else {
-                thr.partition_point(|&th| x > th)
-            };
+            let mut level = level(x, thr);
             // set bits [j*t, j*t + level) as word-masked runs
             let mut pos = j * t;
             while level > 0 {
@@ -187,14 +197,45 @@ impl ThermometerEncoder {
     /// compression codec.
     pub fn encode_counts(&self, sample: &[f32]) -> Vec<u8> {
         assert_eq!(sample.len(), self.num_inputs);
-        (0..self.num_inputs)
-            .map(|j| {
-                let base = j * self.bits;
-                (0..self.bits)
-                    .filter(|&i| sample[j] > self.thresholds[base + i])
-                    .count() as u8
-            })
+        let t = self.bits;
+        sample
+            .iter()
+            .enumerate()
+            .map(|(j, &x)| level(x, &self.thresholds[j * t..(j + 1) * t]) as u8)
             .collect()
+    }
+
+    /// Fused tile encode (§Perf v5): encode up to 64 samples straight into
+    /// the bit-sliced batch kernel's **native sample-slice layout**,
+    /// skipping the per-sample `BitVec` and the O(set bits) transpose the
+    /// old batch path paid per tile.
+    ///
+    /// `xs` is row-major (`nt × num_inputs`); on return `slices` has
+    /// [`ThermometerEncoder::encoded_bits`] words and bit `s` of
+    /// `slices[src]` is encoded bit `src` of sample `s` — exactly what
+    /// `FlatModel::responses_tile_slices` consumes. Thermometer bit
+    /// `j*t + i` of sample `s` is just `xs[s][j] > thresholds[j][i]`, so
+    /// each sample's mercury level (shared [`level`] helper) directly
+    /// yields a run of slice words to OR its sample bit into: work is one
+    /// level search plus O(level) word-ORs per (sample, input), with no
+    /// intermediate materialization.
+    pub fn encode_tile_slices(&self, xs: &[f32], nt: usize, slices: &mut Vec<u64>) {
+        assert!(nt <= 64, "a tile holds at most 64 samples");
+        assert_eq!(xs.len(), nt * self.num_inputs);
+        let t = self.bits;
+        slices.clear();
+        slices.resize(self.encoded_bits(), 0);
+        for j in 0..self.num_inputs {
+            let thr = &self.thresholds[j * t..(j + 1) * t];
+            let col = &mut slices[j * t..(j + 1) * t];
+            for s in 0..nt {
+                let lvl = level(xs[s * self.num_inputs + j], thr);
+                let sbit = 1u64 << s;
+                for w in &mut col[..lvl] {
+                    *w |= sbit;
+                }
+            }
+        }
     }
 }
 
@@ -270,6 +311,54 @@ mod tests {
         assert_eq!(v.count_ones(), 0); // x > mean is false at equality
         let v = enc.encode(&[6.0, 4.0]);
         assert_eq!(v.count_ones(), 3);
+    }
+
+    #[test]
+    fn tile_slices_match_per_sample_encode_plus_transpose() {
+        let data: Vec<f32> = (0..400).map(|i| (i % 97) as f32).collect();
+        for kind in [ThermometerKind::Linear, ThermometerKind::Gaussian] {
+            let enc = ThermometerEncoder::fit(kind, &data, 4, 5);
+            let f = enc.num_inputs;
+            for nt in [1usize, 2, 63, 64] {
+                let xs: Vec<f32> = (0..nt * f)
+                    .map(|i| ((i * 31 + 7) % 113) as f32 - 5.0)
+                    .collect();
+                let mut slices = Vec::new();
+                enc.encode_tile_slices(&xs, nt, &mut slices);
+                assert_eq!(slices.len(), enc.encoded_bits());
+                // reference: per-sample encode, transposed by hand
+                let mut want = vec![0u64; enc.encoded_bits()];
+                for s in 0..nt {
+                    let v = enc.encode(&xs[s * f..(s + 1) * f]);
+                    for src in 0..enc.encoded_bits() {
+                        if v.get(src) {
+                            want[src] |= 1u64 << s;
+                        }
+                    }
+                }
+                assert_eq!(slices, want, "kind={kind:?} nt={nt}");
+            }
+        }
+    }
+
+    #[test]
+    fn tile_slices_handle_constant_columns_and_resize() {
+        // degenerate (constant) feature column: level is 0 at the mean
+        let data = vec![5.0f32; 60];
+        let enc = ThermometerEncoder::fit(ThermometerKind::Gaussian, &data, 2, 3);
+        let xs = [5.0f32, 5.0, 6.0, 4.0]; // 2 samples × 2 inputs
+        // seed the buffer with a stale larger shape: must shrink + rezero
+        let mut slices = vec![u64::MAX; 64];
+        enc.encode_tile_slices(&xs, 2, &mut slices);
+        assert_eq!(slices.len(), 6);
+        // sample 0 is all-equal → no bits; sample 1 sets input 0's run only
+        for (src, &w) in slices.iter().enumerate() {
+            let expect = if src < 3 { 0b10 } else { 0 };
+            assert_eq!(w, expect, "slice {src}");
+        }
+        // empty tile is legal and yields an all-zero slice buffer
+        enc.encode_tile_slices(&[], 0, &mut slices);
+        assert!(slices.iter().all(|&w| w == 0));
     }
 
     #[test]

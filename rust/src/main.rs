@@ -5,6 +5,16 @@
 //! serving loop. Multi-shot-trained models arrive as `artifacts/*.uln`
 //! from the Python compile path (`make artifacts`).
 
+// Same deliberate-idiom allowances as lib.rs (separate crate root, so
+// the attribute must be repeated); CI denies all other clippy warnings
+// on lib/bin targets.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::collapsible_else_if
+)]
+
 use std::path::{Path, PathBuf};
 
 use uleen::data::{self, synth_mnist, synth_uci, uci_specs};

@@ -12,10 +12,55 @@
 //! become all-zero table slots plus a keep-bit, so the inner loop is
 //! branchless on structure. Semantics are identical to the reference path
 //! (asserted by tests and the cross-engine integration suite).
+//!
+//! Batch inference is built around one tile kernel,
+//! [`FlatModel::responses_tile_slices`], that consumes a borrowed
+//! [`TileSlices`] view (one `u64` per encoded input bit, one sample per
+//! bit-lane). Two producers feed it: the **fused path**
+//! ([`FlatModel::responses_batch_fused`]) thermometer-encodes raw float
+//! rows straight into the slice layout, and the **BitVec adapter**
+//! ([`FlatModel::responses_batch`]) transposes pre-encoded inputs — kept
+//! so conformance tests can drive the kernel from the same encoded bits
+//! as the scalar path.
 
+use crate::encoding::thermometer::ThermometerEncoder;
 use crate::model::ensemble::UleenModel;
 use crate::model::submodel::SubmodelConfig;
 use crate::util::bitvec::BitVec;
+
+/// A borrowed sample-sliced view of one ≤64-sample tile — the batch
+/// kernel's native input layout. Word `slices[src]` holds encoded bit
+/// `src` of every sample in the tile: bit `s` of that word is bit `src`
+/// of sample `s`.
+///
+/// Producers: [`ThermometerEncoder::encode_tile_slices`] (the fused
+/// encode, zero intermediate materialization) or the BitVec transpose
+/// adapter inside [`FlatModel::responses_batch`] (kept for conformance
+/// testing against pre-encoded inputs).
+#[derive(Clone, Copy)]
+pub struct TileSlices<'a> {
+    slices: &'a [u64],
+    nt: usize,
+}
+
+impl<'a> TileSlices<'a> {
+    /// Wrap `slices` (one word per encoded input bit) holding `nt`
+    /// samples. Bits `nt..64` of every word must be zero.
+    pub fn new(slices: &'a [u64], nt: usize) -> Self {
+        assert!(nt <= FlatModel::TILE, "a tile holds at most 64 samples");
+        Self { slices, nt }
+    }
+
+    /// Samples in the tile (≤ 64).
+    pub fn num_samples(&self) -> usize {
+        self.nt
+    }
+
+    /// One word per encoded input bit.
+    pub fn slices(&self) -> &'a [u64] {
+        self.slices
+    }
+}
 
 /// One submodel compiled to flat arrays.
 ///
@@ -233,18 +278,19 @@ impl FlatModel {
         }
     }
 
-    /// One ≤64-sample tile of [`FlatModel::responses_batch`]. `out` is
-    /// row-major `tile.len() × num_classes`, pre-zeroed by the caller.
+    /// One ≤64-sample tile of [`FlatModel::responses_batch`], fed
+    /// pre-encoded `BitVec`s. Thin adapter over
+    /// [`FlatModel::responses_tile_slices`]: transposes the tile into the
+    /// sample-slice layout (streaming set bits keeps this at O(set bits))
+    /// and delegates. The fused path skips this transpose entirely by
+    /// encoding straight into slices.
     fn responses_tile(&self, tile: &[BitVec], scratch: &mut FlatBatchScratch, out: &mut [i32]) {
         let nt = tile.len();
         debug_assert!(nt >= 1 && nt <= Self::TILE);
-        let m = self.num_classes;
         let total_bits = self.submodels[0].cfg.total_input_bits;
-        // Transpose the tile into sample slices: slices[src] bit s =
-        // encoded bit src of sample s. Streaming set bits keeps this at
-        // O(set bits), like the scalar scatter-hash loop.
-        scratch.slices.clear();
-        scratch.slices.resize(total_bits, 0);
+        let mut slices = std::mem::take(&mut scratch.slices);
+        slices.clear();
+        slices.resize(total_bits, 0);
         for (s, enc) in tile.iter().enumerate() {
             debug_assert_eq!(enc.len(), total_bits);
             let sbit = 1u64 << s;
@@ -253,10 +299,73 @@ impl FlatModel {
                 while w != 0 {
                     let bit = w.trailing_zeros() as usize;
                     w &= w - 1;
-                    scratch.slices[(w_idx << 6) | bit] |= sbit;
+                    slices[(w_idx << 6) | bit] |= sbit;
                 }
             }
         }
+        self.responses_tile_slices(TileSlices::new(&slices, nt), scratch, out);
+        scratch.slices = slices;
+    }
+
+    /// Per-class responses for raw float rows (§Perf v5 **fused batch
+    /// path**): thermometer-encodes each ≤64-sample tile directly into the
+    /// kernel's sample-slice layout
+    /// ([`ThermometerEncoder::encode_tile_slices`]) and runs
+    /// [`FlatModel::responses_tile_slices`] on the borrowed view — no
+    /// per-sample `BitVec`, no transpose, no intermediate allocation after
+    /// warmup. `x` is row-major `n × encoder.num_inputs`; `out` is
+    /// row-major `n × num_classes` and is zeroed here. Bit-exact with
+    /// encode-then-[`FlatModel::responses_batch`] (conformance proptests).
+    pub fn responses_batch_fused(
+        &self,
+        encoder: &ThermometerEncoder,
+        x: &[f32],
+        n: usize,
+        scratch: &mut FlatBatchScratch,
+        out: &mut [i32],
+    ) {
+        let f = encoder.num_inputs;
+        assert_eq!(x.len(), n * f);
+        let m = self.num_classes;
+        assert_eq!(out.len(), n * m);
+        debug_assert_eq!(
+            encoder.encoded_bits(),
+            self.submodels[0].cfg.total_input_bits,
+            "encoder/model width mismatch"
+        );
+        out.iter_mut().for_each(|o| *o = 0);
+        let mut slices = std::mem::take(&mut scratch.slices);
+        let mut start = 0usize;
+        while start < n {
+            let nt = (n - start).min(Self::TILE);
+            encoder.encode_tile_slices(&x[start * f..(start + nt) * f], nt, &mut slices);
+            self.responses_tile_slices(
+                TileSlices::new(&slices, nt),
+                scratch,
+                &mut out[start * m..(start + nt) * m],
+            );
+            start += nt;
+        }
+        scratch.slices = slices;
+    }
+
+    /// The bit-sliced tile kernel proper, operating on a borrowed
+    /// [`TileSlices`] view (`out` row-major `nt × num_classes`,
+    /// pre-zeroed). Everything downstream of the slice layout lives here;
+    /// both the BitVec adapter and the fused encode feed it.
+    pub fn responses_tile_slices(
+        &self,
+        tile: TileSlices<'_>,
+        scratch: &mut FlatBatchScratch,
+        out: &mut [i32],
+    ) {
+        let nt = tile.num_samples();
+        let slices = tile.slices();
+        debug_assert!(nt >= 1);
+        let m = self.num_classes;
+        debug_assert_eq!(out.len(), nt * m);
+        let total_bits = self.submodels[0].cfg.total_input_bits;
+        assert_eq!(slices.len(), total_bits, "slice view/model width mismatch");
         for sm in &self.submodels {
             let e = sm.cfg.entries_per_filter;
             let nf = sm.cfg.num_filters();
@@ -269,8 +378,7 @@ impl FlatModel {
             // bit b of sample s's j-th hash for filter f.
             scratch.hash_slices.clear();
             scratch.hash_slices.resize(nf * k * ob, 0);
-            for src in 0..total_bits {
-                let w = scratch.slices[src];
+            for (src, &w) in slices.iter().enumerate() {
                 if w == 0 {
                     continue;
                 }
@@ -349,8 +457,12 @@ pub struct FlatScratch {
 /// on first use and are reused afterwards (no allocation after warmup).
 #[derive(Default)]
 pub struct FlatBatchScratch {
-    /// sample slices of the encoded tile: `slices[src]` bit `s` = bit
-    /// `src` of tile sample `s` (length `total_input_bits`)
+    /// backing store for the tile's sample slices (`slices[src]` bit `s`
+    /// = bit `src` of tile sample `s`, length `total_input_bits`), lent
+    /// out as a [`TileSlices`] view. Written by the fused encode or the
+    /// BitVec transpose adapter; every (re)use resizes it to the exact
+    /// model width, so swapping models of a different encoded width
+    /// through one scratch is safe.
     slices: Vec<u64>,
     /// bit-sliced H3 accumulators: `[(f*k + j) * out_bits + b]`
     hash_slices: Vec<u64>,
@@ -414,6 +526,31 @@ mod tests {
                 flat.responses_encoded(enc, &mut fs, &mut want);
                 assert_eq!(&got[i * m..(i + 1) * m], &want[..], "n={n} sample {i}");
             }
+        }
+    }
+
+    #[test]
+    fn fused_batch_path_matches_encode_then_batch_kernel() {
+        let ds = synth_uci(19, uci_spec("vowel").unwrap());
+        let (mut model, _) = train_oneshot(
+            &ds,
+            &OneShotConfig { inputs_per_filter: 10, entries_per_filter: 128, therm_bits: 6, ..Default::default() },
+        );
+        prune_model(&mut model, &ds, 0.2);
+        let flat = FlatModel::compile(&model);
+        let m = model.num_classes();
+        let mut bs_bv = FlatBatchScratch::default();
+        let mut bs_fused = FlatBatchScratch::default();
+        for n in [0usize, 1, 63, 64, 65, 130] {
+            let n = n.min(ds.n_test());
+            let x = &ds.test_x[..n * ds.num_features];
+            let encoded: Vec<_> =
+                (0..n).map(|i| model.encoder.encode(ds.test_row(i))).collect();
+            let mut want = vec![0i32; n * m];
+            flat.responses_batch(&encoded, &mut bs_bv, &mut want);
+            let mut got = vec![0i32; n * m];
+            flat.responses_batch_fused(&model.encoder, x, n, &mut bs_fused, &mut got);
+            assert_eq!(got, want, "n={n}");
         }
     }
 

@@ -1,9 +1,11 @@
 //! Inference engines behind one batch-classifier trait.
 //!
 //! * [`NativeEngine`] — the bit-packed native path: scalar scatter-hash
-//!   for single samples, the bit-sliced 64-sample-tile kernel for batches.
-//! * [`ShardedEngine`] — the batch kernel fanned across worker threads
-//!   with deterministic row-major stitching.
+//!   for single samples, the fused slice path for batches (thermometer
+//!   encode straight into the bit-sliced 64-sample-tile layout).
+//! * [`ShardedEngine`] — the fused kernel fanned across a persistent
+//!   worker pool (threads spawn once, jobs flow over channels, joined on
+//!   drop) with deterministic row-major stitching.
 //! * `PjrtEngine` (feature `pjrt`) — loads the AOT artifacts
 //!   (`artifacts/*.hlo.txt`, lowered once by `python/compile/aot.py`) and
 //!   executes them through XLA. Interchange is HLO **text**: jax ≥ 0.5
@@ -49,10 +51,12 @@ pub trait InferenceEngine: Send {
 /// The native Rust engine: bit-packed tables, shared H3 hash block,
 /// flat-compiled for the hot path (see `model::flat` — §Perf). Single
 /// samples take the scalar scatter-hash path; batches (`n > 1`) take the
-/// bit-sliced 64-sample-tile kernel ([`responses_batch`]) — both are
-/// bit-exact with the reference ensemble.
+/// fused slice path ([`responses_batch_fused`]): raw float rows are
+/// thermometer-encoded straight into the bit-sliced tile layout, with no
+/// per-sample `BitVec` and no transpose — both paths are bit-exact with
+/// the reference ensemble.
 ///
-/// [`responses_batch`]: crate::model::flat::FlatModel::responses_batch
+/// [`responses_batch_fused`]: crate::model::flat::FlatModel::responses_batch_fused
 pub struct NativeEngine {
     pub model: UleenModel,
     flat: crate::model::flat::FlatModel,
@@ -60,8 +64,6 @@ pub struct NativeEngine {
     flat_scratch: crate::model::flat::FlatScratch,
     batch_scratch: crate::model::flat::FlatBatchScratch,
     encoded_buf: crate::util::bitvec::BitVec,
-    /// reusable encoded tile for the batch kernel
-    encoded_batch: Vec<crate::util::bitvec::BitVec>,
     #[allow(dead_code)]
     scratch: EnsembleScratch,
 }
@@ -77,9 +79,22 @@ impl NativeEngine {
             flat_scratch: crate::model::flat::FlatScratch::default(),
             batch_scratch: crate::model::flat::FlatBatchScratch::default(),
             encoded_buf,
-            encoded_batch: Vec::new(),
             scratch: EnsembleScratch::default(),
         }
+    }
+
+    /// Replace the served model in place, recompiling the flat layout and
+    /// resetting every shape-dependent buffer. The same engine may serve
+    /// models of different encoded widths / feature counts / class counts
+    /// across calls — stale scratch shapes cannot leak into the new model
+    /// (covered by `engine_survives_model_swaps_of_different_widths`).
+    pub fn swap_model(&mut self, model: UleenModel) {
+        self.flat = crate::model::flat::FlatModel::compile(&model);
+        self.encoded_buf = crate::util::bitvec::BitVec::zeros(model.encoded_bits());
+        self.flat_scratch = crate::model::flat::FlatScratch::default();
+        self.batch_scratch = crate::model::flat::FlatBatchScratch::default();
+        self.resp_scratch = Vec::new();
+        self.model = model;
     }
 }
 
@@ -102,22 +117,14 @@ impl InferenceEngine for NativeEngine {
         let m = self.num_classes();
         let bits = self.model.encoded_bits();
         if n > 1 {
-            // Bit-sliced batch kernel: one CSR traversal per 64 samples.
-            if self.encoded_batch.len() < n
-                || self.encoded_batch[0].len() != bits
-            {
-                self.encoded_batch =
-                    (0..n).map(|_| crate::util::bitvec::BitVec::zeros(bits)).collect();
-            }
-            for i in 0..n {
-                self.model
-                    .encoder
-                    .encode_into(&x[i * f..(i + 1) * f], &mut self.encoded_batch[i]);
-            }
+            // Fused slice path: encode straight into the bit-sliced tile
+            // layout, one CSR traversal per 64 samples.
             self.resp_scratch.clear();
             self.resp_scratch.resize(n * m, 0);
-            self.flat.responses_batch(
-                &self.encoded_batch[..n],
+            self.flat.responses_batch_fused(
+                &self.model.encoder,
+                x,
+                n,
                 &mut self.batch_scratch,
                 &mut self.resp_scratch,
             );
@@ -163,6 +170,49 @@ mod tests {
             .filter(|(p, y)| **p == **y as usize)
             .count();
         assert_eq!(correct as f64 / ds.n_test() as f64, conf.accuracy());
+    }
+
+    #[test]
+    fn engine_survives_model_swaps_of_different_widths() {
+        // Swap models whose encoded widths, feature counts and class
+        // counts all differ through ONE engine of each kind: stale
+        // scratch shapes (slice buffers, response staging, encode
+        // buffers) must never leak across models.
+        let ds_a = synth_uci(5, uci_spec("iris").unwrap());
+        let ds_b = synth_uci(6, uci_spec("vowel").unwrap());
+        let (model_a, _) = train_oneshot(
+            &ds_a,
+            &OneShotConfig { inputs_per_filter: 6, entries_per_filter: 64, therm_bits: 3, ..Default::default() },
+        );
+        let (model_b, _) = train_oneshot(
+            &ds_b,
+            &OneShotConfig { inputs_per_filter: 10, entries_per_filter: 128, therm_bits: 7, ..Default::default() },
+        );
+        assert_ne!(model_a.encoded_bits(), model_b.encoded_bits());
+        let mut fresh_a = NativeEngine::new(model_a.clone());
+        let mut fresh_b = NativeEngine::new(model_b.clone());
+        let want_a = fresh_a.responses(&ds_a.test_x, ds_a.n_test()).unwrap();
+        let want_b = fresh_b.responses(&ds_b.test_x, ds_b.n_test()).unwrap();
+
+        let mut eng = NativeEngine::new(model_a.clone());
+        // warm the wide-model scratch shapes, then swap down and back up
+        assert_eq!(eng.responses(&ds_a.test_x, ds_a.n_test()).unwrap(), want_a);
+        eng.swap_model(model_b.clone());
+        assert_eq!(eng.responses(&ds_b.test_x, ds_b.n_test()).unwrap(), want_b);
+        eng.swap_model(model_a.clone());
+        assert_eq!(eng.responses(&ds_a.test_x, ds_a.n_test()).unwrap(), want_a);
+        // single-sample (scalar path) after a swap reuses encoded_buf
+        assert_eq!(
+            eng.responses(&ds_a.test_x[..eng.num_features()], 1).unwrap(),
+            want_a[..eng.num_classes()].to_vec()
+        );
+
+        let mut sh = crate::runtime::ShardedEngine::new(model_a, 3);
+        assert_eq!(sh.responses(&ds_a.test_x, ds_a.n_test()).unwrap(), want_a);
+        let spawned = sh.threads_spawned();
+        sh.swap_model(model_b);
+        assert_eq!(sh.responses(&ds_b.test_x, ds_b.n_test()).unwrap(), want_b);
+        assert_eq!(sh.threads_spawned(), spawned, "swap must not respawn the pool");
     }
 
     #[test]

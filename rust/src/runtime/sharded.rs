@@ -1,56 +1,190 @@
-//! Sharded batch engine — data-parallel fan-out of the bit-sliced kernel.
+//! Sharded batch engine — data-parallel fan-out of the fused slice
+//! kernel across a **persistent worker pool**.
 //!
 //! The paper's accelerator hits 14.3M inferences/s by evaluating whole
 //! batches in lockstep hardware; the software analogue is one flat model
-//! shared (read-only) by N worker threads, each running the bit-sliced
-//! batch kernel over a contiguous slice of the batch rows. Rows are split
-//! round-robin-free — each shard owns one contiguous row range and writes
-//! its responses straight into the corresponding region of the output
-//! buffer, so result stitching is deterministic row-major by construction
-//! (no reordering, no locks on the hot path).
+//! shared (read-only) by N worker threads, each running the fused
+//! encode + bit-sliced batch kernel
+//! ([`FlatModel::responses_batch_fused`]) over a contiguous slice of the
+//! batch's raw float rows. Rows are split round-robin-free — each shard
+//! owns one contiguous row range and writes its responses straight into
+//! the corresponding region of the output buffer, so result stitching is
+//! deterministic row-major by construction (no reordering, no locks on
+//! the hot path).
 //!
-//! Threads come from [`std::thread::scope`]: no pool to manage, and the
-//! per-shard scratch ([`ShardScratch`]) lives in the engine so repeated
-//! calls allocate nothing after warmup.
+//! ## Pool lifecycle
+//!
+//! Threads spawn **once**, in [`ShardedEngine::new`], and live until the
+//! engine is dropped — steady state does zero thread spawns and no
+//! scratch allocations per call (each worker keeps its own
+//! [`ShardScratch`]; the returned output `Vec` is the one per-call
+//! allocation).
+//! Every call to [`InferenceEngine::responses`] hands each participating
+//! worker one [`Job`] over its channel and then blocks on the shared
+//! completion channel until all dispatched jobs are acknowledged; workers
+//! it didn't use stay parked in `recv`. `Drop` closes the job channels
+//! and joins every thread. This replaces PR 1's per-call
+//! [`std::thread::scope`], whose spawn/join pair dominated small-batch
+//! latency (ROADMAP follow-up (c)) — `Server::start_sharded` now reuses
+//! one pool across every micro-batch.
 
+use crate::encoding::thermometer::ThermometerEncoder;
 use crate::model::ensemble::UleenModel;
 use crate::model::flat::{FlatBatchScratch, FlatModel};
 use crate::runtime::InferenceEngine;
-use crate::util::bitvec::BitVec;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
 
-/// Per-shard reusable state: encoded tile + batch-kernel scratch.
+/// Per-shard reusable state: fused-kernel scratch + response staging.
+/// Owned by its worker thread; shapes follow each job exactly (every
+/// buffer is cleared and resized per use), so model swaps are safe.
 #[derive(Default)]
 struct ShardScratch {
-    enc: Vec<BitVec>,
     batch: FlatBatchScratch,
     resp: Vec<i32>,
 }
 
-/// An [`InferenceEngine`] that splits every batch across `shards` worker
-/// threads, each running [`FlatModel::responses_batch`] on its own row
-/// range. Results are bit-exact with [`NativeEngine`] and the reference
-/// ensemble (asserted by the conformance proptests).
+/// One unit of work: a contiguous row range of the current batch.
+///
+/// Raw pointers stand in for borrows because the pool threads outlive any
+/// single call. SAFETY contract (upheld by [`ShardedEngine::responses`]):
+/// `flat`/`encoder` point into the engine, `x` into the caller's input
+/// and `out` into the call's output buffer; the dispatching call holds
+/// `&mut self` and blocks until every job is acknowledged, so all four
+/// outlive the job, nothing mutates the shared inputs meanwhile, and
+/// `out` ranges of concurrent jobs are disjoint by construction.
+struct Job {
+    flat: *const FlatModel,
+    encoder: *const ThermometerEncoder,
+    x: *const f32,
+    out: *mut f32,
+    rows: usize,
+    f: usize,
+    m: usize,
+}
+
+// SAFETY: see the `Job` contract above — the pointers are only
+// dereferenced while the dispatching `responses` call keeps their
+// targets alive and unaliased.
+unsafe impl Send for Job {}
+
+/// An [`InferenceEngine`] that splits every batch across a persistent
+/// pool of `shards` worker threads, each running the fused slice kernel
+/// on its own contiguous row range. Results are bit-exact with
+/// [`NativeEngine`] and the reference ensemble (asserted by the
+/// conformance proptests), and repeated calls reuse the same threads
+/// (asserted by `pool_threads_spawn_once_across_calls`).
 ///
 /// [`NativeEngine`]: crate::runtime::NativeEngine
 pub struct ShardedEngine {
     pub model: UleenModel,
     flat: FlatModel,
     shards: usize,
-    scratch: Vec<ShardScratch>,
+    /// job channel per worker, index-aligned with `handles`
+    job_txs: Vec<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+    /// shared completion channel: one `true` per finished job
+    done_rx: Receiver<bool>,
+    /// total threads ever spawned by this engine (pool-liveness witness)
+    spawned: Arc<AtomicUsize>,
 }
 
 impl ShardedEngine {
-    /// `shards` worker threads (clamped to ≥ 1). A batch of `n` rows uses
-    /// at most `min(shards, n)` threads, so tiny batches stay cheap.
+    /// Spawn the persistent pool: `shards` worker threads (clamped to
+    /// ≥ 1), parked on their job channels until the first call. A batch
+    /// of `n` rows dispatches to at most `min(shards, n)` of them, so
+    /// tiny batches stay cheap.
     pub fn new(model: UleenModel, shards: usize) -> Self {
         let shards = shards.max(1);
         let flat = FlatModel::compile(&model);
-        let scratch = (0..shards).map(|_| ShardScratch::default()).collect();
-        Self { model, flat, shards, scratch }
+        let spawned = Arc::new(AtomicUsize::new(0));
+        let (done_tx, done_rx) = channel();
+        let mut job_txs = Vec::with_capacity(shards);
+        let mut handles = Vec::with_capacity(shards);
+        for w in 0..shards {
+            let (tx, rx) = channel::<Job>();
+            let done = done_tx.clone();
+            let spawned = spawned.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("uleen-shard-{w}"))
+                .spawn(move || {
+                    spawned.fetch_add(1, Ordering::SeqCst);
+                    worker_loop(&rx, &done);
+                })
+                .expect("failed to spawn shard worker");
+            job_txs.push(tx);
+            handles.push(handle);
+        }
+        Self { model, flat, shards, job_txs, handles, done_rx, spawned }
     }
 
     pub fn shards(&self) -> usize {
         self.shards
+    }
+
+    /// How many pool threads this engine has ever spawned. Steady state
+    /// this equals [`ShardedEngine::shards`] forever — calls never spawn.
+    pub fn threads_spawned(&self) -> usize {
+        self.spawned.load(Ordering::SeqCst)
+    }
+
+    /// Replace the served model in place (recompiles the flat layout).
+    /// The pool is untouched: workers hold no model state — each job
+    /// carries its model/encoder pointers, and worker scratch reshapes to
+    /// every job exactly — so models of different encoded widths or class
+    /// counts can be swapped through one running pool.
+    pub fn swap_model(&mut self, model: UleenModel) {
+        self.flat = FlatModel::compile(&model);
+        self.model = model;
+    }
+}
+
+impl Drop for ShardedEngine {
+    fn drop(&mut self) {
+        // Closing the job channels wakes each worker out of `recv`;
+        // joining makes engine drop a clean rendezvous (no detached
+        // threads holding dangling model pointers).
+        self.job_txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(rx: &Receiver<Job>, done: &Sender<bool>) {
+    let mut scratch = ShardScratch::default();
+    while let Ok(job) = rx.recv() {
+        // Catch panics so a poisoned kernel invariant surfaces as a
+        // deterministic panic in the dispatching call instead of a
+        // deadlocked `done_rx.recv()`.
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // SAFETY: the `Job` contract (see its doc) — the dispatching
+            // `responses` call keeps all four pointers alive and the out
+            // range exclusive until we acknowledge below.
+            let flat = unsafe { &*job.flat };
+            let encoder = unsafe { &*job.encoder };
+            let x = unsafe { std::slice::from_raw_parts(job.x, job.rows * job.f) };
+            let out =
+                unsafe { std::slice::from_raw_parts_mut(job.out, job.rows * job.m) };
+            scratch.resp.clear();
+            scratch.resp.resize(job.rows * job.m, 0);
+            flat.responses_batch_fused(
+                encoder,
+                x,
+                job.rows,
+                &mut scratch.batch,
+                &mut scratch.resp,
+            );
+            for (o, &v) in out.iter_mut().zip(scratch.resp.iter()) {
+                *o = v as f32;
+            }
+        }))
+        .is_ok();
+        if done.send(ok).is_err() {
+            break; // engine gone: exit quietly
+        }
     }
 }
 
@@ -75,37 +209,56 @@ impl InferenceEngine for ShardedEngine {
         if n == 0 {
             return Ok(out);
         }
+        // Contiguous row ranges of `per` rows each (the last may be
+        // short): shard w owns rows [w*per, w*per+rows) and writes them
+        // straight into its region of `out` — deterministic row-major
+        // stitching, no post-pass.
         let workers = self.shards.min(n);
-        // Contiguous row ranges of `per` rows each (the last may be short):
-        // shard w owns rows [w*per, w*per+rows) and writes them straight
-        // into its chunk of `out` — deterministic row-major stitching.
         let per = n.div_ceil(workers);
-        let flat = &self.flat;
-        let encoder = &self.model.encoder;
-        let bits = self.model.encoder.encoded_bits();
-        std::thread::scope(|scope| {
-            for ((w, chunk), scratch) in
-                out.chunks_mut(per * m).enumerate().zip(self.scratch.iter_mut())
-            {
-                let rows = chunk.len() / m;
-                let row0 = w * per;
-                let xs = &x[row0 * f..(row0 + rows) * f];
-                scope.spawn(move || {
-                    if scratch.enc.len() < rows || scratch.enc[0].len() != bits {
-                        scratch.enc = (0..rows).map(|_| BitVec::zeros(bits)).collect();
-                    }
-                    for i in 0..rows {
-                        encoder.encode_into(&xs[i * f..(i + 1) * f], &mut scratch.enc[i]);
-                    }
-                    scratch.resp.clear();
-                    scratch.resp.resize(rows * m, 0);
-                    flat.responses_batch(&scratch.enc[..rows], &mut scratch.batch, &mut scratch.resp);
-                    for (o, &v) in chunk.iter_mut().zip(scratch.resp.iter()) {
-                        *o = v as f32;
-                    }
-                });
+        // One as_mut_ptr() BEFORE dispatching anything: re-borrowing `out`
+        // after a worker has started writing through a previously derived
+        // pointer would invalidate that pointer's provenance under the
+        // aliasing model (Miri flags it), even though the ranges never
+        // overlap.
+        let out_ptr = out.as_mut_ptr();
+        let mut dispatched = 0usize;
+        let mut row0 = 0usize;
+        for tx in &self.job_txs {
+            if row0 >= n {
+                break;
             }
-        });
+            let rows = per.min(n - row0);
+            let job = Job {
+                flat: &self.flat,
+                encoder: &self.model.encoder,
+                x: x[row0 * f..].as_ptr(),
+                // SAFETY: in-bounds offset; ranges of distinct jobs are
+                // disjoint ([row0*m, (row0+rows)*m) with strictly
+                // increasing row0).
+                out: unsafe { out_ptr.add(row0 * m) },
+                rows,
+                f,
+                m,
+            };
+            tx.send(job).expect("shard worker exited while engine alive");
+            dispatched += 1;
+            row0 += rows;
+        }
+        // Block until every dispatched job is acknowledged — this is what
+        // makes the raw-pointer handoff sound (and keeps `&mut self`
+        // semantics: no two calls ever interleave on the pool). Drain ALL
+        // acks before surfacing a failure: unwinding with jobs still in
+        // flight would free `out` under a worker's pen.
+        let mut all_ok = true;
+        for _ in 0..dispatched {
+            all_ok &= self
+                .done_rx
+                .recv()
+                .expect("shard worker exited while engine alive");
+        }
+        if !all_ok {
+            panic!("shard worker panicked while evaluating a batch");
+        }
         Ok(out)
     }
 }
@@ -165,5 +318,47 @@ mod tests {
         let m = model();
         let sh = ShardedEngine::new(m, 0);
         assert_eq!(sh.shards(), 1);
+        assert!(sh.threads_spawned() <= 1);
+    }
+
+    #[test]
+    fn pool_threads_spawn_once_across_calls() {
+        let m = model();
+        let f = m.encoder.num_inputs;
+        let mut sh = ShardedEngine::new(m, 4);
+        // wait for all workers to come up (spawn happens in new(), the
+        // counter increment races only with this assertion, not with use)
+        while sh.threads_spawned() < 4 {
+            std::thread::yield_now();
+        }
+        for n in [1usize, 3, 64, 200, 7, 1, 129] {
+            let x = vec![0.5f32; n * f];
+            sh.responses(&x, n).unwrap();
+            assert_eq!(
+                sh.threads_spawned(),
+                4,
+                "steady state must never spawn: n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_results_identical_across_repeated_calls_and_shard_counts() {
+        let m = model();
+        let ds = synth_uci(5, uci_spec("vowel").unwrap());
+        let n = ds.n_test();
+        let mut first: Option<Vec<f32>> = None;
+        for shards in [1usize, 2, 5, 8] {
+            let mut sh = ShardedEngine::new(m.clone(), shards);
+            for call in 0..3 {
+                let got = sh.responses(&ds.test_x, n).unwrap();
+                match &first {
+                    None => first = Some(got),
+                    Some(want) => {
+                        assert_eq!(&got, want, "shards={shards} call={call}")
+                    }
+                }
+            }
+        }
     }
 }

@@ -164,14 +164,83 @@ fn prop_uln_roundtrip_random_models() {
     );
 }
 
+/// The fused tile encode must be bit-exact with the PR-1 sequence it
+/// replaces: per-sample `encode_into` into a `BitVec` followed by the
+/// sample-slice transpose. Random encoders (both threshold kinds, bit
+/// widths crossing the branchless/`partition_point` cutover), tile sizes
+/// 1/63/64, and degenerate (constant) feature columns.
+#[test]
+fn prop_fused_tile_encode_matches_encode_into_plus_transpose() {
+    check(
+        "fused-tile-encode",
+        &Config { cases: 60, ..Config::default() },
+        |rng, size| {
+            let n_inputs = 1 + size % 6;
+            let bits = 1 + rng.below(30) as usize; // crosses the t≤24 cutover
+            let kind = if rng.below(2) == 0 {
+                ThermometerKind::Linear
+            } else {
+                ThermometerKind::Gaussian
+            };
+            // every third case gets a constant (degenerate) column 0
+            let constant_col = rng.below(3) == 0;
+            let n_fit = 30 + size;
+            let data: Vec<f32> = (0..n_fit * n_inputs)
+                .map(|i| {
+                    if constant_col && i % n_inputs == 0 {
+                        42.0
+                    } else {
+                        (rng.f64() * 100.0) as f32
+                    }
+                })
+                .collect();
+            let nt = [1usize, 63, 64][rng.below(3) as usize];
+            let xs: Vec<f32> = (0..nt * n_inputs)
+                .map(|_| (rng.f64() * 120.0 - 10.0) as f32)
+                .collect();
+            (kind, data, n_inputs, bits, nt, xs)
+        },
+        |(kind, data, n_inputs, bits, nt, xs)| {
+            let enc = ThermometerEncoder::fit(*kind, data, *n_inputs, *bits);
+            let mut slices = Vec::new();
+            enc.encode_tile_slices(xs, *nt, &mut slices);
+            // PR-1 sequence: encode_into per sample, then transpose
+            let mut want = vec![0u64; enc.encoded_bits()];
+            let mut buf = uleen::util::bitvec::BitVec::zeros(enc.encoded_bits());
+            for s in 0..*nt {
+                enc.encode_into(&xs[s * n_inputs..(s + 1) * n_inputs], &mut buf);
+                for (w_idx, &w) in buf.words().iter().enumerate() {
+                    let mut w = w;
+                    while w != 0 {
+                        let bit = w.trailing_zeros() as usize;
+                        w &= w - 1;
+                        want[(w_idx << 6) | bit] |= 1u64 << s;
+                    }
+                }
+            }
+            if slices != want {
+                let src = slices
+                    .iter()
+                    .zip(want.iter())
+                    .position(|(a, b)| a != b)
+                    .unwrap();
+                return Err(format!("slice {src} differs (nt={nt}, bits={bits})"));
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Cross-engine conformance: every native inference path must agree
 /// BIT-EXACTLY on every sample — the reference ensemble
 /// (`UleenModel::predict`), the flat scalar kernel
-/// (`FlatModel::predict_encoded`), the bit-sliced batch kernel
-/// (`responses_batch` + argmax), and the sharded engine
-/// (`ShardedEngine::classify`). Batch sizes straddle the 64-sample tile
-/// boundary (0, 1, 63, 64, 65) and half the generated models are pruned
-/// (all-zero table slots + bias correction on the hot path).
+/// (`FlatModel::predict_encoded`), the bit-sliced batch kernel fed
+/// pre-encoded BitVecs (`responses_batch` + argmax), the fused slice
+/// kernel fed raw floats (`responses_batch_fused`), and the pooled
+/// sharded engine (`ShardedEngine::classify`, repeated calls through one
+/// persistent pool). Batch sizes straddle the 64-sample tile boundary
+/// (0, 1, 63, 64, 65) and half the generated models are pruned (all-zero
+/// table slots + bias correction on the hot path).
 #[test]
 fn prop_all_native_engines_agree_bit_exactly() {
     check(
@@ -206,6 +275,7 @@ fn prop_all_native_engines_agree_bit_exactly() {
             let mut es = uleen::model::ensemble::EnsembleScratch::default();
             let mut fs = FlatScratch::default();
             let mut bs = FlatBatchScratch::default();
+            let mut fbs = FlatBatchScratch::default();
             let mut native = NativeEngine::new(model.clone());
             let mut sharded = ShardedEngine::new(model.clone(), *shards);
             for n in [0usize, 1, 63, 64, 65] {
@@ -223,7 +293,7 @@ fn prop_all_native_engines_agree_bit_exactly() {
                     }
                     want.push(p_ref);
                 }
-                // bit-sliced batch kernel argmax
+                // bit-sliced batch kernel argmax (pre-encoded BitVecs)
                 let mut resp = vec![0i32; n * m];
                 flat.responses_batch(&encoded, &mut bs, &mut resp);
                 for i in 0..n {
@@ -232,15 +302,36 @@ fn prop_all_native_engines_agree_bit_exactly() {
                         return Err(format!("batch kernel != reference at n={n} row {i}"));
                     }
                 }
-                // NativeEngine (dispatches to the batch kernel for n > 1)
+                // fused slice kernel (raw floats → responses, no BitVec):
+                // must be bit-identical to the BitVec batch kernel
+                let mut fused = vec![0i32; n * m];
+                flat.responses_batch_fused(&model.encoder, x, n, &mut fbs, &mut fused);
+                if fused != resp {
+                    return Err(format!("fused kernel != batch kernel at n={n}"));
+                }
+                // NativeEngine (dispatches to the fused kernel for n > 1)
                 let p_native = native.classify(x, n).map_err(|e| e.to_string())?;
                 if p_native != want {
                     return Err(format!("NativeEngine != reference at n={n}"));
                 }
-                // ShardedEngine (row-major stitching across threads)
+                // Pooled ShardedEngine (row-major stitching across the
+                // persistent worker pool): repeated calls through the same
+                // pool must stay bit-identical, with zero new spawns
                 let p_sharded = sharded.classify(x, n).map_err(|e| e.to_string())?;
                 if p_sharded != want {
                     return Err(format!("ShardedEngine({shards}) != reference at n={n}"));
+                }
+                let p_again = sharded.classify(x, n).map_err(|e| e.to_string())?;
+                if p_again != p_sharded {
+                    return Err(format!("ShardedEngine({shards}) unstable across calls at n={n}"));
+                }
+                // (startup increments race benignly, so only the upper
+                // bound is meaningful here: calls must never add threads)
+                if sharded.threads_spawned() > *shards {
+                    return Err(format!(
+                        "pool spawned {} threads, cap is {shards}",
+                        sharded.threads_spawned()
+                    ));
                 }
             }
             Ok(())
