@@ -20,6 +20,7 @@
 use std::sync::mpsc;
 use std::time::Duration;
 use uleen::coordinator::batcher::BatcherConfig;
+use uleen::coordinator::router::{ModelRouter, Tier};
 use uleen::coordinator::server::{Server, ServerConfig};
 use uleen::data::synth_mnist;
 use uleen::runtime::{InferenceEngine, NativeEngine};
@@ -100,6 +101,104 @@ fn serve_on(
     Ok(preds)
 }
 
+/// Zoo serving leg: build S/M tiers below the served model, start a zoo
+/// server, drive mixed cascade + tier-pinned traffic, and assert every
+/// prediction equals the local router's (cascade) / the pinned tier's
+/// engine (pinned). Prints per-tier counters from the shutdown report.
+fn serve_zoo(
+    large: &uleen::model::ensemble::UleenModel,
+    ds: &uleen::data::Dataset,
+    requests: usize,
+) -> anyhow::Result<()> {
+    let mut zoo = Vec::new();
+    // the S and M presets below the served model (the shared zoo table)
+    for (ipf, epf, bits) in &uleen::train::oneshot::ZOO_PRESET_SHAPES[..2] {
+        zoo.push(
+            uleen::train::oneshot::train_oneshot(
+                ds,
+                &uleen::train::oneshot::OneShotConfig {
+                    inputs_per_filter: *ipf,
+                    entries_per_filter: *epf,
+                    therm_bits: *bits,
+                    ..Default::default()
+                },
+            )
+            .0,
+        );
+    }
+    zoo.push(large.clone());
+    let n_test = ds.n_test();
+    // Ground truth: one local router (batched cascade) + each tier alone.
+    let mut local = ModelRouter::from_models(&zoo);
+    let cascade_want = local.classify_cascade_batch(&ds.test_x, n_test)?;
+    let mut tier_want = Vec::new();
+    for m in &zoo {
+        tier_want.push(NativeEngine::new(m.clone()).classify(&ds.test_x, n_test)?);
+    }
+
+    let server = Server::start_zoo(config(2), zoo, 0.05)?;
+    let (tx, rx) = mpsc::channel();
+    let mut id2want = std::collections::HashMap::new();
+    let mut submitted = 0usize;
+    let mut received = 0usize;
+    let window = 256usize;
+    let tiers = [Tier::Fast, Tier::Balanced, Tier::Accurate];
+    macro_rules! recv_one {
+        () => {{
+            let (id, p, _) = rx.recv_timeout(Duration::from_secs(60))?;
+            let want = id2want[&id];
+            anyhow::ensure!(
+                p == want,
+                "zoo served prediction {p} != ground truth {want} (request {id})"
+            );
+            received += 1;
+        }};
+    }
+    for i in 0..requests {
+        let row = i % n_test;
+        let (tier, want) = if i % 4 == 3 {
+            let t = (i / 4) % 3;
+            (Some(tiers[t]), tier_want[t][row])
+        } else {
+            (None, cascade_want[row])
+        };
+        loop {
+            match server.submit_tiered(ds.test_row(row).to_vec(), tier, tx.clone()) {
+                Ok(id) => {
+                    id2want.insert(id, want);
+                    submitted += 1;
+                    break;
+                }
+                Err(uleen::coordinator::batcher::SubmitError::Full) => {
+                    std::thread::sleep(Duration::from_micros(20));
+                }
+                Err(e) => anyhow::bail!("submit: {e:?}"),
+            }
+        }
+        while submitted - received > window {
+            recv_one!();
+        }
+    }
+    drop(tx);
+    while received < submitted {
+        recv_one!();
+    }
+    let rep = server.metrics.report(64);
+    server.shutdown();
+    println!(
+        "[zoo ×3 tiers] {} req | {:.0} inf/s | p50/p99 latency {:.0}/{:.0} µs | \
+         tier served {:?} | escalations {:?}",
+        submitted,
+        rep.throughput_rps,
+        rep.latency_us_p50,
+        rep.latency_us_p99,
+        rep.tier_served,
+        rep.tier_escalations
+    );
+    println!("zoo agreement: batched cascade + pinned tiers vs local ground truth — exact ✓");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let requests = 20_000;
     // Same seed + split as training: test rows are indices 8000..10000 of
@@ -153,6 +252,15 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("engine agreement: native vs sharded — exact ✓");
+
+    // Tiered zoo serving: every worker owns a ULN-S/M/L router. Default
+    // traffic runs the BATCHED confidence cascade (whole micro-batch on
+    // the small tier through the fused kernel, thin-margin rows gathered
+    // and escalated); every 4th request is pinned to a cycling tier.
+    // Every completion is checked against local single-router ground
+    // truth — the batched cascade is bit-exact no matter how the dynamic
+    // batcher slices the traffic.
+    serve_zoo(&model, &ds, 6_000)?;
 
     // PJRT engine serving (the AOT artifact on the hot path).
     #[cfg(feature = "pjrt")]

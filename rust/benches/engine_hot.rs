@@ -8,7 +8,9 @@
 //! Headline numbers: the batch-kernel sweep (per-sample vs bit-sliced
 //! throughput at batch ≥ 256, target ≥ 4× single-thread) and the fused
 //! sweep (fused slice path vs the PR-1 encode+transpose+kernel sequence
-//! at batch 256, target ≥ 1.5×), then the shard sweep on top.
+//! at batch 256, target ≥ 1.5×), then the shard sweep and the zoo
+//! cascade sweep (tier-pinned Fast/Accurate vs the batched confidence
+//! cascade at batch 256) on top.
 //!
 //! Flags (after `--`, e.g. `cargo bench --bench engine_hot -- --json`):
 //! * `--json`  — also emit `BENCH_engine_hot.json` (stage → ns/sample,
@@ -18,6 +20,7 @@
 //!   CI run that still exercises every stage under optimization.
 
 use uleen::bench::harness::{bench_fn, BenchResult};
+use uleen::coordinator::router::{ModelRouter, Tier};
 use uleen::data::synth_mnist;
 use uleen::model::ensemble::EnsembleScratch;
 use uleen::model::flat::{FlatBatchScratch, FlatModel};
@@ -209,6 +212,53 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // == cascade sweep: the ULN-S/M/L zoo through the fused batch kernel ==
+    // Tier-pinned Fast-only vs the batched confidence cascade vs pinned
+    // Accurate-only, all at batch 256 — the cascade should sit between
+    // the two pins (most rows resolve on the small model; thin-margin
+    // rows pay for the bigger tiers).
+    println!("\n== cascade sweep: fast-only vs batched cascade vs accurate-only, batch 256 ==");
+    let mut zoo_models = Vec::new();
+    for (ipf, epf, bits) in uleen::train::oneshot::ZOO_PRESET_SHAPES {
+        let (zm, _) = uleen::train::oneshot::train_oneshot(
+            &ds,
+            &uleen::train::oneshot::OneShotConfig {
+                inputs_per_filter: ipf,
+                entries_per_filter: epf,
+                therm_bits: bits,
+                ..Default::default()
+            },
+        );
+        zoo_models.push(zm);
+    }
+    let mut router = ModelRouter::from_models(&zoo_models);
+    let bs = 256usize;
+    let zx = &ds.test_x[..bs * f];
+    let r_fast = bench_fn("zoo fast-only ×256", w_swp, i_swp, bs as f64, || {
+        std::hint::black_box(router.classify_batch(zx, bs, Tier::Fast).unwrap());
+    });
+    let t_zoo_fast = r_fast.throughput_per_sec();
+    record(&mut report, r_fast);
+    let r_casc = bench_fn("zoo cascade   ×256", w_swp, i_swp, bs as f64, || {
+        std::hint::black_box(router.classify_cascade_batch(zx, bs).unwrap());
+    });
+    let t_zoo_cascade = r_casc.throughput_per_sec();
+    record(&mut report, r_casc);
+    let r_acc = bench_fn("zoo accurate  ×256", w_swp, i_swp, bs as f64, || {
+        std::hint::black_box(router.classify_batch(zx, bs, Tier::Accurate).unwrap());
+    });
+    let t_zoo_accurate = r_acc.throughput_per_sec();
+    record(&mut report, r_acc);
+    // fast-path fraction from one counted run (bench runs polluted stats)
+    router.stats = Default::default();
+    router.classify_cascade_batch(zx, bs).unwrap();
+    let zoo_fast_path = router.fast_path_fraction();
+    println!(
+        "  -> cascade {:.0} inf/s between fast-only {:.0} and accurate-only {:.0}; \
+         fast-path fraction {:.2}",
+        t_zoo_cascade, t_zoo_fast, t_zoo_accurate, zoo_fast_path
+    );
+
     // engine-level batch API (what the coordinator calls)
     let flat_x: Vec<f32> = ds.test_x[..n * f].to_vec();
     let r = bench_fn("NativeEngine.classify batch", w_hot, i_hot, n as f64, || {
@@ -259,6 +309,13 @@ fn main() -> anyhow::Result<()> {
             doc.set("bitsliced_speedup_b256", Json::Num(s));
         }
         doc.set("fused_speedup_vs_pr1_b256", Json::Num(fused_speedup));
+        let mut cascade = Json::obj();
+        cascade
+            .set("fast_only_sps", Json::Num(t_zoo_fast))
+            .set("cascade_sps", Json::Num(t_zoo_cascade))
+            .set("accurate_only_sps", Json::Num(t_zoo_accurate))
+            .set("fast_path_fraction", Json::Num(zoo_fast_path));
+        doc.set("cascade_sweep_b256", cascade);
         let path = "BENCH_engine_hot.json";
         std::fs::write(path, doc.to_string())?;
         println!("(wrote {path})");

@@ -6,7 +6,14 @@
 //! waiting at most `max_wait` after the first request arrives — the classic
 //! size-or-deadline batching rule the paper's fixed-batch accelerator
 //! implies for real deployments.
+//!
+//! Requests optionally carry a [`Tier`] (zoo serving): a batch is always
+//! **tier-homogeneous** — `next_batch` takes the longest same-tier prefix
+//! of the queue, so a worker can dispatch the whole micro-batch as one
+//! tier-pinned (`Some(tier)`) or cascade (`None`) engine call. FIFO order
+//! is preserved; mixed traffic simply splits at tier boundaries.
 
+use crate::runtime::Tier;
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -16,6 +23,10 @@ use std::time::{Duration, Instant};
 pub struct Request {
     pub id: u64,
     pub features: Vec<f32>,
+    /// `Some(tier)` pins the request to one zoo tier; `None` means the
+    /// default path (confidence cascade on zoo servers, the single model
+    /// otherwise).
+    pub tier: Option<Tier>,
     pub enqueued: Instant,
     /// Completion channel: (request id, predicted class, response scores).
     pub done: std::sync::mpsc::Sender<(u64, usize, Vec<f32>)>,
@@ -90,36 +101,77 @@ impl BoundedQueue {
 
     /// Take the next micro-batch: blocks until at least one request is
     /// available (or closed+empty → None), then waits up to `max_wait` for
-    /// the batch to fill to `max_batch`.
+    /// the batch to fill to `max_batch`. The batch is the longest
+    /// same-tier prefix of the queue (≤ `max_batch`), so it can be
+    /// dispatched as a single tier-pinned or cascade engine call.
     pub fn next_batch(&self) -> Option<Vec<Request>> {
+        // Dwelling is pointless once a tier boundary lands inside the
+        // takeable prefix: arrivals only append behind it, so the
+        // same-tier batch we will take can never grow — dispatch
+        // immediately instead of burning max_wait.
+        let prefix_capped = |q: &VecDeque<Request>| match q.front() {
+            None => false,
+            Some(head) => {
+                let lim = q.len().min(self.cfg.max_batch);
+                (1..lim).any(|i| q[i].tier != head.tier)
+            }
+        };
         let mut st = self.state.lock().unwrap();
         loop {
-            if !st.queue.is_empty() {
-                break;
+            // block until at least one request is queued (or closed+empty)
+            while st.queue.is_empty() {
+                if st.closed {
+                    return None;
+                }
+                st = self.nonempty.wait(st).unwrap();
             }
-            if st.closed {
-                return None;
+            // got a head request; optionally dwell for more
+            let deadline = Instant::now() + self.cfg.max_wait;
+            while !st.queue.is_empty()
+                && st.queue.len() < self.cfg.max_batch
+                && !st.closed
+                && !prefix_capped(&st.queue)
+            {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (next, timeout) = self
+                    .nonempty
+                    .wait_timeout(st, deadline - now)
+                    .unwrap();
+                st = next;
+                if timeout.timed_out() {
+                    break;
+                }
             }
-            st = self.nonempty.wait(st).unwrap();
+            // A competing consumer may have drained the queue while we
+            // slept in the dwell (the queue is MPMC) — restart the
+            // blocking wait rather than take an empty batch.
+            if st.queue.is_empty() {
+                continue;
+            }
+            // Longest same-tier prefix: requests behind a tier boundary
+            // stay queued for the next batch (FIFO preserved). Never
+            // empty: the queue is non-empty and we hold the lock.
+            let lim = st.queue.len().min(self.cfg.max_batch);
+            let tier = st.queue[0].tier;
+            let mut take = 1;
+            while take < lim && st.queue[take].tier == tier {
+                take += 1;
+            }
+            let batch: Vec<Request> = st.queue.drain(..take).collect();
+            // We may have absorbed notifications meant for other
+            // consumers while dwelling; if a remainder stays queued
+            // (routine with tier splits, not just len > max_batch),
+            // wake one peer so it isn't stranded until the next submit.
+            let leftover = !st.queue.is_empty();
+            drop(st);
+            if leftover {
+                self.nonempty.notify_one();
+            }
+            return Some(batch);
         }
-        // got the first request; optionally dwell for more
-        let deadline = Instant::now() + self.cfg.max_wait;
-        while st.queue.len() < self.cfg.max_batch && !st.closed {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            let (next, timeout) = self
-                .nonempty
-                .wait_timeout(st, deadline - now)
-                .unwrap();
-            st = next;
-            if timeout.timed_out() {
-                break;
-            }
-        }
-        let take = st.queue.len().min(self.cfg.max_batch);
-        Some(st.queue.drain(..take).collect())
     }
 
     /// Close the queue: no new submissions; workers drain what remains.
@@ -136,7 +188,15 @@ mod tests {
     use std::sync::Arc;
 
     fn req(id: u64, tx: &mpsc::Sender<(u64, usize, Vec<f32>)>) -> Request {
-        Request { id, features: vec![0.0], enqueued: Instant::now(), done: tx.clone() }
+        req_at(id, None, tx)
+    }
+
+    fn req_at(
+        id: u64,
+        tier: Option<Tier>,
+        tx: &mpsc::Sender<(u64, usize, Vec<f32>)>,
+    ) -> Request {
+        Request { id, features: vec![0.0], tier, enqueued: Instant::now(), done: tx.clone() }
     }
 
     #[test]
@@ -156,6 +216,58 @@ mod tests {
         assert_eq!(b2.len(), 4);
         assert_eq!(b1[0].id, 0);
         assert_eq!(b2[0].id, 4, "FIFO order preserved");
+    }
+
+    #[test]
+    fn batches_split_at_tier_boundaries_preserving_fifo() {
+        let q = BoundedQueue::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(10),
+            capacity: 100,
+        });
+        let (tx, _rx) = mpsc::channel();
+        // cascade, cascade | fast, fast, fast | accurate | cascade
+        for (id, tier) in [
+            (0, None),
+            (1, None),
+            (2, Some(Tier::Fast)),
+            (3, Some(Tier::Fast)),
+            (4, Some(Tier::Fast)),
+            (5, Some(Tier::Accurate)),
+            (6, None),
+        ] {
+            q.submit(req_at(id, tier, &tx)).unwrap();
+        }
+        let batches: Vec<Vec<u64>> = (0..4)
+            .map(|_| q.next_batch().unwrap().iter().map(|r| r.id).collect())
+            .collect();
+        assert_eq!(
+            batches,
+            [vec![0u64, 1], vec![2, 3, 4], vec![5], vec![6]],
+            "each batch is one same-tier run, in FIFO order"
+        );
+    }
+
+    #[test]
+    fn tier_boundary_cuts_the_dwell_short() {
+        // Once a different-tier request queues behind the head, the
+        // takeable same-tier prefix can never grow — next_batch must
+        // dispatch immediately instead of sleeping out max_wait.
+        let q = BoundedQueue::new(BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_secs(5),
+            capacity: 100,
+        });
+        let (tx, _rx) = mpsc::channel();
+        q.submit(req_at(0, None, &tx)).unwrap();
+        q.submit(req_at(1, Some(Tier::Fast), &tx)).unwrap();
+        let t0 = Instant::now();
+        let b = q.next_batch().unwrap();
+        assert_eq!(b.len(), 1, "only the head's same-tier prefix is taken");
+        assert!(
+            t0.elapsed() < Duration::from_secs(1),
+            "boundary-capped batch must not dwell out max_wait"
+        );
     }
 
     #[test]
@@ -198,6 +310,42 @@ mod tests {
         let b = q.next_batch().unwrap();
         assert_eq!(b.len(), 1);
         assert!(t0.elapsed() >= Duration::from_millis(4), "should dwell ~max_wait");
+    }
+
+    #[test]
+    fn competing_consumers_never_panic_on_a_drained_queue() {
+        // MPMC race: two consumers can both pass the non-empty check and
+        // dwell; the loser wakes to a queue its rival already drained and
+        // must loop back to the blocking wait, not index into nothing.
+        let q = Arc::new(BoundedQueue::new(BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(20),
+            capacity: 100,
+        }));
+        let consumers: Vec<_> = (0..2)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut got = 0usize;
+                    while let Some(b) = q.next_batch() {
+                        got += b.len();
+                    }
+                    got
+                })
+            })
+            .collect();
+        let (tx, _rx) = mpsc::channel();
+        for i in 0..5 {
+            q.submit(req(i, &tx)).unwrap();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        std::thread::sleep(Duration::from_millis(30));
+        q.close();
+        let total: usize = consumers
+            .into_iter()
+            .map(|h| h.join().expect("consumer must not panic"))
+            .sum();
+        assert_eq!(total, 5, "every request delivered exactly once");
     }
 
     #[test]

@@ -1,22 +1,43 @@
-//! `uleen serve` — run the serving coordinator on a trained model with a
-//! synthetic open-loop load and print the metrics report.
+//! `uleen serve` — run the serving coordinator on a trained model (or a
+//! tiered model zoo) with a synthetic open-loop load and print the
+//! metrics report.
+//!
+//! Two modes:
+//!
+//! * `--model m.uln` — single model, per-worker [`NativeEngine`]s or one
+//!   sharded engine (`--shards N`).
+//! * `--zoo s,m,l` — tiered zoo serving ([`Server::start_zoo`]): each
+//!   worker owns a `ModelRouter` over the listed models (comma-separated
+//!   size presets `s|m|l` trained on `--dataset`, or `.uln` paths, small
+//!   → large). Default traffic runs the **batched confidence cascade**
+//!   (`--cascade-margin` sets the escalation threshold); every 4th
+//!   request is pinned to a cycling tier to exercise tier-homogeneous
+//!   batching. Per-tier served/escalation/latency counters print at
+//!   shutdown.
 
-use crate::coordinator::server::{Server, ServerConfig};
 use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::metrics::MetricsReport;
+use crate::coordinator::router::Tier;
+use crate::coordinator::server::{Server, ServerConfig};
 use crate::data::synth_mnist;
 use crate::model::uln_format;
 use crate::runtime::NativeEngine;
 #[cfg(feature = "pjrt")]
 use crate::runtime::PjrtEngine;
+use crate::train::oneshot::train_oneshot;
 use crate::util::cli::Args;
 use std::path::Path;
 use std::sync::mpsc;
 use std::time::Duration;
 
 pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    if let Some(spec) = args.get("zoo") {
+        let spec = spec.to_string();
+        return cmd_serve_zoo(args, &spec);
+    }
     let model_path = args
         .get("model")
-        .ok_or_else(|| anyhow::anyhow!("--model <file.uln> required"))?;
+        .ok_or_else(|| anyhow::anyhow!("--model <file.uln> (or --zoo s,m,l) required"))?;
     let batch = args.get_usize("batch", 16).map_err(anyhow::Error::msg)?;
     let requests = args.get_usize("requests", 10_000).map_err(anyhow::Error::msg)?;
     let workers = args.get_usize("workers", 4).map_err(anyhow::Error::msg)?;
@@ -74,15 +95,51 @@ pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             test_y: vec![0; n],
         }
     };
+    let (correct, delivered, submitted) = drive_load(&server, &ds, requests, false)?;
+    let report = server.metrics.report(batch);
+    server.shutdown();
+    println!("served {} requests on {} workers (batch {})", submitted, workers, batch);
+    print_report(&report, correct, delivered, submitted);
+    Ok(())
+}
+
+/// Materialize the dataset that trains zoo presets and generates load
+/// (shared name resolver; same SynthMNIST split defaults the help text
+/// documents for every other subcommand).
+fn serve_dataset(args: &Args) -> anyhow::Result<crate::data::Dataset> {
+    let name = args.get_or("dataset", "mnist");
+    let seed = args.get_u64("seed", 2024).map_err(anyhow::Error::msg)?;
+    let tr = args.get_usize("mnist-train", 8000).map_err(anyhow::Error::msg)?;
+    let te = args.get_usize("mnist-test", 2000).map_err(anyhow::Error::msg)?;
+    crate::data::load_by_name(name, seed, tr, te)
+}
+
+/// Submit the open-loop load and drain completions. When `mixed_tiers`,
+/// every 4th request is pinned to a cycling tier (fast → balanced →
+/// accurate) and the rest take the cascade; otherwise everything goes
+/// down the default path. Returns (correct, delivered, submitted) —
+/// delivered can trail submitted when the server drops work (malformed
+/// requests, failed batches), which its metrics count; a drop must not
+/// abort the run before the report that exists to expose it prints.
+fn drive_load(
+    server: &Server,
+    ds: &crate::data::Dataset,
+    requests: usize,
+    mixed_tiers: bool,
+) -> anyhow::Result<(usize, usize, usize)> {
     let (tx, rx) = mpsc::channel();
-    let mut correct = 0usize;
-    let mut submitted = 0usize;
     let n_test = ds.n_test();
     let mut id2label = std::collections::HashMap::new();
+    let mut submitted = 0usize;
     for i in 0..requests {
         let row = ds.test_row(i % n_test).to_vec();
+        let tier = if mixed_tiers && i % 4 == 3 {
+            Some([Tier::Fast, Tier::Balanced, Tier::Accurate][(i / 4) % 3])
+        } else {
+            None
+        };
         loop {
-            match server.submit(row.clone(), tx.clone()) {
+            match server.submit_tiered(row.clone(), tier, tx.clone()) {
                 Ok(id) => {
                     id2label.insert(id, ds.test_y[i % n_test] as usize);
                     submitted += 1;
@@ -96,15 +153,30 @@ pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         }
     }
     drop(tx);
+    let mut correct = 0usize;
+    let mut delivered = 0usize;
     for _ in 0..submitted {
-        let (id, pred, _) = rx.recv_timeout(Duration::from_secs(30))?;
-        if id2label.get(&id) == Some(&pred) {
-            correct += 1;
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok((id, pred, _)) => {
+                delivered += 1;
+                if id2label.get(&id) == Some(&pred) {
+                    correct += 1;
+                }
+            }
+            // every sender gone: the remaining completions were dropped
+            // by the server and show up in its malformed/failed counters
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            Err(e) => anyhow::bail!("serving stalled: {e:?}"),
         }
     }
-    let report = server.metrics.report(batch);
-    server.shutdown();
-    println!("served {} requests on {} workers (batch {})", submitted, workers, batch);
+    Ok((correct, delivered, submitted))
+}
+
+/// The shutdown report both serve modes share: headline numbers,
+/// accuracy over DELIVERED completions, drop counters, per-tier lines
+/// for zoo servers (the report itself knows its zoo depth — 0 =
+/// single-model, no tier lines), and the JSON line.
+fn print_report(report: &MetricsReport, correct: usize, delivered: usize, submitted: usize) {
     println!(
         "throughput: {:.0} inf/s | latency p50/p99: {:.1}/{:.1} µs | batch fill {:.0}%",
         report.throughput_rps,
@@ -112,11 +184,103 @@ pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         report.latency_us_p99,
         report.mean_batch_fill * 100.0
     );
+    for (i, name) in crate::coordinator::router::tier_names(report.num_tiers)
+        .iter()
+        .enumerate()
+        .take(report.num_tiers)
+    {
+        println!(
+            "  tier {name:<9} served {:>8} samples | escalated {:>7} | mean engine {:.2} µs/sample",
+            report.tier_served[i], report.tier_escalations[i], report.tier_mean_us[i]
+        );
+    }
+    if report.num_tiers > 0 {
+        let t0 = report.tier_served[0];
+        if t0 > 0 {
+            println!(
+                "tier-0 resolution rate: {:.1}% (served minus escalations, incl. pinned-fast)",
+                (t0 - report.tier_escalations[0].min(t0)) as f64 / t0 as f64 * 100.0
+            );
+        }
+    }
     println!(
-        "accuracy on served traffic: {:.4} | rejected(full): {}",
-        correct as f64 / submitted as f64,
-        report.rejected_full
+        "accuracy on delivered traffic: {:.4} ({delivered}/{submitted} delivered) | \
+         rejected(full): {} | malformed: {} | failed batches: {}",
+        correct as f64 / delivered.max(1) as f64,
+        report.rejected_full,
+        report.malformed,
+        report.batches_failed
     );
     println!("json: {}", report.to_json().to_string());
+}
+
+fn cmd_serve_zoo(args: &Args, spec: &str) -> anyhow::Result<()> {
+    let batch = args.get_usize("batch", 64).map_err(anyhow::Error::msg)?;
+    let requests = args.get_usize("requests", 10_000).map_err(anyhow::Error::msg)?;
+    let workers = args.get_usize("workers", 2).map_err(anyhow::Error::msg)?;
+    let margin = args.get_f64("cascade-margin", 0.05).map_err(anyhow::Error::msg)? as f32;
+    anyhow::ensure!(args.get("shards").is_none(), "--zoo and --shards are mutually exclusive");
+    anyhow::ensure!(args.get("hlo").is_none(), "--zoo and --hlo are mutually exclusive");
+    anyhow::ensure!(
+        args.get("model").is_none(),
+        "--zoo and --model are mutually exclusive (list the .uln path inside --zoo instead)"
+    );
+    let tokens: Vec<&str> = spec
+        .split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .collect();
+    anyhow::ensure!(
+        !tokens.is_empty(),
+        "--zoo wants 1..=3 comma-separated tiers (presets s|m|l or .uln paths), got '{spec}'"
+    );
+
+    let ds = serve_dataset(args)?;
+    let mut models = Vec::new();
+    for tok in tokens {
+        let model = if tok.contains('.') || tok.contains('/') {
+            let (m, _) = uln_format::load(Path::new(tok))?;
+            println!("loaded '{tok}': {} ({:.2} KiB)", m.name, m.size_kib());
+            m
+        } else {
+            let cfg = crate::train::oneshot::zoo_preset(tok).ok_or_else(|| {
+                anyhow::anyhow!("unknown zoo tier '{tok}' (want s|m|l or a .uln path)")
+            })?;
+            let (m, rep) = train_oneshot(&ds, &cfg);
+            println!(
+                "trained preset '{tok}' on {}: {:.2} KiB, val acc {:.4}",
+                ds.name,
+                m.size_kib(),
+                rep.val_accuracy
+            );
+            m
+        };
+        models.push(model);
+    }
+    let tiers = models.len();
+    anyhow::ensure!(
+        models[0].encoder.num_inputs == ds.num_features,
+        "zoo feature width {} != dataset width {} (loaded models must match --dataset)",
+        models[0].encoder.num_inputs,
+        ds.num_features
+    );
+    let cfg = ServerConfig {
+        batcher: BatcherConfig {
+            max_batch: batch,
+            max_wait: Duration::from_micros(200),
+            capacity: 16384,
+        },
+        workers,
+    };
+    let server = Server::start_zoo(cfg, models, margin)?;
+    let (correct, delivered, submitted) = drive_load(&server, &ds, requests, true)?;
+    let report = server.metrics.report(batch);
+    server.shutdown();
+
+    println!(
+        "zoo[{tiers} tiers] served {submitted} requests on {workers} workers \
+         (batch {batch}, cascade margin {margin})"
+    );
+    print_report(&report, correct, delivered, submitted);
     Ok(())
 }

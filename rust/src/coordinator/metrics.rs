@@ -1,6 +1,8 @@
 //! Serving metrics: latency distribution, throughput, batch-fill factor,
-//! rejection counts — the numbers the E2E example and EXPERIMENTS.md report.
+//! rejection counts, per-tier zoo counters — the numbers the E2E example
+//! and EXPERIMENTS.md report.
 
+use crate::coordinator::router::RouterStats;
 use crate::util::stats::{percentile, OnlineStats};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -12,6 +14,19 @@ struct Inner {
     completed: u64,
     rejected_full: u64,
     rejected_closed: u64,
+    /// requests dropped mid-batch for a wrong feature width
+    malformed: u64,
+    /// whole micro-batches dropped because the engine errored
+    batches_failed: u64,
+    /// per-tier samples served by zoo workers (tier-pinned + cascade)
+    tier_served: [u64; 3],
+    /// per-tier cascade escalations (out of tier i, into tier i+1)
+    tier_escalations: [u64; 3],
+    /// per-tier wall time spent inside the tier's engine
+    tier_ns: [u64; 3],
+    /// zoo depth of the serving engines (0 = tier-blind server); set by
+    /// `RouterEngine::with_metrics`, drives which tier keys serialize
+    num_tiers: usize,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
@@ -28,6 +43,20 @@ pub struct MetricsReport {
     pub completed: u64,
     pub rejected_full: u64,
     pub rejected_closed: u64,
+    /// requests dropped mid-batch for a wrong feature width (the rest of
+    /// their batch still completed)
+    pub malformed: u64,
+    /// whole micro-batches dropped because the engine errored
+    pub batches_failed: u64,
+    /// per-tier samples served by zoo workers (all zero on single-model
+    /// servers)
+    pub tier_served: [u64; 3],
+    /// per-tier cascade escalations (out of tier i)
+    pub tier_escalations: [u64; 3],
+    /// mean engine-side µs per sample at each tier (0 where unserved)
+    pub tier_mean_us: [f64; 3],
+    /// zoo depth of the serving engines (0 = tier-blind server)
+    pub num_tiers: usize,
     pub wall_secs: f64,
     pub throughput_rps: f64,
     pub mean_batch_fill: f64,
@@ -68,6 +97,35 @@ impl ServerMetrics {
         }
     }
 
+    /// Count `n` requests dropped from a micro-batch for a wrong feature
+    /// width (their batch-mates still complete — see `worker_loop`).
+    pub fn record_malformed(&self, n: u64) {
+        self.inner.lock().unwrap().malformed += n;
+    }
+
+    /// Count one whole micro-batch dropped because the engine errored.
+    pub fn record_batch_failure(&self) {
+        self.inner.lock().unwrap().batches_failed += 1;
+    }
+
+    /// Record the zoo depth behind this sink (called once when a
+    /// `RouterEngine` hooks in) so reports label exactly the tiers that
+    /// exist.
+    pub fn set_num_tiers(&self, num_tiers: usize) {
+        self.inner.lock().unwrap().num_tiers = num_tiers;
+    }
+
+    /// Fold a router's per-tier counter delta into the serving totals
+    /// (called by `RouterEngine` after every zoo micro-batch).
+    pub fn record_tiers(&self, delta: &RouterStats) {
+        let mut g = self.inner.lock().unwrap();
+        for i in 0..3 {
+            g.tier_served[i] += delta.served[i];
+            g.tier_escalations[i] += delta.escalations_from[i];
+            g.tier_ns[i] += delta.tier_ns[i];
+        }
+    }
+
     pub fn completed(&self) -> u64 {
         self.inner.lock().unwrap().completed
     }
@@ -92,6 +150,18 @@ impl ServerMetrics {
             completed: g.completed,
             rejected_full: g.rejected_full,
             rejected_closed: g.rejected_closed,
+            malformed: g.malformed,
+            batches_failed: g.batches_failed,
+            tier_served: g.tier_served,
+            tier_escalations: g.tier_escalations,
+            tier_mean_us: std::array::from_fn(|i| {
+                if g.tier_served[i] > 0 {
+                    g.tier_ns[i] as f64 / g.tier_served[i] as f64 / 1e3
+                } else {
+                    0.0
+                }
+            }),
+            num_tiers: g.num_tiers,
             wall_secs: wall,
             throughput_rps: if wall > 0.0 { g.completed as f64 / wall } else { 0.0 },
             mean_batch_fill: if max_batch > 0 { g.batch_sizes.mean() / max_batch as f64 } else { 0.0 },
@@ -109,12 +179,25 @@ impl MetricsReport {
         let mut j = Json::obj();
         j.set("completed", Json::Num(self.completed as f64))
             .set("rejected_full", Json::Num(self.rejected_full as f64))
+            .set("rejected_closed", Json::Num(self.rejected_closed as f64))
+            .set("malformed", Json::Num(self.malformed as f64))
+            .set("batches_failed", Json::Num(self.batches_failed as f64))
             .set("wall_secs", Json::Num(self.wall_secs))
             .set("throughput_rps", Json::Num(self.throughput_rps))
             .set("mean_batch_fill", Json::Num(self.mean_batch_fill))
             .set("latency_us_p50", Json::Num(self.latency_us_p50))
             .set("latency_us_p99", Json::Num(self.latency_us_p99))
             .set("latency_us_mean", Json::Num(self.latency_us_mean));
+        // One key per tier that actually exists, named by the shared
+        // index → label mapping (tier-blind servers emit none).
+        let names = crate::coordinator::router::tier_names(self.num_tiers);
+        for (i, name) in names.iter().enumerate().take(self.num_tiers) {
+            let mut t = Json::obj();
+            t.set("served", Json::Num(self.tier_served[i] as f64))
+                .set("escalations", Json::Num(self.tier_escalations[i] as f64))
+                .set("mean_engine_us", Json::Num(self.tier_mean_us[i]));
+            j.set(&format!("tier_{name}"), t);
+        }
         j
     }
 }
@@ -136,6 +219,29 @@ mod tests {
         assert!((r.latency_us_p99 - 99.0).abs() <= 1.0);
         assert!((r.mean_batch_fill - 0.8).abs() < 1e-9);
         assert!(r.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn tier_counters_fold_router_deltas() {
+        let m = ServerMetrics::new();
+        let d = RouterStats {
+            served: [10, 4, 1],
+            escalations_from: [4, 1, 0],
+            tier_ns: [10_000, 8_000, 3_000],
+        };
+        m.set_num_tiers(3);
+        m.record_tiers(&d);
+        m.record_tiers(&d);
+        m.record_malformed(3);
+        m.record_batch_failure();
+        let r = m.report(16);
+        assert_eq!(r.tier_served, [20, 8, 2]);
+        assert_eq!(r.tier_escalations, [8, 2, 0]);
+        assert!((r.tier_mean_us[0] - 1.0).abs() < 1e-9, "20µs over 20 samples");
+        assert_eq!(r.malformed, 3);
+        assert_eq!(r.batches_failed, 1);
+        let json = r.to_json().to_string();
+        assert!(json.contains("tier_fast"), "per-tier counters must serialize");
     }
 
     #[test]

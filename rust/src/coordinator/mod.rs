@@ -7,6 +7,13 @@
 //! micro-batcher (size + deadline), a worker pool, and latency/throughput
 //! metrics. Threads + channels, no async runtime (tokio is unavailable
 //! offline; the lockstep batching model needs none).
+//!
+//! Serving is **zoo-aware**: [`router::ModelRouter`] holds 1..=3 engines
+//! (ULN-S/M/L, small → large) and serves tier-pinned batches or the
+//! batched confidence cascade ([`router::RouterEngine`] adapts it to the
+//! engine trait); [`server::Server::start_zoo`] gives every worker its
+//! own zoo, the batcher keeps micro-batches tier-homogeneous, and
+//! [`metrics::ServerMetrics`] carries per-tier counters.
 
 pub mod batcher;
 pub mod cli;
@@ -16,4 +23,7 @@ pub mod server;
 
 pub use batcher::{BatcherConfig, BoundedQueue, Request, SubmitError};
 pub use metrics::ServerMetrics;
+pub use router::{
+    canonical_tier, max_response_of, tier_names, ModelRouter, RouterEngine, RouterStats, Tier,
+};
 pub use server::{Server, ServerConfig};

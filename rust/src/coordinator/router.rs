@@ -12,25 +12,78 @@
 //!   normalized by filter count) is below a threshold. This mirrors
 //!   cascade inference and preserves the energy story: most requests take
 //!   the cheap path.
+//!
+//! Both policies are **batch-native**: [`ModelRouter::classify_batch`]
+//! runs a whole micro-batch on one tier through
+//! [`InferenceEngine::responses`] (the fused bit-sliced kernel for
+//! `n > 1`), and [`ModelRouter::classify_cascade_batch`] runs the
+//! escalation cascade as a sequence of ever-thinner compacted
+//! sub-batches: the full batch hits the Fast tier once, the thin-margin
+//! rows are gathered into a contiguous sub-batch, that sub-batch hits the
+//! next tier, and so on; results scatter back in row order. The batched
+//! cascade is bit-exact with N sequential [`ModelRouter::classify_cascade`]
+//! calls (enforced by `prop_batched_cascade_matches_sequential`) — same
+//! predictions, same per-tier served/escalation counts.
+//!
+//! [`RouterEngine`] packages a router as an [`InferenceEngine`] so the
+//! serving worker pool can own one zoo per worker ([`Server::start_zoo`])
+//! and dispatch tier-pinned and cascade micro-batches through the same
+//! `classify_routed` entry point, flushing per-tier counters into
+//! [`ServerMetrics`] as it goes.
+//!
+//! [`Server::start_zoo`]: crate::coordinator::server::Server::start_zoo
 
+use crate::coordinator::metrics::ServerMetrics;
 use crate::runtime::InferenceEngine;
+use std::sync::Arc;
+use std::time::Instant;
 
-/// Request service class.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Tier {
-    /// lowest latency/energy: smallest model only
-    Fast,
-    /// balanced: middle model
-    Balanced,
-    /// best accuracy: largest model
-    Accurate,
-}
+pub use crate::runtime::Tier;
 
-/// Routing statistics (escalations tell you the cascade's cost).
-#[derive(Clone, Debug, Default)]
+/// Routing statistics. `served[i]` counts samples evaluated by tier `i`
+/// (a cascaded sample counts once per tier it visits);
+/// `escalations_from[i]` counts tier `i` → `i + 1` hand-offs, so
+/// first-tier resolutions are `served[0] - escalations_from[0]`.
+/// `tier_ns[i]` accumulates wall time spent inside tier `i`'s engine.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct RouterStats {
     pub served: [u64; 3],
-    pub escalations: u64,
+    pub escalations_from: [u64; 3],
+    pub tier_ns: [u64; 3],
+}
+
+impl RouterStats {
+    /// Total escalations across all tier boundaries (derived — there is
+    /// exactly one source of truth, `escalations_from`).
+    pub fn escalations(&self) -> u64 {
+        self.escalations_from.iter().sum()
+    }
+
+    /// Counter deltas since an earlier snapshot (used to flush per-batch
+    /// increments into [`ServerMetrics`]).
+    pub fn diff(&self, base: &RouterStats) -> RouterStats {
+        RouterStats {
+            served: std::array::from_fn(|i| self.served[i] - base.served[i]),
+            escalations_from: std::array::from_fn(|i| {
+                self.escalations_from[i] - base.escalations_from[i]
+            }),
+            tier_ns: std::array::from_fn(|i| self.tier_ns[i] - base.tier_ns[i]),
+        }
+    }
+}
+
+/// Reusable buffers for the batched cascade's gather/compact phase —
+/// after warmup the cascade hot path allocates only its returned
+/// prediction `Vec`, matching the crate's scratch style
+/// (`FlatBatchScratch`, `ShardScratch`).
+#[derive(Default)]
+struct CascadeScratch {
+    /// original row ids of the current compacted sub-batch
+    rows: Vec<usize>,
+    next_rows: Vec<usize>,
+    /// compacted feature rows for tiers > 0 (tier 0 reads the caller's x)
+    gathered: Vec<f32>,
+    next_gathered: Vec<f32>,
 }
 
 /// A tiered router over 1..=3 engines ordered small → large.
@@ -41,6 +94,7 @@ pub struct ModelRouter {
     pub stats: RouterStats,
     /// escalate when (top1-top2)/max_response < threshold
     pub margin_threshold: f32,
+    cascade_scratch: CascadeScratch,
 }
 
 impl ModelRouter {
@@ -53,29 +107,81 @@ impl ModelRouter {
             assert_eq!(e.num_features(), f, "feature width mismatch across tiers");
             assert_eq!(e.num_classes(), m, "class count mismatch across tiers");
         }
-        Self { engines, max_response, stats: RouterStats::default(), margin_threshold: 0.05 }
+        Self {
+            engines,
+            max_response,
+            stats: RouterStats::default(),
+            margin_threshold: 0.05,
+            cascade_scratch: CascadeScratch::default(),
+        }
+    }
+
+    /// Build a router of [`NativeEngine`]s over `models` (ordered small →
+    /// large), with margin normalization from [`max_response_of`]. The
+    /// ONE construction path shared by the zoo server, the benches, the
+    /// examples, and the tests — router construction changes happen here.
+    ///
+    /// [`NativeEngine`]: crate::runtime::NativeEngine
+    pub fn from_models(models: &[crate::model::ensemble::UleenModel]) -> Self {
+        let engines: Vec<Box<dyn InferenceEngine>> = models
+            .iter()
+            .map(|m| {
+                Box::new(crate::runtime::NativeEngine::new(m.clone())) as Box<dyn InferenceEngine>
+            })
+            .collect();
+        let max_response = models.iter().map(max_response_of).collect();
+        Self::new(engines, max_response)
+    }
+
+    pub fn num_tiers(&self) -> usize {
+        self.engines.len()
+    }
+
+    pub fn num_features(&self) -> usize {
+        self.engines[0].num_features()
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.engines[0].num_classes()
     }
 
     fn tier_index(&self, tier: Tier) -> usize {
-        match tier {
+        // canonical_tier guarantees the index is in range for this zoo
+        match canonical_tier(tier, self.engines.len()) {
             Tier::Fast => 0,
-            Tier::Balanced => (self.engines.len() - 1).min(1),
-            Tier::Accurate => self.engines.len() - 1,
+            Tier::Balanced => 1,
+            Tier::Accurate => 2,
         }
     }
 
     /// Route one sample at a fixed tier (no escalation).
     pub fn classify_tier(&mut self, x: &[f32], tier: Tier) -> crate::Result<usize> {
+        Ok(self.classify_batch(x, 1, tier)?[0])
+    }
+
+    /// Route a whole micro-batch at a fixed tier (no escalation). `n > 1`
+    /// takes the engine's fused batch path.
+    pub fn classify_batch(
+        &mut self,
+        x: &[f32],
+        n: usize,
+        tier: Tier,
+    ) -> crate::Result<Vec<usize>> {
         let i = self.tier_index(tier);
-        self.stats.served[i] += 1;
-        Ok(self.engines[i].classify(x, 1)?[0])
+        let t0 = Instant::now();
+        let preds = self.engines[i].classify(x, n)?;
+        self.stats.tier_ns[i] += t0.elapsed().as_nanos() as u64;
+        self.stats.served[i] += n as u64;
+        Ok(preds)
     }
 
     /// Cascade: start at Fast; escalate while the decision margin is thin.
     pub fn classify_cascade(&mut self, x: &[f32]) -> crate::Result<usize> {
         let mut pred = 0usize;
         for i in 0..self.engines.len() {
+            let t0 = Instant::now();
             let resp = self.engines[i].responses(x, 1)?;
+            self.stats.tier_ns[i] += t0.elapsed().as_nanos() as u64;
             let (top1, top2, arg) = top2(&resp);
             pred = arg;
             let margin = (top1 - top2) / self.max_response[i].max(1.0);
@@ -83,18 +189,142 @@ impl ModelRouter {
             if margin >= self.margin_threshold || i + 1 == self.engines.len() {
                 return Ok(pred);
             }
-            self.stats.escalations += 1;
+            self.stats.escalations_from[i] += 1;
         }
         Ok(pred)
     }
 
-    /// Fraction of cascade requests resolved by the first tier.
+    /// Batched cascade: the whole batch hits the first tier through ONE
+    /// [`InferenceEngine::responses`] call (the fused bit-sliced kernel
+    /// for `n > 1`); thin-margin rows are gathered into a compacted
+    /// sub-batch which escalates to the next tier, repeating until the
+    /// last tier; predictions scatter back in original row order.
+    /// Bit-exact with `n` sequential [`ModelRouter::classify_cascade`]
+    /// calls, including every per-tier counter.
+    pub fn classify_cascade_batch(&mut self, x: &[f32], n: usize) -> crate::Result<Vec<usize>> {
+        self.cascade_batch(x, n, None)
+    }
+
+    /// Batched cascade returning `(responses, predictions)`. Row `r` of
+    /// the response matrix holds the per-class scores of the tier that
+    /// RESOLVED row `r` (so rows resolved at different tiers carry that
+    /// tier's score scale — normalize by tier `max_response` to compare).
+    pub fn cascade_responses_batch(
+        &mut self,
+        x: &[f32],
+        n: usize,
+    ) -> crate::Result<(Vec<f32>, Vec<usize>)> {
+        let mut scores = Vec::new();
+        let preds = self.cascade_batch(x, n, Some(&mut scores))?;
+        Ok((scores, preds))
+    }
+
+    /// Core batched cascade. `scores` is only filled when a caller wants
+    /// the resolution-tier response matrix — the serving hot path
+    /// (`classify_cascade_batch`) skips it entirely. Gather buffers live
+    /// in `cascade_scratch`, so after warmup the only per-call
+    /// allocation is the returned prediction `Vec`.
+    fn cascade_batch(
+        &mut self,
+        x: &[f32],
+        n: usize,
+        mut scores: Option<&mut Vec<f32>>,
+    ) -> crate::Result<Vec<usize>> {
+        let f = self.num_features();
+        let m = self.num_classes();
+        anyhow::ensure!(x.len() == n * f, "bad input length");
+        if let Some(sc) = scores.as_deref_mut() {
+            sc.clear();
+            sc.resize(n * m, 0.0);
+        }
+        let mut preds = vec![0usize; n];
+        if n == 0 {
+            return Ok(preds);
+        }
+        let tiers = self.engines.len();
+        // Scratch is taken for the duration of the call (an engine error
+        // drops it; the next call just re-warms). `rows` holds the
+        // original row ids of the current compacted sub-batch; tier 0
+        // reads the caller's buffer directly, later tiers the gathered one.
+        let mut s = std::mem::take(&mut self.cascade_scratch);
+        s.rows.clear();
+        s.rows.extend(0..n);
+        for i in 0..tiers {
+            let cnt = s.rows.len();
+            if cnt == 0 {
+                break;
+            }
+            let xb: &[f32] = if i == 0 { x } else { &s.gathered };
+            let t0 = Instant::now();
+            let resp = self.engines[i].responses(xb, cnt)?;
+            self.stats.tier_ns[i] += t0.elapsed().as_nanos() as u64;
+            self.stats.served[i] += cnt as u64;
+            let last = i + 1 == tiers;
+            s.next_rows.clear();
+            s.next_gathered.clear();
+            for (r, &row) in s.rows.iter().enumerate() {
+                let rr = &resp[r * m..(r + 1) * m];
+                let (top1, top2, arg) = top2(rr);
+                let margin = (top1 - top2) / self.max_response[i].max(1.0);
+                if margin >= self.margin_threshold || last {
+                    preds[row] = arg;
+                    if let Some(sc) = scores.as_deref_mut() {
+                        sc[row * m..(row + 1) * m].copy_from_slice(rr);
+                    }
+                } else {
+                    self.stats.escalations_from[i] += 1;
+                    s.next_rows.push(row);
+                    s.next_gathered.extend_from_slice(&x[row * f..(row + 1) * f]);
+                }
+            }
+            std::mem::swap(&mut s.rows, &mut s.next_rows);
+            std::mem::swap(&mut s.gathered, &mut s.next_gathered);
+        }
+        self.cascade_scratch = s;
+        Ok(preds)
+    }
+
+    /// Fraction of first-tier traffic resolved WITHOUT escalating —
+    /// computed from tier-0 resolutions directly, so escalations at
+    /// deeper tier boundaries (tier 1 → 2 on a 3-tier zoo) don't distort
+    /// it the way the old `served[0] - total_escalations` formula did.
     pub fn fast_path_fraction(&self) -> f64 {
         let total = self.stats.served[0];
         if total == 0 {
             return 0.0;
         }
-        (total - self.stats.escalations.min(total)) as f64 / total as f64
+        (total - self.stats.escalations_from[0].min(total)) as f64 / total as f64
+    }
+}
+
+/// Resolve a pinned tier to its canonical representative on an
+/// `num_tiers`-tier zoo. Aliased tiers (`Balanced` and `Accurate` both
+/// clamp to the middle=last engine on a 2-tier zoo) map to the SAME
+/// value, so the tier-homogeneous batcher cannot split a micro-batch
+/// between two names for one engine. The single source of the tier →
+/// index mapping ([`ModelRouter`]'s `tier_index` delegates here).
+pub fn canonical_tier(tier: Tier, num_tiers: usize) -> Tier {
+    const BY_INDEX: [Tier; 3] = [Tier::Fast, Tier::Balanced, Tier::Accurate];
+    // clamp to the 3 service classes — an engine reporting a deeper zoo
+    // still only distinguishes three pin levels
+    let last = (num_tiers.max(1) - 1).min(2);
+    let idx = match tier {
+        Tier::Fast => 0,
+        Tier::Balanced => last.min(1),
+        Tier::Accurate => last,
+    };
+    BY_INDEX[idx]
+}
+
+/// Human labels for the tier indices of an `num_tiers`-tier zoo,
+/// mirroring [`ModelRouter`]'s tier clamping (on a 2-tier zoo both
+/// `Balanced` and `Accurate` pin to index 1, so it reads "accurate").
+/// The one place index → name lives; the CLI report uses it.
+pub fn tier_names(num_tiers: usize) -> &'static [&'static str] {
+    match num_tiers {
+        0 | 1 => &["fast"],
+        2 => &["fast", "accurate"],
+        _ => &["fast", "balanced", "accurate"],
     }
 }
 
@@ -129,6 +359,93 @@ pub fn max_response_of(model: &crate::model::ensemble::UleenModel) -> f32 {
         .sum()
 }
 
+/// A model zoo behind the [`InferenceEngine`] trait, so the serving
+/// worker pool can own one router per worker. `responses`/`classify` run
+/// the **batched cascade**; `classify_routed` additionally dispatches
+/// tier-pinned micro-batches. When hooked to a [`ServerMetrics`] (see
+/// [`Server::start_zoo`]), every call flushes its per-tier
+/// served/escalation/latency deltas so the serve loop can report them.
+///
+/// [`Server::start_zoo`]: crate::coordinator::server::Server::start_zoo
+pub struct RouterEngine {
+    router: ModelRouter,
+    metrics: Option<Arc<ServerMetrics>>,
+}
+
+impl RouterEngine {
+    pub fn new(router: ModelRouter) -> Self {
+        Self { router, metrics: None }
+    }
+
+    /// Flush per-tier counter deltas into `metrics` after every call
+    /// (and tell the sink this zoo's depth so reports label exactly the
+    /// tiers that exist).
+    pub fn with_metrics(mut self, metrics: Arc<ServerMetrics>) -> Self {
+        metrics.set_num_tiers(self.router.num_tiers());
+        self.metrics = Some(metrics);
+        self
+    }
+
+    pub fn router(&self) -> &ModelRouter {
+        &self.router
+    }
+
+    pub fn router_mut(&mut self) -> &mut ModelRouter {
+        &mut self.router
+    }
+
+    /// Run `call` on the router and flush the per-tier stat deltas it
+    /// produced into the hooked metrics sink (if any).
+    fn record<T>(&mut self, call: impl FnOnce(&mut ModelRouter) -> T) -> T {
+        let before = self.router.stats.clone();
+        let out = call(&mut self.router);
+        if let Some(m) = &self.metrics {
+            m.record_tiers(&self.router.stats.diff(&before));
+        }
+        out
+    }
+}
+
+impl InferenceEngine for RouterEngine {
+    fn label(&self) -> String {
+        format!("zoo[{} tiers]", self.router.num_tiers())
+    }
+
+    fn num_features(&self) -> usize {
+        self.router.num_features()
+    }
+
+    fn num_classes(&self) -> usize {
+        self.router.num_classes()
+    }
+
+    fn num_tiers(&self) -> usize {
+        self.router.num_tiers()
+    }
+
+    /// Batched-cascade responses: each row carries the scores of the tier
+    /// that resolved it.
+    fn responses(&mut self, x: &[f32], n: usize) -> crate::Result<Vec<f32>> {
+        self.record(|r| r.cascade_responses_batch(x, n).map(|(scores, _)| scores))
+    }
+
+    fn classify(&mut self, x: &[f32], n: usize) -> crate::Result<Vec<usize>> {
+        self.record(|r| r.classify_cascade_batch(x, n))
+    }
+
+    fn classify_routed(
+        &mut self,
+        x: &[f32],
+        n: usize,
+        tier: Option<Tier>,
+    ) -> crate::Result<Vec<usize>> {
+        match tier {
+            Some(t) => self.record(|r| r.classify_batch(x, n, t)),
+            None => self.record(|r| r.classify_cascade_batch(x, n)),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,6 +474,20 @@ mod tests {
     }
 
     #[test]
+    fn canonical_tier_collapses_aliases_per_zoo_depth() {
+        // 2-tier zoo: Balanced and Accurate are the same engine — one
+        // canonical value, so the batcher never splits between them
+        assert_eq!(canonical_tier(Tier::Accurate, 2), Tier::Balanced);
+        assert_eq!(canonical_tier(Tier::Balanced, 2), Tier::Balanced);
+        assert_eq!(canonical_tier(Tier::Fast, 2), Tier::Fast);
+        // 1-tier zoo: everything is the one engine
+        assert_eq!(canonical_tier(Tier::Accurate, 1), Tier::Fast);
+        // 3-tier zoo: identity
+        assert_eq!(canonical_tier(Tier::Balanced, 3), Tier::Balanced);
+        assert_eq!(canonical_tier(Tier::Accurate, 3), Tier::Accurate);
+    }
+
+    #[test]
     fn tier_routing_uses_the_right_engine() {
         let (mut r, ds) = zoo();
         let x = ds.test_row(0);
@@ -164,6 +495,21 @@ mod tests {
         r.classify_tier(x, Tier::Balanced).unwrap();
         r.classify_tier(x, Tier::Accurate).unwrap();
         assert_eq!(r.stats.served, [1, 1, 1]);
+    }
+
+    #[test]
+    fn tier_batch_routing_matches_per_sample() {
+        let (mut r, ds) = zoo();
+        let n = 70.min(ds.n_test());
+        let x = &ds.test_x[..n * ds.num_features];
+        for tier in [Tier::Fast, Tier::Balanced, Tier::Accurate] {
+            let batch = r.classify_batch(x, n, tier).unwrap();
+            let single: Vec<usize> = (0..n)
+                .map(|i| r.classify_tier(ds.test_row(i), tier).unwrap())
+                .collect();
+            assert_eq!(batch, single, "{tier:?}");
+        }
+        assert_eq!(r.stats.served, [2 * n as u64, 2 * n as u64, 2 * n as u64]);
     }
 
     #[test]
@@ -178,10 +524,25 @@ mod tests {
         }
         // every request hits tier 0; escalations bounded by requests
         assert_eq!(r.stats.served[0] as usize, ds.n_test());
-        assert!(r.stats.escalations <= 2 * ds.n_test() as u64);
+        assert!(r.stats.escalations() <= 2 * ds.n_test() as u64);
         // cascade should not be (much) worse than the big model alone
         let acc = correct as f64 / ds.n_test() as f64;
         assert!(acc > 0.35, "cascade accuracy {acc}");
+    }
+
+    #[test]
+    fn batched_cascade_matches_sequential_on_real_models() {
+        let (mut batch_r, ds) = zoo();
+        let (mut seq_r, _) = zoo();
+        let n = ds.n_test();
+        let x = &ds.test_x[..n * ds.num_features];
+        let got = batch_r.classify_cascade_batch(x, n).unwrap();
+        let want: Vec<usize> = (0..n)
+            .map(|i| seq_r.classify_cascade(ds.test_row(i)).unwrap())
+            .collect();
+        assert_eq!(got, want, "batched cascade must be bit-exact");
+        assert_eq!(batch_r.stats.served, seq_r.stats.served);
+        assert_eq!(batch_r.stats.escalations_from, seq_r.stats.escalations_from);
     }
 
     #[test]
@@ -191,7 +552,7 @@ mod tests {
         for i in 0..20 {
             r.classify_cascade(ds.test_row(i)).unwrap();
         }
-        assert_eq!(r.stats.escalations, 0);
+        assert_eq!(r.stats.escalations(), 0);
         assert_eq!(r.fast_path_fraction(), 1.0);
     }
 
@@ -203,6 +564,34 @@ mod tests {
             r.classify_cascade(ds.test_row(i)).unwrap();
         }
         assert_eq!(r.stats.served[2], 10);
-        assert_eq!(r.stats.escalations, 20);
+        assert_eq!(r.stats.escalations(), 20);
+        assert_eq!(r.stats.escalations_from, [10, 10, 0]);
+        assert_eq!(r.fast_path_fraction(), 0.0);
+    }
+
+    #[test]
+    fn empty_batch_is_a_no_op() {
+        let (mut r, _) = zoo();
+        assert!(r.classify_cascade_batch(&[], 0).unwrap().is_empty());
+        assert_eq!(r.stats, RouterStats::default());
+    }
+
+    #[test]
+    fn router_engine_cascade_responses_resolve_rows() {
+        let (r, ds) = zoo();
+        let mut eng = RouterEngine::new(r);
+        let n = 65.min(ds.n_test());
+        let x = &ds.test_x[..n * ds.num_features];
+        let m = eng.num_classes();
+        let resp = eng.responses(x, n).unwrap();
+        let preds = eng.classify(x, n).unwrap();
+        assert_eq!(resp.len(), n * m);
+        for (i, &p) in preds.iter().enumerate() {
+            assert_eq!(
+                crate::util::argmax_tie_low(&resp[i * m..(i + 1) * m]),
+                p,
+                "row {i}: resolution-tier scores must argmax to the prediction"
+            );
+        }
     }
 }

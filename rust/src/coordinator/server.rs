@@ -5,7 +5,8 @@
 
 use crate::coordinator::batcher::{BatcherConfig, BoundedQueue, Request, SubmitError};
 use crate::coordinator::metrics::ServerMetrics;
-use crate::runtime::InferenceEngine;
+use crate::coordinator::router::{ModelRouter, RouterEngine};
+use crate::runtime::{InferenceEngine, Tier};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
@@ -31,6 +32,11 @@ pub struct Server {
     workers: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
     num_features: usize,
+    /// Zoo depth when workers own tier-aware engines; 0 on single-model
+    /// servers. `submit_tiered` canonicalizes tiers against this —
+    /// aliased tiers (and, on tier-blind servers, every pin) must not
+    /// fragment micro-batches at boundaries the engine cannot even see.
+    num_tiers: usize,
 }
 
 impl Server {
@@ -39,20 +45,72 @@ impl Server {
         cfg: ServerConfig,
         make_engine: impl Fn(usize) -> crate::Result<Box<dyn InferenceEngine>>,
     ) -> crate::Result<Self> {
-        let queue = Arc::new(BoundedQueue::new(cfg.batcher));
         let metrics = Arc::new(ServerMetrics::new());
+        Self::start_with_metrics(cfg, metrics, make_engine)
+    }
+
+    /// [`Server::start`] with a caller-provided metrics sink, so engine
+    /// factories can hook the same sink into their engines (the zoo path:
+    /// `RouterEngine::with_metrics` flushes per-tier counters into it).
+    /// The zoo depth is read off the engines themselves
+    /// ([`InferenceEngine::num_tiers`]), so ANY tier-aware engine served
+    /// through [`Server::start`] — not just `start_zoo`'s — keeps its
+    /// tier pins.
+    fn start_with_metrics(
+        cfg: ServerConfig,
+        metrics: Arc<ServerMetrics>,
+        make_engine: impl Fn(usize) -> crate::Result<Box<dyn InferenceEngine>>,
+    ) -> crate::Result<Self> {
+        let queue = Arc::new(BoundedQueue::new(cfg.batcher));
         let mut workers = Vec::with_capacity(cfg.workers);
         let mut num_features = 0;
+        let mut num_tiers = 0;
         for w in 0..cfg.workers {
             let mut engine = make_engine(w)?;
             num_features = engine.num_features();
+            num_tiers = engine.num_tiers();
             let queue = queue.clone();
             let metrics = metrics.clone();
             workers.push(std::thread::spawn(move || {
                 worker_loop(&mut *engine, &queue, &metrics);
             }));
         }
-        Ok(Self { queue, metrics, workers, next_id: AtomicU64::new(0), num_features })
+        Ok(Self { queue, metrics, workers, next_id: AtomicU64::new(0), num_features, num_tiers })
+    }
+
+    /// Start a server whose workers each own a **model zoo**: a
+    /// [`ModelRouter`] over one [`NativeEngine`](crate::runtime::NativeEngine)
+    /// per model (small → large), wrapped in a [`RouterEngine`]. Tier-pinned requests
+    /// ([`Server::submit_tiered`] with `Some(tier)`) dispatch as one
+    /// batch call on that tier's engine; default requests run the batched
+    /// confidence cascade. Per-tier served/escalation/latency counters
+    /// flush into [`Server::metrics`] after every micro-batch and are
+    /// part of the shutdown [`MetricsReport`](crate::coordinator::metrics::MetricsReport).
+    pub fn start_zoo(
+        cfg: ServerConfig,
+        models: Vec<crate::model::ensemble::UleenModel>,
+        margin_threshold: f32,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(
+            (1..=3).contains(&models.len()),
+            "zoo wants 1..=3 models, got {}",
+            models.len()
+        );
+        for m in &models[1..] {
+            anyhow::ensure!(
+                m.encoder.num_inputs == models[0].encoder.num_inputs
+                    && m.num_classes() == models[0].num_classes(),
+                "zoo models must share feature width and class count"
+            );
+        }
+        let metrics = Arc::new(ServerMetrics::new());
+        let shared = metrics.clone();
+        Self::start_with_metrics(cfg, metrics, move |_| {
+            let mut router = ModelRouter::from_models(&models);
+            router.margin_threshold = margin_threshold;
+            Ok(Box::new(RouterEngine::new(router).with_metrics(shared.clone()))
+                as Box<dyn InferenceEngine>)
+        })
     }
 
     /// Start a server whose single worker owns one
@@ -81,15 +139,37 @@ impl Server {
         self.num_features
     }
 
-    /// Submit one request; the prediction arrives on `done`.
+    /// Submit one request on the default path (cascade on zoo servers);
+    /// the prediction arrives on `done`.
     pub fn submit(
         &self,
         features: Vec<f32>,
         done: mpsc::Sender<(u64, usize, Vec<f32>)>,
     ) -> Result<u64, SubmitError> {
+        self.submit_tiered(features, None, done)
+    }
+
+    /// Submit one request with an optional service class: `Some(tier)`
+    /// pins it to that zoo tier, `None` takes the default path (the
+    /// batched confidence cascade on zoo servers, the single model
+    /// otherwise). The batcher keeps batches tier-homogeneous, so the
+    /// tier is canonicalized first: on tier-blind servers every pin
+    /// becomes `None`, and on a zoo aliased tiers (Balanced vs Accurate
+    /// on 2 tiers) collapse to one value — a hint the engine resolves
+    /// identically must not split micro-batches.
+    pub fn submit_tiered(
+        &self,
+        features: Vec<f32>,
+        tier: Option<Tier>,
+        done: mpsc::Sender<(u64, usize, Vec<f32>)>,
+    ) -> Result<u64, SubmitError> {
+        let tier = match self.num_tiers {
+            0 => None,
+            k => tier.map(|t| crate::coordinator::router::canonical_tier(t, k)),
+        };
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.metrics.mark_start();
-        let req = Request { id, features, enqueued: Instant::now(), done };
+        let req = Request { id, features, tier, enqueued: Instant::now(), done };
         match self.queue.submit(req) {
             Ok(()) => Ok(id),
             Err((e, _req)) => {
@@ -127,31 +207,45 @@ fn worker_loop(
     let f = engine.num_features();
     let mut flat: Vec<f32> = Vec::new();
     while let Some(batch) = queue.next_batch() {
+        // Batches are tier-homogeneous by construction (next_batch), so
+        // the whole batch dispatches as one routed engine call.
+        // (next_batch never yields an empty batch; guard anyway so a
+        // future batcher change cannot panic the worker.)
+        let Some(first) = batch.first() else { continue };
+        let tier = first.tier;
+        // Reject ONLY wrong-width requests (their senders disconnect, so
+        // callers observe the drop); their batch-mates still complete.
         flat.clear();
-        let mut ok = true;
-        for r in &batch {
-            if r.features.len() != f {
-                ok = false;
+        let mut good = Vec::with_capacity(batch.len());
+        let mut malformed = 0u64;
+        for r in batch {
+            if r.features.len() == f {
+                flat.extend_from_slice(&r.features);
+                good.push(r);
+            } else {
+                malformed += 1;
             }
-            flat.extend_from_slice(&r.features);
         }
-        if !ok {
-            // malformed request in batch: fail the whole batch loudly by
-            // dropping completions (senders see disconnect); keep serving.
+        if malformed > 0 {
+            metrics.record_malformed(malformed);
+        }
+        if good.is_empty() {
             continue;
         }
-        match engine.classify(&flat, batch.len()) {
+        match engine.classify_routed(&flat, good.len(), tier) {
             Ok(preds) => {
                 let now = Instant::now();
-                let lats: Vec<_> = batch.iter().map(|r| now - r.enqueued).collect();
-                metrics.record_batch(batch.len(), &lats);
-                for (r, p) in batch.into_iter().zip(preds) {
+                let lats: Vec<_> = good.iter().map(|r| now - r.enqueued).collect();
+                metrics.record_batch(good.len(), &lats);
+                for (r, p) in good.into_iter().zip(preds) {
                     let _ = r.done.send((r.id, p, Vec::new()));
                 }
             }
             Err(_) => {
-                // engine failure: drop the batch (callers observe the
-                // closed channel); a real deployment would requeue.
+                // Engine failure: drop the batch (callers observe the
+                // closed channel) but COUNT it — overload tests and
+                // operators watch `batches_failed`.
+                metrics.record_batch_failure();
             }
         }
     }
@@ -228,6 +322,64 @@ mod tests {
             count += 1;
         }
         assert_eq!(count, n, "all in-flight requests complete before shutdown");
+    }
+
+    #[test]
+    fn zoo_server_serves_pinned_and_cascade_with_tier_metrics() {
+        let ds = synth_uci(5, uci_spec("iris").unwrap());
+        let mut models = Vec::new();
+        for (inputs, entries, bits) in [(6usize, 64usize, 2usize), (10, 128, 4)] {
+            models.push(
+                train_oneshot(
+                    &ds,
+                    &OneShotConfig {
+                        inputs_per_filter: inputs,
+                        entries_per_filter: entries,
+                        therm_bits: bits,
+                        ..Default::default()
+                    },
+                )
+                .0,
+            );
+        }
+        let cfg = ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 16,
+                max_wait: Duration::from_micros(100),
+                capacity: 1024,
+            },
+            workers: 2,
+        };
+        let server = Server::start_zoo(cfg, models, 0.05).unwrap();
+        let (tx, rx) = mpsc::channel();
+        let n = ds.n_test();
+        for i in 0..n {
+            let tier = match i % 3 {
+                0 => None, // cascade
+                1 => Some(Tier::Fast),
+                _ => Some(Tier::Accurate),
+            };
+            loop {
+                match server.submit_tiered(ds.test_row(i).to_vec(), tier, tx.clone()) {
+                    Ok(_) => break,
+                    Err(SubmitError::Full) => std::thread::sleep(Duration::from_micros(20)),
+                    Err(e) => panic!("{e:?}"),
+                }
+            }
+        }
+        drop(tx);
+        let mut served = 0;
+        while rx.recv_timeout(Duration::from_secs(10)).is_ok() {
+            served += 1;
+        }
+        assert_eq!(served, n, "every pinned and cascade request completes");
+        let report = server.metrics.report(16);
+        server.shutdown();
+        // every request touches tier 0 unless pinned Accurate; pinned
+        // Accurate traffic plus escalations land on the last tier
+        assert!(report.tier_served[0] as usize >= 2 * n / 3, "fast tier traffic");
+        assert!(report.tier_served[1] as usize >= n / 3, "accurate tier pinned traffic");
+        assert!(report.tier_mean_us[0] > 0.0, "tier latency counters populate");
     }
 
     #[test]

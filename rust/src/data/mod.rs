@@ -20,3 +20,35 @@ pub use synth_uci::{synth_uci, uci_specs, UciSpec};
 /// PRNG domain tags (shared with python/compile/data.py).
 pub const DOMAIN_MNIST: u64 = 0x4D4E4953; // "MNIS"
 pub const DOMAIN_UCI: u64 = 0x55434931; // "UCI1"
+
+/// Materialize a dataset by name (generates on the fly; no files needed).
+/// `mnist` / `synth_mnist` takes the two size knobs; UCI names accept an
+/// optional `synth_` prefix. The one resolver behind both the `uleen`
+/// CLI subcommands and the serve loop — keep name handling here so the
+/// two can't drift.
+pub fn load_by_name(
+    name: &str,
+    seed: u64,
+    mnist_train: usize,
+    mnist_test: usize,
+) -> crate::Result<Dataset> {
+    if name == "synth_mnist" || name == "mnist" {
+        return Ok(synth_mnist(seed, mnist_train, mnist_test));
+    }
+    let bare = name.strip_prefix("synth_").unwrap_or(name);
+    match synth_uci::uci_spec(bare) {
+        Some(spec) => Ok(synth_uci(seed, spec)),
+        None => anyhow::bail!("unknown dataset '{name}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn load_by_name_resolves_aliases_and_rejects_unknown() {
+        assert!(super::load_by_name("iris", 1, 10, 5).is_ok());
+        assert!(super::load_by_name("synth_iris", 1, 10, 5).is_ok());
+        assert_eq!(super::load_by_name("mnist", 1, 8, 4).unwrap().n_test(), 4);
+        assert!(super::load_by_name("nope", 1, 10, 5).is_err());
+    }
+}

@@ -43,6 +43,8 @@ fn opt_specs() -> Vec<OptSpec> {
         OptSpec { name: "requests", takes_value: true, help: "serving request count (default 10000)" },
         OptSpec { name: "workers", takes_value: true, help: "serving worker threads (default 4)" },
         OptSpec { name: "shards", takes_value: true, help: "serve with one sharded engine over N threads (default: per-worker engines)" },
+        OptSpec { name: "zoo", takes_value: true, help: "serve a tiered model zoo: comma-separated presets (s,m,l) or .uln paths, small → large" },
+        OptSpec { name: "cascade-margin", takes_value: true, help: "zoo cascade escalation threshold on the normalized top1-top2 margin (default 0.05)" },
         OptSpec { name: "hlo", takes_value: true, help: "HLO artifact for the PJRT runtime" },
         OptSpec { name: "target", takes_value: true, help: "hardware target: fpga | asic" },
         OptSpec { name: "verbose", takes_value: false, help: "extra logging" },
@@ -57,20 +59,14 @@ fn subcommands() -> Vec<(&'static str, &'static str)> {
         ("eval", "evaluate --model on --dataset"),
         ("info", "describe a .uln model"),
         ("simulate", "hardware-simulate --model on --target (fpga|asic)"),
-        ("serve", "run the serving coordinator on --model"),
+        ("serve", "run the serving coordinator on --model (or a tiered zoo: --zoo s,m,l)"),
     ]
 }
 
-/// Materialize a dataset by name (generates on the fly; no files needed).
+/// Materialize a dataset by name (the shared resolver lives in the
+/// library so the serve loop uses identical name handling).
 fn load_dataset(name: &str, seed: u64, mnist_train: usize, mnist_test: usize) -> anyhow::Result<data::Dataset> {
-    if name == "synth_mnist" || name == "mnist" {
-        return Ok(synth_mnist(seed, mnist_train, mnist_test));
-    }
-    let bare = name.strip_prefix("synth_").unwrap_or(name);
-    match data::synth_uci::uci_spec(bare) {
-        Some(spec) => Ok(synth_uci(seed, spec)),
-        None => anyhow::bail!("unknown dataset '{name}'"),
-    }
+    data::load_by_name(name, seed, mnist_train, mnist_test)
 }
 
 fn cmd_gen_data(args: &Args) -> anyhow::Result<()> {

@@ -25,6 +25,20 @@ pub use sharded::ShardedEngine;
 
 use crate::model::ensemble::{EnsembleScratch, UleenModel};
 
+/// Request service class — which point on the paper's §V-D
+/// accuracy/efficiency frontier a request asks for. Single-model engines
+/// ignore it; zoo engines (`coordinator::router::RouterEngine`) map it
+/// onto their tier list (small → large).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// lowest latency/energy: smallest model only
+    Fast,
+    /// balanced: middle model
+    Balanced,
+    /// best accuracy: largest model
+    Accurate,
+}
+
 /// A batch classifier — implemented by both the native bit-packed engine
 /// and the PJRT-loaded AOT graph, so the coordinator and the benches can
 /// swap them freely (and cross-check one against the other).
@@ -45,6 +59,29 @@ pub trait InferenceEngine: Send {
         Ok((0..n)
             .map(|i| crate::util::argmax_tie_low(&resp[i * m..(i + 1) * m]))
             .collect())
+    }
+
+    /// Zoo depth for tier-aware engines; 0 = tier-blind (the default).
+    /// The server canonicalizes pinned tiers against this so aliased
+    /// tiers cannot fragment micro-batches, and strips pins entirely for
+    /// tier-blind engines.
+    fn num_tiers(&self) -> usize {
+        0
+    }
+
+    /// Tier-routed batch classification — what the serving worker calls.
+    /// Engines owning a model zoo dispatch `Some(tier)` to that pinned
+    /// tier and `None` to the batched confidence cascade; single-model
+    /// engines serve every tier with their one model (the tier is a
+    /// routing hint, not a correctness contract).
+    fn classify_routed(
+        &mut self,
+        x: &[f32],
+        n: usize,
+        tier: Option<Tier>,
+    ) -> crate::Result<Vec<usize>> {
+        let _ = tier;
+        self.classify(x, n)
     }
 }
 

@@ -42,6 +42,26 @@ impl Default for OneShotConfig {
     }
 }
 
+/// The ULN-S/M/L one-shot shape presets (the paper's §V-D size classes)
+/// as `(inputs_per_filter, entries_per_filter, therm_bits)`, small →
+/// large. The ONE table behind `uleen serve --zoo s,m,l`, the
+/// `engine_hot` cascade sweep, and the `edge_serving` zoo leg — tune a
+/// preset here and all three stay in agreement.
+pub const ZOO_PRESET_SHAPES: [(usize, usize, usize); 3] = [(8, 64, 2), (12, 128, 3), (16, 256, 4)];
+
+/// Resolve a zoo preset name (`s|m|l` and long aliases) to its training
+/// config; `None` for unknown names.
+pub fn zoo_preset(name: &str) -> Option<OneShotConfig> {
+    let idx = match name {
+        "s" | "small" => 0,
+        "m" | "med" | "medium" => 1,
+        "l" | "large" => 2,
+        _ => return None,
+    };
+    let (inputs_per_filter, entries_per_filter, therm_bits) = ZOO_PRESET_SHAPES[idx];
+    Some(OneShotConfig { inputs_per_filter, entries_per_filter, therm_bits, ..Default::default() })
+}
+
 /// Outcome facts recorded next to the trained model.
 #[derive(Clone, Debug)]
 pub struct OneShotReport {

@@ -145,6 +145,15 @@ fn worker_engine_failure_does_not_wedge_the_server() {
     }
     assert!(ok > 0, "some batches must survive the flaky engine");
     assert!(ok < n, "some batches must have failed (injection active)");
+    let report = server.metrics.report(4);
+    assert!(
+        report.batches_failed > 0,
+        "engine failures must be observable in metrics, not silently dropped"
+    );
+    assert_eq!(
+        report.completed as usize, ok,
+        "completions counted in metrics exclude the failed batches"
+    );
     server.shutdown();
 }
 
@@ -194,6 +203,242 @@ fn zero_length_submit_is_dropped_without_wedging_the_server() {
     assert!(
         bad_rx.recv_timeout(Duration::from_secs(2)).is_err(),
         "zero-length request must never complete (its sender is dropped)"
+    );
+    assert_eq!(server.metrics.report(1).malformed, 1, "the drop must be counted");
+    server.shutdown();
+}
+
+#[test]
+fn malformed_request_in_batch_only_drops_the_offender() {
+    // A wrong-width request sharing a micro-batch with well-formed ones
+    // must NOT take the batch down: its batch-mates complete (with
+    // correct predictions), only the offender's sender drops, and the
+    // drop is counted in metrics.
+    let m = model();
+    let ds = synth_uci(5, uci_spec("vowel").unwrap());
+    let expected: Vec<usize> = {
+        let mut s = uleen::model::ensemble::EnsembleScratch::default();
+        (0..ds.n_test()).map(|i| m.predict(ds.test_row(i), &mut s)).collect()
+    };
+    let cfg = ServerConfig {
+        batcher: BatcherConfig {
+            max_batch: 8,
+            // long dwell so the bad request and its batch-mates coalesce
+            // into ONE micro-batch deterministically
+            max_wait: Duration::from_millis(100),
+            capacity: 64,
+        },
+        workers: 1,
+    };
+    let mc = m.clone();
+    let server = Server::start(cfg, move |_| {
+        Ok(Box::new(NativeEngine::new(mc.clone())) as Box<dyn InferenceEngine>)
+    })
+    .unwrap();
+    let (bad_tx, bad_rx) = mpsc::channel();
+    let (tx, rx) = mpsc::channel();
+    let f = server.num_features();
+    server.submit(vec![0.5; f + 3], bad_tx).unwrap(); // wrong width
+    let mut id2row = std::collections::HashMap::new();
+    for i in 0..5 {
+        let id = server.submit(ds.test_row(i).to_vec(), tx.clone()).unwrap();
+        id2row.insert(id, i);
+    }
+    drop(tx);
+    let mut served = 0;
+    while let Ok((id, pred, _)) = rx.recv_timeout(Duration::from_secs(5)) {
+        assert_eq!(pred, expected[id2row[&id]], "batch-mates get correct predictions");
+        served += 1;
+        if served == 5 {
+            break;
+        }
+    }
+    assert_eq!(served, 5, "all well-formed batch-mates must complete");
+    assert!(
+        bad_rx.recv_timeout(Duration::from_millis(200)).is_err(),
+        "the malformed request never completes"
+    );
+    assert_eq!(server.metrics.report(8).malformed, 1);
+    server.shutdown();
+}
+
+#[test]
+fn fast_path_fraction_counts_first_tier_resolutions_only() {
+    use uleen::coordinator::router::ModelRouter;
+    use uleen::runtime::Tier;
+
+    // tier 0 resolves rows with x[0] > 0.5 and ties otherwise; tier 1
+    // always ties (so every row it sees escalates); tier 2 resolves.
+    // With 3 tiers, tier1→tier2 escalations used to be double-counted
+    // against tier-0 totals, saturating the fraction to 0.
+    struct Gate;
+    impl InferenceEngine for Gate {
+        fn label(&self) -> String {
+            "gate".into()
+        }
+        fn num_features(&self) -> usize {
+            1
+        }
+        fn num_classes(&self) -> usize {
+            2
+        }
+        fn responses(&mut self, x: &[f32], n: usize) -> uleen::Result<Vec<f32>> {
+            let mut out = Vec::with_capacity(2 * n);
+            for i in 0..n {
+                if x[i] > 0.5 {
+                    out.extend_from_slice(&[4.0, 0.0]); // confident
+                } else {
+                    out.extend_from_slice(&[1.0, 1.0]); // dead tie
+                }
+            }
+            Ok(out)
+        }
+    }
+    struct Tie;
+    impl InferenceEngine for Tie {
+        fn label(&self) -> String {
+            "tie".into()
+        }
+        fn num_features(&self) -> usize {
+            1
+        }
+        fn num_classes(&self) -> usize {
+            2
+        }
+        fn responses(&mut self, _x: &[f32], n: usize) -> uleen::Result<Vec<f32>> {
+            Ok(vec![1.0, 1.0].repeat(n))
+        }
+    }
+    struct Last;
+    impl InferenceEngine for Last {
+        fn label(&self) -> String {
+            "last".into()
+        }
+        fn num_features(&self) -> usize {
+            1
+        }
+        fn num_classes(&self) -> usize {
+            2
+        }
+        fn responses(&mut self, _x: &[f32], n: usize) -> uleen::Result<Vec<f32>> {
+            Ok(vec![2.0, 0.0].repeat(n))
+        }
+    }
+    let build = || {
+        ModelRouter::new(
+            vec![Box::new(Gate) as Box<dyn InferenceEngine>, Box::new(Tie), Box::new(Last)],
+            vec![4.0, 2.0, 2.0],
+        )
+    };
+    // 5 confident rows + 5 tie rows
+    let x: Vec<f32> = (0..10).map(|i| if i < 5 { 1.0 } else { 0.0 }).collect();
+
+    let mut seq = build();
+    for i in 0..10 {
+        seq.classify_cascade(&x[i..i + 1]).unwrap();
+    }
+    assert_eq!(seq.stats.served, [10, 5, 5]);
+    assert_eq!(seq.stats.escalations(), 10);
+    assert_eq!(seq.stats.escalations_from, [5, 5, 0]);
+    // the old formula computed (10 - 10) / 10 = 0.0 here
+    assert_eq!(
+        seq.fast_path_fraction(),
+        0.5,
+        "only tier-0 escalations may count against tier-0 resolutions"
+    );
+
+    // same traffic through the batched cascade: identical stats
+    let mut batch = build();
+    batch.classify_cascade_batch(&x, 10).unwrap();
+    assert_eq!(batch.stats.served, seq.stats.served);
+    assert_eq!(batch.stats.escalations_from, seq.stats.escalations_from);
+    assert_eq!(batch.fast_path_fraction(), 0.5);
+
+    // tier-pinned traffic on other tiers must not move the fraction
+    batch.classify_batch(&x, 10, Tier::Accurate).unwrap();
+    assert_eq!(batch.fast_path_fraction(), 0.5);
+}
+
+#[test]
+fn zoo_server_end_to_end_matches_local_ground_truth() {
+    use uleen::coordinator::router::ModelRouter;
+    use uleen::runtime::Tier;
+
+    let ds = synth_uci(5, uci_spec("vowel").unwrap());
+    let mut models = Vec::new();
+    for (ipf, epf, bits) in [(8usize, 64usize, 2usize), (10, 128, 4)] {
+        models.push(
+            train_oneshot(
+                &ds,
+                &OneShotConfig {
+                    inputs_per_filter: ipf,
+                    entries_per_filter: epf,
+                    therm_bits: bits,
+                    ..Default::default()
+                },
+            )
+            .0,
+        );
+    }
+    let n = ds.n_test();
+    // ground truth: local batched cascade + each tier alone
+    let mut local = ModelRouter::from_models(&models);
+    let cascade_want = local.classify_cascade_batch(&ds.test_x, n).unwrap();
+    let fast_want = NativeEngine::new(models[0].clone()).classify(&ds.test_x, n).unwrap();
+    let acc_want = NativeEngine::new(models[1].clone()).classify(&ds.test_x, n).unwrap();
+
+    let cfg = ServerConfig {
+        batcher: BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_micros(100),
+            capacity: 4096,
+        },
+        workers: 3,
+    };
+    let server = Server::start_zoo(cfg, models, 0.05).unwrap();
+    let (tx, rx) = mpsc::channel();
+    // every row three ways: cascade, pinned fast, pinned accurate
+    let mut id2want = std::collections::HashMap::new();
+    for i in 0..n {
+        for (tier, want) in [
+            (None, cascade_want[i]),
+            (Some(Tier::Fast), fast_want[i]),
+            (Some(Tier::Accurate), acc_want[i]),
+        ] {
+            loop {
+                match server.submit_tiered(ds.test_row(i).to_vec(), tier, tx.clone()) {
+                    Ok(id) => {
+                        id2want.insert(id, want);
+                        break;
+                    }
+                    Err(SubmitError::Full) => std::thread::sleep(Duration::from_micros(10)),
+                    Err(e) => panic!("{e:?}"),
+                }
+            }
+        }
+    }
+    drop(tx);
+    let mut served = 0usize;
+    while let Ok((id, pred, _)) = rx.recv_timeout(Duration::from_secs(20)) {
+        assert_eq!(
+            pred, id2want[&id],
+            "request {id}: served zoo prediction must match local ground truth"
+        );
+        served += 1;
+        if served == 3 * n {
+            break;
+        }
+    }
+    assert_eq!(served, 3 * n, "every cascade and pinned request completes");
+    let report = server.metrics.report(16);
+    // cascade + pinned-fast traffic lands on tier 0; pinned-accurate (and
+    // every cascade escalation) lands on tier 1
+    assert!(report.tier_served[0] as usize >= 2 * n, "tier-0 sees cascade + pinned fast");
+    assert!(report.tier_served[1] as usize >= n, "tier-1 sees pinned accurate");
+    assert_eq!(
+        report.tier_served[0] as usize + report.tier_served[1] as usize,
+        3 * n + report.tier_escalations[0] as usize,
+        "tier totals = requests + escalated sub-batch samples"
     );
     server.shutdown();
 }
@@ -311,7 +556,7 @@ fn router_escalation_stats_account_for_forced_low_margin_traffic() {
     }
     assert_eq!(router.stats.served, [n, n, n], "every tier sees every request");
     assert_eq!(
-        router.stats.escalations,
+        router.stats.escalations(),
         2 * n,
         "two escalations per request on a 3-tier zoo"
     );
@@ -340,7 +585,7 @@ fn router_escalation_stats_account_for_forced_low_margin_traffic() {
         assert_eq!(router.classify_cascade(&[0.0, 0.0, 0.0]).unwrap(), 0);
     }
     assert_eq!(router.stats.served, [10, 0, 0]);
-    assert_eq!(router.stats.escalations, 0);
+    assert_eq!(router.stats.escalations(), 0);
     assert_eq!(router.fast_path_fraction(), 1.0);
 }
 

@@ -339,6 +339,98 @@ fn prop_all_native_engines_agree_bit_exactly() {
     );
 }
 
+/// The batched cascade must be PREDICTION-EXACT with N sequential
+/// per-sample cascades — same predictions AND the same per-tier
+/// served/escalation counters — across margin thresholds (0 = never
+/// escalate, huge = every row rides to the last tier, plus realistic
+/// values), batch sizes straddling the 64-sample tile boundary
+/// (1/63/64/65), zoo depths 2–3, and inputs with dead-tie rows (margin
+/// exactly 0, the escalation boundary). The batched side drives every
+/// tier through `InferenceEngine::responses` on compacted sub-batches
+/// (the fused kernel for n > 1); the sequential side takes the scalar
+/// path — agreement here is what makes zoo serving bit-exact no matter
+/// how the dynamic batcher slices traffic.
+#[test]
+fn prop_batched_cascade_matches_sequential() {
+    use uleen::coordinator::router::ModelRouter;
+    check(
+        "batched-cascade-exact",
+        &Config { cases: 8, ..Config::default() },
+        |rng, _size| {
+            let tiers = 2 + rng.below(2) as usize;
+            let threshold = [0.0f32, 0.02, 0.1, 1e9][rng.below(4) as usize];
+            let n = [1usize, 63, 64, 65][rng.below(4) as usize];
+            let seed = rng.next_u64();
+            let tie_rows = rng.below(2) == 0;
+            (tiers, threshold, n, seed, tie_rows)
+        },
+        |(tiers, threshold, n, seed, tie_rows)| {
+            let ds = synth_uci(9, uci_spec("vowel").unwrap());
+            let shapes = [(6usize, 64usize, 2usize), (10, 128, 4), (12, 256, 6)];
+            let mut models = Vec::new();
+            for &(ipf, epf, bits) in &shapes[..*tiers] {
+                let cfg = OneShotConfig {
+                    inputs_per_filter: ipf,
+                    entries_per_filter: epf,
+                    therm_bits: bits,
+                    seed: *seed,
+                    ..Default::default()
+                };
+                models.push(train_oneshot(&ds, &cfg).0);
+            }
+            let build = |models: &[uleen::model::ensemble::UleenModel]| {
+                let mut r = ModelRouter::from_models(models);
+                r.margin_threshold = *threshold;
+                r
+            };
+            let f = ds.num_features;
+            let n = (*n).min(ds.n_test());
+            let mut x: Vec<f32> = ds.test_x[..n * f].to_vec();
+            if *tie_rows {
+                // constant rows encode identically → frequent dead ties,
+                // i.e. margins exactly on the escalation boundary
+                for v in x.iter_mut().take(n * f / 2) {
+                    *v = 0.0;
+                }
+            }
+            let mut batch_r = build(&models);
+            let mut seq_r = build(&models);
+            let got = batch_r
+                .classify_cascade_batch(&x, n)
+                .map_err(|e| e.to_string())?;
+            let mut want = Vec::with_capacity(n);
+            for i in 0..n {
+                want.push(
+                    seq_r
+                        .classify_cascade(&x[i * f..(i + 1) * f])
+                        .map_err(|e| e.to_string())?,
+                );
+            }
+            if got != want {
+                let row = got.iter().zip(&want).position(|(a, b)| a != b).unwrap();
+                return Err(format!(
+                    "prediction mismatch at row {row}: batch {} vs sequential {} \
+                     (tiers={tiers}, threshold={threshold}, n={n})",
+                    got[row], want[row]
+                ));
+            }
+            if batch_r.stats.served != seq_r.stats.served {
+                return Err(format!(
+                    "served counters diverge: batch {:?} vs sequential {:?}",
+                    batch_r.stats.served, seq_r.stats.served
+                ));
+            }
+            if batch_r.stats.escalations_from != seq_r.stats.escalations_from {
+                return Err(format!(
+                    "escalation counters diverge: batch {:?} vs sequential {:?}",
+                    batch_r.stats.escalations_from, seq_r.stats.escalations_from
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_response_bounded_by_kept_filters() {
     // 0 - bias ≤ response ≤ kept_filters + bias for every input
