@@ -10,7 +10,10 @@
 //!
 //!   * the native bit-packed Rust engine (per-worker engines),
 //!   * ONE sharded engine fanning each micro-batch across threads
-//!     (the bit-sliced batch kernel × data-parallel shards), and
+//!     (the bit-sliced batch kernel × data-parallel shards),
+//!   * the tiered ULN-S/M/L zoo — per-worker routers over `Arc`-shared
+//!     tiers, then the cascade × shard composition
+//!     (`Server::start_zoo_sharded`), and
 //!   * with `--features pjrt`: the PJRT engine executing the AOT artifact,
 //!
 //! cross-checks that the engines agree prediction-for-prediction, and
@@ -105,10 +108,18 @@ fn serve_on(
 /// server, drive mixed cascade + tier-pinned traffic, and assert every
 /// prediction equals the local router's (cascade) / the pinned tier's
 /// engine (pinned). Prints per-tier counters from the shutdown report.
+///
+/// `shards == 0` serves per-worker zoos over ONE `Arc`-shared copy of
+/// each tier (`Server::start_zoo`); `shards > 0` composes the cascade
+/// with shard fan-out (`Server::start_zoo_sharded`): one worker, every
+/// micro-batch split into contiguous row ranges that run the cascade in
+/// parallel on the persistent pool. Ground truth is identical either
+/// way — the sharded cascade is bit-exact by construction.
 fn serve_zoo(
     large: &uleen::model::ensemble::UleenModel,
     ds: &uleen::data::Dataset,
     requests: usize,
+    shards: usize,
 ) -> anyhow::Result<()> {
     let mut zoo = Vec::new();
     // the S and M presets below the served model (the shared zoo table)
@@ -136,7 +147,11 @@ fn serve_zoo(
         tier_want.push(NativeEngine::new(m.clone()).classify(&ds.test_x, n_test)?);
     }
 
-    let server = Server::start_zoo(config(2), zoo, 0.05)?;
+    let server = if shards > 0 {
+        Server::start_zoo_sharded(config(1), zoo, 0.05, shards)?
+    } else {
+        Server::start_zoo(config(2), zoo, 0.05)?
+    };
     let (tx, rx) = mpsc::channel();
     let mut id2want = std::collections::HashMap::new();
     let mut submitted = 0usize;
@@ -185,8 +200,13 @@ fn serve_zoo(
     }
     let rep = server.metrics.report(64);
     server.shutdown();
+    let label = if shards > 0 {
+        format!("zoo ×3 tiers × {shards} shards")
+    } else {
+        "zoo ×3 tiers".to_string()
+    };
     println!(
-        "[zoo ×3 tiers] {} req | {:.0} inf/s | p50/p99 latency {:.0}/{:.0} µs | \
+        "[{label}] {} req | {:.0} inf/s | p50/p99 latency {:.0}/{:.0} µs | \
          tier served {:?} | escalations {:?}",
         submitted,
         rep.throughput_rps,
@@ -195,7 +215,7 @@ fn serve_zoo(
         rep.tier_served,
         rep.tier_escalations
     );
-    println!("zoo agreement: batched cascade + pinned tiers vs local ground truth — exact ✓");
+    println!("[{label}] agreement: batched cascade + pinned tiers vs local ground truth — exact ✓");
     Ok(())
 }
 
@@ -253,14 +273,22 @@ fn main() -> anyhow::Result<()> {
     }
     println!("engine agreement: native vs sharded — exact ✓");
 
-    // Tiered zoo serving: every worker owns a ULN-S/M/L router. Default
-    // traffic runs the BATCHED confidence cascade (whole micro-batch on
-    // the small tier through the fused kernel, thin-margin rows gathered
-    // and escalated); every 4th request is pinned to a cycling tier.
-    // Every completion is checked against local single-router ground
-    // truth — the batched cascade is bit-exact no matter how the dynamic
-    // batcher slices the traffic.
-    serve_zoo(&model, &ds, 6_000)?;
+    // Tiered zoo serving: every worker owns a ULN-S/M/L router over ONE
+    // Arc-shared copy of each tier. Default traffic runs the BATCHED
+    // confidence cascade (whole micro-batch on the small tier through
+    // the fused kernel, thin-margin rows gathered and escalated); every
+    // 4th request is pinned to a cycling tier. Every completion is
+    // checked against local single-router ground truth — the batched
+    // cascade is bit-exact no matter how the dynamic batcher slices the
+    // traffic.
+    serve_zoo(&model, &ds, 6_000, 0)?;
+
+    // The same zoo with the two scaling axes COMPOSED: one
+    // ShardedRouterEngine splits every micro-batch into contiguous row
+    // ranges and runs the cascade on 4 pool workers in parallel —
+    // predictions and per-tier counters stay bit-exact with the
+    // single-router ground truth above.
+    serve_zoo(&model, &ds, 6_000, 4)?;
 
     // PJRT engine serving (the AOT artifact on the hot path).
     #[cfg(feature = "pjrt")]

@@ -8,9 +8,12 @@
 //! Headline numbers: the batch-kernel sweep (per-sample vs bit-sliced
 //! throughput at batch ≥ 256, target ≥ 4× single-thread) and the fused
 //! sweep (fused slice path vs the PR-1 encode+transpose+kernel sequence
-//! at batch 256, target ≥ 1.5×), then the shard sweep and the zoo
-//! cascade sweep (tier-pinned Fast/Accurate vs the batched confidence
-//! cascade at batch 256) on top.
+//! at batch 256, target ≥ 1.5×), then the shard sweep, the zoo cascade
+//! sweep (tier-pinned Fast/Accurate vs the batched confidence cascade
+//! at batch 256), and the cascade×shard sweep (`ShardedRouterEngine` at
+//! batch 256, with an asserted merge gate: pool-merged per-tier counters
+//! bit-exact with the single-router cascade, zero per-worker model
+//! clones Arc-witnessed) on top.
 //!
 //! Flags (after `--`, e.g. `cargo bench --bench engine_hot -- --json`):
 //! * `--json`  — also emit `BENCH_engine_hot.json` (stage → ns/sample,
@@ -25,7 +28,7 @@ use uleen::data::synth_mnist;
 use uleen::model::ensemble::EnsembleScratch;
 use uleen::model::flat::{FlatBatchScratch, FlatModel};
 use uleen::model::submodel::SubmodelScratch;
-use uleen::runtime::{InferenceEngine, NativeEngine, ShardedEngine};
+use uleen::runtime::{InferenceEngine, NativeEngine, SharedModel, ShardedEngine, ShardedRouterEngine};
 use uleen::util::bitvec::BitVec;
 use uleen::util::json::Json;
 #[cfg(feature = "pjrt")]
@@ -259,6 +262,68 @@ fn main() -> anyhow::Result<()> {
         t_zoo_cascade, t_zoo_fast, t_zoo_accurate, zoo_fast_path
     );
 
+    // == cascade×shard sweep: the batched cascade fanned across the pool ==
+    // The two scaling axes composed: ShardedRouterEngine splits the batch
+    // into contiguous row ranges, each range runs the full cascade on a
+    // persistent pool worker against Arc-shared tiers, and per-tier
+    // counters merge deterministically. Runs under --smoke so CI fails
+    // fast on a counter-merge or sharing regression.
+    println!("\n== cascade×shard sweep: sharded batched cascade, batch {bs} ==");
+    let shared_tiers: Vec<SharedModel> = zoo_models
+        .iter()
+        .map(|m| SharedModel::compile(m.clone()))
+        .collect();
+    let zoo_shard_counts: &[usize] = if smoke { &[1, 4] } else { &[1, 2, 4, 8] };
+    let mut shard_sweep: Vec<(usize, f64)> = Vec::new();
+    for &shards in zoo_shard_counts {
+        let mut eng = ShardedRouterEngine::from_shared(shared_tiers.clone(), 0.05, shards);
+        let r = bench_fn(
+            &format!("zoo cascade shards={shards} ×{bs}"),
+            w_swp,
+            i_swp,
+            bs as f64,
+            || {
+                std::hint::black_box(eng.classify(zx, bs).unwrap());
+            },
+        );
+        shard_sweep.push((shards, r.throughput_per_sec()));
+        record(&mut report, r);
+        // Zero per-worker model clones, witnessed: exactly one Arc handle
+        // here + one in the engine's tier list + one per pool worker.
+        for (t_idx, t) in shared_tiers.iter().enumerate() {
+            assert_eq!(
+                std::sync::Arc::strong_count(t.model()),
+                2 + shards,
+                "tier {t_idx}: per-worker model clones detected at shards={shards}"
+            );
+        }
+    }
+    // Merge gate: a sharded run's predictions AND pool-merged per-tier
+    // counters must be bit-exact with the single-router cascade. A
+    // merge-order regression in counter merging dies HERE, in the CI
+    // smoke bench, not in a nightly.
+    let mut gate = ShardedRouterEngine::from_shared(shared_tiers.clone(), 0.05, 7);
+    let gate_preds = gate.classify(zx, bs).unwrap();
+    router.stats = Default::default();
+    let want_preds = router.classify_cascade_batch(zx, bs).unwrap();
+    assert_eq!(
+        gate_preds, want_preds,
+        "cascade×shard predictions must match the single-router cascade"
+    );
+    let gate_merged = gate.merged_stats();
+    assert_eq!(
+        gate_merged.served, router.stats.served,
+        "pool-merged served counters must be bit-exact with the single-router cascade"
+    );
+    assert_eq!(
+        gate_merged.escalations_from, router.stats.escalations_from,
+        "pool-merged escalation counters must be bit-exact with the single-router cascade"
+    );
+    println!(
+        "  -> merge gate: predictions + per-tier counters bit-exact across 7 shards ✓ \
+         (zero per-worker model clones, Arc-witnessed)"
+    );
+
     // engine-level batch API (what the coordinator calls)
     let flat_x: Vec<f32> = ds.test_x[..n * f].to_vec();
     let r = bench_fn("NativeEngine.classify batch", w_hot, i_hot, n as f64, || {
@@ -316,6 +381,16 @@ fn main() -> anyhow::Result<()> {
             .set("accurate_only_sps", Json::Num(t_zoo_accurate))
             .set("fast_path_fraction", Json::Num(zoo_fast_path));
         doc.set("cascade_sweep_b256", cascade);
+        let mut shard_doc = Json::obj();
+        for (shards, sps) in &shard_sweep {
+            shard_doc.set(&format!("shards_{shards}_sps"), Json::Num(*sps));
+        }
+        // asserted above — serialized so the trajectory records that the
+        // gate ran, not just that the bench finished
+        shard_doc
+            .set("merged_counters_exact", Json::Bool(true))
+            .set("zero_model_clones", Json::Bool(true));
+        doc.set("cascade_shard_sweep_b256", shard_doc);
         let path = "BENCH_engine_hot.json";
         std::fs::write(path, doc.to_string())?;
         println!("(wrote {path})");

@@ -9,11 +9,16 @@
 //! * `--zoo s,m,l` — tiered zoo serving ([`Server::start_zoo`]): each
 //!   worker owns a `ModelRouter` over the listed models (comma-separated
 //!   size presets `s|m|l` trained on `--dataset`, or `.uln` paths, small
-//!   → large). Default traffic runs the **batched confidence cascade**
+//!   → large) — every worker's router shares ONE `Arc`'d copy of each
+//!   tier. Default traffic runs the **batched confidence cascade**
 //!   (`--cascade-margin` sets the escalation threshold); every 4th
 //!   request is pinned to a cycling tier to exercise tier-homogeneous
 //!   batching. Per-tier served/escalation/latency counters print at
-//!   shutdown.
+//!   shutdown. Adding `--shards N` composes the two scaling axes
+//!   ([`Server::start_zoo_sharded`]): one worker owns a
+//!   `ShardedRouterEngine` that splits every micro-batch into contiguous
+//!   row ranges, runs the cascade on each range on a persistent pool
+//!   worker, and merges per-tier counters deterministically.
 
 use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::metrics::MetricsReport;
@@ -219,7 +224,7 @@ fn cmd_serve_zoo(args: &Args, spec: &str) -> anyhow::Result<()> {
     let requests = args.get_usize("requests", 10_000).map_err(anyhow::Error::msg)?;
     let workers = args.get_usize("workers", 2).map_err(anyhow::Error::msg)?;
     let margin = args.get_f64("cascade-margin", 0.05).map_err(anyhow::Error::msg)? as f32;
-    anyhow::ensure!(args.get("shards").is_none(), "--zoo and --shards are mutually exclusive");
+    let shards = args.get_usize("shards", 0).map_err(anyhow::Error::msg)?;
     anyhow::ensure!(args.get("hlo").is_none(), "--zoo and --hlo are mutually exclusive");
     anyhow::ensure!(
         args.get("model").is_none(),
@@ -272,15 +277,37 @@ fn cmd_serve_zoo(args: &Args, spec: &str) -> anyhow::Result<()> {
         },
         workers,
     };
-    let server = Server::start_zoo(cfg, models, margin)?;
+    // --shards N composes the cascade with shard fan-out: one worker, one
+    // ShardedRouterEngine splitting every micro-batch across N pool
+    // threads that all share the same Arc'd tiers.
+    let server = if shards > 0 {
+        // parallelism comes from the shard pool, so the worker count is
+        // forced to 1 — say so instead of silently eating --workers
+        if args.get("workers").is_some() && workers != 1 {
+            println!(
+                "(--zoo with --shards {shards} serves on 1 worker; \
+                 ignoring --workers {workers} — the pool supplies the parallelism)"
+            );
+        }
+        Server::start_zoo_sharded(cfg, models, margin, shards)?
+    } else {
+        Server::start_zoo(cfg, models, margin)?
+    };
     let (correct, delivered, submitted) = drive_load(&server, &ds, requests, true)?;
     let report = server.metrics.report(batch);
     server.shutdown();
 
-    println!(
-        "zoo[{tiers} tiers] served {submitted} requests on {workers} workers \
-         (batch {batch}, cascade margin {margin})"
-    );
+    if shards > 0 {
+        println!(
+            "zoo[{tiers} tiers × {shards} shards] served {submitted} requests on 1 worker \
+             (batch {batch}, cascade margin {margin})"
+        );
+    } else {
+        println!(
+            "zoo[{tiers} tiers] served {submitted} requests on {workers} workers \
+             (batch {batch}, cascade margin {margin})"
+        );
+    }
     print_report(&report, correct, delivered, submitted);
     Ok(())
 }

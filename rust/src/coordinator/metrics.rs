@@ -116,7 +116,12 @@ impl ServerMetrics {
     }
 
     /// Fold a router's per-tier counter delta into the serving totals
-    /// (called by `RouterEngine` after every zoo micro-batch).
+    /// (called by `RouterEngine` after every zoo micro-batch, and by
+    /// `ShardedRouterEngine` with the POOL-MERGED delta of a fanned-out
+    /// batch). Every field is additive, so folding one merged delta or
+    /// each shard's delta separately — in any order — lands on identical
+    /// totals (`shard_split_deltas_fold_identically_to_merged`); nothing
+    /// here may ever average or overwrite.
     pub fn record_tiers(&self, delta: &RouterStats) {
         let mut g = self.inner.lock().unwrap();
         for i in 0..3 {
@@ -242,6 +247,37 @@ mod tests {
         assert_eq!(r.batches_failed, 1);
         let json = r.to_json().to_string();
         assert!(json.contains("tier_fast"), "per-tier counters must serialize");
+    }
+
+    #[test]
+    fn shard_split_deltas_fold_identically_to_merged() {
+        // The sharded zoo may flush one pool-merged delta per batch or —
+        // after a refactor — one delta per shard; the totals must be
+        // identical either way, in any fold order.
+        let shard_deltas = [
+            RouterStats { served: [7, 2, 1], escalations_from: [2, 1, 0], tier_ns: [700, 400, 90] },
+            RouterStats { served: [5, 0, 0], escalations_from: [0, 0, 0], tier_ns: [512, 0, 0] },
+            RouterStats { served: [9, 4, 4], escalations_from: [4, 4, 0], tier_ns: [903, 800, 410] },
+        ];
+        let split = ServerMetrics::new();
+        split.set_num_tiers(3);
+        for d in &shard_deltas {
+            split.record_tiers(d);
+        }
+        let merged_sink = ServerMetrics::new();
+        merged_sink.set_num_tiers(3);
+        let mut merged = RouterStats::default();
+        // reverse order: the fold must be order-independent
+        for d in shard_deltas.iter().rev() {
+            merged.merge(d);
+        }
+        merged_sink.record_tiers(&merged);
+        let (a, b) = (split.report(16), merged_sink.report(16));
+        assert_eq!(a.tier_served, b.tier_served);
+        assert_eq!(a.tier_served, [21, 6, 5]);
+        assert_eq!(a.tier_escalations, b.tier_escalations);
+        assert_eq!(a.tier_escalations, [6, 5, 0]);
+        assert_eq!(a.tier_mean_us, b.tier_mean_us);
     }
 
     #[test]

@@ -12,8 +12,15 @@
 //! (ULN-S/M/L, small → large) and serves tier-pinned batches or the
 //! batched confidence cascade ([`router::RouterEngine`] adapts it to the
 //! engine trait); [`server::Server::start_zoo`] gives every worker its
-//! own zoo, the batcher keeps micro-batches tier-homogeneous, and
-//! [`metrics::ServerMetrics`] carries per-tier counters.
+//! own zoo (all workers sharing ONE `Arc`'d copy of each tier), the
+//! batcher keeps micro-batches tier-homogeneous, and
+//! [`metrics::ServerMetrics`] carries per-tier counters. The two scaling
+//! axes compose: [`server::Server::start_zoo_sharded`] serves the
+//! cascade × shard fan-out
+//! ([`ShardedRouterEngine`](crate::runtime::ShardedRouterEngine)) —
+//! contiguous row ranges of every micro-batch run the cascade in
+//! parallel on a persistent pool, per-tier counters merging
+//! deterministically ([`router::RouterStats::merge`]).
 
 pub mod batcher;
 pub mod cli;

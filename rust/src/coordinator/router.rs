@@ -29,7 +29,14 @@
 //! serving worker pool can own one zoo per worker ([`Server::start_zoo`])
 //! and dispatch tier-pinned and cascade micro-batches through the same
 //! `classify_routed` entry point, flushing per-tier counters into
-//! [`ServerMetrics`] as it goes.
+//! [`ServerMetrics`] as it goes. Routers are cheap to replicate:
+//! [`ModelRouter::from_shared`] builds each tier as a
+//! [`NativeEngine`](crate::runtime::NativeEngine) over an `Arc`-shared
+//! [`SharedModel`](crate::runtime::SharedModel), so N routers (per
+//! serving worker, or per shard-pool worker in
+//! [`ShardedRouterEngine`](crate::runtime::ShardedRouterEngine)) share
+//! ONE copy of every tier, and per-router counters fold together with
+//! [`RouterStats::merge`].
 //!
 //! [`Server::start_zoo`]: crate::coordinator::server::Server::start_zoo
 
@@ -68,6 +75,20 @@ impl RouterStats {
                 self.escalations_from[i] - base.escalations_from[i]
             }),
             tier_ns: std::array::from_fn(|i| self.tier_ns[i] - base.tier_ns[i]),
+        }
+    }
+
+    /// Fold another router's counters into this one — the shard-merge
+    /// primitive. Every field is an additive per-row count (or a wall-time
+    /// sum), so merging per-shard stats of a partitioned batch in ANY
+    /// fixed order reproduces the sequential counters bit-exactly; the
+    /// sharded cascade merges in worker order
+    /// (`prop_sharded_cascade_matches_sequential` pins this down).
+    pub fn merge(&mut self, other: &RouterStats) {
+        for i in 0..3 {
+            self.served[i] += other.served[i];
+            self.escalations_from[i] += other.escalations_from[i];
+            self.tier_ns[i] += other.tier_ns[i];
         }
     }
 }
@@ -117,19 +138,38 @@ impl ModelRouter {
     }
 
     /// Build a router of [`NativeEngine`]s over `models` (ordered small →
-    /// large), with margin normalization from [`max_response_of`]. The
-    /// ONE construction path shared by the zoo server, the benches, the
-    /// examples, and the tests — router construction changes happen here.
+    /// large), with margin normalization from [`max_response_of`].
+    /// Compiles each model once and routes through
+    /// [`ModelRouter::from_shared`] — the ONE construction path shared by
+    /// the zoo server, the benches, the examples, and the tests.
     ///
     /// [`NativeEngine`]: crate::runtime::NativeEngine
     pub fn from_models(models: &[crate::model::ensemble::UleenModel]) -> Self {
-        let engines: Vec<Box<dyn InferenceEngine>> = models
+        let shared: Vec<crate::runtime::SharedModel> = models
             .iter()
-            .map(|m| {
-                Box::new(crate::runtime::NativeEngine::new(m.clone())) as Box<dyn InferenceEngine>
+            .map(|m| crate::runtime::SharedModel::compile(m.clone()))
+            .collect();
+        Self::from_shared(&shared)
+    }
+
+    /// Build a router over already-compiled, `Arc`-shared tiers (small →
+    /// large): each tier becomes a [`NativeEngine::from_shared`] holding
+    /// two `Arc` handles — zero model/table clones. N routers built from
+    /// the same slice (per serving worker, or per shard-pool worker in
+    /// [`ShardedRouterEngine`]) share ONE copy of every tier; the
+    /// `Arc::strong_count` witness tests pin that down.
+    ///
+    /// [`NativeEngine::from_shared`]: crate::runtime::NativeEngine::from_shared
+    /// [`ShardedRouterEngine`]: crate::runtime::ShardedRouterEngine
+    pub fn from_shared(tiers: &[crate::runtime::SharedModel]) -> Self {
+        let engines: Vec<Box<dyn InferenceEngine>> = tiers
+            .iter()
+            .map(|t| {
+                Box::new(crate::runtime::NativeEngine::from_shared(t.clone()))
+                    as Box<dyn InferenceEngine>
             })
             .collect();
-        let max_response = models.iter().map(max_response_of).collect();
+        let max_response = tiers.iter().map(|t| max_response_of(t.model())).collect();
         Self::new(engines, max_response)
     }
 

@@ -6,7 +6,7 @@
 use crate::coordinator::batcher::{BatcherConfig, BoundedQueue, Request, SubmitError};
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::router::{ModelRouter, RouterEngine};
-use crate::runtime::{InferenceEngine, Tier};
+use crate::runtime::{InferenceEngine, SharedModel, ShardedRouterEngine, Tier};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
@@ -91,25 +91,55 @@ impl Server {
         models: Vec<crate::model::ensemble::UleenModel>,
         margin_threshold: f32,
     ) -> crate::Result<Self> {
-        anyhow::ensure!(
-            (1..=3).contains(&models.len()),
-            "zoo wants 1..=3 models, got {}",
-            models.len()
-        );
-        for m in &models[1..] {
-            anyhow::ensure!(
-                m.encoder.num_inputs == models[0].encoder.num_inputs
-                    && m.num_classes() == models[0].num_classes(),
-                "zoo models must share feature width and class count"
-            );
-        }
+        let tiers = compile_zoo(models)?;
+        Self::start_zoo_shared(cfg, tiers, margin_threshold)
+    }
+
+    /// [`Server::start_zoo`] over already-compiled tiers: every worker's
+    /// router is built with [`ModelRouter::from_shared`], so N workers
+    /// hold `Arc` handles into ONE copy of each tier instead of cloning
+    /// the zoo per worker (memory used to grow ∝ workers × tiers —
+    /// ROADMAP follow-up (h); the `Arc::strong_count` witness test pins
+    /// the sharing down).
+    pub fn start_zoo_shared(
+        cfg: ServerConfig,
+        tiers: Vec<SharedModel>,
+        margin_threshold: f32,
+    ) -> crate::Result<Self> {
         let metrics = Arc::new(ServerMetrics::new());
         let shared = metrics.clone();
         Self::start_with_metrics(cfg, metrics, move |_| {
-            let mut router = ModelRouter::from_models(&models);
+            let mut router = ModelRouter::from_shared(&tiers);
             router.margin_threshold = margin_threshold;
             Ok(Box::new(RouterEngine::new(router).with_metrics(shared.clone()))
                 as Box<dyn InferenceEngine>)
+        })
+    }
+
+    /// Start a server whose single worker owns a
+    /// [`ShardedRouterEngine`]: the cascade × shard composition — each
+    /// micro-batch splits into contiguous row ranges, every range runs
+    /// the batched confidence cascade (or its pinned tier) on a persistent
+    /// pool worker, per-tier counters merge deterministically into
+    /// [`Server::metrics`], and all `shards` workers probe ONE `Arc`-shared
+    /// copy of each tier. The alternative to [`Server::start_zoo`]'s
+    /// per-worker zoos when batches are large: one big batch split N ways
+    /// beats N zoos pulling small batches.
+    pub fn start_zoo_sharded(
+        cfg: ServerConfig,
+        models: Vec<crate::model::ensemble::UleenModel>,
+        margin_threshold: f32,
+        shards: usize,
+    ) -> crate::Result<Self> {
+        let tiers = compile_zoo(models)?;
+        let cfg = ServerConfig { workers: 1, ..cfg };
+        let metrics = Arc::new(ServerMetrics::new());
+        let shared = metrics.clone();
+        Self::start_with_metrics(cfg, metrics, move |_| {
+            Ok(Box::new(
+                ShardedRouterEngine::from_shared(tiers.clone(), margin_threshold, shards)
+                    .with_metrics(shared.clone()),
+            ) as Box<dyn InferenceEngine>)
         })
     }
 
@@ -197,6 +227,28 @@ impl Server {
             let _ = w.join();
         }
     }
+}
+
+/// Validate a zoo (1..=3 models ordered small → large, all sharing one
+/// feature width and class count) and compile each tier exactly ONCE into
+/// an `Arc`-shared [`SharedModel`] — the single zoo-construction funnel
+/// for [`Server::start_zoo`] and [`Server::start_zoo_sharded`].
+fn compile_zoo(
+    models: Vec<crate::model::ensemble::UleenModel>,
+) -> crate::Result<Vec<SharedModel>> {
+    anyhow::ensure!(
+        (1..=3).contains(&models.len()),
+        "zoo wants 1..=3 models, got {}",
+        models.len()
+    );
+    for m in &models[1..] {
+        anyhow::ensure!(
+            m.encoder.num_inputs == models[0].encoder.num_inputs
+                && m.num_classes() == models[0].num_classes(),
+            "zoo models must share feature width and class count"
+        );
+    }
+    Ok(models.into_iter().map(SharedModel::compile).collect())
 }
 
 fn worker_loop(
@@ -380,6 +432,46 @@ mod tests {
         assert!(report.tier_served[0] as usize >= 2 * n / 3, "fast tier traffic");
         assert!(report.tier_served[1] as usize >= n / 3, "accurate tier pinned traffic");
         assert!(report.tier_mean_us[0] > 0.0, "tier latency counters populate");
+    }
+
+    #[test]
+    fn zoo_workers_share_one_arc_copy_per_tier() {
+        // ROADMAP follow-up (h): N workers' routers must hold Arc handles
+        // into ONE copy of each tier, not per-worker clones.
+        let ds = synth_uci(5, uci_spec("iris").unwrap());
+        let mut tiers = Vec::new();
+        for (inputs, entries, bits) in [(6usize, 64usize, 2usize), (10, 128, 4)] {
+            let model = train_oneshot(
+                &ds,
+                &OneShotConfig {
+                    inputs_per_filter: inputs,
+                    entries_per_filter: entries,
+                    therm_bits: bits,
+                    ..Default::default()
+                },
+            )
+            .0;
+            tiers.push(crate::runtime::SharedModel::compile(model));
+        }
+        let workers = 3usize;
+        let cfg = ServerConfig { batcher: BatcherConfig::default(), workers };
+        let server = Server::start_zoo_shared(cfg, tiers.clone(), 0.05).unwrap();
+        for (i, t) in tiers.iter().enumerate() {
+            assert_eq!(
+                Arc::strong_count(t.model()),
+                1 + workers,
+                "tier {i}: one handle here + one per worker, zero clones"
+            );
+            assert_eq!(Arc::strong_count(t.flat()), 1 + workers, "tier {i} flat layout");
+        }
+        // the shared zoo still serves
+        let (tx, rx) = mpsc::channel();
+        server.submit(ds.test_row(0).to_vec(), tx).unwrap();
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        server.shutdown();
+        for t in &tiers {
+            assert_eq!(Arc::strong_count(t.model()), 1, "shutdown releases every handle");
+        }
     }
 
     #[test]

@@ -6,6 +6,12 @@
 //! * [`ShardedEngine`] — the fused kernel fanned across a persistent
 //!   worker pool (threads spawn once, jobs flow over channels, joined on
 //!   drop) with deterministic row-major stitching.
+//! * [`ShardedRouterEngine`] — the cascade × shard composition: the
+//!   model-zoo confidence cascade run data-parallel across the same kind
+//!   of pool, per-tier counters merged deterministically.
+//! * [`SharedModel`] — one compiled model behind `Arc`s; EVERY engine
+//!   construction path goes through it, so replicating an engine across
+//!   workers or shards shares the tables instead of cloning them.
 //! * `PjrtEngine` (feature `pjrt`) — loads the AOT artifacts
 //!   (`artifacts/*.hlo.txt`, lowered once by `python/compile/aot.py`) and
 //!   executes them through XLA. Interchange is HLO **text**: jax ≥ 0.5
@@ -21,9 +27,10 @@ pub mod sharded;
 
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtEngine;
-pub use sharded::ShardedEngine;
+pub use sharded::{ShardedEngine, ShardedRouterEngine};
 
-use crate::model::ensemble::{EnsembleScratch, UleenModel};
+use crate::model::ensemble::UleenModel;
+use std::sync::Arc;
 
 /// Request service class — which point on the paper's §V-D
 /// accuracy/efficiency frontier a request asks for. Single-model engines
@@ -37,6 +44,49 @@ pub enum Tier {
     Balanced,
     /// best accuracy: largest model
     Accurate,
+}
+
+/// One served model, compiled once and shared by reference.
+///
+/// The model (`UleenModel`: encoder + trainable tables) and its compiled
+/// inference layout (`FlatModel`) both sit behind `Arc`s, so every
+/// consumer of the same tier — per-worker [`NativeEngine`]s in a zoo,
+/// the shard pool behind [`ShardedRouterEngine`], the scalar path —
+/// holds a reference to ONE copy instead of cloning the tables per
+/// worker (memory used to grow ∝ workers × tiers). Cloning a
+/// `SharedModel` clones two `Arc`s, never the tables; the
+/// `Arc::strong_count` witness tests pin that down.
+#[derive(Clone)]
+pub struct SharedModel {
+    model: Arc<UleenModel>,
+    flat: Arc<crate::model::flat::FlatModel>,
+}
+
+impl SharedModel {
+    /// Compile `model`'s flat inference layout and wrap both behind
+    /// `Arc`s. The ONE place a served model is compiled; every engine
+    /// construction path (scalar, sharded, zoo, sharded zoo) goes
+    /// through a `SharedModel`.
+    pub fn compile(model: UleenModel) -> Self {
+        let flat = Arc::new(crate::model::flat::FlatModel::compile(&model));
+        Self { model: Arc::new(model), flat }
+    }
+
+    pub fn model(&self) -> &Arc<UleenModel> {
+        &self.model
+    }
+
+    pub fn flat(&self) -> &Arc<crate::model::flat::FlatModel> {
+        &self.flat
+    }
+
+    pub fn num_features(&self) -> usize {
+        self.model.encoder.num_inputs
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.model.num_classes()
+    }
 }
 
 /// A batch classifier — implemented by both the native bit-packed engine
@@ -95,29 +145,42 @@ pub trait InferenceEngine: Send {
 ///
 /// [`responses_batch_fused`]: crate::model::flat::FlatModel::responses_batch_fused
 pub struct NativeEngine {
-    pub model: UleenModel,
-    flat: crate::model::flat::FlatModel,
+    shared: SharedModel,
     resp_scratch: Vec<i32>,
     flat_scratch: crate::model::flat::FlatScratch,
     batch_scratch: crate::model::flat::FlatBatchScratch,
     encoded_buf: crate::util::bitvec::BitVec,
-    #[allow(dead_code)]
-    scratch: EnsembleScratch,
 }
 
 impl NativeEngine {
     pub fn new(model: UleenModel) -> Self {
-        let flat = crate::model::flat::FlatModel::compile(&model);
-        let encoded_buf = crate::util::bitvec::BitVec::zeros(model.encoded_bits());
+        Self::from_shared(SharedModel::compile(model))
+    }
+
+    /// Build an engine over an already-compiled [`SharedModel`] — two
+    /// `Arc` clones, zero model/table clones. The construction path the
+    /// zoo router and the shard pool use so N workers share one copy of
+    /// every tier.
+    pub fn from_shared(shared: SharedModel) -> Self {
+        let encoded_buf = crate::util::bitvec::BitVec::zeros(shared.model().encoded_bits());
         Self {
-            model,
-            flat,
+            shared,
             resp_scratch: Vec::new(),
             flat_scratch: crate::model::flat::FlatScratch::default(),
             batch_scratch: crate::model::flat::FlatBatchScratch::default(),
             encoded_buf,
-            scratch: EnsembleScratch::default(),
         }
+    }
+
+    /// The served model (read-only; shared with every other holder of the
+    /// same [`SharedModel`]).
+    pub fn model(&self) -> &UleenModel {
+        self.shared.model()
+    }
+
+    /// The engine's shared handle (cloning it shares, never copies).
+    pub fn shared(&self) -> &SharedModel {
+        &self.shared
     }
 
     /// Replace the served model in place, recompiling the flat layout and
@@ -126,40 +189,46 @@ impl NativeEngine {
     /// across calls — stale scratch shapes cannot leak into the new model
     /// (covered by `engine_survives_model_swaps_of_different_widths`).
     pub fn swap_model(&mut self, model: UleenModel) {
-        self.flat = crate::model::flat::FlatModel::compile(&model);
-        self.encoded_buf = crate::util::bitvec::BitVec::zeros(model.encoded_bits());
+        self.swap_shared(SharedModel::compile(model));
+    }
+
+    /// [`NativeEngine::swap_model`] without recompiling: adopt an
+    /// already-shared model (the old model's `Arc`s are released, so a
+    /// fully swapped-out zoo frees its tables exactly once).
+    pub fn swap_shared(&mut self, shared: SharedModel) {
+        self.encoded_buf = crate::util::bitvec::BitVec::zeros(shared.model().encoded_bits());
         self.flat_scratch = crate::model::flat::FlatScratch::default();
         self.batch_scratch = crate::model::flat::FlatBatchScratch::default();
         self.resp_scratch = Vec::new();
-        self.model = model;
+        self.shared = shared;
     }
 }
 
 impl InferenceEngine for NativeEngine {
     fn label(&self) -> String {
-        format!("native:{}", self.model.name)
+        format!("native:{}", self.model().name)
     }
 
     fn num_features(&self) -> usize {
-        self.model.encoder.num_inputs
+        self.model().encoder.num_inputs
     }
 
     fn num_classes(&self) -> usize {
-        self.model.num_classes()
+        self.model().num_classes()
     }
 
     fn responses(&mut self, x: &[f32], n: usize) -> crate::Result<Vec<f32>> {
         let f = self.num_features();
         anyhow::ensure!(x.len() == n * f, "bad input length");
         let m = self.num_classes();
-        let bits = self.model.encoded_bits();
+        let bits = self.shared.model().encoded_bits();
         if n > 1 {
             // Fused slice path: encode straight into the bit-sliced tile
             // layout, one CSR traversal per 64 samples.
             self.resp_scratch.clear();
             self.resp_scratch.resize(n * m, 0);
-            self.flat.responses_batch_fused(
-                &self.model.encoder,
+            self.shared.flat().responses_batch_fused(
+                &self.shared.model().encoder,
                 x,
                 n,
                 &mut self.batch_scratch,
@@ -172,12 +241,13 @@ impl InferenceEngine for NativeEngine {
             self.encoded_buf = crate::util::bitvec::BitVec::zeros(bits);
         }
         for i in 0..n {
-            self.model
+            self.shared
+                .model()
                 .encoder
                 .encode_into(&x[i * f..(i + 1) * f], &mut self.encoded_buf);
             self.resp_scratch.clear();
             self.resp_scratch.resize(m, 0);
-            self.flat.responses_encoded(
+            self.shared.flat().responses_encoded(
                 &self.encoded_buf,
                 &mut self.flat_scratch,
                 &mut self.resp_scratch,

@@ -1,37 +1,63 @@
-//! Sharded batch engine — data-parallel fan-out of the fused slice
-//! kernel across a **persistent worker pool**.
+//! Sharded batch engines — data-parallel fan-out across a **persistent
+//! worker pool**.
 //!
 //! The paper's accelerator hits 14.3M inferences/s by evaluating whole
-//! batches in lockstep hardware; the software analogue is one flat model
-//! shared (read-only) by N worker threads, each running the fused
-//! encode + bit-sliced batch kernel
-//! ([`FlatModel::responses_batch_fused`]) over a contiguous slice of the
-//! batch's raw float rows. Rows are split round-robin-free — each shard
-//! owns one contiguous row range and writes its responses straight into
-//! the corresponding region of the output buffer, so result stitching is
+//! batches in lockstep hardware; the software analogue is one compiled
+//! model shared (read-only, behind `Arc`) by N worker threads, each
+//! running a kernel over a contiguous slice of the batch's raw float
+//! rows. Rows are split round-robin-free — each shard owns one
+//! contiguous row range and writes its results straight into the
+//! corresponding region of the output buffer, so result stitching is
 //! deterministic row-major by construction (no reordering, no locks on
 //! the hot path).
 //!
+//! Two engines share ONE pool implementation (`ShardPool`) and one
+//! generalized job type (`Job`: row range over a model, or row range
+//! over a router):
+//!
+//! * [`ShardedEngine`] — row-range-over-one-model: each job runs the
+//!   fused encode + bit-sliced batch kernel
+//!   ([`FlatModel::responses_batch_fused`]) on its range.
+//! * [`ShardedRouterEngine`] — row-range-over-a-router: each job runs
+//!   the **batched confidence cascade**
+//!   ([`ModelRouter::classify_cascade_batch`]) — or a tier-pinned batch —
+//!   on its range, against a per-worker [`ModelRouter`] whose tiers are
+//!   all `Arc`-shared [`SharedModel`]s (per-worker state is scratch +
+//!   counters only; the tables exist once per tier, not once per
+//!   worker). Per-tier counters merge deterministically
+//!   ([`RouterStats::merge`]) and stay bit-exact with the sequential
+//!   cascade (`prop_sharded_cascade_matches_sequential`).
+//!
 //! ## Pool lifecycle
 //!
-//! Threads spawn **once**, in [`ShardedEngine::new`], and live until the
-//! engine is dropped — steady state does zero thread spawns and no
-//! scratch allocations per call (each worker keeps its own
-//! [`ShardScratch`]; the returned output `Vec` is the one per-call
-//! allocation).
-//! Every call to [`InferenceEngine::responses`] hands each participating
-//! worker one [`Job`] over its channel and then blocks on the shared
-//! completion channel until all dispatched jobs are acknowledged; workers
-//! it didn't use stay parked in `recv`. `Drop` closes the job channels
-//! and joins every thread. This replaces PR 1's per-call
-//! [`std::thread::scope`], whose spawn/join pair dominated small-batch
-//! latency (ROADMAP follow-up (c)) — `Server::start_sharded` now reuses
-//! one pool across every micro-batch.
+//! Threads spawn **once**, in the engine constructor, and live until the
+//! engine is dropped — steady state does zero thread spawns per call.
+//! On the single-model path each worker reuses its own scratch, so the
+//! returned output `Vec` is the one per-call allocation; router jobs
+//! additionally pay the cascade's returned prediction `Vec` per range
+//! (a write-into router batch API would remove it — noted in ROADMAP).
+//! Every call hands each participating worker one `Job` over its
+//! channel and then
+//! blocks on the shared completion channel until all dispatched jobs are
+//! acknowledged; workers it didn't use stay parked in `recv`. `Drop`
+//! closes the job channels and joins every thread.
+//!
+//! ## Failure containment
+//!
+//! Workers wrap every job in `catch_unwind`: a panicking kernel or tier
+//! engine surfaces as an `Err` from the dispatching call — after ALL
+//! in-flight jobs are drained — instead of a poisoned pool or a
+//! deadlocked `recv`. The pool stays serviceable, so the serving worker
+//! above counts the failed micro-batch (`batches_failed`) and keeps
+//! going (covered by the fault-injection suite in
+//! `integration_coordinator.rs`).
 
+use crate::coordinator::metrics::ServerMetrics;
+use crate::coordinator::router::{ModelRouter, RouterStats};
 use crate::encoding::thermometer::ThermometerEncoder;
 use crate::model::ensemble::UleenModel;
 use crate::model::flat::{FlatBatchScratch, FlatModel};
-use crate::runtime::InferenceEngine;
+use crate::runtime::{InferenceEngine, SharedModel, Tier};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -46,16 +72,9 @@ struct ShardScratch {
     resp: Vec<i32>,
 }
 
-/// One unit of work: a contiguous row range of the current batch.
-///
-/// Raw pointers stand in for borrows because the pool threads outlive any
-/// single call. SAFETY contract (upheld by [`ShardedEngine::responses`]):
-/// `flat`/`encoder` point into the engine, `x` into the caller's input
-/// and `out` into the call's output buffer; the dispatching call holds
-/// `&mut self` and blocks until every job is acknowledged, so all four
-/// outlive the job, nothing mutates the shared inputs meanwhile, and
-/// `out` ranges of concurrent jobs are disjoint by construction.
-struct Job {
+/// Row-range-over-one-model: run the fused kernel on `rows` rows and
+/// write `rows * m` response floats.
+struct ResponsesJob {
     flat: *const FlatModel,
     encoder: *const ThermometerEncoder,
     x: *const f32,
@@ -65,40 +84,74 @@ struct Job {
     m: usize,
 }
 
+/// Row-range-over-a-router: run the batched cascade (`tier: None`) or a
+/// tier-pinned batch (`tier: Some`) on `rows` rows against THIS worker's
+/// router, writing predictions (and, when `scores` is non-null,
+/// resolution-tier response rows). Counters accumulate in the router and
+/// are merged by the dispatching engine.
+struct RouterJob {
+    router: *mut ModelRouter,
+    x: *const f32,
+    preds: *mut usize,
+    /// null unless the caller wants the resolution-tier score matrix
+    scores: *mut f32,
+    rows: usize,
+    f: usize,
+    m: usize,
+    tier: Option<Tier>,
+}
+
+/// One unit of work: a contiguous row range of the current batch, either
+/// over one flat model or over a per-worker router.
+///
+/// Raw pointers stand in for borrows because the pool threads outlive any
+/// single call. SAFETY contract (upheld by the dispatching engines):
+/// `flat`/`encoder` point into `Arc` allocations the engine keeps alive,
+/// `router` to the dispatching engine's per-worker router (each worker
+/// receives only its own), `x` into the caller's input and
+/// `preds`/`scores`/`out` into the call's output buffers; the dispatching
+/// call holds `&mut self` and blocks until every job is acknowledged, so
+/// everything outlives the job, nothing mutates the shared inputs
+/// meanwhile, and output ranges of concurrent jobs are disjoint by
+/// construction.
+enum Job {
+    Responses(ResponsesJob),
+    Router(RouterJob),
+}
+
 // SAFETY: see the `Job` contract above — the pointers are only
-// dereferenced while the dispatching `responses` call keeps their
-// targets alive and unaliased.
+// dereferenced while the dispatching call keeps their targets alive and
+// unaliased (`ModelRouter` itself is `Send`: its engines are
+// `Box<dyn InferenceEngine>` and the trait requires `Send`).
 unsafe impl Send for Job {}
 
-/// An [`InferenceEngine`] that splits every batch across a persistent
-/// pool of `shards` worker threads, each running the fused slice kernel
-/// on its own contiguous row range. Results are bit-exact with
-/// [`NativeEngine`] and the reference ensemble (asserted by the
-/// conformance proptests), and repeated calls reuse the same threads
-/// (asserted by `pool_threads_spawn_once_across_calls`).
-///
-/// [`NativeEngine`]: crate::runtime::NativeEngine
-pub struct ShardedEngine {
-    pub model: UleenModel,
-    flat: FlatModel,
-    shards: usize,
+/// Why a dispatched job did not complete.
+enum JobFailure {
+    /// the kernel / a tier engine panicked (caught; the worker lives on)
+    Panicked,
+    /// a tier engine returned an error
+    Engine(String),
+}
+
+/// The persistent worker pool both sharded engines run on: one job
+/// channel per worker, one shared completion channel, threads spawned
+/// once and joined on drop. Dispatch is engine-specific (each engine
+/// builds its own jobs); the pool owns delivery, failure containment and
+/// the ack rendezvous.
+struct ShardPool {
     /// job channel per worker, index-aligned with `handles`
     job_txs: Vec<Sender<Job>>,
     handles: Vec<JoinHandle<()>>,
-    /// shared completion channel: one `true` per finished job
-    done_rx: Receiver<bool>,
-    /// total threads ever spawned by this engine (pool-liveness witness)
+    /// shared completion channel: one outcome per finished job
+    done_rx: Receiver<Result<(), JobFailure>>,
+    /// total threads ever spawned by this pool (pool-liveness witness)
     spawned: Arc<AtomicUsize>,
 }
 
-impl ShardedEngine {
-    /// Spawn the persistent pool: `shards` worker threads (clamped to
-    /// ≥ 1), parked on their job channels until the first call. A batch
-    /// of `n` rows dispatches to at most `min(shards, n)` of them, so
-    /// tiny batches stay cheap.
-    pub fn new(model: UleenModel, shards: usize) -> Self {
-        let shards = shards.max(1);
-        let flat = FlatModel::compile(&model);
+impl ShardPool {
+    /// Spawn `shards` worker threads (the caller clamps to ≥ 1), parked
+    /// on their job channels until the first dispatch.
+    fn spawn(shards: usize) -> Self {
         let spawned = Arc::new(AtomicUsize::new(0));
         let (done_tx, done_rx) = channel();
         let mut job_txs = Vec::with_capacity(shards);
@@ -117,7 +170,190 @@ impl ShardedEngine {
             job_txs.push(tx);
             handles.push(handle);
         }
-        Self { model, flat, shards, job_txs, handles, done_rx, spawned }
+        Self { job_txs, handles, done_rx, spawned }
+    }
+
+    fn threads_spawned(&self) -> usize {
+        self.spawned.load(Ordering::SeqCst)
+    }
+
+    /// Send job `i` to worker `i`, then block until every job is
+    /// acknowledged — this rendezvous is what makes the raw-pointer
+    /// handoff sound (and keeps `&mut self` semantics upstream: no two
+    /// calls ever interleave on the pool). ALL acks are drained before a
+    /// failure surfaces: unwinding with jobs still in flight would free
+    /// the output buffers under a worker's pen.
+    fn run(&self, jobs: Vec<Job>) -> crate::Result<()> {
+        let dispatched = jobs.len();
+        debug_assert!(dispatched <= self.job_txs.len());
+        for (tx, job) in self.job_txs.iter().zip(jobs) {
+            tx.send(job).expect("shard worker exited while engine alive");
+        }
+        let mut panicked = 0usize;
+        let mut engine_err: Option<String> = None;
+        for _ in 0..dispatched {
+            match self
+                .done_rx
+                .recv()
+                .expect("shard worker exited while engine alive")
+            {
+                Ok(()) => {}
+                Err(JobFailure::Panicked) => panicked += 1,
+                Err(JobFailure::Engine(e)) => {
+                    if engine_err.is_none() {
+                        engine_err = Some(e);
+                    }
+                }
+            }
+        }
+        if panicked > 0 {
+            anyhow::bail!(
+                "{panicked} shard worker(s) panicked while evaluating a batch \
+                 (pool still serviceable)"
+            );
+        }
+        if let Some(e) = engine_err {
+            anyhow::bail!("shard worker engine error: {e}");
+        }
+        Ok(())
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        // Closing the job channels wakes each worker out of `recv`;
+        // joining makes engine drop a clean rendezvous (no detached
+        // threads holding dangling pointers).
+        self.job_txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(rx: &Receiver<Job>, done: &Sender<Result<(), JobFailure>>) {
+    let mut scratch = ShardScratch::default();
+    while let Ok(job) = rx.recv() {
+        // Catch panics so a poisoned kernel invariant (or a panicking
+        // tier engine) surfaces as a deterministic `Err` in the
+        // dispatching call instead of a deadlocked `done_rx.recv()` —
+        // and the worker survives to serve the next batch.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_job(job, &mut scratch)
+        }))
+        .map_err(|_| JobFailure::Panicked)
+        .and_then(|r| r.map_err(|e| JobFailure::Engine(e.to_string())));
+        if done.send(outcome).is_err() {
+            break; // engine gone: exit quietly
+        }
+    }
+}
+
+fn run_job(job: Job, scratch: &mut ShardScratch) -> crate::Result<()> {
+    match job {
+        Job::Responses(j) => {
+            // SAFETY: the `Job` contract (see its doc) — the dispatching
+            // call keeps all pointers alive and the out range exclusive
+            // until we acknowledge.
+            let flat = unsafe { &*j.flat };
+            let encoder = unsafe { &*j.encoder };
+            let x = unsafe { std::slice::from_raw_parts(j.x, j.rows * j.f) };
+            let out = unsafe { std::slice::from_raw_parts_mut(j.out, j.rows * j.m) };
+            scratch.resp.clear();
+            scratch.resp.resize(j.rows * j.m, 0);
+            flat.responses_batch_fused(encoder, x, j.rows, &mut scratch.batch, &mut scratch.resp);
+            for (o, &v) in out.iter_mut().zip(scratch.resp.iter()) {
+                *o = v as f32;
+            }
+            Ok(())
+        }
+        Job::Router(j) => {
+            // SAFETY: same contract; additionally `router` points at THIS
+            // worker's router — the dispatcher never hands one router to
+            // two jobs — so the mutable borrow is exclusive.
+            let router = unsafe { &mut *j.router };
+            let x = unsafe { std::slice::from_raw_parts(j.x, j.rows * j.f) };
+            let preds_out = unsafe { std::slice::from_raw_parts_mut(j.preds, j.rows) };
+            if let Some(tier) = j.tier {
+                let preds = router.classify_batch(x, j.rows, tier)?;
+                preds_out.copy_from_slice(&preds);
+            } else if j.scores.is_null() {
+                let preds = router.classify_cascade_batch(x, j.rows)?;
+                preds_out.copy_from_slice(&preds);
+            } else {
+                let scores_out =
+                    unsafe { std::slice::from_raw_parts_mut(j.scores, j.rows * j.m) };
+                let (scores, preds) = router.cascade_responses_batch(x, j.rows)?;
+                scores_out.copy_from_slice(&scores);
+                preds_out.copy_from_slice(&preds);
+            }
+            Ok(())
+        }
+    }
+}
+
+/// One [`ModelRouter`] per pool worker over the same `Arc`-shared tiers,
+/// all at `margin` — the ONE construction loop shared by
+/// [`ShardedRouterEngine::from_shared`] and
+/// [`ShardedRouterEngine::swap_shared`], so freshly built and swapped-in
+/// zoos can never diverge in router initialization.
+fn build_routers(tiers: &[SharedModel], margin: f32, shards: usize) -> Vec<ModelRouter> {
+    (0..shards)
+        .map(|_| {
+            let mut r = ModelRouter::from_shared(tiers);
+            r.margin_threshold = margin;
+            r
+        })
+        .collect()
+}
+
+/// Contiguous row ranges of `per = ceil(n / workers)` rows each (the last
+/// may be short): shard `w` owns rows `[w*per, w*per + rows)` and writes
+/// straight into its region of the output — deterministic row-major
+/// stitching, no post-pass. Shared by both sharded engines so the split
+/// (and therefore the counter merge order) is identical everywhere.
+fn row_ranges(n: usize, workers: usize) -> impl Iterator<Item = (usize, usize)> {
+    let per = n.div_ceil(workers.max(1));
+    (0..workers)
+        .map(move |w| w * per)
+        .take_while(move |&row0| row0 < n)
+        .map(move |row0| (row0, per.min(n - row0)))
+}
+
+/// An [`InferenceEngine`] that splits every batch across a persistent
+/// pool of `shards` worker threads, each running the fused slice kernel
+/// on its own contiguous row range of ONE `Arc`-shared model. Results are
+/// bit-exact with [`NativeEngine`] and the reference ensemble (asserted
+/// by the conformance proptests), and repeated calls reuse the same
+/// threads (asserted by `pool_threads_spawn_once_across_calls`).
+///
+/// [`NativeEngine`]: crate::runtime::NativeEngine
+pub struct ShardedEngine {
+    shared: SharedModel,
+    shards: usize,
+    pool: ShardPool,
+}
+
+impl ShardedEngine {
+    /// Compile `model` once and spawn the persistent pool: `shards`
+    /// worker threads (clamped to ≥ 1), parked on their job channels
+    /// until the first call. A batch of `n` rows dispatches to at most
+    /// `min(shards, n)` of them, so tiny batches stay cheap.
+    pub fn new(model: UleenModel, shards: usize) -> Self {
+        Self::from_shared(SharedModel::compile(model), shards)
+    }
+
+    /// [`ShardedEngine::new`] over an already-compiled [`SharedModel`] —
+    /// zero model clones; the pool probes the same `Arc`'d tables as
+    /// every other holder.
+    pub fn from_shared(shared: SharedModel, shards: usize) -> Self {
+        let shards = shards.max(1);
+        Self { shared, shards, pool: ShardPool::spawn(shards) }
+    }
+
+    /// The served model (read-only; `Arc`-shared).
+    pub fn model(&self) -> &UleenModel {
+        self.shared.model()
     }
 
     pub fn shards(&self) -> usize {
@@ -127,7 +363,7 @@ impl ShardedEngine {
     /// How many pool threads this engine has ever spawned. Steady state
     /// this equals [`ShardedEngine::shards`] forever — calls never spawn.
     pub fn threads_spawned(&self) -> usize {
-        self.spawned.load(Ordering::SeqCst)
+        self.pool.threads_spawned()
     }
 
     /// Replace the served model in place (recompiles the flat layout).
@@ -136,69 +372,27 @@ impl ShardedEngine {
     /// every job exactly — so models of different encoded widths or class
     /// counts can be swapped through one running pool.
     pub fn swap_model(&mut self, model: UleenModel) {
-        self.flat = FlatModel::compile(&model);
-        self.model = model;
+        self.swap_shared(SharedModel::compile(model));
     }
-}
 
-impl Drop for ShardedEngine {
-    fn drop(&mut self) {
-        // Closing the job channels wakes each worker out of `recv`;
-        // joining makes engine drop a clean rendezvous (no detached
-        // threads holding dangling model pointers).
-        self.job_txs.clear();
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
-    }
-}
-
-fn worker_loop(rx: &Receiver<Job>, done: &Sender<bool>) {
-    let mut scratch = ShardScratch::default();
-    while let Ok(job) = rx.recv() {
-        // Catch panics so a poisoned kernel invariant surfaces as a
-        // deterministic panic in the dispatching call instead of a
-        // deadlocked `done_rx.recv()`.
-        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            // SAFETY: the `Job` contract (see its doc) — the dispatching
-            // `responses` call keeps all four pointers alive and the out
-            // range exclusive until we acknowledge below.
-            let flat = unsafe { &*job.flat };
-            let encoder = unsafe { &*job.encoder };
-            let x = unsafe { std::slice::from_raw_parts(job.x, job.rows * job.f) };
-            let out =
-                unsafe { std::slice::from_raw_parts_mut(job.out, job.rows * job.m) };
-            scratch.resp.clear();
-            scratch.resp.resize(job.rows * job.m, 0);
-            flat.responses_batch_fused(
-                encoder,
-                x,
-                job.rows,
-                &mut scratch.batch,
-                &mut scratch.resp,
-            );
-            for (o, &v) in out.iter_mut().zip(scratch.resp.iter()) {
-                *o = v as f32;
-            }
-        }))
-        .is_ok();
-        if done.send(ok).is_err() {
-            break; // engine gone: exit quietly
-        }
+    /// [`ShardedEngine::swap_model`] without recompiling: adopt an
+    /// already-shared model (re-shares; the old `Arc`s are released).
+    pub fn swap_shared(&mut self, shared: SharedModel) {
+        self.shared = shared;
     }
 }
 
 impl InferenceEngine for ShardedEngine {
     fn label(&self) -> String {
-        format!("sharded[{}]:{}", self.shards, self.model.name)
+        format!("sharded[{}]:{}", self.shards, self.model().name)
     }
 
     fn num_features(&self) -> usize {
-        self.model.encoder.num_inputs
+        self.model().encoder.num_inputs
     }
 
     fn num_classes(&self) -> usize {
-        self.model.num_classes()
+        self.model().num_classes()
     }
 
     fn responses(&mut self, x: &[f32], n: usize) -> crate::Result<Vec<f32>> {
@@ -209,57 +403,292 @@ impl InferenceEngine for ShardedEngine {
         if n == 0 {
             return Ok(out);
         }
-        // Contiguous row ranges of `per` rows each (the last may be
-        // short): shard w owns rows [w*per, w*per+rows) and writes them
-        // straight into its region of `out` — deterministic row-major
-        // stitching, no post-pass.
-        let workers = self.shards.min(n);
-        let per = n.div_ceil(workers);
         // One as_mut_ptr() BEFORE dispatching anything: re-borrowing `out`
         // after a worker has started writing through a previously derived
         // pointer would invalidate that pointer's provenance under the
         // aliasing model (Miri flags it), even though the ranges never
         // overlap.
         let out_ptr = out.as_mut_ptr();
-        let mut dispatched = 0usize;
-        let mut row0 = 0usize;
-        for tx in &self.job_txs {
-            if row0 >= n {
-                break;
-            }
-            let rows = per.min(n - row0);
-            let job = Job {
-                flat: &self.flat,
-                encoder: &self.model.encoder,
-                x: x[row0 * f..].as_ptr(),
-                // SAFETY: in-bounds offset; ranges of distinct jobs are
-                // disjoint ([row0*m, (row0+rows)*m) with strictly
-                // increasing row0).
-                out: unsafe { out_ptr.add(row0 * m) },
-                rows,
-                f,
-                m,
-            };
-            tx.send(job).expect("shard worker exited while engine alive");
-            dispatched += 1;
-            row0 += rows;
-        }
-        // Block until every dispatched job is acknowledged — this is what
-        // makes the raw-pointer handoff sound (and keeps `&mut self`
-        // semantics: no two calls ever interleave on the pool). Drain ALL
-        // acks before surfacing a failure: unwinding with jobs still in
-        // flight would free `out` under a worker's pen.
-        let mut all_ok = true;
-        for _ in 0..dispatched {
-            all_ok &= self
-                .done_rx
-                .recv()
-                .expect("shard worker exited while engine alive");
-        }
-        if !all_ok {
-            panic!("shard worker panicked while evaluating a batch");
-        }
+        let flat: *const FlatModel = Arc::as_ptr(self.shared.flat());
+        let encoder: *const ThermometerEncoder = &self.shared.model().encoder;
+        let jobs: Vec<Job> = row_ranges(n, self.shards.min(n))
+            .map(|(row0, rows)| {
+                Job::Responses(ResponsesJob {
+                    flat,
+                    encoder,
+                    x: x[row0 * f..].as_ptr(),
+                    // SAFETY: in-bounds offset; ranges of distinct jobs
+                    // are disjoint ([row0*m, (row0+rows)*m) with strictly
+                    // increasing row0).
+                    out: unsafe { out_ptr.add(row0 * m) },
+                    rows,
+                    f,
+                    m,
+                })
+            })
+            .collect();
+        self.pool.run(jobs)?;
         Ok(out)
+    }
+}
+
+/// Cascade × shard fan-out: the model-zoo confidence cascade
+/// ([`ModelRouter::classify_cascade_batch`]) run data-parallel across the
+/// persistent shard pool. Big batches split into contiguous row ranges;
+/// each range runs the full cascade (or a tier-pinned batch) on a
+/// per-worker router whose tiers are all `Arc`-shared [`SharedModel`]s —
+/// per-worker state is scratch buffers and counters only, so memory for
+/// the tables is ∝ tiers, NOT ∝ workers × tiers (witnessed by
+/// `Arc::strong_count` tests). Per-tier counters merge deterministically
+/// in worker order via [`RouterStats::merge`]; because the cascade is
+/// row-independent, merged counters and predictions are bit-exact with N
+/// sequential [`ModelRouter::classify_cascade`] calls
+/// (`prop_sharded_cascade_matches_sequential`).
+///
+/// This engine unifies the two serving axes PRs 1–3 grew in parallel:
+/// shard fan-out (one model, many threads) and the tier cascade (many
+/// models, one thread) now compose behind one [`InferenceEngine`].
+pub struct ShardedRouterEngine {
+    /// the zoo, small → large, `Arc`-shared with every per-worker router
+    tiers: Vec<SharedModel>,
+    /// one router per pool worker; worker `w`'s jobs address `routers[w]`
+    routers: Vec<ModelRouter>,
+    shards: usize,
+    pool: ShardPool,
+    /// counters of routers retired by [`ShardedRouterEngine::swap_shared`]
+    /// — keeps [`ShardedRouterEngine::merged_stats`] monotonic, which the
+    /// metrics delta-flush relies on
+    retired: RouterStats,
+    metrics: Option<Arc<ServerMetrics>>,
+}
+
+impl ShardedRouterEngine {
+    /// Compile each tier once, then build the pool and one router per
+    /// worker over the shared tiers.
+    pub fn new(models: Vec<UleenModel>, margin_threshold: f32, shards: usize) -> Self {
+        let tiers: Vec<SharedModel> = models.into_iter().map(SharedModel::compile).collect();
+        Self::from_shared(tiers, margin_threshold, shards)
+    }
+
+    /// Build over already-compiled tiers: the pool's routers hold `Arc`
+    /// handles into `tiers` — zero model clones per worker (the
+    /// `Arc::strong_count` witness tests assert exactly
+    /// `2 + shards` handles per tier: caller + engine + one per worker).
+    pub fn from_shared(tiers: Vec<SharedModel>, margin_threshold: f32, shards: usize) -> Self {
+        assert!(!tiers.is_empty(), "sharded zoo wants at least one tier");
+        let shards = shards.max(1);
+        let routers = build_routers(&tiers, margin_threshold, shards);
+        Self {
+            tiers,
+            routers,
+            shards,
+            pool: ShardPool::spawn(shards),
+            retired: RouterStats::default(),
+            metrics: None,
+        }
+    }
+
+    /// Build from caller-supplied per-worker routers (one per shard, all
+    /// agreeing on feature width / class count / tier depth). The
+    /// fault-injection suite uses this to put panicking or failing tier
+    /// engines on the pool; production paths use
+    /// [`ShardedRouterEngine::from_shared`].
+    pub fn from_routers(routers: Vec<ModelRouter>) -> Self {
+        assert!(!routers.is_empty(), "sharded zoo wants at least one worker router");
+        let (f, m, t) = (
+            routers[0].num_features(),
+            routers[0].num_classes(),
+            routers[0].num_tiers(),
+        );
+        for r in &routers[1..] {
+            assert_eq!(r.num_features(), f, "worker routers disagree on feature width");
+            assert_eq!(r.num_classes(), m, "worker routers disagree on class count");
+            assert_eq!(r.num_tiers(), t, "worker routers disagree on tier depth");
+        }
+        let shards = routers.len();
+        Self {
+            tiers: Vec::new(),
+            routers,
+            shards,
+            pool: ShardPool::spawn(shards),
+            retired: RouterStats::default(),
+            metrics: None,
+        }
+    }
+
+    /// Flush per-tier counter deltas into `metrics` after every call
+    /// (and tell the sink this zoo's depth so reports label exactly the
+    /// tiers that exist) — the sharded analogue of
+    /// [`RouterEngine::with_metrics`].
+    ///
+    /// [`RouterEngine::with_metrics`]: crate::coordinator::router::RouterEngine::with_metrics
+    pub fn with_metrics(mut self, metrics: Arc<ServerMetrics>) -> Self {
+        metrics.set_num_tiers(self.routers[0].num_tiers());
+        self.metrics = Some(metrics);
+        self
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Pool-liveness witness, same contract as
+    /// [`ShardedEngine::threads_spawned`].
+    pub fn threads_spawned(&self) -> usize {
+        self.pool.threads_spawned()
+    }
+
+    /// The `Arc`-shared tiers (empty for
+    /// [`ShardedRouterEngine::from_routers`]-built engines).
+    pub fn tiers(&self) -> &[SharedModel] {
+        &self.tiers
+    }
+
+    /// Per-tier counters merged deterministically across the pool, in
+    /// worker order, plus everything accumulated by routers retired via
+    /// swap — monotonically non-decreasing across calls, which the
+    /// metrics delta-flush relies on. A batch that FAILED part-way may
+    /// still have advanced counters for the rows its workers finished;
+    /// the serving layer separately counts the whole batch in
+    /// `batches_failed`.
+    pub fn merged_stats(&self) -> RouterStats {
+        let mut total = self.retired.clone();
+        for r in &self.routers {
+            total.merge(&r.stats);
+        }
+        total
+    }
+
+    /// Replace the whole zoo in place (recompiling each tier once). The
+    /// pool is untouched — workers hold no router state between jobs.
+    pub fn swap_models(&mut self, models: Vec<UleenModel>) {
+        let tiers: Vec<SharedModel> = models.into_iter().map(SharedModel::compile).collect();
+        self.swap_shared(tiers);
+    }
+
+    /// [`ShardedRouterEngine::swap_models`] without recompiling: re-share
+    /// already-compiled tiers across every worker router. Old tiers'
+    /// `Arc`s are fully released (witness-tested); retired counters fold
+    /// into [`ShardedRouterEngine::merged_stats`] so serving totals never
+    /// go backwards.
+    pub fn swap_shared(&mut self, tiers: Vec<SharedModel>) {
+        assert!(!tiers.is_empty(), "sharded zoo wants at least one tier");
+        let margin = self.routers[0].margin_threshold;
+        for r in &self.routers {
+            self.retired.merge(&r.stats);
+        }
+        self.routers = build_routers(&tiers, margin, self.shards);
+        if let Some(m) = &self.metrics {
+            m.set_num_tiers(self.routers[0].num_tiers());
+        }
+        self.tiers = tiers;
+    }
+
+    /// Fan one batch across the pool: contiguous row ranges, one
+    /// [`RouterJob`] per participating worker, predictions (and optional
+    /// resolution-tier scores) written in place, per-tier counter deltas
+    /// flushed to the hooked metrics sink. Counters advanced by finished
+    /// ranges flush even when a sibling range failed — operators see the
+    /// partial work AND the `batches_failed` bump.
+    fn dispatch(
+        &mut self,
+        x: &[f32],
+        n: usize,
+        tier: Option<Tier>,
+        mut scores: Option<&mut Vec<f32>>,
+    ) -> crate::Result<Vec<usize>> {
+        let f = self.routers[0].num_features();
+        let m = self.routers[0].num_classes();
+        anyhow::ensure!(x.len() == n * f, "bad input length");
+        if let Some(sc) = scores.as_deref_mut() {
+            sc.clear();
+            sc.resize(n * m, 0.0);
+        }
+        let mut preds = vec![0usize; n];
+        if n == 0 {
+            return Ok(preds);
+        }
+        let before = self.metrics.as_ref().map(|_| self.merged_stats());
+        // Pointers derived once, BEFORE any job is dispatched (see the
+        // provenance note in `ShardedEngine::responses`).
+        let preds_ptr = preds.as_mut_ptr();
+        let scores_ptr: *mut f32 = match scores.as_deref_mut() {
+            Some(sc) => sc.as_mut_ptr(),
+            None => std::ptr::null_mut(),
+        };
+        let routers_ptr = self.routers.as_mut_ptr();
+        let jobs: Vec<Job> = row_ranges(n, self.shards.min(n))
+            .enumerate()
+            .map(|(w, (row0, rows))| {
+                Job::Router(RouterJob {
+                    // SAFETY: w < shards = routers.len(); each worker gets
+                    // its own router exactly once per dispatch.
+                    router: unsafe { routers_ptr.add(w) },
+                    x: x[row0 * f..].as_ptr(),
+                    // SAFETY: in-bounds offsets; output ranges of distinct
+                    // jobs are disjoint (strictly increasing row0).
+                    preds: unsafe { preds_ptr.add(row0) },
+                    scores: if scores_ptr.is_null() {
+                        std::ptr::null_mut()
+                    } else {
+                        unsafe { scores_ptr.add(row0 * m) }
+                    },
+                    rows,
+                    f,
+                    m,
+                    tier,
+                })
+            })
+            .collect();
+        let result = self.pool.run(jobs);
+        if let (Some(sink), Some(before)) = (&self.metrics, before) {
+            sink.record_tiers(&self.merged_stats().diff(&before));
+        }
+        result?;
+        Ok(preds)
+    }
+}
+
+impl InferenceEngine for ShardedRouterEngine {
+    fn label(&self) -> String {
+        format!(
+            "sharded-zoo[{} tiers × {} shards]",
+            self.routers[0].num_tiers(),
+            self.shards
+        )
+    }
+
+    fn num_features(&self) -> usize {
+        self.routers[0].num_features()
+    }
+
+    fn num_classes(&self) -> usize {
+        self.routers[0].num_classes()
+    }
+
+    fn num_tiers(&self) -> usize {
+        self.routers[0].num_tiers()
+    }
+
+    /// Sharded batched-cascade responses: each row carries the scores of
+    /// the tier that resolved it (same contract as `RouterEngine`).
+    fn responses(&mut self, x: &[f32], n: usize) -> crate::Result<Vec<f32>> {
+        let mut scores = Vec::new();
+        self.dispatch(x, n, None, Some(&mut scores))?;
+        Ok(scores)
+    }
+
+    fn classify(&mut self, x: &[f32], n: usize) -> crate::Result<Vec<usize>> {
+        self.dispatch(x, n, None, None)
+    }
+
+    fn classify_routed(
+        &mut self,
+        x: &[f32],
+        n: usize,
+        tier: Option<Tier>,
+    ) -> crate::Result<Vec<usize>> {
+        self.dispatch(x, n, tier, None)
     }
 }
 
@@ -277,6 +706,25 @@ mod tests {
             &OneShotConfig { inputs_per_filter: 10, entries_per_filter: 128, therm_bits: 4, ..Default::default() },
         )
         .0
+    }
+
+    fn zoo_models() -> Vec<UleenModel> {
+        let ds = synth_uci(5, uci_spec("vowel").unwrap());
+        [(8usize, 64usize, 2usize), (10, 128, 4), (10, 256, 8)]
+            .iter()
+            .map(|&(ipf, epf, bits)| {
+                train_oneshot(
+                    &ds,
+                    &OneShotConfig {
+                        inputs_per_filter: ipf,
+                        entries_per_filter: epf,
+                        therm_bits: bits,
+                        ..Default::default()
+                    },
+                )
+                .0
+            })
+            .collect()
     }
 
     #[test]
@@ -360,5 +808,81 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn sharded_router_matches_single_router_cascade_and_pins() {
+        let models = zoo_models();
+        let ds = synth_uci(5, uci_spec("vowel").unwrap());
+        let n = ds.n_test();
+        let mut reference = ModelRouter::from_models(&models);
+        let want_cascade = reference.classify_cascade_batch(&ds.test_x, n).unwrap();
+        let want_fast = reference.classify_batch(&ds.test_x, n, Tier::Fast).unwrap();
+        for shards in [1usize, 3, 5] {
+            let mut eng = ShardedRouterEngine::new(models.clone(), 0.05, shards);
+            assert_eq!(
+                eng.classify(&ds.test_x, n).unwrap(),
+                want_cascade,
+                "cascade, shards={shards}"
+            );
+            assert_eq!(
+                eng.classify_routed(&ds.test_x, n, Some(Tier::Fast)).unwrap(),
+                want_fast,
+                "pinned fast, shards={shards}"
+            );
+            assert!(eng.threads_spawned() <= shards, "no extra spawns");
+        }
+    }
+
+    #[test]
+    fn sharded_router_responses_argmax_to_predictions() {
+        let models = zoo_models();
+        let ds = synth_uci(5, uci_spec("vowel").unwrap());
+        let n = 65.min(ds.n_test());
+        let x = &ds.test_x[..n * ds.num_features];
+        let mut eng = ShardedRouterEngine::new(models, 0.05, 4);
+        let m = eng.num_classes();
+        let resp = eng.responses(x, n).unwrap();
+        let preds = eng.classify(x, n).unwrap();
+        assert_eq!(resp.len(), n * m);
+        for (i, &p) in preds.iter().enumerate() {
+            assert_eq!(
+                crate::util::argmax_tie_low(&resp[i * m..(i + 1) * m]),
+                p,
+                "row {i}: resolution-tier scores must argmax to the prediction"
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_router_empty_batch_is_a_no_op() {
+        let models = zoo_models();
+        let mut eng = ShardedRouterEngine::new(models, 0.05, 3);
+        assert!(eng.classify(&[], 0).unwrap().is_empty());
+        assert!(eng.responses(&[], 0).unwrap().is_empty());
+        assert_eq!(eng.merged_stats(), RouterStats::default());
+    }
+
+    #[test]
+    fn sharded_router_swap_preserves_monotonic_stats_and_margin() {
+        let models = zoo_models();
+        let ds = synth_uci(5, uci_spec("vowel").unwrap());
+        let n = ds.n_test();
+        let mut eng = ShardedRouterEngine::new(models[..2].to_vec(), 0.2, 4);
+        eng.classify(&ds.test_x, n).unwrap();
+        let before = eng.merged_stats();
+        assert!(before.served[0] > 0);
+        let spawned = eng.threads_spawned();
+        eng.swap_models(models);
+        assert_eq!(eng.num_tiers(), 3, "swap adopts the new zoo depth");
+        assert_eq!(eng.threads_spawned(), spawned, "swap must not respawn the pool");
+        let after_swap = eng.merged_stats();
+        assert_eq!(after_swap, before, "retired counters survive the swap");
+        eng.classify(&ds.test_x, n).unwrap();
+        let after = eng.merged_stats();
+        assert!(
+            after.served[0] >= before.served[0] + n as u64,
+            "stats stay monotonic across swaps"
+        );
     }
 }

@@ -25,19 +25,30 @@ impl Default for Config {
 
 /// Run a property: `gen` builds a case from (rng, size), `prop` returns
 /// `Err(msg)` on violation. Panics with a reproducible report on failure.
+///
+/// The `PROPTEST_CASES` environment variable overrides `cfg.cases` for
+/// EVERY property in the run — the nightly CI profile sets
+/// `PROPTEST_CASES=256` to sweep far past the PR-gate budgets. Case
+/// seeds stay a pure function of (property name, case index), so any
+/// nightly failure reproduces locally with the same variable set.
 pub fn check<T: std::fmt::Debug>(
     name: &str,
     cfg: &Config,
     mut gen: impl FnMut(&mut Rng, usize) -> T,
     mut prop: impl FnMut(&T) -> Result<(), String>,
 ) {
+    let cases = std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&c| c > 0)
+        .unwrap_or(cfg.cases);
     let name_seed: u64 = name
         .bytes()
         .fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3));
     let mut failures: Vec<(usize, usize, String, String)> = Vec::new();
-    for case in 0..cfg.cases {
+    for case in 0..cases {
         let size = cfg.min_size
-            + (cfg.max_size - cfg.min_size) * case / cfg.cases.max(1);
+            + (cfg.max_size - cfg.min_size) * case / cases.max(1);
         let mut rng = Rng::for_item(cfg.seed ^ name_seed, 0x1234, case as u64);
         let input = gen(&mut rng, size.max(cfg.min_size));
         if let Err(msg) = prop(&input) {

@@ -622,6 +622,305 @@ fn sharded_server_serves_identically_to_per_worker_engines() {
     assert_eq!(got, expected, "sharded serving must match direct inference");
 }
 
+/// Zoo models for the sharded-cascade suite (small → large, shared
+/// feature width / class count).
+fn zoo_models(n_tiers: usize) -> Vec<uleen::model::ensemble::UleenModel> {
+    let ds = synth_uci(5, uci_spec("vowel").unwrap());
+    [(8usize, 64usize, 2usize), (10, 128, 4), (10, 256, 8)][..n_tiers]
+        .iter()
+        .map(|&(ipf, epf, bits)| {
+            train_oneshot(
+                &ds,
+                &OneShotConfig {
+                    inputs_per_filter: ipf,
+                    entries_per_filter: epf,
+                    therm_bits: bits,
+                    ..Default::default()
+                },
+            )
+            .0
+        })
+        .collect()
+}
+
+#[test]
+fn sharded_zoo_panicking_tier_counts_batches_failed_without_wedging_pool() {
+    use uleen::coordinator::router::ModelRouter;
+    use uleen::runtime::ShardedRouterEngine;
+
+    // A tier engine that panics on a poison input — the stand-in for a
+    // violated kernel invariant inside one shard's cascade.
+    struct Poisonable;
+    impl InferenceEngine for Poisonable {
+        fn label(&self) -> String {
+            "poisonable".into()
+        }
+        fn num_features(&self) -> usize {
+            2
+        }
+        fn num_classes(&self) -> usize {
+            2
+        }
+        fn responses(&mut self, x: &[f32], n: usize) -> uleen::Result<Vec<f32>> {
+            let mut out = Vec::with_capacity(2 * n);
+            for i in 0..n {
+                assert!(x[i * 2] < 9000.0, "injected tier panic");
+                out.extend_from_slice(&[4.0, 0.0]); // confident: no escalation
+            }
+            Ok(out)
+        }
+    }
+    let make_routers = || -> Vec<ModelRouter> {
+        (0..3)
+            .map(|_| {
+                ModelRouter::new(
+                    vec![
+                        Box::new(Poisonable) as Box<dyn InferenceEngine>,
+                        Box::new(Poisonable),
+                    ],
+                    vec![4.0, 4.0],
+                )
+            })
+            .collect()
+    };
+
+    // Direct: a poison batch surfaces as Err (NOT a panic of the caller,
+    // NOT a deadlock), and the SAME pool keeps serving afterwards.
+    let mut eng = ShardedRouterEngine::from_routers(make_routers());
+    let good = vec![0.5f32; 8 * 2];
+    assert_eq!(eng.classify(&good, 8).unwrap(), vec![0; 8]);
+    let mut poison = good.clone();
+    poison[0] = 9001.0;
+    assert!(
+        eng.classify(&poison, 8).is_err(),
+        "a panicking tier engine must surface as Err to the caller"
+    );
+    let spawned = eng.threads_spawned();
+    assert_eq!(
+        eng.classify(&good, 8).unwrap(),
+        vec![0; 8],
+        "the pool must survive the panic and keep serving"
+    );
+    assert_eq!(eng.threads_spawned(), spawned, "recovery must not respawn workers");
+
+    // Through the coordinator: the poisoned micro-batch lands in
+    // batches_failed, its sender drops, and later traffic completes.
+    let cfg = ServerConfig {
+        batcher: BatcherConfig {
+            max_batch: 1, // isolate the poison request in its own batch
+            max_wait: Duration::from_micros(10),
+            capacity: 64,
+        },
+        workers: 1,
+    };
+    let server = Server::start(cfg, move |_| {
+        Ok(Box::new(ShardedRouterEngine::from_routers(make_routers()))
+            as Box<dyn InferenceEngine>)
+    })
+    .unwrap();
+    let (tx, rx) = mpsc::channel();
+    let (poison_tx, poison_rx) = mpsc::channel();
+    for _ in 0..5 {
+        server.submit(vec![0.5; 2], tx.clone()).unwrap();
+    }
+    server.submit(vec![9001.0, 0.5], poison_tx).unwrap();
+    for _ in 0..5 {
+        server.submit(vec![0.5; 2], tx.clone()).unwrap();
+    }
+    drop(tx);
+    let mut served = 0;
+    while rx.recv_timeout(Duration::from_secs(5)).is_ok() {
+        served += 1;
+    }
+    assert_eq!(served, 10, "every well-formed batch completes around the failure");
+    assert!(
+        poison_rx.recv_timeout(Duration::from_millis(200)).is_err(),
+        "the poisoned batch never completes (its sender is dropped)"
+    );
+    let report = server.metrics.report(1);
+    assert_eq!(report.batches_failed, 1, "the failure must be counted, not swallowed");
+    assert_eq!(report.completed, 10);
+    server.shutdown();
+}
+
+#[test]
+fn sharded_zoo_malformed_rows_only_drop_the_offender() {
+    use uleen::coordinator::router::ModelRouter;
+
+    let models = zoo_models(2);
+    let ds = synth_uci(5, uci_spec("vowel").unwrap());
+    // ground truth: the local batched cascade, per row (row-independent)
+    let mut local = ModelRouter::from_models(&models);
+    let cascade_want = local.classify_cascade_batch(&ds.test_x, ds.n_test()).unwrap();
+    let cfg = ServerConfig {
+        batcher: BatcherConfig {
+            max_batch: 8,
+            // long dwell so the bad request and its batch-mates coalesce
+            // into ONE micro-batch deterministically
+            max_wait: Duration::from_millis(100),
+            capacity: 64,
+        },
+        workers: 4, // forced to 1 by start_zoo_sharded
+    };
+    let server = Server::start_zoo_sharded(cfg, models, 0.05, 3).unwrap();
+    let f = server.num_features();
+    let (bad_tx, bad_rx) = mpsc::channel();
+    let (tx, rx) = mpsc::channel();
+    server.submit(vec![0.5; f + 3], bad_tx).unwrap(); // wrong width
+    let mut id2row = std::collections::HashMap::new();
+    for i in 0..5 {
+        let id = server.submit(ds.test_row(i).to_vec(), tx.clone()).unwrap();
+        id2row.insert(id, i);
+    }
+    drop(tx);
+    let mut served = 0;
+    while let Ok((id, pred, _)) = rx.recv_timeout(Duration::from_secs(5)) {
+        assert_eq!(
+            pred, cascade_want[id2row[&id]],
+            "batch-mates complete with bit-exact sharded-cascade predictions"
+        );
+        served += 1;
+        if served == 5 {
+            break;
+        }
+    }
+    assert_eq!(served, 5, "all well-formed batch-mates must complete");
+    assert!(
+        bad_rx.recv_timeout(Duration::from_millis(200)).is_err(),
+        "the malformed request never completes"
+    );
+    let report = server.metrics.report(8);
+    assert_eq!(report.malformed, 1, "the drop must be counted");
+    assert_eq!(report.batches_failed, 0, "a malformed row is not an engine failure");
+    server.shutdown();
+}
+
+#[test]
+fn close_while_draining_sharded_zoo_accounts_for_every_request() {
+    use uleen::runtime::Tier;
+
+    let models = zoo_models(2);
+    let cfg = ServerConfig {
+        batcher: BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_micros(50),
+            capacity: 4096,
+        },
+        workers: 1,
+    };
+    let f = models[0].encoder.num_inputs;
+    let server = std::sync::Arc::new(Server::start_zoo_sharded(cfg, models, 0.05, 4).unwrap());
+    let (tx, rx) = mpsc::channel();
+    let producer = {
+        let server = server.clone();
+        let tx = tx.clone();
+        std::thread::spawn(move || {
+            let mut accepted = 0usize;
+            // mixed cascade + pinned traffic, so the drain crosses
+            // tier-homogeneous batch splits too
+            for i in 0.. {
+                let tier = match i % 3 {
+                    0 => None,
+                    1 => Some(Tier::Fast),
+                    _ => Some(Tier::Accurate),
+                };
+                match server.submit_tiered(vec![0.5; f], tier, tx.clone()) {
+                    Ok(_) => accepted += 1,
+                    Err(SubmitError::Closed) => break,
+                    Err(SubmitError::Full) => std::thread::sleep(Duration::from_micros(5)),
+                }
+            }
+            accepted
+        })
+    };
+    drop(tx);
+    std::thread::sleep(Duration::from_millis(5));
+    server.close();
+    let accepted = producer.join().unwrap();
+    let server = std::sync::Arc::try_unwrap(server)
+        .unwrap_or_else(|_| panic!("producer dropped its handle"));
+    let metrics = server.metrics.clone();
+    server.shutdown();
+    let mut completed = 0usize;
+    while rx.try_recv().is_ok() {
+        completed += 1;
+    }
+    assert!(accepted > 0, "producer should have landed requests before close");
+    let report = metrics.report(16);
+    assert_eq!(
+        completed as u64 + report.malformed,
+        accepted as u64,
+        "every accepted request is delivered or accounted (none malformed here, \
+         none silently lost)"
+    );
+    assert_eq!(report.malformed, 0);
+    assert_eq!(report.batches_failed, 0);
+    assert_eq!(report.completed, completed as u64);
+}
+
+#[test]
+fn sharded_zoo_shares_each_tier_zero_clones_and_reshares_on_swap() {
+    use std::sync::Arc;
+    use uleen::runtime::{SharedModel, ShardedRouterEngine};
+
+    let shards = 4usize;
+    let tiers: Vec<SharedModel> =
+        zoo_models(3).into_iter().map(SharedModel::compile).collect();
+    let mut eng = ShardedRouterEngine::from_shared(tiers.clone(), 0.05, shards);
+    // 1 handle here + 1 in the engine's tier list + 1 per pool worker's
+    // router — and NOT ONE more: the model was cloned zero times after
+    // construction (a deep clone would not register in the Arc count,
+    // so any extra construction-path clone shows up as a mismatch).
+    for (i, t) in tiers.iter().enumerate() {
+        assert_eq!(
+            Arc::strong_count(t.model()),
+            2 + shards,
+            "tier {i}: model shared, never cloned"
+        );
+        assert_eq!(
+            Arc::strong_count(t.flat()),
+            2 + shards,
+            "tier {i}: compiled layout shared, never recompiled"
+        );
+    }
+    let ds = synth_uci(5, uci_spec("vowel").unwrap());
+    let preds = eng.classify(&ds.test_x, ds.n_test()).unwrap();
+    assert_eq!(preds.len(), ds.n_test());
+    for t in &tiers {
+        assert_eq!(
+            Arc::strong_count(t.model()),
+            2 + shards,
+            "classification must not clone models either"
+        );
+    }
+
+    // swap_shared re-shares: the new zoo lands at the same handle count,
+    // the old zoo's Arcs are FULLY released (tables freed exactly once).
+    let new_tiers: Vec<SharedModel> =
+        zoo_models(2).into_iter().map(SharedModel::compile).collect();
+    eng.swap_shared(new_tiers.clone());
+    for (i, t) in new_tiers.iter().enumerate() {
+        assert_eq!(
+            Arc::strong_count(t.model()),
+            2 + shards,
+            "tier {i}: swapped-in zoo re-shares without clones"
+        );
+    }
+    for (i, t) in tiers.iter().enumerate() {
+        assert_eq!(
+            Arc::strong_count(t.model()),
+            1,
+            "tier {i}: swapped-out zoo fully released"
+        );
+    }
+    let preds = eng.classify(&ds.test_x, ds.n_test()).unwrap();
+    assert_eq!(preds.len(), ds.n_test());
+    drop(eng);
+    for t in &new_tiers {
+        assert_eq!(Arc::strong_count(t.model()), 1, "engine drop releases every handle");
+    }
+}
+
 #[test]
 fn queue_depth_reflects_backlog_and_drains() {
     let m = model();

@@ -431,6 +431,126 @@ fn prop_batched_cascade_matches_sequential() {
     );
 }
 
+/// The CASCADE × SHARD composition must be bit-exact with N sequential
+/// per-sample cascades — same predictions AND the same POOL-MERGED
+/// per-tier served/escalation counters. `ShardedRouterEngine` splits the
+/// batch into contiguous row ranges, runs `classify_cascade_batch` on a
+/// per-worker router for each range (all routers sharing the same
+/// `Arc`'d tiers), and merges counters in worker order — because the
+/// cascade is row-independent, ANY partition must land on the sequential
+/// answer. Shard counts cycle 1/2/7 and batch sizes 1/63/64/65/257
+/// deterministically (so shard boundaries straddle the 64-sample tile
+/// boundary and the uneven 257-row split is always exercised); margins
+/// cover 0 (never escalate), 0.02 (realistic) and 1e9 (everything rides
+/// to the last tier), with dead-tie rows half the time.
+#[test]
+fn prop_sharded_cascade_matches_sequential() {
+    use uleen::coordinator::router::ModelRouter;
+    use uleen::runtime::{SharedModel, ShardedRouterEngine};
+    let mut case_no = 0usize;
+    check(
+        "sharded-cascade-exact",
+        &Config { cases: 9, ..Config::default() },
+        move |rng, _size| {
+            let i = case_no;
+            case_no += 1;
+            // deterministic cycles guarantee full coverage of the shard
+            // and batch matrices even at the default case budget
+            let shards = [1usize, 2, 7][i % 3];
+            let n = [1usize, 63, 64, 65, 257][i % 5];
+            let tiers = 2 + rng.below(2) as usize;
+            let threshold = [0.0f32, 0.02, 1e9][rng.below(3) as usize];
+            let seed = rng.next_u64();
+            let tie_rows = rng.below(2) == 0;
+            (shards, n, tiers, threshold, seed, tie_rows)
+        },
+        |(shards, n, tiers, threshold, seed, tie_rows)| {
+            let ds = synth_uci(11, uci_spec("vowel").unwrap());
+            let shapes = [(6usize, 64usize, 2usize), (10, 128, 4), (12, 256, 6)];
+            let mut tiers_shared = Vec::new();
+            for &(ipf, epf, bits) in &shapes[..*tiers] {
+                let cfg = OneShotConfig {
+                    inputs_per_filter: ipf,
+                    entries_per_filter: epf,
+                    therm_bits: bits,
+                    seed: *seed,
+                    ..Default::default()
+                };
+                tiers_shared.push(SharedModel::compile(train_oneshot(&ds, &cfg).0));
+            }
+            let f = ds.num_features;
+            let n = *n;
+            // cycle test rows so batch 257 (straddling every shard split)
+            // exists regardless of the synthetic split size
+            let mut x: Vec<f32> = Vec::with_capacity(n * f);
+            for i in 0..n {
+                x.extend_from_slice(ds.test_row(i % ds.n_test()));
+            }
+            if *tie_rows {
+                // constant rows encode identically → frequent dead ties,
+                // i.e. margins exactly on the escalation boundary
+                for v in x.iter_mut().take(n * f / 2) {
+                    *v = 0.0;
+                }
+            }
+            let mut eng =
+                ShardedRouterEngine::from_shared(tiers_shared.clone(), *threshold, *shards);
+            let got = eng.classify(&x, n).map_err(|e| e.to_string())?;
+            let mut seq = ModelRouter::from_shared(&tiers_shared);
+            seq.margin_threshold = *threshold;
+            let mut want = Vec::with_capacity(n);
+            for i in 0..n {
+                want.push(
+                    seq.classify_cascade(&x[i * f..(i + 1) * f])
+                        .map_err(|e| e.to_string())?,
+                );
+            }
+            if got != want {
+                let row = got.iter().zip(&want).position(|(a, b)| a != b).unwrap();
+                return Err(format!(
+                    "prediction mismatch at row {row}: sharded {} vs sequential {} \
+                     (shards={shards}, n={n}, tiers={tiers}, threshold={threshold})",
+                    got[row], want[row]
+                ));
+            }
+            let merged = eng.merged_stats();
+            if merged.served != seq.stats.served {
+                return Err(format!(
+                    "merged served counters diverge: sharded {:?} vs sequential {:?} \
+                     (shards={shards}, n={n})",
+                    merged.served, seq.stats.served
+                ));
+            }
+            if merged.escalations_from != seq.stats.escalations_from {
+                return Err(format!(
+                    "merged escalation counters diverge: sharded {:?} vs sequential {:?} \
+                     (shards={shards}, n={n})",
+                    merged.escalations_from, seq.stats.escalations_from
+                ));
+            }
+            // a second identical call through the same pool must stay
+            // bit-identical and advance every counter by exactly one
+            // batch's worth — merge order is fixed, not racy
+            let again = eng.classify(&x, n).map_err(|e| e.to_string())?;
+            if again != got {
+                return Err(format!("sharded cascade unstable across calls (shards={shards})"));
+            }
+            let merged2 = eng.merged_stats();
+            for t in 0..3 {
+                if merged2.served[t] != 2 * merged.served[t]
+                    || merged2.escalations_from[t] != 2 * merged.escalations_from[t]
+                {
+                    return Err(format!(
+                        "repeat call did not exactly double tier {t} counters: \
+                         {merged2:?} vs {merged:?}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_response_bounded_by_kept_filters() {
     // 0 - bias ≤ response ≤ kept_filters + bias for every input
