@@ -23,6 +23,14 @@
 //!   CI run that still exercises every stage under optimization.
 
 use uleen::bench::harness::{bench_fn, BenchResult};
+
+// Built with `--features alloc-witness`, the whole bench runs under the
+// counting allocator so the allocs-per-batch gate below can assert the
+// fused native path is allocation-free in steady state.
+#[cfg(feature = "alloc-witness")]
+#[global_allocator]
+static ALLOC_WITNESS: uleen::util::alloc_witness::CountingAlloc =
+    uleen::util::alloc_witness::CountingAlloc;
 use uleen::coordinator::router::{ModelRouter, Tier};
 use uleen::data::synth_mnist;
 use uleen::model::ensemble::EnsembleScratch;
@@ -196,6 +204,52 @@ fn main() -> anyhow::Result<()> {
         "acceptance: fused {fused_speedup:.2}x vs PR-1 sequence at batch {bs} (target ≥ 1.5x) {}",
         if fused_speedup >= 1.5 { "✓" } else { "✗ BELOW TARGET" }
     );
+
+    // == alloc gate: steady-state allocations on the fused native path ==
+    // The write-into plane contract says a warm NativeEngine serves
+    // responses_into/classify_into with ZERO heap allocations. Counted
+    // per-thread by util::alloc_witness when built with
+    // `--features alloc-witness` (the CI smoke invocation), asserted to
+    // be exactly zero — an allocation sneaking back into the hot path
+    // fails the smoke bench, not a nightly.
+    #[cfg(feature = "alloc-witness")]
+    let allocs_per_batch: Option<f64> = {
+        use uleen::util::alloc_witness::Witness;
+        println!("\n== alloc gate: fused native write-into path, batch {bs} ==");
+        let mut resp_plane = vec![0f32; bs * m];
+        let mut pred_plane = vec![0usize; bs];
+        for _ in 0..2 {
+            native.responses_into(x, bs, &mut resp_plane)?;
+            native.classify_into(x, bs, &mut pred_plane)?;
+        }
+        let gate_calls = 16u64;
+        let w = Witness::begin();
+        for _ in 0..gate_calls {
+            native.responses_into(x, bs, &mut resp_plane)?;
+            native.classify_into(x, bs, &mut pred_plane)?;
+        }
+        std::hint::black_box((&resp_plane, &pred_plane));
+        let per_batch = w.allocations() as f64 / (2 * gate_calls) as f64;
+        println!(
+            "acceptance: {per_batch:.3} allocs/batch over {} warm calls (target = 0) {}",
+            2 * gate_calls,
+            if per_batch == 0.0 { "✓" } else { "✗ ALLOCATION REGRESSION" }
+        );
+        assert_eq!(
+            w.allocations(),
+            0,
+            "steady-state allocations crept back into the fused native path"
+        );
+        Some(per_batch)
+    };
+    #[cfg(not(feature = "alloc-witness"))]
+    let allocs_per_batch: Option<f64> = {
+        println!(
+            "(skip alloc gate: rebuild with --features alloc-witness to count \
+             allocs/batch on the fused native path)"
+        );
+        None
+    };
 
     // == shard sweep: the fused kernel fanned across the persistent pool ==
     println!("\n== shard sweep: ShardedEngine.classify, batch 1024 ==");
@@ -374,6 +428,11 @@ fn main() -> anyhow::Result<()> {
             doc.set("bitsliced_speedup_b256", Json::Num(s));
         }
         doc.set("fused_speedup_vs_pr1_b256", Json::Num(fused_speedup));
+        // present iff built with --features alloc-witness; asserted == 0
+        // in-bench, so a serialized value records that the gate RAN
+        if let Some(apb) = allocs_per_batch {
+            doc.set("allocs_per_batch_native_b256", Json::Num(apb));
+        }
         let mut cascade = Json::obj();
         cascade
             .set("fast_only_sps", Json::Num(t_zoo_fast))

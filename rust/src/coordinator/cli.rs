@@ -207,6 +207,17 @@ fn print_report(report: &MetricsReport, correct: usize, delivered: usize, submit
                 (t0 - report.tier_escalations[0].min(t0)) as f64 / t0 as f64 * 100.0
             );
         }
+        // Wall-time vs latency view of the same engine work: tier lines
+        // above SUM time across parallel shard ranges; the critical path
+        // takes each batch's slowest range — the SLO-facing number.
+        println!(
+            "engine critical path: {:.2} ms total (per-batch max over parallel \
+             shard ranges; vs {:.2} ms summed tier time)",
+            report.critical_path_ms,
+            report.tier_mean_us.iter().zip(report.tier_served.iter())
+                .map(|(us, &n)| us * n as f64)
+                .sum::<f64>() / 1e3
+        );
     }
     println!(
         "accuracy on delivered traffic: {:.4} ({delivered}/{submitted} delivered) | \

@@ -24,6 +24,10 @@ struct Inner {
     tier_escalations: [u64; 3],
     /// per-tier wall time spent inside the tier's engine
     tier_ns: [u64; 3],
+    /// engine time on the latency-critical path: per-batch max over
+    /// parallel worker ranges (== Σ tier_ns on unsharded zoos), summed
+    /// over batches
+    critical_path_ns: u64,
     /// zoo depth of the serving engines (0 = tier-blind server); set by
     /// `RouterEngine::with_metrics`, drives which tier keys serialize
     num_tiers: usize,
@@ -55,6 +59,11 @@ pub struct MetricsReport {
     pub tier_escalations: [u64; 3],
     /// mean engine-side µs per sample at each tier (0 where unserved)
     pub tier_mean_us: [f64; 3],
+    /// engine milliseconds on the latency-critical path (ROADMAP (k)):
+    /// each batch contributes the MAX over its parallel worker ranges —
+    /// not the wall-time sum `tier_ns` reports — so this is the number
+    /// to hold against a latency SLO. Equals Σ tier_ns on unsharded zoos.
+    pub critical_path_ms: f64,
     /// zoo depth of the serving engines (0 = tier-blind server)
     pub num_tiers: usize,
     pub wall_secs: f64,
@@ -118,10 +127,15 @@ impl ServerMetrics {
     /// Fold a router's per-tier counter delta into the serving totals
     /// (called by `RouterEngine` after every zoo micro-batch, and by
     /// `ShardedRouterEngine` with the POOL-MERGED delta of a fanned-out
-    /// batch). Every field is additive, so folding one merged delta or
-    /// each shard's delta separately — in any order — lands on identical
-    /// totals (`shard_split_deltas_fold_identically_to_merged`); nothing
-    /// here may ever average or overwrite.
+    /// batch). Every per-tier field is additive, so folding one merged
+    /// delta or each shard's delta separately — in any order — lands on
+    /// identical totals (`shard_split_deltas_fold_identically_to_merged`);
+    /// nothing here may ever average or overwrite. `critical_path_ns` is
+    /// the exception that makes the merged-delta flush mandatory for
+    /// sharded engines: per-shard paths fold by MAX inside
+    /// `RouterStats::merge`, so only a pool-merged delta carries the
+    /// batch's true path (summing raw per-shard paths would rebuild the
+    /// wall-time overcount this field exists to fix).
     pub fn record_tiers(&self, delta: &RouterStats) {
         let mut g = self.inner.lock().unwrap();
         for i in 0..3 {
@@ -129,6 +143,7 @@ impl ServerMetrics {
             g.tier_escalations[i] += delta.escalations_from[i];
             g.tier_ns[i] += delta.tier_ns[i];
         }
+        g.critical_path_ns += delta.critical_path_ns;
     }
 
     pub fn completed(&self) -> u64 {
@@ -166,6 +181,7 @@ impl ServerMetrics {
                     0.0
                 }
             }),
+            critical_path_ms: g.critical_path_ns as f64 / 1e6,
             num_tiers: g.num_tiers,
             wall_secs: wall,
             throughput_rps: if wall > 0.0 { g.completed as f64 / wall } else { 0.0 },
@@ -203,6 +219,9 @@ impl MetricsReport {
                 .set("mean_engine_us", Json::Num(self.tier_mean_us[i]));
             j.set(&format!("tier_{name}"), t);
         }
+        if self.num_tiers > 0 {
+            j.set("critical_path_ms", Json::Num(self.critical_path_ms));
+        }
         j
     }
 }
@@ -233,6 +252,7 @@ mod tests {
             served: [10, 4, 1],
             escalations_from: [4, 1, 0],
             tier_ns: [10_000, 8_000, 3_000],
+            critical_path_ns: 14_000,
         };
         m.set_num_tiers(3);
         m.record_tiers(&d);
@@ -243,21 +263,29 @@ mod tests {
         assert_eq!(r.tier_served, [20, 8, 2]);
         assert_eq!(r.tier_escalations, [8, 2, 0]);
         assert!((r.tier_mean_us[0] - 1.0).abs() < 1e-9, "20µs over 20 samples");
+        assert!(
+            (r.critical_path_ms - 28_000.0 / 1e6).abs() < 1e-12,
+            "per-batch critical-path deltas accumulate additively"
+        );
         assert_eq!(r.malformed, 3);
         assert_eq!(r.batches_failed, 1);
         let json = r.to_json().to_string();
         assert!(json.contains("tier_fast"), "per-tier counters must serialize");
+        assert!(json.contains("critical_path_ms"), "the SLO metric must serialize");
     }
 
     #[test]
     fn shard_split_deltas_fold_identically_to_merged() {
         // The sharded zoo may flush one pool-merged delta per batch or —
-        // after a refactor — one delta per shard; the totals must be
-        // identical either way, in any fold order.
+        // after a refactor — one delta per shard; the per-tier totals
+        // must be identical either way, in any fold order. The critical
+        // path is the deliberate exception: it only means "max over
+        // parallel ranges" when the shards of one batch are merged FIRST
+        // (summing raw per-shard paths rebuilds the wall-time overcount).
         let shard_deltas = [
-            RouterStats { served: [7, 2, 1], escalations_from: [2, 1, 0], tier_ns: [700, 400, 90] },
-            RouterStats { served: [5, 0, 0], escalations_from: [0, 0, 0], tier_ns: [512, 0, 0] },
-            RouterStats { served: [9, 4, 4], escalations_from: [4, 4, 0], tier_ns: [903, 800, 410] },
+            RouterStats { served: [7, 2, 1], escalations_from: [2, 1, 0], tier_ns: [700, 400, 90], critical_path_ns: 1190 },
+            RouterStats { served: [5, 0, 0], escalations_from: [0, 0, 0], tier_ns: [512, 0, 0], critical_path_ns: 512 },
+            RouterStats { served: [9, 4, 4], escalations_from: [4, 4, 0], tier_ns: [903, 800, 410], critical_path_ns: 2113 },
         ];
         let split = ServerMetrics::new();
         split.set_num_tiers(3);
@@ -278,6 +306,14 @@ mod tests {
         assert_eq!(a.tier_escalations, b.tier_escalations);
         assert_eq!(a.tier_escalations, [6, 5, 0]);
         assert_eq!(a.tier_mean_us, b.tier_mean_us);
+        assert!(
+            (b.critical_path_ms - 2113.0 / 1e6).abs() < 1e-12,
+            "the merged delta carries the slowest range as the batch's path"
+        );
+        assert!(
+            a.critical_path_ms > b.critical_path_ms,
+            "summing per-shard paths overcounts — merged-first is the contract"
+        );
     }
 
     #[test]

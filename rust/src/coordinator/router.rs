@@ -52,11 +52,20 @@ pub use crate::runtime::Tier;
 /// `escalations_from[i]` counts tier `i` → `i + 1` hand-offs, so
 /// first-tier resolutions are `served[0] - escalations_from[0]`.
 /// `tier_ns[i]` accumulates wall time spent inside tier `i`'s engine.
+///
+/// `critical_path_ns` is the latency-side counterpart of `tier_ns`
+/// (ROADMAP follow-up (k)): engine nanoseconds on the LONGEST serial
+/// chain of calls. A sequential router's calls all serialize on one
+/// thread, so it advances in lockstep with `Σ tier_ns`; when a batch is
+/// partitioned across pool workers, [`RouterStats::merge`] takes the
+/// **max over worker ranges** instead of the wall-time sum — the number
+/// an SLO controller can actually compare against a latency budget.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct RouterStats {
     pub served: [u64; 3],
     pub escalations_from: [u64; 3],
     pub tier_ns: [u64; 3],
+    pub critical_path_ns: u64,
 }
 
 impl RouterStats {
@@ -75,28 +84,48 @@ impl RouterStats {
                 self.escalations_from[i] - base.escalations_from[i]
             }),
             tier_ns: std::array::from_fn(|i| self.tier_ns[i] - base.tier_ns[i]),
+            critical_path_ns: self.critical_path_ns - base.critical_path_ns,
         }
     }
 
-    /// Fold another router's counters into this one — the shard-merge
-    /// primitive. Every field is an additive per-row count (or a wall-time
-    /// sum), so merging per-shard stats of a partitioned batch in ANY
-    /// fixed order reproduces the sequential counters bit-exactly; the
-    /// sharded cascade merges in worker order
+    /// Fold the counters of a router that ran IN PARALLEL with this one —
+    /// the shard-merge primitive. Every per-row count (and the `tier_ns`
+    /// wall-time sum) is additive, so merging per-shard stats of a
+    /// partitioned batch in ANY fixed order reproduces the sequential
+    /// counters bit-exactly; the sharded cascade merges in worker order
     /// (`prop_sharded_cascade_matches_sequential` pins this down).
+    /// `critical_path_ns` takes the MAX — parallel workers overlap in
+    /// time, so the slowest range is the batch's latency path.
     pub fn merge(&mut self, other: &RouterStats) {
         for i in 0..3 {
             self.served[i] += other.served[i];
             self.escalations_from[i] += other.escalations_from[i];
             self.tier_ns[i] += other.tier_ns[i];
         }
+        self.critical_path_ns = self.critical_path_ns.max(other.critical_path_ns);
+    }
+
+    /// Fold the counters of work that ran strictly AFTER this one (e.g.
+    /// a new zoo generation chained onto swap-retired history): every
+    /// field adds, **including** `critical_path_ns` — serial paths
+    /// concatenate, they don't overlap.
+    pub fn chain(&mut self, later: &RouterStats) {
+        for i in 0..3 {
+            self.served[i] += later.served[i];
+            self.escalations_from[i] += later.escalations_from[i];
+            self.tier_ns[i] += later.tier_ns[i];
+        }
+        self.critical_path_ns += later.critical_path_ns;
     }
 }
 
-/// Reusable buffers for the batched cascade's gather/compact phase —
-/// after warmup the cascade hot path allocates only its returned
-/// prediction `Vec`, matching the crate's scratch style
-/// (`FlatBatchScratch`, `ShardScratch`).
+/// Reusable buffers for the batched cascade's gather/compact phase and
+/// per-tier response staging — after warmup the cascade hot path
+/// allocates **nothing**: predictions and scores go into caller-owned
+/// planes (`classify_cascade_batch_into`) and every escalation
+/// sub-batch stages its responses in the one grow-only `resp` arena,
+/// matching the crate's scratch style (`FlatBatchScratch`,
+/// `ShardScratch`).
 #[derive(Default)]
 struct CascadeScratch {
     /// original row ids of the current compacted sub-batch
@@ -105,6 +134,10 @@ struct CascadeScratch {
     /// compacted feature rows for tiers > 0 (tier 0 reads the caller's x)
     gathered: Vec<f32>,
     next_gathered: Vec<f32>,
+    /// grow-only response arena shared by EVERY tier's sub-batch: sized
+    /// once for the widest sub-batch (tier 0's full batch) and reused by
+    /// each thinner escalation sub-batch's `responses_into` call
+    resp: Vec<f32>,
 }
 
 /// A tiered router over 1..=3 engines ordered small → large.
@@ -116,6 +149,10 @@ pub struct ModelRouter {
     /// escalate when (top1-top2)/max_response < threshold
     pub margin_threshold: f32,
     cascade_scratch: CascadeScratch,
+    /// grow-only prediction arena for scores-only callers
+    /// ([`ModelRouter::cascade_scores_into`]); lives outside
+    /// `CascadeScratch` so the cascade core can borrow both at once
+    pred_arena: Vec<usize>,
 }
 
 impl ModelRouter {
@@ -134,6 +171,7 @@ impl ModelRouter {
             stats: RouterStats::default(),
             margin_threshold: 0.05,
             cascade_scratch: CascadeScratch::default(),
+            pred_arena: Vec::new(),
         }
     }
 
@@ -199,20 +237,39 @@ impl ModelRouter {
         Ok(self.classify_batch(x, 1, tier)?[0])
     }
 
-    /// Route a whole micro-batch at a fixed tier (no escalation). `n > 1`
-    /// takes the engine's fused batch path.
+    /// Route a whole micro-batch at a fixed tier (no escalation),
+    /// predictions written into `out[..n]` (write-into contract: a short
+    /// plane is an `Err` before the engine runs). `n > 1` takes the
+    /// engine's fused batch path; the tier engine's own `classify_into`
+    /// override keeps the whole call allocation-free.
+    pub fn classify_batch_into(
+        &mut self,
+        x: &[f32],
+        n: usize,
+        tier: Tier,
+        out: &mut [usize],
+    ) -> crate::Result<()> {
+        anyhow::ensure!(out.len() >= n, "prediction plane too short: {} < {n}", out.len());
+        let i = self.tier_index(tier);
+        let t0 = Instant::now();
+        self.engines[i].classify_into(x, n, out)?;
+        let elapsed = t0.elapsed().as_nanos() as u64;
+        self.stats.tier_ns[i] += elapsed;
+        self.stats.critical_path_ns += elapsed;
+        self.stats.served[i] += n as u64;
+        Ok(())
+    }
+
+    /// [`ModelRouter::classify_batch_into`] into a fresh `Vec`.
     pub fn classify_batch(
         &mut self,
         x: &[f32],
         n: usize,
         tier: Tier,
     ) -> crate::Result<Vec<usize>> {
-        let i = self.tier_index(tier);
-        let t0 = Instant::now();
-        let preds = self.engines[i].classify(x, n)?;
-        self.stats.tier_ns[i] += t0.elapsed().as_nanos() as u64;
-        self.stats.served[i] += n as u64;
-        Ok(preds)
+        let mut out = vec![0usize; n];
+        self.classify_batch_into(x, n, tier, &mut out)?;
+        Ok(out)
     }
 
     /// Cascade: start at Fast; escalate while the decision margin is thin.
@@ -221,7 +278,9 @@ impl ModelRouter {
         for i in 0..self.engines.len() {
             let t0 = Instant::now();
             let resp = self.engines[i].responses(x, 1)?;
-            self.stats.tier_ns[i] += t0.elapsed().as_nanos() as u64;
+            let elapsed = t0.elapsed().as_nanos() as u64;
+            self.stats.tier_ns[i] += elapsed;
+            self.stats.critical_path_ns += elapsed;
             let (top1, top2, arg) = top2(&resp);
             pred = arg;
             let margin = (top1 - top2) / self.max_response[i].max(1.0);
@@ -234,58 +293,117 @@ impl ModelRouter {
         Ok(pred)
     }
 
-    /// Batched cascade: the whole batch hits the first tier through ONE
-    /// [`InferenceEngine::responses`] call (the fused bit-sliced kernel
-    /// for `n > 1`); thin-margin rows are gathered into a compacted
-    /// sub-batch which escalates to the next tier, repeating until the
-    /// last tier; predictions scatter back in original row order.
-    /// Bit-exact with `n` sequential [`ModelRouter::classify_cascade`]
-    /// calls, including every per-tier counter.
-    pub fn classify_cascade_batch(&mut self, x: &[f32], n: usize) -> crate::Result<Vec<usize>> {
-        self.cascade_batch(x, n, None)
+    /// Batched cascade, predictions written into `preds[..n]`: the whole
+    /// batch hits the first tier through ONE
+    /// [`InferenceEngine::responses_into`] call (the fused bit-sliced
+    /// kernel for `n > 1`); thin-margin rows are gathered into a
+    /// compacted sub-batch which escalates to the next tier, repeating
+    /// until the last tier; predictions scatter back in original row
+    /// order. Bit-exact with `n` sequential
+    /// [`ModelRouter::classify_cascade`] calls, including every per-tier
+    /// counter — and allocation-free after warmup.
+    pub fn classify_cascade_batch_into(
+        &mut self,
+        x: &[f32],
+        n: usize,
+        preds: &mut [usize],
+    ) -> crate::Result<()> {
+        self.cascade_batch_into(x, n, None, preds)
     }
 
-    /// Batched cascade returning `(responses, predictions)`. Row `r` of
-    /// the response matrix holds the per-class scores of the tier that
-    /// RESOLVED row `r` (so rows resolved at different tiers carry that
-    /// tier's score scale — normalize by tier `max_response` to compare).
+    /// [`ModelRouter::classify_cascade_batch_into`] into a fresh `Vec`.
+    pub fn classify_cascade_batch(&mut self, x: &[f32], n: usize) -> crate::Result<Vec<usize>> {
+        let mut preds = vec![0usize; n];
+        self.classify_cascade_batch_into(x, n, &mut preds)?;
+        Ok(preds)
+    }
+
+    /// Batched cascade writing both planes: row `r` of `scores[..n*m]`
+    /// holds the per-class scores of the tier that RESOLVED row `r` (so
+    /// rows resolved at different tiers carry that tier's score scale —
+    /// normalize by tier `max_response` to compare), `preds[..n]` the
+    /// predictions.
+    pub fn cascade_responses_batch_into(
+        &mut self,
+        x: &[f32],
+        n: usize,
+        scores: &mut [f32],
+        preds: &mut [usize],
+    ) -> crate::Result<()> {
+        self.cascade_batch_into(x, n, Some(scores), preds)
+    }
+
+    /// [`ModelRouter::cascade_responses_batch_into`] into fresh `Vec`s.
     pub fn cascade_responses_batch(
         &mut self,
         x: &[f32],
         n: usize,
     ) -> crate::Result<(Vec<f32>, Vec<usize>)> {
-        let mut scores = Vec::new();
-        let preds = self.cascade_batch(x, n, Some(&mut scores))?;
+        let mut scores = vec![0f32; n * self.num_classes()];
+        let mut preds = vec![0usize; n];
+        self.cascade_batch_into(x, n, Some(&mut scores), &mut preds)?;
         Ok((scores, preds))
     }
 
-    /// Core batched cascade. `scores` is only filled when a caller wants
-    /// the resolution-tier response matrix — the serving hot path
-    /// (`classify_cascade_batch`) skips it entirely. Gather buffers live
-    /// in `cascade_scratch`, so after warmup the only per-call
-    /// allocation is the returned prediction `Vec`.
-    fn cascade_batch(
+    /// Resolution-tier scores only, predictions staged in the router's
+    /// grow-only arena — what a scores-only caller (`RouterEngine::
+    /// responses_into`) uses to stay allocation-free.
+    pub fn cascade_scores_into(
         &mut self,
         x: &[f32],
         n: usize,
-        mut scores: Option<&mut Vec<f32>>,
-    ) -> crate::Result<Vec<usize>> {
+        scores: &mut [f32],
+    ) -> crate::Result<()> {
+        let mut preds = std::mem::take(&mut self.pred_arena);
+        if preds.len() < n {
+            preds.resize(n, 0);
+        }
+        let res = self.cascade_batch_into(x, n, Some(scores), &mut preds);
+        self.pred_arena = preds;
+        res
+    }
+
+    /// Core batched cascade under the write-into contract: plane sizes
+    /// are validated up front (`Err`, never a panic), only the `n`-row
+    /// prefixes are written, and they are written COMPLETELY (every row
+    /// resolves at some tier), so dirty oversized planes are fine.
+    /// `scores` is only filled when a caller wants the resolution-tier
+    /// response matrix — the serving hot path
+    /// (`classify_cascade_batch_into`) skips it entirely. Gather buffers
+    /// and the per-tier response arena live in `cascade_scratch`, so
+    /// after warmup the cascade allocates nothing at all.
+    fn cascade_batch_into(
+        &mut self,
+        x: &[f32],
+        n: usize,
+        mut scores: Option<&mut [f32]>,
+        preds: &mut [usize],
+    ) -> crate::Result<()> {
         let f = self.num_features();
         let m = self.num_classes();
         anyhow::ensure!(x.len() == n * f, "bad input length");
+        anyhow::ensure!(
+            preds.len() >= n,
+            "prediction plane too short: {} < {n}",
+            preds.len()
+        );
         if let Some(sc) = scores.as_deref_mut() {
-            sc.clear();
-            sc.resize(n * m, 0.0);
+            anyhow::ensure!(
+                sc.len() >= n * m,
+                "score plane too short: {} < {}",
+                sc.len(),
+                n * m
+            );
         }
-        let mut preds = vec![0usize; n];
         if n == 0 {
-            return Ok(preds);
+            return Ok(());
         }
         let tiers = self.engines.len();
-        // Scratch is taken for the duration of the call (an engine error
-        // drops it; the next call just re-warms). `rows` holds the
-        // original row ids of the current compacted sub-batch; tier 0
-        // reads the caller's buffer directly, later tiers the gathered one.
+        // Scratch is taken for the duration of the call and restored on
+        // every exit path (including tier-engine errors), so one warmup
+        // lasts the router's lifetime. `rows` holds the original row ids
+        // of the current compacted sub-batch; tier 0 reads the caller's
+        // buffer directly, later tiers the gathered one.
         let mut s = std::mem::take(&mut self.cascade_scratch);
         s.rows.clear();
         s.rows.extend(0..n);
@@ -294,16 +412,28 @@ impl ModelRouter {
             if cnt == 0 {
                 break;
             }
-            let xb: &[f32] = if i == 0 { x } else { &s.gathered };
+            // the one grow-only arena serves every tier's sub-batch
+            if s.resp.len() < cnt * m {
+                s.resp.resize(cnt * m, 0.0);
+            }
             let t0 = Instant::now();
-            let resp = self.engines[i].responses(xb, cnt)?;
-            self.stats.tier_ns[i] += t0.elapsed().as_nanos() as u64;
+            let call = {
+                let xb: &[f32] = if i == 0 { x } else { &s.gathered };
+                self.engines[i].responses_into(xb, cnt, &mut s.resp[..cnt * m])
+            };
+            if let Err(e) = call {
+                self.cascade_scratch = s;
+                return Err(e);
+            }
+            let elapsed = t0.elapsed().as_nanos() as u64;
+            self.stats.tier_ns[i] += elapsed;
+            self.stats.critical_path_ns += elapsed;
             self.stats.served[i] += cnt as u64;
             let last = i + 1 == tiers;
             s.next_rows.clear();
             s.next_gathered.clear();
             for (r, &row) in s.rows.iter().enumerate() {
-                let rr = &resp[r * m..(r + 1) * m];
+                let rr = &s.resp[r * m..(r + 1) * m];
                 let (top1, top2, arg) = top2(rr);
                 let margin = (top1 - top2) / self.max_response[i].max(1.0);
                 if margin >= self.margin_threshold || last {
@@ -321,7 +451,7 @@ impl ModelRouter {
             std::mem::swap(&mut s.gathered, &mut s.next_gathered);
         }
         self.cascade_scratch = s;
-        Ok(preds)
+        Ok(())
     }
 
     /// Fraction of first-tier traffic resolved WITHOUT escalating —
@@ -464,24 +594,26 @@ impl InferenceEngine for RouterEngine {
     }
 
     /// Batched-cascade responses: each row carries the scores of the tier
-    /// that resolved it.
-    fn responses(&mut self, x: &[f32], n: usize) -> crate::Result<Vec<f32>> {
-        self.record(|r| r.cascade_responses_batch(x, n).map(|(scores, _)| scores))
+    /// that resolved it (predictions land in the router's grow-only
+    /// arena, not a per-call `Vec`).
+    fn responses_into(&mut self, x: &[f32], n: usize, out: &mut [f32]) -> crate::Result<()> {
+        self.record(|r| r.cascade_scores_into(x, n, out))
     }
 
-    fn classify(&mut self, x: &[f32], n: usize) -> crate::Result<Vec<usize>> {
-        self.record(|r| r.classify_cascade_batch(x, n))
+    fn classify_into(&mut self, x: &[f32], n: usize, out: &mut [usize]) -> crate::Result<()> {
+        self.record(|r| r.classify_cascade_batch_into(x, n, out))
     }
 
-    fn classify_routed(
+    fn classify_routed_into(
         &mut self,
         x: &[f32],
         n: usize,
         tier: Option<Tier>,
-    ) -> crate::Result<Vec<usize>> {
+        out: &mut [usize],
+    ) -> crate::Result<()> {
         match tier {
-            Some(t) => self.record(|r| r.classify_batch(x, n, t)),
-            None => self.record(|r| r.classify_cascade_batch(x, n)),
+            Some(t) => self.record(|r| r.classify_batch_into(x, n, t, out)),
+            None => self.record(|r| r.classify_cascade_batch_into(x, n, out)),
         }
     }
 }
@@ -614,6 +746,87 @@ mod tests {
         let (mut r, _) = zoo();
         assert!(r.classify_cascade_batch(&[], 0).unwrap().is_empty());
         assert_eq!(r.stats, RouterStats::default());
+    }
+
+    #[test]
+    fn critical_path_tracks_serial_engine_time_exactly() {
+        // On a sequential router every engine call serializes, so the
+        // critical path IS the total engine time — bit-for-bit.
+        let (mut r, ds) = zoo();
+        r.margin_threshold = 0.1;
+        let n = 40.min(ds.n_test());
+        r.classify_cascade_batch(&ds.test_x[..n * ds.num_features], n).unwrap();
+        r.classify_batch(&ds.test_x[..n * ds.num_features], n, Tier::Accurate).unwrap();
+        for i in 0..5 {
+            r.classify_cascade(ds.test_row(i)).unwrap();
+        }
+        assert!(r.stats.critical_path_ns > 0);
+        assert_eq!(
+            r.stats.critical_path_ns,
+            r.stats.tier_ns.iter().sum::<u64>(),
+            "sequential critical path must equal summed tier time"
+        );
+    }
+
+    #[test]
+    fn merge_maxes_critical_path_and_chain_adds_it() {
+        let a = RouterStats {
+            served: [10, 2, 0],
+            escalations_from: [2, 0, 0],
+            tier_ns: [500, 300, 0],
+            critical_path_ns: 800,
+        };
+        let b = RouterStats {
+            served: [8, 1, 1],
+            escalations_from: [1, 1, 0],
+            tier_ns: [400, 200, 100],
+            critical_path_ns: 700,
+        };
+        // parallel fold: counts add, the slowest worker is the path
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged.served, [18, 3, 1]);
+        assert_eq!(merged.tier_ns, [900, 500, 100]);
+        assert_eq!(merged.critical_path_ns, 800, "merge takes the max path");
+        // serial fold: everything adds, including the path
+        let mut chained = a.clone();
+        chained.chain(&b);
+        assert_eq!(chained.served, [18, 3, 1]);
+        assert_eq!(chained.critical_path_ns, 1500, "chain concatenates paths");
+        // diff stays exact over both
+        let d = merged.diff(&a);
+        assert_eq!(d.served, b.served);
+        assert_eq!(d.critical_path_ns, 0, "a slower base absorbs the max");
+    }
+
+    #[test]
+    fn cascade_into_honors_the_write_into_contract() {
+        let (mut r, ds) = zoo();
+        r.margin_threshold = 0.1;
+        let m = r.num_classes();
+        let n = 30.min(ds.n_test());
+        let x = &ds.test_x[..n * ds.num_features];
+        let want = r.classify_cascade_batch(x, n).unwrap();
+        let (want_scores, _) = r.cascade_responses_batch(x, n).unwrap();
+        // dirty oversized planes: prefixes fully overwritten, suffixes kept
+        let mut preds = vec![usize::MAX; n + 4];
+        r.classify_cascade_batch_into(x, n, &mut preds).unwrap();
+        assert_eq!(&preds[..n], &want[..]);
+        assert!(preds[n..].iter().all(|&p| p == usize::MAX));
+        let mut scores = vec![-1.5f32; n * m + 6];
+        r.cascade_scores_into(x, n, &mut scores).unwrap();
+        assert_eq!(&scores[..n * m], &want_scores[..]);
+        assert!(scores[n * m..].iter().all(|&v| v == -1.5));
+        // short planes are an Err before any engine runs
+        let before = r.stats.clone();
+        assert!(r.classify_cascade_batch_into(x, n, &mut preds[..n - 1]).is_err());
+        assert!(r.classify_batch_into(x, n, Tier::Fast, &mut preds[..n - 1]).is_err());
+        assert!(r.cascade_scores_into(x, n, &mut scores[..n * m - 1]).is_err());
+        assert_eq!(r.stats, before, "rejected calls must not advance counters");
+        // n = 0 touches nothing
+        let mut untouched = vec![usize::MAX; 3];
+        r.classify_cascade_batch_into(&[], 0, &mut untouched).unwrap();
+        assert!(untouched.iter().all(|&p| p == usize::MAX));
     }
 
     #[test]

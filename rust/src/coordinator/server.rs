@@ -257,7 +257,16 @@ fn worker_loop(
     metrics: &ServerMetrics,
 ) {
     let f = engine.num_features();
+    // Grow-only per-worker buffers, reused across every micro-batch: the
+    // flattened input plane, the accepted requests, the prediction plane
+    // the engine writes into (`classify_routed_into`), and the latency
+    // staging. A warm worker's serving loop performs no steady-state
+    // allocations of its own — the engines underneath uphold the same
+    // contract (see the `InferenceEngine` write-into docs).
     let mut flat: Vec<f32> = Vec::new();
+    let mut good: Vec<crate::coordinator::batcher::Request> = Vec::new();
+    let mut preds: Vec<usize> = Vec::new();
+    let mut lats: Vec<std::time::Duration> = Vec::new();
     while let Some(batch) = queue.next_batch() {
         // Batches are tier-homogeneous by construction (next_batch), so
         // the whole batch dispatches as one routed engine call.
@@ -268,7 +277,7 @@ fn worker_loop(
         // Reject ONLY wrong-width requests (their senders disconnect, so
         // callers observe the drop); their batch-mates still complete.
         flat.clear();
-        let mut good = Vec::with_capacity(batch.len());
+        good.clear();
         let mut malformed = 0u64;
         for r in batch {
             if r.features.len() == f {
@@ -284,12 +293,17 @@ fn worker_loop(
         if good.is_empty() {
             continue;
         }
-        match engine.classify_routed(&flat, good.len(), tier) {
-            Ok(preds) => {
+        let n = good.len();
+        if preds.len() < n {
+            preds.resize(n, 0);
+        }
+        match engine.classify_routed_into(&flat, n, tier, &mut preds) {
+            Ok(()) => {
                 let now = Instant::now();
-                let lats: Vec<_> = good.iter().map(|r| now - r.enqueued).collect();
-                metrics.record_batch(good.len(), &lats);
-                for (r, p) in good.into_iter().zip(preds) {
+                lats.clear();
+                lats.extend(good.iter().map(|r| now - r.enqueued));
+                metrics.record_batch(n, &lats);
+                for (r, &p) in good.drain(..).zip(preds.iter()) {
                     let _ = r.done.send((r.id, p, Vec::new()));
                 }
             }
@@ -298,6 +312,7 @@ fn worker_loop(
                 // closed channel) but COUNT it — overload tests and
                 // operators watch `batches_failed`.
                 metrics.record_batch_failure();
+                good.clear();
             }
         }
     }

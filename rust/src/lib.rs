@@ -52,3 +52,12 @@ pub mod util;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;
+
+// The lib's own test harness runs under the counting allocator so the
+// steady-state zero-allocation witness tests (runtime::, coordinator::)
+// can count per-thread heap traffic; overhead is one relaxed atomic
+// increment per allocation. Production builds never see this — the
+// module itself is gated on `cfg(test)` / the `alloc-witness` feature.
+#[cfg(test)]
+#[global_allocator]
+static ALLOC_WITNESS: util::alloc_witness::CountingAlloc = util::alloc_witness::CountingAlloc;

@@ -349,6 +349,51 @@ impl FlatModel {
         scratch.slices = slices;
     }
 
+    /// [`FlatModel::responses_batch_fused`] writing **f32** responses into
+    /// a caller-owned plane — the write-into primitive every engine's
+    /// `responses_into` bottoms out in. Only the `n * num_classes` prefix
+    /// of `out` is written (oversized planes are fine, and a dirty prefix
+    /// is fully overwritten); the integer tile staging lives in
+    /// `scratch.resp`, so the i32 → f32 conversion costs one tile-sized
+    /// pass and the whole call allocates nothing after warmup.
+    pub fn responses_batch_fused_into(
+        &self,
+        encoder: &ThermometerEncoder,
+        x: &[f32],
+        n: usize,
+        scratch: &mut FlatBatchScratch,
+        out: &mut [f32],
+    ) {
+        let f = encoder.num_inputs;
+        assert_eq!(x.len(), n * f);
+        let m = self.num_classes;
+        assert!(out.len() >= n * m, "output plane too short: {} < {}", out.len(), n * m);
+        if n == 0 {
+            return;
+        }
+        debug_assert_eq!(
+            encoder.encoded_bits(),
+            self.submodels[0].cfg.total_input_bits,
+            "encoder/model width mismatch"
+        );
+        let mut slices = std::mem::take(&mut scratch.slices);
+        let mut resp = std::mem::take(&mut scratch.resp);
+        let mut start = 0usize;
+        while start < n {
+            let nt = (n - start).min(Self::TILE);
+            encoder.encode_tile_slices(&x[start * f..(start + nt) * f], nt, &mut slices);
+            resp.clear();
+            resp.resize(nt * m, 0); // the tile kernel wants a zeroed plane
+            self.responses_tile_slices(TileSlices::new(&slices, nt), scratch, &mut resp);
+            for (o, &r) in out[start * m..(start + nt) * m].iter_mut().zip(resp.iter()) {
+                *o = r as f32;
+            }
+            start += nt;
+        }
+        scratch.resp = resp;
+        scratch.slices = slices;
+    }
+
     /// The bit-sliced tile kernel proper, operating on a borrowed
     /// [`TileSlices`] view (`out` row-major `nt × num_classes`,
     /// pre-zeroed). Everything downstream of the slice layout lives here;
@@ -470,6 +515,9 @@ pub struct FlatBatchScratch {
     idx: Vec<u32>,
     /// per-sample accumulated class mask for one filter
     masks: Vec<u32>,
+    /// tile-sized i32 response staging for the f32 write-into path
+    /// ([`FlatModel::responses_batch_fused_into`]) — ≤ 64 × classes
+    resp: Vec<i32>,
 }
 
 #[cfg(test)]
@@ -551,6 +599,39 @@ mod tests {
             let mut got = vec![0i32; n * m];
             flat.responses_batch_fused(&model.encoder, x, n, &mut bs_fused, &mut got);
             assert_eq!(got, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn fused_into_matches_i32_kernel_and_respects_the_prefix_contract() {
+        let ds = synth_uci(23, uci_spec("vowel").unwrap());
+        let (mut model, _) = train_oneshot(
+            &ds,
+            &OneShotConfig { inputs_per_filter: 10, entries_per_filter: 128, therm_bits: 5, ..Default::default() },
+        );
+        prune_model(&mut model, &ds, 0.2);
+        let flat = FlatModel::compile(&model);
+        let m = model.num_classes();
+        let mut bs_i32 = FlatBatchScratch::default();
+        let mut bs_f32 = FlatBatchScratch::default();
+        const PAD: usize = 17;
+        const SENTINEL: f32 = -4242.5;
+        for n in [0usize, 1, 63, 64, 65, 130] {
+            let n = n.min(ds.n_test());
+            let x = &ds.test_x[..n * ds.num_features];
+            let mut want = vec![0i32; n * m];
+            flat.responses_batch_fused(&model.encoder, x, n, &mut bs_i32, &mut want);
+            // dirty, oversized plane: the n*m prefix must be fully
+            // overwritten, the suffix untouched
+            let mut got = vec![SENTINEL; n * m + PAD];
+            flat.responses_batch_fused_into(&model.encoder, x, n, &mut bs_f32, &mut got);
+            for (i, (&g, &w)) in got.iter().zip(want.iter()).enumerate() {
+                assert_eq!(g, w as f32, "n={n} slot {i}");
+            }
+            assert!(
+                got[n * m..].iter().all(|&v| v == SENTINEL),
+                "n={n}: the suffix beyond n*m must stay untouched"
+            );
         }
     }
 

@@ -92,23 +92,68 @@ impl SharedModel {
 /// A batch classifier — implemented by both the native bit-packed engine
 /// and the PJRT-loaded AOT graph, so the coordinator and the benches can
 /// swap them freely (and cross-check one against the other).
+///
+/// ## The write-into contract
+///
+/// The **primitive** operations are the `_into` forms: the caller owns
+/// the output plane and the engine owns (and reuses) every piece of
+/// scratch, so a warm engine serves micro-batches with **zero
+/// steady-state allocations** (witnessed by the counting-allocator tests
+/// and the `engine_hot` alloc gate). For every `_into` method:
+///
+/// * `out` must hold at least the written prefix (`n * num_classes`
+///   response floats, or `n` predictions) — a shorter plane is an `Err`
+///   *before any work happens* (never a panic, so a pool job can't die
+///   mid-flight on a sizing bug);
+/// * exactly that prefix is overwritten — passing a dirty, oversized
+///   grow-only buffer is the intended usage, and anything beyond the
+///   prefix is left untouched (`prop_into_matches_vec` pins this down);
+/// * the `Vec`-returning forms are thin default wrappers that allocate a
+///   fresh plane and delegate, preserving every historical call site.
 pub trait InferenceEngine: Send {
     /// Human-readable engine label for logs/benches.
     fn label(&self) -> String;
     fn num_features(&self) -> usize;
     fn num_classes(&self) -> usize;
-    /// Per-class responses for `n` samples (row-major `x`, length
-    /// `n * num_features`). Returns row-major `n * num_classes` scores.
-    fn responses(&mut self, x: &[f32], n: usize) -> crate::Result<Vec<f32>>;
 
-    /// Argmax classification built on `responses` (ties break low, like
-    /// the hardware comparator).
-    fn classify(&mut self, x: &[f32], n: usize) -> crate::Result<Vec<usize>> {
+    /// PRIMITIVE: per-class responses for `n` samples (row-major `x`,
+    /// length `n * num_features`), written row-major into
+    /// `out[..n * num_classes]` under the trait's write-into contract.
+    fn responses_into(&mut self, x: &[f32], n: usize, out: &mut [f32]) -> crate::Result<()>;
+
+    /// Per-class responses in a freshly allocated plane — a thin wrapper
+    /// over [`InferenceEngine::responses_into`]. Input length is checked
+    /// BEFORE the plane is allocated, so an inconsistent `n` is an `Err`,
+    /// never an attempted `n * m` allocation.
+    fn responses(&mut self, x: &[f32], n: usize) -> crate::Result<Vec<f32>> {
+        anyhow::ensure!(x.len() == n * self.num_features(), "bad input length");
+        let mut out = vec![0f32; n * self.num_classes()];
+        self.responses_into(x, n, &mut out)?;
+        Ok(out)
+    }
+
+    /// Argmax classification written into `out[..n]` (ties break low,
+    /// like the hardware comparator). The default stages responses
+    /// through a fresh plane; engines with reusable scratch override it
+    /// to stay allocation-free.
+    fn classify_into(&mut self, x: &[f32], n: usize, out: &mut [usize]) -> crate::Result<()> {
+        anyhow::ensure!(out.len() >= n, "prediction plane too short: {} < {n}", out.len());
         let m = self.num_classes();
         let resp = self.responses(x, n)?;
-        Ok((0..n)
-            .map(|i| crate::util::argmax_tie_low(&resp[i * m..(i + 1) * m]))
-            .collect())
+        for (row, o) in out.iter_mut().enumerate().take(n) {
+            *o = crate::util::argmax_tie_low(&resp[row * m..(row + 1) * m]);
+        }
+        Ok(())
+    }
+
+    /// Argmax classification in a freshly allocated `Vec` — a thin
+    /// wrapper over [`InferenceEngine::classify_into`] (input length
+    /// checked before the plane is allocated).
+    fn classify(&mut self, x: &[f32], n: usize) -> crate::Result<Vec<usize>> {
+        anyhow::ensure!(x.len() == n * self.num_features(), "bad input length");
+        let mut out = vec![0usize; n];
+        self.classify_into(x, n, &mut out)?;
+        Ok(out)
     }
 
     /// Zoo depth for tier-aware engines; 0 = tier-blind (the default).
@@ -119,20 +164,61 @@ pub trait InferenceEngine: Send {
         0
     }
 
-    /// Tier-routed batch classification — what the serving worker calls.
-    /// Engines owning a model zoo dispatch `Some(tier)` to that pinned
-    /// tier and `None` to the batched confidence cascade; single-model
-    /// engines serve every tier with their one model (the tier is a
-    /// routing hint, not a correctness contract).
+    /// Tier-routed batch classification into `out[..n]` — what the
+    /// serving worker calls. Engines owning a model zoo dispatch
+    /// `Some(tier)` to that pinned tier and `None` to the batched
+    /// confidence cascade; single-model engines serve every tier with
+    /// their one model (the tier is a routing hint, not a correctness
+    /// contract).
+    fn classify_routed_into(
+        &mut self,
+        x: &[f32],
+        n: usize,
+        tier: Option<Tier>,
+        out: &mut [usize],
+    ) -> crate::Result<()> {
+        let _ = tier;
+        self.classify_into(x, n, out)
+    }
+
+    /// Tier-routed classification in a freshly allocated `Vec` — a thin
+    /// wrapper over [`InferenceEngine::classify_routed_into`] (input
+    /// length checked before the plane is allocated).
     fn classify_routed(
         &mut self,
         x: &[f32],
         n: usize,
         tier: Option<Tier>,
     ) -> crate::Result<Vec<usize>> {
-        let _ = tier;
-        self.classify(x, n)
+        anyhow::ensure!(x.len() == n * self.num_features(), "bad input length");
+        let mut out = vec![0usize; n];
+        self.classify_routed_into(x, n, tier, &mut out)?;
+        Ok(out)
     }
+}
+
+/// Stage responses through an engine-owned grow-only plane and argmax
+/// each row into `out[..n]` — the one implementation behind every
+/// engine's allocation-free `classify_into` override. The caller takes
+/// its plane out of `self` first (so `fill` may borrow the engine
+/// mutably) and restores it afterwards; on a `fill` error nothing is
+/// written to `out`.
+pub(crate) fn classify_via_plane(
+    plane: &mut Vec<f32>,
+    m: usize,
+    n: usize,
+    out: &mut [usize],
+    fill: impl FnOnce(&mut [f32]) -> crate::Result<()>,
+) -> crate::Result<()> {
+    anyhow::ensure!(out.len() >= n, "prediction plane too short: {} < {n}", out.len());
+    if plane.len() < n * m {
+        plane.resize(n * m, 0.0);
+    }
+    fill(&mut plane[..])?;
+    for (row, o) in out.iter_mut().enumerate().take(n) {
+        *o = crate::util::argmax_tie_low(&plane[row * m..(row + 1) * m]);
+    }
+    Ok(())
 }
 
 /// The native Rust engine: bit-packed tables, shared H3 hash block,
@@ -146,10 +232,14 @@ pub trait InferenceEngine: Send {
 /// [`responses_batch_fused`]: crate::model::flat::FlatModel::responses_batch_fused
 pub struct NativeEngine {
     shared: SharedModel,
+    /// scalar-path i32 response staging (one row)
     resp_scratch: Vec<i32>,
     flat_scratch: crate::model::flat::FlatScratch,
     batch_scratch: crate::model::flat::FlatBatchScratch,
     encoded_buf: crate::util::bitvec::BitVec,
+    /// grow-only response plane backing `classify_into` (so argmax
+    /// classification allocates nothing after warmup)
+    resp_plane: Vec<f32>,
 }
 
 impl NativeEngine {
@@ -169,6 +259,7 @@ impl NativeEngine {
             flat_scratch: crate::model::flat::FlatScratch::default(),
             batch_scratch: crate::model::flat::FlatBatchScratch::default(),
             encoded_buf,
+            resp_plane: Vec::new(),
         }
     }
 
@@ -200,6 +291,7 @@ impl NativeEngine {
         self.flat_scratch = crate::model::flat::FlatScratch::default();
         self.batch_scratch = crate::model::flat::FlatBatchScratch::default();
         self.resp_scratch = Vec::new();
+        self.resp_plane = Vec::new();
         self.shared = shared;
     }
 }
@@ -217,44 +309,59 @@ impl InferenceEngine for NativeEngine {
         self.model().num_classes()
     }
 
-    fn responses(&mut self, x: &[f32], n: usize) -> crate::Result<Vec<f32>> {
+    fn responses_into(&mut self, x: &[f32], n: usize, out: &mut [f32]) -> crate::Result<()> {
         let f = self.num_features();
         anyhow::ensure!(x.len() == n * f, "bad input length");
         let m = self.num_classes();
-        let bits = self.shared.model().encoded_bits();
+        anyhow::ensure!(
+            out.len() >= n * m,
+            "response plane too short: {} < {}",
+            out.len(),
+            n * m
+        );
+        if n == 0 {
+            return Ok(());
+        }
         if n > 1 {
             // Fused slice path: encode straight into the bit-sliced tile
-            // layout, one CSR traversal per 64 samples.
-            self.resp_scratch.clear();
-            self.resp_scratch.resize(n * m, 0);
-            self.shared.flat().responses_batch_fused(
+            // layout, one CSR traversal per 64 samples, i32 staging one
+            // tile at a time inside the batch scratch.
+            self.shared.flat().responses_batch_fused_into(
                 &self.shared.model().encoder,
                 x,
                 n,
                 &mut self.batch_scratch,
-                &mut self.resp_scratch,
+                out,
             );
-            return Ok(self.resp_scratch.iter().map(|&r| r as f32).collect());
+            return Ok(());
         }
-        let mut out = Vec::with_capacity(n * m);
+        let bits = self.shared.model().encoded_bits();
         if self.encoded_buf.len() != bits {
             self.encoded_buf = crate::util::bitvec::BitVec::zeros(bits);
         }
-        for i in 0..n {
-            self.shared
-                .model()
-                .encoder
-                .encode_into(&x[i * f..(i + 1) * f], &mut self.encoded_buf);
-            self.resp_scratch.clear();
-            self.resp_scratch.resize(m, 0);
-            self.shared.flat().responses_encoded(
-                &self.encoded_buf,
-                &mut self.flat_scratch,
-                &mut self.resp_scratch,
-            );
-            out.extend(self.resp_scratch.iter().map(|&r| r as f32));
+        self.shared
+            .model()
+            .encoder
+            .encode_into(&x[..f], &mut self.encoded_buf);
+        self.resp_scratch.clear();
+        self.resp_scratch.resize(m, 0);
+        self.shared.flat().responses_encoded(
+            &self.encoded_buf,
+            &mut self.flat_scratch,
+            &mut self.resp_scratch,
+        );
+        for (o, &r) in out[..m].iter_mut().zip(self.resp_scratch.iter()) {
+            *o = r as f32;
         }
-        Ok(out)
+        Ok(())
+    }
+
+    fn classify_into(&mut self, x: &[f32], n: usize, out: &mut [usize]) -> crate::Result<()> {
+        let m = self.num_classes();
+        let mut plane = std::mem::take(&mut self.resp_plane);
+        let res = classify_via_plane(&mut plane, m, n, out, |p| self.responses_into(x, n, p));
+        self.resp_plane = plane;
+        res
     }
 }
 
@@ -329,11 +436,86 @@ mod tests {
             fn label(&self) -> String { "fake".into() }
             fn num_features(&self) -> usize { 1 }
             fn num_classes(&self) -> usize { 3 }
-            fn responses(&mut self, _x: &[f32], n: usize) -> crate::Result<Vec<f32>> {
-                Ok(vec![2.0, 2.0, 1.0].repeat(n))
+            fn responses_into(&mut self, _x: &[f32], n: usize, out: &mut [f32]) -> crate::Result<()> {
+                for row in out[..3 * n].chunks_mut(3) {
+                    row.copy_from_slice(&[2.0, 2.0, 1.0]);
+                }
+                Ok(())
             }
         }
         let mut f = Fake;
         assert_eq!(f.classify(&[0.0], 1).unwrap(), vec![0]);
+        // default classify_into honors the prefix contract
+        let mut preds = [usize::MAX; 4];
+        f.classify_into(&[0.0, 0.0], 2, &mut preds).unwrap();
+        assert_eq!(preds, [0, 0, usize::MAX, usize::MAX]);
+        assert!(f.classify_into(&[0.0; 3], 3, &mut preds[..2]).is_err());
+    }
+
+    #[test]
+    fn into_paths_match_vec_paths_and_respect_the_prefix_contract() {
+        let ds = synth_uci(5, uci_spec("iris").unwrap());
+        let (model, _) = train_oneshot(&ds, &OneShotConfig::default());
+        let mut eng = NativeEngine::new(model);
+        let m = eng.num_classes();
+        const SENTINEL_F: f32 = -4242.5;
+        for n in [0usize, 1, 2, 65] {
+            let n = n.min(ds.n_test());
+            let x = &ds.test_x[..n * ds.num_features];
+            let want_resp = eng.responses(x, n).unwrap();
+            let want_pred = eng.classify(x, n).unwrap();
+            // dirty, oversized planes: prefix fully overwritten, suffix kept
+            let mut resp = vec![SENTINEL_F; n * m + 5];
+            eng.responses_into(x, n, &mut resp).unwrap();
+            assert_eq!(&resp[..n * m], &want_resp[..], "n={n}");
+            assert!(resp[n * m..].iter().all(|&v| v == SENTINEL_F), "n={n} suffix");
+            let mut pred = vec![usize::MAX; n + 3];
+            eng.classify_into(x, n, &mut pred).unwrap();
+            assert_eq!(&pred[..n], &want_pred[..], "n={n}");
+            assert!(pred[n..].iter().all(|&v| v == usize::MAX), "n={n} suffix");
+        }
+        // too-short planes are an Err, not a panic
+        let x = &ds.test_x[..2 * ds.num_features];
+        let mut short = vec![0f32; 2 * m - 1];
+        assert!(eng.responses_into(x, 2, &mut short).is_err());
+        let mut short_p = vec![0usize; 1];
+        assert!(eng.classify_into(x, 2, &mut short_p).is_err());
+    }
+
+    #[test]
+    fn native_engine_steady_state_is_allocation_free() {
+        // The zero-allocation witness the refactor exists for: a warm
+        // NativeEngine serves `responses_into`/`classify_into` (fused
+        // batch AND scalar path) without touching the heap. Counting is
+        // per-thread, so concurrently running tests can't pollute it.
+        use crate::util::alloc_witness::Witness;
+        let ds = synth_uci(5, uci_spec("iris").unwrap());
+        let (model, _) = train_oneshot(&ds, &OneShotConfig::default());
+        let mut eng = NativeEngine::new(model);
+        let m = eng.num_classes();
+        let f = eng.num_features();
+        let n = 65.min(ds.n_test());
+        let x = &ds.test_x[..n * f];
+        let mut resp = vec![0f32; n * m];
+        let mut pred = vec![0usize; n];
+        // warmup grows every scratch buffer to its steady shape
+        for _ in 0..2 {
+            eng.responses_into(x, n, &mut resp).unwrap();
+            eng.classify_into(x, n, &mut pred).unwrap();
+            eng.responses_into(&x[..f], 1, &mut resp).unwrap();
+            eng.classify_into(&x[..f], 1, &mut pred).unwrap();
+        }
+        let w = Witness::begin();
+        for _ in 0..8 {
+            eng.responses_into(x, n, &mut resp).unwrap();
+            eng.classify_into(x, n, &mut pred).unwrap();
+            eng.responses_into(&x[..f], 1, &mut resp).unwrap();
+            eng.classify_into(&x[..f], 1, &mut pred).unwrap();
+        }
+        assert_eq!(
+            w.allocations(),
+            0,
+            "a warm NativeEngine must not allocate on the write-into hot path"
+        );
     }
 }

@@ -82,11 +82,18 @@ impl InferenceEngine for PjrtEngine {
         self.num_classes
     }
 
-    fn responses(&mut self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+    fn responses_into(&mut self, x: &[f32], n: usize, out: &mut [f32]) -> Result<()> {
         let f = self.num_features;
         anyhow::ensure!(x.len() == n * f, "bad input length");
         let m = self.num_classes;
-        let mut out = Vec::with_capacity(n * m);
+        anyhow::ensure!(
+            out.len() >= n * m,
+            "response plane too short: {} < {}",
+            out.len(),
+            n * m
+        );
+        // The XLA round-trip materializes its own buffers regardless, so
+        // this engine is write-into-correct but not allocation-free.
         let mut padded = vec![0f32; self.batch * f];
         let mut i = 0;
         while i < n {
@@ -94,9 +101,9 @@ impl InferenceEngine for PjrtEngine {
             padded[..take * f].copy_from_slice(&x[i * f..(i + take) * f]);
             padded[take * f..].fill(0.0);
             let resp = self.run_padded(&padded)?;
-            out.extend_from_slice(&resp[..take * m]);
+            out[i * m..(i + take) * m].copy_from_slice(&resp[..take * m]);
             i += take;
         }
-        Ok(out)
+        Ok(())
     }
 }

@@ -32,12 +32,15 @@
 //!
 //! Threads spawn **once**, in the engine constructor, and live until the
 //! engine is dropped — steady state does zero thread spawns per call.
-//! On the single-model path each worker reuses its own scratch, so the
-//! returned output `Vec` is the one per-call allocation; router jobs
-//! additionally pay the cascade's returned prediction `Vec` per range
-//! (a write-into router batch API would remove it — noted in ROADMAP).
-//! Every call hands each participating worker one `Job` over its
-//! channel and then
+//! Every job writes straight into a disjoint row range of ONE
+//! caller-owned output plane (the `_into` write-into contract), workers
+//! reuse their own scratch, router jobs run the write-into cascade
+//! (`classify_cascade_batch_into`) against grow-only router arenas, and
+//! the engines reuse their job buffers — so a warm engine's data plane
+//! allocates **nothing** per call; the only remaining heap traffic is
+//! the pool's channel nodes, O(shards) amortized and independent of the
+//! batch size (witnessed by the counting-allocator tests). Every call
+//! hands each participating worker one `Job` over its channel and then
 //! blocks on the shared completion channel until all dispatched jobs are
 //! acknowledged; workers it didn't use stay parked in `recv`. `Drop`
 //! closes the job channels and joins every thread.
@@ -63,13 +66,13 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-/// Per-shard reusable state: fused-kernel scratch + response staging.
-/// Owned by its worker thread; shapes follow each job exactly (every
-/// buffer is cleared and resized per use), so model swaps are safe.
+/// Per-shard reusable state: fused-kernel scratch (including its tile
+/// response staging). Owned by its worker thread; shapes follow each job
+/// exactly (every buffer is cleared and resized per use), so model swaps
+/// are safe.
 #[derive(Default)]
 struct ShardScratch {
     batch: FlatBatchScratch,
-    resp: Vec<i32>,
 }
 
 /// Row-range-over-one-model: run the fused kernel on `rows` rows and
@@ -182,11 +185,13 @@ impl ShardPool {
     /// handoff sound (and keeps `&mut self` semantics upstream: no two
     /// calls ever interleave on the pool). ALL acks are drained before a
     /// failure surfaces: unwinding with jobs still in flight would free
-    /// the output buffers under a worker's pen.
-    fn run(&self, jobs: Vec<Job>) -> crate::Result<()> {
+    /// the output buffers under a worker's pen. `jobs` is drained, not
+    /// consumed, so the dispatching engine reuses one job buffer across
+    /// calls (part of the steady-state zero-allocation story).
+    fn run(&self, jobs: &mut Vec<Job>) -> crate::Result<()> {
         let dispatched = jobs.len();
         debug_assert!(dispatched <= self.job_txs.len());
-        for (tx, job) in self.job_txs.iter().zip(jobs) {
+        for (tx, job) in self.job_txs.iter().zip(jobs.drain(..)) {
             tx.send(job).expect("shard worker exited while engine alive");
         }
         let mut panicked = 0usize;
@@ -259,33 +264,26 @@ fn run_job(job: Job, scratch: &mut ShardScratch) -> crate::Result<()> {
             let encoder = unsafe { &*j.encoder };
             let x = unsafe { std::slice::from_raw_parts(j.x, j.rows * j.f) };
             let out = unsafe { std::slice::from_raw_parts_mut(j.out, j.rows * j.m) };
-            scratch.resp.clear();
-            scratch.resp.resize(j.rows * j.m, 0);
-            flat.responses_batch_fused(encoder, x, j.rows, &mut scratch.batch, &mut scratch.resp);
-            for (o, &v) in out.iter_mut().zip(scratch.resp.iter()) {
-                *o = v as f32;
-            }
+            flat.responses_batch_fused_into(encoder, x, j.rows, &mut scratch.batch, out);
             Ok(())
         }
         Job::Router(j) => {
             // SAFETY: same contract; additionally `router` points at THIS
             // worker's router — the dispatcher never hands one router to
-            // two jobs — so the mutable borrow is exclusive.
+            // two jobs — so the mutable borrow is exclusive. Every branch
+            // is a write-into call: the job's output ranges are the final
+            // resting place, no staging `Vec`s.
             let router = unsafe { &mut *j.router };
             let x = unsafe { std::slice::from_raw_parts(j.x, j.rows * j.f) };
             let preds_out = unsafe { std::slice::from_raw_parts_mut(j.preds, j.rows) };
             if let Some(tier) = j.tier {
-                let preds = router.classify_batch(x, j.rows, tier)?;
-                preds_out.copy_from_slice(&preds);
+                router.classify_batch_into(x, j.rows, tier, preds_out)?;
             } else if j.scores.is_null() {
-                let preds = router.classify_cascade_batch(x, j.rows)?;
-                preds_out.copy_from_slice(&preds);
+                router.classify_cascade_batch_into(x, j.rows, preds_out)?;
             } else {
                 let scores_out =
                     unsafe { std::slice::from_raw_parts_mut(j.scores, j.rows * j.m) };
-                let (scores, preds) = router.cascade_responses_batch(x, j.rows)?;
-                scores_out.copy_from_slice(&scores);
-                preds_out.copy_from_slice(&preds);
+                router.cascade_responses_batch_into(x, j.rows, scores_out, preds_out)?;
             }
             Ok(())
         }
@@ -332,6 +330,10 @@ pub struct ShardedEngine {
     shared: SharedModel,
     shards: usize,
     pool: ShardPool,
+    /// reusable job buffer (drained by the pool each call)
+    job_buf: Vec<Job>,
+    /// grow-only response plane backing `classify_into`
+    resp_plane: Vec<f32>,
 }
 
 impl ShardedEngine {
@@ -348,7 +350,13 @@ impl ShardedEngine {
     /// every other holder.
     pub fn from_shared(shared: SharedModel, shards: usize) -> Self {
         let shards = shards.max(1);
-        Self { shared, shards, pool: ShardPool::spawn(shards) }
+        Self {
+            shared,
+            shards,
+            pool: ShardPool::spawn(shards),
+            job_buf: Vec::new(),
+            resp_plane: Vec::new(),
+        }
     }
 
     /// The served model (read-only; `Arc`-shared).
@@ -377,7 +385,10 @@ impl ShardedEngine {
 
     /// [`ShardedEngine::swap_model`] without recompiling: adopt an
     /// already-shared model (re-shares; the old `Arc`s are released).
+    /// The classify plane resets so a wide model's staging doesn't pin
+    /// memory under a narrow one (every call rewrites its prefix anyway).
     pub fn swap_shared(&mut self, shared: SharedModel) {
+        self.resp_plane = Vec::new();
         self.shared = shared;
     }
 }
@@ -395,14 +406,22 @@ impl InferenceEngine for ShardedEngine {
         self.model().num_classes()
     }
 
-    fn responses(&mut self, x: &[f32], n: usize) -> crate::Result<Vec<f32>> {
+    fn responses_into(&mut self, x: &[f32], n: usize, out: &mut [f32]) -> crate::Result<()> {
         let f = self.num_features();
         anyhow::ensure!(x.len() == n * f, "bad input length");
         let m = self.num_classes();
-        let mut out = vec![0f32; n * m];
+        // Sizing is validated BEFORE any job exists: a short plane is a
+        // clean Err, never a worker writing out of bounds.
+        anyhow::ensure!(
+            out.len() >= n * m,
+            "response plane too short: {} < {}",
+            out.len(),
+            n * m
+        );
         if n == 0 {
-            return Ok(out);
+            return Ok(());
         }
+        let out = &mut out[..n * m];
         // One as_mut_ptr() BEFORE dispatching anything: re-borrowing `out`
         // after a worker has started writing through a previously derived
         // pointer would invalidate that pointer's provenance under the
@@ -411,8 +430,9 @@ impl InferenceEngine for ShardedEngine {
         let out_ptr = out.as_mut_ptr();
         let flat: *const FlatModel = Arc::as_ptr(self.shared.flat());
         let encoder: *const ThermometerEncoder = &self.shared.model().encoder;
-        let jobs: Vec<Job> = row_ranges(n, self.shards.min(n))
-            .map(|(row0, rows)| {
+        self.job_buf.clear();
+        self.job_buf
+            .extend(row_ranges(n, self.shards.min(n)).map(|(row0, rows)| {
                 Job::Responses(ResponsesJob {
                     flat,
                     encoder,
@@ -425,10 +445,18 @@ impl InferenceEngine for ShardedEngine {
                     f,
                     m,
                 })
-            })
-            .collect();
-        self.pool.run(jobs)?;
-        Ok(out)
+            }));
+        self.pool.run(&mut self.job_buf)
+    }
+
+    fn classify_into(&mut self, x: &[f32], n: usize, out: &mut [usize]) -> crate::Result<()> {
+        let m = self.num_classes();
+        let mut plane = std::mem::take(&mut self.resp_plane);
+        let res = crate::runtime::classify_via_plane(&mut plane, m, n, out, |p| {
+            self.responses_into(x, n, p)
+        });
+        self.resp_plane = plane;
+        res
     }
 }
 
@@ -460,6 +488,20 @@ pub struct ShardedRouterEngine {
     /// metrics delta-flush relies on
     retired: RouterStats,
     metrics: Option<Arc<ServerMetrics>>,
+    /// reusable job buffer (drained by the pool each call)
+    job_buf: Vec<Job>,
+    /// grow-only prediction plane backing `responses_into` (whose caller
+    /// wants scores, not predictions — the cascade produces both)
+    pred_plane: Vec<usize>,
+    /// per-router `critical_path_ns` snapshot taken at the top of each
+    /// dispatch (reusable; one slot per worker)
+    cp_snapshot: Vec<u64>,
+    /// Σ over batches of (max over that batch's worker ranges) — the
+    /// engine's true critical path. Kept OUTSIDE the per-router stats:
+    /// diffing max-of-cumulative worker paths would under-count whenever
+    /// the slowest range moves between workers across batches (the
+    /// normal case, since escalation-heavy rows move around).
+    cp_total: u64,
 }
 
 impl ShardedRouterEngine {
@@ -485,6 +527,10 @@ impl ShardedRouterEngine {
             pool: ShardPool::spawn(shards),
             retired: RouterStats::default(),
             metrics: None,
+            job_buf: Vec::new(),
+            pred_plane: Vec::new(),
+            cp_snapshot: Vec::new(),
+            cp_total: 0,
         }
     }
 
@@ -513,6 +559,10 @@ impl ShardedRouterEngine {
             pool: ShardPool::spawn(shards),
             retired: RouterStats::default(),
             metrics: None,
+            job_buf: Vec::new(),
+            pred_plane: Vec::new(),
+            cp_snapshot: Vec::new(),
+            cp_total: 0,
         }
     }
 
@@ -547,15 +597,25 @@ impl ShardedRouterEngine {
     /// Per-tier counters merged deterministically across the pool, in
     /// worker order, plus everything accumulated by routers retired via
     /// swap — monotonically non-decreasing across calls, which the
-    /// metrics delta-flush relies on. A batch that FAILED part-way may
-    /// still have advanced counters for the rows its workers finished;
-    /// the serving layer separately counts the whole batch in
-    /// `batches_failed`.
+    /// metrics delta-flush relies on. Workers running in parallel fold
+    /// with [`RouterStats::merge`] (counts add); retired zoo generations
+    /// compose serially with [`RouterStats::chain`]. `critical_path_ns`
+    /// is the one field NOT taken from the fold: it reports the
+    /// engine-level accumulator (Σ over batches of each batch's
+    /// max-over-worker-ranges, maintained by `dispatch`), because the
+    /// max of CUMULATIVE worker paths under-counts whenever the slowest
+    /// range moves between workers across batches. A batch that FAILED
+    /// part-way may still have advanced counters for the rows its
+    /// workers finished; the serving layer separately counts the whole
+    /// batch in `batches_failed`.
     pub fn merged_stats(&self) -> RouterStats {
-        let mut total = self.retired.clone();
+        let mut pool = RouterStats::default();
         for r in &self.routers {
-            total.merge(&r.stats);
+            pool.merge(&r.stats);
         }
+        let mut total = self.retired.clone();
+        total.chain(&pool);
+        total.critical_path_ns = self.cp_total;
         total
     }
 
@@ -574,9 +634,19 @@ impl ShardedRouterEngine {
     pub fn swap_shared(&mut self, tiers: Vec<SharedModel>) {
         assert!(!tiers.is_empty(), "sharded zoo wants at least one tier");
         let margin = self.routers[0].margin_threshold;
+        // parallel fold across the outgoing pool, then chain it onto the
+        // retired history (generations are serial — see merged_stats)
+        let mut pool = RouterStats::default();
         for r in &self.routers {
-            self.retired.merge(&r.stats);
+            pool.merge(&r.stats);
         }
+        // The engine-level `cp_total` accumulator is the ONLY critical-
+        // path source this engine reports (merged_stats overrides the
+        // fold) — zero the max-of-cumulatives value so `retired` never
+        // stores the under-counting number that accumulator exists to
+        // avoid.
+        pool.critical_path_ns = 0;
+        self.retired.chain(&pool);
         self.routers = build_routers(&tiers, margin, self.shards);
         if let Some(m) = &self.metrics {
             m.set_num_tiers(self.routers[0].num_tiers());
@@ -586,66 +656,98 @@ impl ShardedRouterEngine {
 
     /// Fan one batch across the pool: contiguous row ranges, one
     /// [`RouterJob`] per participating worker, predictions (and optional
-    /// resolution-tier scores) written in place, per-tier counter deltas
-    /// flushed to the hooked metrics sink. Counters advanced by finished
-    /// ranges flush even when a sibling range failed — operators see the
-    /// partial work AND the `batches_failed` bump.
+    /// resolution-tier scores) written straight into the caller-owned
+    /// planes, per-tier counter deltas flushed to the hooked metrics
+    /// sink. Plane sizes are validated BEFORE any job is built (a short
+    /// plane is an `Err`, never an out-of-bounds worker write), and only
+    /// the `n`-row prefix of each plane is touched. Counters advanced by
+    /// finished ranges flush even when a sibling range failed — operators
+    /// see the partial work AND the `batches_failed` bump.
     fn dispatch(
         &mut self,
         x: &[f32],
         n: usize,
         tier: Option<Tier>,
-        mut scores: Option<&mut Vec<f32>>,
-    ) -> crate::Result<Vec<usize>> {
+        scores: Option<&mut [f32]>,
+        preds: &mut [usize],
+    ) -> crate::Result<()> {
         let f = self.routers[0].num_features();
         let m = self.routers[0].num_classes();
         anyhow::ensure!(x.len() == n * f, "bad input length");
-        if let Some(sc) = scores.as_deref_mut() {
-            sc.clear();
-            sc.resize(n * m, 0.0);
+        anyhow::ensure!(
+            preds.len() >= n,
+            "prediction plane too short: {} < {n}",
+            preds.len()
+        );
+        if let Some(sc) = &scores {
+            anyhow::ensure!(
+                sc.len() >= n * m,
+                "score plane too short: {} < {}",
+                sc.len(),
+                n * m
+            );
         }
-        let mut preds = vec![0usize; n];
         if n == 0 {
-            return Ok(preds);
+            return Ok(());
         }
         let before = self.metrics.as_ref().map(|_| self.merged_stats());
+        // Per-router critical-path snapshot: this batch's path is the MAX
+        // over the per-worker deltas (parallel ranges overlap in time),
+        // which `merged_stats` then reports summed over batches. One
+        // reusable slot per worker — no steady-state allocation.
+        self.cp_snapshot.clear();
+        self.cp_snapshot
+            .extend(self.routers.iter().map(|r| r.stats.critical_path_ns));
         // Pointers derived once, BEFORE any job is dispatched (see the
-        // provenance note in `ShardedEngine::responses`).
-        let preds_ptr = preds.as_mut_ptr();
-        let scores_ptr: *mut f32 = match scores.as_deref_mut() {
-            Some(sc) => sc.as_mut_ptr(),
+        // provenance note in `ShardedEngine::responses_into`).
+        let preds_ptr = preds[..n].as_mut_ptr();
+        let scores_ptr: *mut f32 = match scores {
+            Some(sc) => sc[..n * m].as_mut_ptr(),
             None => std::ptr::null_mut(),
         };
         let routers_ptr = self.routers.as_mut_ptr();
-        let jobs: Vec<Job> = row_ranges(n, self.shards.min(n))
-            .enumerate()
-            .map(|(w, (row0, rows))| {
-                Job::Router(RouterJob {
-                    // SAFETY: w < shards = routers.len(); each worker gets
-                    // its own router exactly once per dispatch.
-                    router: unsafe { routers_ptr.add(w) },
-                    x: x[row0 * f..].as_ptr(),
-                    // SAFETY: in-bounds offsets; output ranges of distinct
-                    // jobs are disjoint (strictly increasing row0).
-                    preds: unsafe { preds_ptr.add(row0) },
-                    scores: if scores_ptr.is_null() {
-                        std::ptr::null_mut()
-                    } else {
-                        unsafe { scores_ptr.add(row0 * m) }
-                    },
-                    rows,
-                    f,
-                    m,
-                    tier,
-                })
-            })
-            .collect();
-        let result = self.pool.run(jobs);
+        self.job_buf.clear();
+        self.job_buf.extend(
+            row_ranges(n, self.shards.min(n))
+                .enumerate()
+                .map(|(w, (row0, rows))| {
+                    Job::Router(RouterJob {
+                        // SAFETY: w < shards = routers.len(); each worker
+                        // gets its own router exactly once per dispatch.
+                        router: unsafe { routers_ptr.add(w) },
+                        x: x[row0 * f..].as_ptr(),
+                        // SAFETY: in-bounds offsets; output ranges of
+                        // distinct jobs are disjoint (strictly increasing
+                        // row0).
+                        preds: unsafe { preds_ptr.add(row0) },
+                        scores: if scores_ptr.is_null() {
+                            std::ptr::null_mut()
+                        } else {
+                            unsafe { scores_ptr.add(row0 * m) }
+                        },
+                        rows,
+                        f,
+                        m,
+                        tier,
+                    })
+                }),
+        );
+        let result = self.pool.run(&mut self.job_buf);
+        // Fold this batch's critical path BEFORE the metrics flush, so
+        // the flushed delta carries it. Computed even when a sibling
+        // range failed — finished ranges did real serial work.
+        let batch_cp = self
+            .routers
+            .iter()
+            .zip(self.cp_snapshot.iter())
+            .map(|(r, &base)| r.stats.critical_path_ns - base)
+            .max()
+            .unwrap_or(0);
+        self.cp_total += batch_cp;
         if let (Some(sink), Some(before)) = (&self.metrics, before) {
             sink.record_tiers(&self.merged_stats().diff(&before));
         }
-        result?;
-        Ok(preds)
+        result
     }
 }
 
@@ -671,24 +773,31 @@ impl InferenceEngine for ShardedRouterEngine {
     }
 
     /// Sharded batched-cascade responses: each row carries the scores of
-    /// the tier that resolved it (same contract as `RouterEngine`).
-    fn responses(&mut self, x: &[f32], n: usize) -> crate::Result<Vec<f32>> {
-        let mut scores = Vec::new();
-        self.dispatch(x, n, None, Some(&mut scores))?;
-        Ok(scores)
+    /// the tier that resolved it (same contract as `RouterEngine`). The
+    /// cascade also produces predictions; they land in the engine's
+    /// grow-only plane, not a per-call `Vec`.
+    fn responses_into(&mut self, x: &[f32], n: usize, out: &mut [f32]) -> crate::Result<()> {
+        let mut preds = std::mem::take(&mut self.pred_plane);
+        if preds.len() < n {
+            preds.resize(n, 0);
+        }
+        let res = self.dispatch(x, n, None, Some(out), &mut preds);
+        self.pred_plane = preds;
+        res
     }
 
-    fn classify(&mut self, x: &[f32], n: usize) -> crate::Result<Vec<usize>> {
-        self.dispatch(x, n, None, None)
+    fn classify_into(&mut self, x: &[f32], n: usize, out: &mut [usize]) -> crate::Result<()> {
+        self.dispatch(x, n, None, None, out)
     }
 
-    fn classify_routed(
+    fn classify_routed_into(
         &mut self,
         x: &[f32],
         n: usize,
         tier: Option<Tier>,
-    ) -> crate::Result<Vec<usize>> {
-        self.dispatch(x, n, tier, None)
+        out: &mut [usize],
+    ) -> crate::Result<()> {
+        self.dispatch(x, n, tier, None, out)
     }
 }
 
@@ -861,6 +970,157 @@ mod tests {
         assert!(eng.classify(&[], 0).unwrap().is_empty());
         assert!(eng.responses(&[], 0).unwrap().is_empty());
         assert_eq!(eng.merged_stats(), RouterStats::default());
+    }
+
+    #[test]
+    fn sharded_into_contract_rejects_short_planes_without_wedging_the_pool() {
+        // A too-short output plane must surface as Err BEFORE any job is
+        // built — never a panic inside a pool worker — and the same pool
+        // must keep serving afterwards. Dirty oversized planes get their
+        // prefix fully overwritten and their suffix preserved.
+        let m = model();
+        let ds = synth_uci(5, uci_spec("vowel").unwrap());
+        let n = 20.min(ds.n_test());
+        let f = ds.num_features;
+        let x = &ds.test_x[..n * f];
+        let mut sh = ShardedEngine::new(m, 3);
+        let classes = sh.num_classes();
+        let want_resp = sh.responses(x, n).unwrap();
+        let want_pred = sh.classify(x, n).unwrap();
+        let mut short_resp = vec![0f32; n * classes - 1];
+        assert!(sh.responses_into(x, n, &mut short_resp).is_err());
+        let mut short_pred = vec![0usize; n - 1];
+        assert!(sh.classify_into(x, n, &mut short_pred).is_err());
+        let mut resp = vec![-7.25f32; n * classes + 9];
+        sh.responses_into(x, n, &mut resp).unwrap();
+        assert_eq!(&resp[..n * classes], &want_resp[..]);
+        assert!(resp[n * classes..].iter().all(|&v| v == -7.25));
+        let mut preds = vec![usize::MAX; n + 2];
+        sh.classify_into(x, n, &mut preds).unwrap();
+        assert_eq!(&preds[..n], &want_pred[..]);
+        assert!(preds[n..].iter().all(|&p| p == usize::MAX));
+
+        // same contract on the sharded zoo
+        let models = zoo_models();
+        let mut eng = ShardedRouterEngine::new(models, 0.05, 3);
+        let zm = eng.num_classes();
+        let want = eng.classify(x, n).unwrap();
+        let stats_before = eng.merged_stats();
+        let mut short = vec![0usize; n - 1];
+        assert!(eng.classify_into(x, n, &mut short).is_err());
+        let mut short_scores = vec![0f32; n * zm - 1];
+        assert!(eng.responses_into(x, n, &mut short_scores).is_err());
+        assert_eq!(
+            eng.merged_stats(),
+            stats_before,
+            "rejected dispatches must not advance counters"
+        );
+        let mut zp = vec![usize::MAX; n + 3];
+        eng.classify_into(x, n, &mut zp).unwrap();
+        assert_eq!(&zp[..n], &want[..]);
+        assert!(zp[n..].iter().all(|&p| p == usize::MAX));
+        // n = 0 touches nothing on either engine
+        sh.responses_into(&[], 0, &mut resp).unwrap();
+        eng.classify_into(&[], 0, &mut zp[..0]).unwrap();
+    }
+
+    #[test]
+    fn sharded_engines_caller_side_allocations_are_batch_independent() {
+        // The write-into data plane is allocation-free on the caller
+        // thread; the only remaining heap traffic is pool channel nodes
+        // — O(shards) per call at worst, amortized across channel
+        // blocks, and INDEPENDENT of the batch size. Per-thread counting
+        // keeps worker threads and parallel tests out of the measurement.
+        use crate::util::alloc_witness::Witness;
+        let shards = 4usize;
+        let calls = 8u64;
+        let ds = synth_uci(5, uci_spec("vowel").unwrap());
+        let f = ds.num_features;
+        let budget = calls * shards as u64 + 8;
+
+        let mut sh = ShardedEngine::new(model(), shards);
+        let classes = sh.num_classes();
+        for &n in &[16usize, 200] {
+            let x = &ds.test_x[..n.min(ds.n_test()) * f];
+            let n = n.min(ds.n_test());
+            let mut resp = vec![0f32; n * classes];
+            let mut preds = vec![0usize; n];
+            for _ in 0..2 {
+                sh.responses_into(x, n, &mut resp).unwrap();
+                sh.classify_into(x, n, &mut preds).unwrap();
+            }
+            let w = Witness::begin();
+            for _ in 0..calls {
+                sh.responses_into(x, n, &mut resp).unwrap();
+                sh.classify_into(x, n, &mut preds).unwrap();
+            }
+            assert!(
+                w.allocations() <= 2 * budget,
+                "ShardedEngine n={n}: {} caller-side allocations over {calls} \
+                 call pairs exceeds the channel-node budget {}",
+                w.allocations(),
+                2 * budget
+            );
+        }
+
+        let mut eng = ShardedRouterEngine::new(zoo_models(), 0.05, shards);
+        let n = 200.min(ds.n_test());
+        let x = &ds.test_x[..n * f];
+        let mut preds = vec![0usize; n];
+        for _ in 0..3 {
+            eng.classify_into(x, n, &mut preds).unwrap();
+        }
+        let w = Witness::begin();
+        for _ in 0..calls {
+            eng.classify_into(x, n, &mut preds).unwrap();
+        }
+        assert!(
+            w.allocations() <= budget,
+            "ShardedRouterEngine: {} caller-side allocations over {calls} calls \
+             exceeds the channel-node budget {budget}",
+            w.allocations()
+        );
+    }
+
+    #[test]
+    fn sharded_router_critical_path_is_summed_per_batch_maxes() {
+        let models = zoo_models();
+        let ds = synth_uci(5, uci_spec("vowel").unwrap());
+        let n = ds.n_test();
+        for shards in [1usize, 4] {
+            let mut eng = ShardedRouterEngine::new(models.clone(), 0.05, shards);
+            eng.classify(&ds.test_x, n).unwrap();
+            let merged = eng.merged_stats();
+            let wall: u64 = merged.tier_ns.iter().sum();
+            assert!(merged.critical_path_ns > 0, "shards={shards}: path populated");
+            assert!(
+                merged.critical_path_ns <= wall,
+                "shards={shards}: the critical path can never exceed summed wall time"
+            );
+            if shards == 1 {
+                assert_eq!(
+                    merged.critical_path_ns, wall,
+                    "one worker serializes everything: path == wall"
+                );
+            }
+            // Each batch contributes its own max-over-ranges: the path
+            // must keep growing per batch (NOT a max of cumulative
+            // worker paths, which can stall when the slowest range moves
+            // between workers), while staying under summed wall time.
+            let after_one = merged.critical_path_ns;
+            eng.classify(&ds.test_x, n).unwrap();
+            eng.classify(&ds.test_x, n).unwrap();
+            let merged2 = eng.merged_stats();
+            assert!(
+                merged2.critical_path_ns > after_one,
+                "shards={shards}: every batch must extend the path"
+            );
+            let wall2: u64 = merged2.tier_ns.iter().sum();
+            assert!(merged2.critical_path_ns <= wall2, "shards={shards}");
+            if shards == 1 {
+                assert_eq!(merged2.critical_path_ns, wall2);
+            }
+        }
     }
 
     #[test]

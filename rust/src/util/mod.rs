@@ -2,6 +2,11 @@
 //! deterministic PRNGs, bit-packed vectors, a minimal JSON codec, a CLI
 //! parser, a property-testing harness and basic statistics.
 
+// Compiled for the lib's own test harness and, for benches/binaries
+// that want the allocation gate, behind the `alloc-witness` feature —
+// never on the default production build.
+#[cfg(any(test, feature = "alloc-witness"))]
+pub mod alloc_witness;
 pub mod bitvec;
 pub mod cli;
 pub mod json;

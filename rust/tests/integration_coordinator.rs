@@ -108,12 +108,15 @@ fn worker_engine_failure_does_not_wedge_the_server() {
         fn num_classes(&self) -> usize {
             2
         }
-        fn responses(&mut self, _x: &[f32], n: usize) -> uleen::Result<Vec<f32>> {
+        fn responses_into(&mut self, _x: &[f32], n: usize, out: &mut [f32]) -> uleen::Result<()> {
             self.calls += 1;
             if self.calls % 3 == 0 {
                 anyhow::bail!("injected failure");
             }
-            Ok(vec![1.0, 0.0].repeat(n))
+            for row in out[..2 * n].chunks_mut(2) {
+                row.copy_from_slice(&[1.0, 0.0]);
+            }
+            Ok(())
         }
     }
     let cfg = ServerConfig {
@@ -282,16 +285,15 @@ fn fast_path_fraction_counts_first_tier_resolutions_only() {
         fn num_classes(&self) -> usize {
             2
         }
-        fn responses(&mut self, x: &[f32], n: usize) -> uleen::Result<Vec<f32>> {
-            let mut out = Vec::with_capacity(2 * n);
-            for i in 0..n {
+        fn responses_into(&mut self, x: &[f32], n: usize, out: &mut [f32]) -> uleen::Result<()> {
+            for (i, row) in out[..2 * n].chunks_mut(2).enumerate() {
                 if x[i] > 0.5 {
-                    out.extend_from_slice(&[4.0, 0.0]); // confident
+                    row.copy_from_slice(&[4.0, 0.0]); // confident
                 } else {
-                    out.extend_from_slice(&[1.0, 1.0]); // dead tie
+                    row.copy_from_slice(&[1.0, 1.0]); // dead tie
                 }
             }
-            Ok(out)
+            Ok(())
         }
     }
     struct Tie;
@@ -305,8 +307,11 @@ fn fast_path_fraction_counts_first_tier_resolutions_only() {
         fn num_classes(&self) -> usize {
             2
         }
-        fn responses(&mut self, _x: &[f32], n: usize) -> uleen::Result<Vec<f32>> {
-            Ok(vec![1.0, 1.0].repeat(n))
+        fn responses_into(&mut self, _x: &[f32], n: usize, out: &mut [f32]) -> uleen::Result<()> {
+            for row in out[..2 * n].chunks_mut(2) {
+                row.copy_from_slice(&[1.0, 1.0]);
+            }
+            Ok(())
         }
     }
     struct Last;
@@ -320,8 +325,11 @@ fn fast_path_fraction_counts_first_tier_resolutions_only() {
         fn num_classes(&self) -> usize {
             2
         }
-        fn responses(&mut self, _x: &[f32], n: usize) -> uleen::Result<Vec<f32>> {
-            Ok(vec![2.0, 0.0].repeat(n))
+        fn responses_into(&mut self, _x: &[f32], n: usize, out: &mut [f32]) -> uleen::Result<()> {
+            for row in out[..2 * n].chunks_mut(2) {
+                row.copy_from_slice(&[2.0, 0.0]);
+            }
+            Ok(())
         }
     }
     let build = || {
@@ -541,8 +549,11 @@ fn router_escalation_stats_account_for_forced_low_margin_traffic() {
         fn num_classes(&self) -> usize {
             4
         }
-        fn responses(&mut self, _x: &[f32], n: usize) -> uleen::Result<Vec<f32>> {
-            Ok(vec![1.0, 1.0, 1.0, 1.0].repeat(n))
+        fn responses_into(&mut self, _x: &[f32], n: usize, out: &mut [f32]) -> uleen::Result<()> {
+            for row in out[..4 * n].chunks_mut(4) {
+                row.copy_from_slice(&[1.0, 1.0, 1.0, 1.0]);
+            }
+            Ok(())
         }
     }
     let engines: Vec<Box<dyn InferenceEngine>> =
@@ -574,8 +585,11 @@ fn router_escalation_stats_account_for_forced_low_margin_traffic() {
         fn num_classes(&self) -> usize {
             4
         }
-        fn responses(&mut self, _x: &[f32], n: usize) -> uleen::Result<Vec<f32>> {
-            Ok(vec![4.0, 0.0, 0.0, 0.0].repeat(n))
+        fn responses_into(&mut self, _x: &[f32], n: usize, out: &mut [f32]) -> uleen::Result<()> {
+            for row in out[..4 * n].chunks_mut(4) {
+                row.copy_from_slice(&[4.0, 0.0, 0.0, 0.0]);
+            }
+            Ok(())
         }
     }
     let engines: Vec<Box<dyn InferenceEngine>> =
@@ -661,13 +675,12 @@ fn sharded_zoo_panicking_tier_counts_batches_failed_without_wedging_pool() {
         fn num_classes(&self) -> usize {
             2
         }
-        fn responses(&mut self, x: &[f32], n: usize) -> uleen::Result<Vec<f32>> {
-            let mut out = Vec::with_capacity(2 * n);
-            for i in 0..n {
+        fn responses_into(&mut self, x: &[f32], n: usize, out: &mut [f32]) -> uleen::Result<()> {
+            for (i, row) in out[..2 * n].chunks_mut(2).enumerate() {
                 assert!(x[i * 2] < 9000.0, "injected tier panic");
-                out.extend_from_slice(&[4.0, 0.0]); // confident: no escalation
+                row.copy_from_slice(&[4.0, 0.0]); // confident: no escalation
             }
-            Ok(out)
+            Ok(())
         }
     }
     let make_routers = || -> Vec<ModelRouter> {

@@ -551,6 +551,141 @@ fn prop_sharded_cascade_matches_sequential() {
     );
 }
 
+/// The write-into plane refactor's conformance property: for EVERY
+/// engine (`NativeEngine` scalar+fused, `ShardedEngine` across shard
+/// counts 1/2/7, the cascade `RouterEngine`, and the cascade × shard
+/// `ShardedRouterEngine`, margins 0/0.02/1e9, batches 1/63/64/65/257
+/// straddling tile and shard boundaries), the `_into` primitives must be
+/// bit-exact with their `Vec`-returning wrappers — INCLUDING when the
+/// caller hands a dirty, oversized, reused plane: the `n`-row prefix is
+/// fully overwritten, nothing past it is touched, repeat calls into the
+/// same dirty buffer stay stable, a too-short plane is an `Err` (never a
+/// panic, even with a worker pool in flight), n = 0 writes nothing, and
+/// the engine keeps serving after every rejected call.
+#[test]
+fn prop_into_matches_vec() {
+    use uleen::coordinator::router::{ModelRouter, RouterEngine};
+    use uleen::runtime::{ShardedRouterEngine, SharedModel, Tier};
+    let mut case_no = 0usize;
+    check(
+        "into-matches-vec",
+        &Config { cases: 6, ..Config::default() },
+        move |rng, _size| {
+            let i = case_no;
+            case_no += 1;
+            // (batch, shards) pairs handpicked so the DEFAULT case
+            // budget already hits the shard-boundary-straddling
+            // geometries — tile-boundary batches split 7 uneven ways are
+            // exactly where an off-by-one in the disjoint-range pointer
+            // offsets would hide. Nightly (PROPTEST_CASES=256) cycles
+            // the list many times over fresh models.
+            const COMBOS: [(usize, usize); 6] =
+                [(1, 7), (63, 7), (64, 2), (65, 7), (257, 7), (257, 1)];
+            let (n, shards) = COMBOS[i % COMBOS.len()];
+            let margin = [0.0f32, 0.02, 1e9][i % 3];
+            let seed = rng.next_u64();
+            (n, shards, margin, seed)
+        },
+        |(n, shards, margin, seed)| {
+            let ds = synth_uci(13, uci_spec("vowel").unwrap());
+            let f = ds.num_features;
+            let mk = |ipf: usize, epf: usize, bits: usize| {
+                train_oneshot(
+                    &ds,
+                    &OneShotConfig {
+                        inputs_per_filter: ipf,
+                        entries_per_filter: epf,
+                        therm_bits: bits,
+                        seed: *seed,
+                        ..Default::default()
+                    },
+                )
+                .0
+            };
+            let tiers =
+                vec![SharedModel::compile(mk(6, 64, 2)), SharedModel::compile(mk(10, 128, 4))];
+            let n = *n;
+            // cycle test rows so batch 257 exists regardless of split size
+            let mut x: Vec<f32> = Vec::with_capacity(n * f);
+            for i in 0..n {
+                x.extend_from_slice(ds.test_row(i % ds.n_test()));
+            }
+            let mut engines: Vec<Box<dyn InferenceEngine>> = vec![
+                Box::new(NativeEngine::from_shared(tiers[0].clone())),
+                Box::new(ShardedEngine::from_shared(tiers[0].clone(), *shards)),
+                {
+                    let mut r = ModelRouter::from_shared(&tiers);
+                    r.margin_threshold = *margin;
+                    Box::new(RouterEngine::new(r))
+                },
+                Box::new(ShardedRouterEngine::from_shared(tiers.clone(), *margin, *shards)),
+            ];
+            const PAD: usize = 7;
+            const SF: f32 = -31337.5;
+            for eng in engines.iter_mut() {
+                let label = eng.label();
+                let m = eng.num_classes();
+                let want_resp = eng.responses(&x, n).map_err(|e| e.to_string())?;
+                let want_pred = eng.classify(&x, n).map_err(|e| e.to_string())?;
+                // repeat twice into the SAME dirty plane: scratch reuse
+                // must not leak state between calls
+                let mut resp = vec![SF; n * m + PAD];
+                for round in 0..2 {
+                    eng.responses_into(&x, n, &mut resp).map_err(|e| e.to_string())?;
+                    if resp[..n * m] != want_resp[..] {
+                        return Err(format!(
+                            "{label}: responses_into != responses (round {round}, n={n})"
+                        ));
+                    }
+                    if !resp[n * m..].iter().all(|&v| v == SF) {
+                        return Err(format!("{label}: responses_into wrote past n*m"));
+                    }
+                }
+                let mut preds = vec![usize::MAX; n + PAD];
+                for round in 0..2 {
+                    eng.classify_into(&x, n, &mut preds).map_err(|e| e.to_string())?;
+                    if preds[..n] != want_pred[..] {
+                        return Err(format!(
+                            "{label}: classify_into != classify (round {round}, n={n})"
+                        ));
+                    }
+                    if !preds[n..].iter().all(|&p| p == usize::MAX) {
+                        return Err(format!("{label}: classify_into wrote past n"));
+                    }
+                }
+                // the tier-routed form agrees with its Vec twin too
+                let want_routed = eng
+                    .classify_routed(&x, n, Some(Tier::Accurate))
+                    .map_err(|e| e.to_string())?;
+                eng.classify_routed_into(&x, n, Some(Tier::Accurate), &mut preds)
+                    .map_err(|e| e.to_string())?;
+                if preds[..n] != want_routed[..] {
+                    return Err(format!("{label}: classify_routed_into != classify_routed"));
+                }
+                // short planes: Err, not panic — even mid-pool
+                if eng.responses_into(&x, n, &mut resp[..n * m - 1]).is_ok() {
+                    return Err(format!("{label}: short response plane must be Err"));
+                }
+                if eng.classify_into(&x, n, &mut preds[..n - 1]).is_ok() {
+                    return Err(format!("{label}: short prediction plane must be Err"));
+                }
+                // n = 0 writes nothing
+                let mut zero = vec![SF; PAD];
+                eng.responses_into(&[], 0, &mut zero).map_err(|e| e.to_string())?;
+                if !zero.iter().all(|&v| v == SF) {
+                    return Err(format!("{label}: n=0 must write nothing"));
+                }
+                // and the engine still serves after every rejection
+                let after = eng.classify(&x, n).map_err(|e| e.to_string())?;
+                if after != want_pred {
+                    return Err(format!("{label}: engine degraded after rejected calls"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_response_bounded_by_kept_filters() {
     // 0 - bias ≤ response ≤ kept_filters + bias for every input
