@@ -20,13 +20,17 @@
 //! reports accuracy, throughput and latency percentiles. Results are
 //! recorded in EXPERIMENTS.md §E2E.
 
-use std::sync::mpsc;
-use std::time::Duration;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 use uleen::coordinator::batcher::BatcherConfig;
+use uleen::coordinator::http::{client, HttpConfig, HttpFrontend};
+use uleen::coordinator::metrics::LATENCY_RESERVOIR_CAP;
 use uleen::coordinator::router::{ModelRouter, Tier};
 use uleen::coordinator::server::{Server, ServerConfig};
 use uleen::data::synth_mnist;
 use uleen::runtime::{InferenceEngine, NativeEngine};
+use uleen::util::json::Json;
 
 fn config(workers: usize) -> ServerConfig {
     ServerConfig {
@@ -219,7 +223,241 @@ fn serve_zoo(
     Ok(())
 }
 
+/// A native engine slowed to a fixed per-batch service time — makes
+/// queue overflow under concurrent load DETERMINISTIC for the overload
+/// leg (predictions stay identical to the plain native engine).
+struct SlowEngine {
+    inner: NativeEngine,
+    delay: Duration,
+}
+
+impl InferenceEngine for SlowEngine {
+    fn label(&self) -> String {
+        format!("slow({})", self.inner.label())
+    }
+    fn num_features(&self) -> usize {
+        self.inner.num_features()
+    }
+    fn num_classes(&self) -> usize {
+        self.inner.num_classes()
+    }
+    fn responses_into(&mut self, x: &[f32], n: usize, out: &mut [f32]) -> uleen::Result<()> {
+        std::thread::sleep(self.delay);
+        self.inner.responses_into(x, n, out)
+    }
+}
+
+/// HTTP loopback load test: `clients` threads drive real sockets through
+/// [`HttpFrontend`] — phase 1 checks every served prediction against
+/// local ground truth, phase 2 deliberately overloads a tiny queue and
+/// counts well-formed 429s. Writes the `HTTP_loadtest.json` artifact.
+fn serve_http_loadtest(
+    model: &uleen::model::ensemble::UleenModel,
+    ds: &uleen::data::Dataset,
+    requests_per_client: usize,
+    overload_limit: usize,
+) -> anyhow::Result<()> {
+    let clients = 8usize;
+    let rows_per_req = 8usize;
+    let n_test = ds.n_test();
+    let want = Arc::new(NativeEngine::new(model.clone()).classify(&ds.test_x, n_test)?);
+    let ds = Arc::new(ds.clone());
+
+    // `move` so the only capture (`rows_per_req`, Copy) is taken by
+    // value — the closure itself is then Copy + 'static and each client
+    // thread gets its own copy.
+    let body_for = move |ds: &uleen::data::Dataset, start: usize| {
+        let mut j = Json::obj();
+        j.set(
+            "rows",
+            Json::Arr(
+                (start..start + rows_per_req)
+                    .map(|i| {
+                        Json::Arr(ds.test_row(i).iter().map(|&v| Json::Num(v as f64)).collect())
+                    })
+                    .collect(),
+            ),
+        );
+        j.to_string()
+    };
+
+    // ---- phase 1: correctness under concurrency ------------------------
+    let mc = model.clone();
+    let server = Arc::new(Server::start(config(2), move |_| {
+        Ok(Box::new(NativeEngine::new(mc.clone())) as Box<dyn InferenceEngine>)
+    })?);
+    let frontend = HttpFrontend::start(
+        "127.0.0.1:0",
+        server.clone(),
+        HttpConfig { api_key: Some("edge-key".into()), handlers: 8, ..Default::default() },
+    )?;
+    let addr = frontend.local_addr().to_string();
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let (addr, ds, want) = (addr.clone(), ds.clone(), want.clone());
+        handles.push(std::thread::spawn(move || -> anyhow::Result<usize> {
+            let mut mismatches = 0usize;
+            for r in 0..requests_per_client {
+                let start = (c * 131 + r * rows_per_req) % (ds.n_test() - rows_per_req);
+                let body = body_for(&ds, start);
+                let resp =
+                    client::request(&addr, "POST", "/v1/classify", Some("edge-key"), Some(&body))?;
+                anyhow::ensure!(resp.status == 200, "client {c}: HTTP {}: {}", resp.status, resp.body);
+                let got: Vec<usize> = Json::parse(&resp.body)
+                    .map_err(anyhow::Error::msg)?
+                    .get("predictions")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow::anyhow!("no predictions in {}", resp.body))?
+                    .iter()
+                    .map(|v| v.as_f64().unwrap_or(-1.0) as usize)
+                    .collect();
+                mismatches += got
+                    .iter()
+                    .zip(&want[start..start + rows_per_req])
+                    .filter(|(a, b)| a != b)
+                    .count();
+            }
+            Ok(mismatches)
+        }));
+    }
+    let mut mismatches = 0usize;
+    for h in handles {
+        mismatches += h.join().expect("client thread panicked")?;
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let served_rows = clients * requests_per_client * rows_per_req;
+    let http_rps = clients as f64 * requests_per_client as f64 / elapsed;
+    let rep = server.metrics.report(64);
+    let (kept, seen) = server.metrics.latency_samples();
+    anyhow::ensure!(mismatches == 0, "{mismatches}/{served_rows} HTTP predictions disagreed");
+    anyhow::ensure!(
+        kept <= LATENCY_RESERVOIR_CAP && seen >= served_rows as u64,
+        "latency reservoir out of bounds: kept {kept}, seen {seen}"
+    );
+    anyhow::ensure!(
+        rep.latency_us_p50 > 0.0 && rep.latency_us_p99 >= rep.latency_us_p50,
+        "percentiles must populate from the reservoir"
+    );
+    frontend.shutdown();
+    Arc::try_unwrap(server).ok().expect("server handle leaked").shutdown();
+    println!(
+        "[http ×{clients} clients] {} req ({served_rows} rows) | agreement exact ✓ | \
+         {http_rps:.0} req/s | p50/p99 latency {:.0}/{:.0} µs | reservoir {kept}/{} of {seen}",
+        clients * requests_per_client,
+        rep.latency_us_p50,
+        rep.latency_us_p99,
+        LATENCY_RESERVOIR_CAP,
+    );
+
+    // ---- phase 2: deliberate overload must 429, never drop -------------
+    let mc = model.clone();
+    let slow = Server::start(
+        ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(2),
+                capacity: 16,
+            },
+            workers: 1,
+        },
+        move |_| {
+            Ok(Box::new(SlowEngine {
+                inner: NativeEngine::new(mc.clone()),
+                delay: Duration::from_millis(2),
+            }) as Box<dyn InferenceEngine>)
+        },
+    )?;
+    let slow = Arc::new(slow);
+    let frontend = HttpFrontend::start(
+        "127.0.0.1:0",
+        slow.clone(),
+        HttpConfig { handlers: 16, ..Default::default() },
+    )?;
+    let addr = frontend.local_addr().to_string();
+    let count_429 = Arc::new(AtomicUsize::new(0));
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let (addr, ds, count_429) = (addr.clone(), ds.clone(), count_429.clone());
+        handles.push(std::thread::spawn(move || -> anyhow::Result<usize> {
+            let mut served = 0usize;
+            for r in 0..overload_limit {
+                // stop once the fleet has proven the backpressure path
+                if count_429.load(Ordering::Relaxed) >= clients {
+                    break;
+                }
+                let start = (c * 17 + r) % (ds.n_test() - rows_per_req);
+                let body = body_for(&ds, start);
+                let resp = client::request(&addr, "POST", "/v1/classify", None, Some(&body))?;
+                match resp.status {
+                    200 => served += 1,
+                    429 => {
+                        anyhow::ensure!(
+                            resp.body.contains("queue_full"),
+                            "unexpected 429 body: {}",
+                            resp.body
+                        );
+                        count_429.fetch_add(1, Ordering::Relaxed);
+                    }
+                    s => anyhow::bail!("overload client {c}: HTTP {s}: {}", resp.body),
+                }
+            }
+            Ok(served)
+        }));
+    }
+    let mut overload_served = 0usize;
+    for h in handles {
+        overload_served += h.join().expect("overload client panicked")?;
+    }
+    let rejected = count_429.load(Ordering::Relaxed);
+    frontend.shutdown();
+    Arc::try_unwrap(slow).ok().expect("server handle leaked").shutdown();
+    anyhow::ensure!(
+        rejected >= 1,
+        "deliberate overload produced no 429s ({overload_served} served) — backpressure untested"
+    );
+    println!(
+        "[http overload] {overload_served} served, {rejected} × 429 (queue_full) — \
+         every response well-formed, no connection dropped ✓"
+    );
+
+    let mut artifact = Json::obj();
+    artifact
+        .set("clients", Json::Num(clients as f64))
+        .set("requests_per_client", Json::Num(requests_per_client as f64))
+        .set("rows_per_request", Json::Num(rows_per_req as f64))
+        .set("agreement_exact", Json::Bool(mismatches == 0))
+        .set("http_rps", Json::Num(http_rps))
+        .set("latency_us_p50", Json::Num(rep.latency_us_p50))
+        .set("latency_us_p99", Json::Num(rep.latency_us_p99))
+        .set("reservoir_kept", Json::Num(kept as f64))
+        .set("reservoir_seen", Json::Num(seen as f64))
+        .set("reservoir_cap", Json::Num(LATENCY_RESERVOIR_CAP as f64))
+        .set("overload_served", Json::Num(overload_served as f64))
+        .set("overload_429", Json::Num(rejected as f64));
+    std::fs::write("HTTP_loadtest.json", artifact.to_string())?;
+    println!("wrote HTTP_loadtest.json");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
+    // `--http-smoke`: the CI gate — run ONLY the HTTP loopback load test,
+    // scaled down (8 real-socket clients either way), on a fresh stand-in
+    // model. Exercises the full network edge in release mode in seconds.
+    if std::env::args().any(|a| a == "--http-smoke") {
+        let ds = synth_mnist(2024, 3000, 800);
+        let (model, rep) = uleen::train::oneshot::train_oneshot(
+            &ds,
+            &uleen::train::oneshot::OneShotConfig {
+                inputs_per_filter: 16,
+                entries_per_filter: 256,
+                therm_bits: 2,
+                ..Default::default()
+            },
+        );
+        println!("model: {} ({:.1} KiB, val acc {:.4})", model.name, model.size_kib(), rep.val_accuracy);
+        return serve_http_loadtest(&model, &ds, 6, 200);
+    }
     let requests = 20_000;
     // Same seed + split as training: test rows are indices 8000..10000 of
     // the stream, DISJOINT from the model's training data.
@@ -289,6 +527,11 @@ fn main() -> anyhow::Result<()> {
     // predictions and per-tier counters stay bit-exact with the
     // single-router ground truth above.
     serve_zoo(&model, &ds, 6_000, 4)?;
+
+    // The network edge: 8 loopback socket clients against the same model
+    // through the HTTP front-end, then a deliberate overload of a tiny
+    // queue — backpressure must surface as well-formed 429s.
+    serve_http_loadtest(&model, &ds, 40, 400)?;
 
     // PJRT engine serving (the AOT artifact on the hot path).
     #[cfg(feature = "pjrt")]

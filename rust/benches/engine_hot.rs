@@ -31,7 +31,10 @@ use uleen::bench::harness::{bench_fn, BenchResult};
 #[global_allocator]
 static ALLOC_WITNESS: uleen::util::alloc_witness::CountingAlloc =
     uleen::util::alloc_witness::CountingAlloc;
+use uleen::coordinator::batcher::BatcherConfig;
+use uleen::coordinator::http::{client, HttpConfig, HttpFrontend};
 use uleen::coordinator::router::{ModelRouter, Tier};
+use uleen::coordinator::server::{Server, ServerConfig};
 use uleen::data::synth_mnist;
 use uleen::model::ensemble::EnsembleScratch;
 use uleen::model::flat::{FlatBatchScratch, FlatModel};
@@ -386,6 +389,92 @@ fn main() -> anyhow::Result<()> {
     println!();
     record(&mut report, r);
 
+    // == http loopback sweep: the serving edge over real sockets ==
+    // Client threads drive POST /v1/classify through HttpFrontend against
+    // the same model; every served prediction is checked against the
+    // engine's local output, so a wire-format or routing regression dies
+    // here in the CI smoke bench.
+    println!("\n== http loopback sweep: 4 socket clients × POST /v1/classify ==");
+    let http_clients = 4usize;
+    let http_reqs = if smoke { 5usize } else { 40 };
+    let http_rows = 16usize;
+    let http_want = std::sync::Arc::new(native.classify(&ds.test_x, ds.n_test())?);
+    let dsa = std::sync::Arc::new(ds.clone());
+    let mc = model.clone();
+    let http_server = std::sync::Arc::new(Server::start(
+        ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 64,
+                max_wait: std::time::Duration::from_micros(200),
+                capacity: 8192,
+            },
+            workers: 2,
+        },
+        move |_| Ok(Box::new(NativeEngine::new(mc.clone())) as Box<dyn InferenceEngine>),
+    )?);
+    let frontend = HttpFrontend::start("127.0.0.1:0", http_server.clone(), HttpConfig::default())?;
+    let http_addr = frontend.local_addr().to_string();
+    let http_t0 = std::time::Instant::now();
+    let mut http_handles = Vec::new();
+    for c in 0..http_clients {
+        let (addr, dsa, want) = (http_addr.clone(), dsa.clone(), http_want.clone());
+        http_handles.push(std::thread::spawn(move || -> anyhow::Result<usize> {
+            let mut mismatches = 0usize;
+            for r in 0..http_reqs {
+                let start = (c * 53 + r * http_rows) % (dsa.n_test() - http_rows);
+                let mut j = Json::obj();
+                j.set(
+                    "rows",
+                    Json::Arr(
+                        (start..start + http_rows)
+                            .map(|i| {
+                                Json::Arr(
+                                    dsa.test_row(i).iter().map(|&v| Json::Num(v as f64)).collect(),
+                                )
+                            })
+                            .collect(),
+                    ),
+                );
+                let resp = client::request(&addr, "POST", "/v1/classify", None, Some(&j.to_string()))?;
+                anyhow::ensure!(resp.status == 200, "HTTP {}: {}", resp.status, resp.body);
+                let got: Vec<usize> = Json::parse(&resp.body)
+                    .map_err(anyhow::Error::msg)?
+                    .get("predictions")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow::anyhow!("no predictions in {}", resp.body))?
+                    .iter()
+                    .map(|v| v.as_f64().unwrap_or(-1.0) as usize)
+                    .collect();
+                mismatches += got
+                    .iter()
+                    .zip(&want[start..start + http_rows])
+                    .filter(|(a, b)| a != b)
+                    .count();
+            }
+            Ok(mismatches)
+        }));
+    }
+    let mut http_mismatches = 0usize;
+    for h in http_handles {
+        http_mismatches += h.join().expect("http client thread panicked")?;
+    }
+    let http_elapsed = http_t0.elapsed().as_secs_f64();
+    let http_rps = (http_clients * http_reqs) as f64 / http_elapsed;
+    frontend.shutdown();
+    std::sync::Arc::try_unwrap(http_server)
+        .ok()
+        .expect("server handle leaked")
+        .shutdown();
+    assert_eq!(
+        http_mismatches, 0,
+        "HTTP-served predictions must match the local engine"
+    );
+    println!(
+        "  {} requests × {http_rows} rows over {http_clients} clients: {http_rps:.0} req/s, \
+         agreement exact ✓",
+        http_clients * http_reqs
+    );
+
     // PJRT engine comparison (AOT graph through XLA)
     #[cfg(feature = "pjrt")]
     {
@@ -450,6 +539,16 @@ fn main() -> anyhow::Result<()> {
             .set("merged_counters_exact", Json::Bool(true))
             .set("zero_model_clones", Json::Bool(true));
         doc.set("cascade_shard_sweep_b256", shard_doc);
+        let mut http_doc = Json::obj();
+        http_doc
+            .set("clients", Json::Num(http_clients as f64))
+            .set("requests_per_client", Json::Num(http_reqs as f64))
+            .set("rows_per_request", Json::Num(http_rows as f64))
+            .set("http_rps", Json::Num(http_rps))
+            // asserted above — recorded so the trajectory shows the wire
+            // agreement gate ran, not just that the bench finished
+            .set("agreement_exact", Json::Bool(http_mismatches == 0));
+        doc.set("http_loadtest", http_doc);
         let path = "BENCH_engine_hot.json";
         std::fs::write(path, doc.to_string())?;
         println!("(wrote {path})");

@@ -12,6 +12,28 @@
 //! of the queue, so a worker can dispatch the whole micro-batch as one
 //! tier-pinned (`Some(tier)`) or cascade (`None`) engine call. FIFO order
 //! is preserved; mixed traffic simply splits at tier boundaries.
+//!
+//! ## Shutdown-race audit (PR 6)
+//!
+//! The close/submit/dwell interleavings were re-audited when the HTTP
+//! front-end moved these paths onto untrusted network input:
+//!
+//! - `close` → `notify_all` wakes EVERY parked consumer; each re-checks
+//!   `closed` under the lock, drains any leftover prefix, and only then
+//!   returns `None` — queued work is never stranded by shutdown.
+//! - A consumer's dwell wait can wake empty (competing consumer stole the
+//!   prefix); it loops back to park rather than returning an empty batch.
+//! - A tier boundary mid-queue re-notifies (`notify_one`) after a partial
+//!   take, so a second parked consumer picks up the remainder without
+//!   waiting for a fresh submit.
+//! - `submit` after `close` fails with [`SubmitError::Closed`] and hands
+//!   the request back to the caller (the HTTP layer maps it to 503).
+//!
+//! The one real defect found was OUTSIDE this module: the server marked
+//! the metrics wall-clock before `submit` could reject, so a load test
+//! that only ever got 429s still reported nonzero serving wall time. The
+//! fix (mark on accept, in `server.rs`) is covered by
+//! `wall_clock_never_starts_on_rejects_and_never_goes_negative`.
 
 use crate::runtime::Tier;
 use std::collections::VecDeque;

@@ -19,8 +19,16 @@
 //!   `ShardedRouterEngine` that splits every micro-batch into contiguous
 //!   row ranges, runs the cascade on each range on a persistent pool
 //!   worker, and merges per-tier counters deterministically.
+//!
+//! Either mode swaps the synthetic load for a network edge with
+//! `--listen ADDR` ([`HttpFrontend`]): the server answers `GET /health`,
+//! `GET /metrics` and `POST /v1/classify` until `--duration-secs`
+//! elapses (0 = until killed). `--api-key K` gates the authenticated
+//! routes, `--rate-rps R` arms the per-client token bucket, and
+//! `--max-body-kib N` caps request bodies.
 
 use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::http::{HttpConfig, HttpFrontend, RateLimit};
 use crate::coordinator::metrics::MetricsReport;
 use crate::coordinator::router::Tier;
 use crate::coordinator::server::{Server, ServerConfig};
@@ -82,6 +90,10 @@ pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         _ => Server::start(cfg, move |_| Ok(Box::new(NativeEngine::new(model.clone()))))?,
     };
 
+    if args.get("listen").is_some() {
+        return serve_http(args, server, batch);
+    }
+
     // Open-loop load from the test split of SynthMNIST-like data (or the
     // model's own feature width if it is not an image model).
     let ds = if num_features == 784 {
@@ -105,6 +117,60 @@ pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     server.shutdown();
     println!("served {} requests on {} workers (batch {})", submitted, workers, batch);
     print_report(&report, correct, delivered, submitted);
+    Ok(())
+}
+
+/// `--listen ADDR` mode, shared by both serve paths: expose the running
+/// server over HTTP instead of driving synthetic load. Runs for
+/// `--duration-secs` (0, the default, = until the process is killed),
+/// then drains and prints the shutdown report.
+fn serve_http(args: &Args, server: Server, batch: usize) -> anyhow::Result<()> {
+    let addr = args.get("listen").expect("caller checked --listen").to_string();
+    let api_key = args.get("api-key").map(str::to_string);
+    let rate_rps = args.get_f64("rate-rps", 0.0).map_err(anyhow::Error::msg)?;
+    let max_body_kib = args.get_usize("max-body-kib", 1024).map_err(anyhow::Error::msg)?;
+    let duration = args.get_u64("duration-secs", 0).map_err(anyhow::Error::msg)?;
+    let authed = api_key.is_some();
+    let cfg = HttpConfig {
+        api_key,
+        max_body_bytes: max_body_kib * 1024,
+        // burst = 2 s of the sustained rate, so short spikes pass
+        rate: (rate_rps > 0.0)
+            .then(|| RateLimit { burst: (2.0 * rate_rps).max(1.0), per_sec: rate_rps }),
+        ..Default::default()
+    };
+    let server = std::sync::Arc::new(server);
+    let frontend = HttpFrontend::start(&addr, server.clone(), cfg)?;
+    println!(
+        "listening on http://{} ({}, {}) — GET /health | GET /metrics | POST /v1/classify",
+        frontend.local_addr(),
+        if authed { "api-key auth" } else { "unauthenticated" },
+        if rate_rps > 0.0 {
+            format!("{rate_rps} req/s per client")
+        } else {
+            "no rate limit".to_string()
+        },
+    );
+    if duration == 0 {
+        println!("serving until killed (pass --duration-secs N for a timed run)");
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs(duration));
+    frontend.shutdown();
+    let server = std::sync::Arc::try_unwrap(server)
+        .ok()
+        .expect("shut-down frontend must drop its server handle");
+    server.close();
+    let report = server.metrics.report(batch);
+    server.shutdown();
+    println!(
+        "served over HTTP for {duration} s | throughput: {:.0} inf/s | \
+         latency p50/p99: {:.1}/{:.1} µs | rejected(full): {}",
+        report.throughput_rps, report.latency_us_p50, report.latency_us_p99, report.rejected_full
+    );
+    println!("json: {}", report.to_json().to_string());
     Ok(())
 }
 
@@ -304,6 +370,11 @@ fn cmd_serve_zoo(args: &Args, spec: &str) -> anyhow::Result<()> {
     } else {
         Server::start_zoo(cfg, models, margin)?
     };
+
+    if args.get("listen").is_some() {
+        return serve_http(args, server, batch);
+    }
+
     let (correct, delivered, submitted) = drive_load(&server, &ds, requests, true)?;
     let report = server.metrics.report(batch);
     server.shutdown();

@@ -1,0 +1,820 @@
+//! Std-only HTTP/1.1 serving front-end — the network edge of the
+//! coordinator (ROADMAP direction 2).
+//!
+//! The paper's always-resident datapath (and the FINN-style streaming
+//! architecture it builds on) assumes clients stream requests *into* the
+//! accelerator; until this module, only in-process callers could reach
+//! [`Server::submit_tiered`]. `HttpFrontend` opens that edge with the
+//! same machinery the rest of the crate uses — no tokio/axum (offline,
+//! no registry), just `TcpListener` plus the persistent worker-pool
+//! pattern proven in `runtime/sharded.rs`: one acceptor thread feeds a
+//! bounded connection channel drained by a fixed pool of handler
+//! threads, so a connection flood backpressures at `accept` time
+//! instead of spawning unbounded threads.
+//!
+//! Routes:
+//!
+//! * `GET /health` — liveness + queue depth (unauthenticated, for
+//!   load-balancer probes).
+//! * `GET /metrics` — the live [`MetricsReport`] serialized by
+//!   [`MetricsReport::to_json`](crate::coordinator::metrics::MetricsReport::to_json).
+//! * `POST /v1/classify` — `{"rows": [[f32; width], ...], "tier":
+//!   "fast|balanced|accurate"?}` → `{"predictions": [class, ...]}` in
+//!   row order.
+//!
+//! Every failure is a **well-formed HTTP error**, never a dropped
+//! connection — the whole point of fronting the bounded batcher:
+//!
+//! | status | meaning |
+//! |--------|---------|
+//! | 400    | bad JSON / wrong-width row (the body names the row index) |
+//! | 401    | missing/wrong API key (`x-api-key` or `Authorization: Bearer`) |
+//! | 404/405| unknown route / method |
+//! | 408    | read deadline exceeded (slow-loris guard) |
+//! | 413    | body over `max_body_bytes` (rejected before it is read) |
+//! | 429    | token-bucket admission refused, or [`SubmitError::Full`] |
+//! | 503    | accept backlog full, or [`SubmitError::Closed`] (shutdown) |
+//!
+//! Request reads are double-bounded: every `read` carries
+//! `read_timeout`, and the whole request must arrive within
+//! `request_deadline` — a client trickling one byte per poll cannot pin
+//! a handler.
+
+use crate::coordinator::batcher::SubmitError;
+use crate::coordinator::router::Tier;
+use crate::coordinator::server::Server;
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{IpAddr, Ipv4Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Per-client token-bucket admission limit: a client IP may hold up to
+/// `burst` tokens and regains `per_sec` tokens per second; each
+/// `/v1/classify` request spends one. `per_sec: 0.0` never refills —
+/// useful for tests and hard caps.
+#[derive(Clone, Copy, Debug)]
+pub struct RateLimit {
+    pub burst: f64,
+    pub per_sec: f64,
+}
+
+/// Front-end tuning. The defaults suit a loopback load test; production
+/// callers set `api_key` and a `rate`.
+#[derive(Clone, Debug)]
+pub struct HttpConfig {
+    /// Required on `/metrics` and `/v1/classify` when set (`/health`
+    /// stays open for probes). Clients send `x-api-key: <key>` or
+    /// `Authorization: Bearer <key>`.
+    pub api_key: Option<String>,
+    /// Persistent connection-handler threads.
+    pub handlers: usize,
+    /// Accepted-but-unhandled connection backlog; overflow is answered
+    /// with an immediate 503 instead of an unbounded queue.
+    pub backlog: usize,
+    /// Hard cap on request bodies — larger `Content-Length`s get 413
+    /// before a single body byte is read.
+    pub max_body_bytes: usize,
+    /// Hard cap on rows per classify request.
+    pub max_rows: usize,
+    /// Per-`read` socket timeout.
+    pub read_timeout: Duration,
+    /// Whole-request arrival deadline (slow-loris guard).
+    pub request_deadline: Duration,
+    /// Per-client-IP admission limit; `None` admits everything.
+    pub rate: Option<RateLimit>,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        Self {
+            api_key: None,
+            handlers: 4,
+            backlog: 64,
+            max_body_bytes: 1 << 20,
+            max_rows: 256,
+            read_timeout: Duration::from_secs(2),
+            request_deadline: Duration::from_secs(5),
+            rate: None,
+        }
+    }
+}
+
+struct Bucket {
+    tokens: f64,
+    last: Instant,
+}
+
+/// Token buckets keyed by client IP. The map is bounded: once it holds
+/// more than `MAX_TRACKED` clients, fully-replenished buckets (which
+/// carry no information beyond the default) are dropped.
+struct Limiter {
+    cfg: RateLimit,
+    map: Mutex<HashMap<IpAddr, Bucket>>,
+}
+
+const MAX_TRACKED: usize = 8192;
+
+impl Limiter {
+    fn new(cfg: RateLimit) -> Self {
+        Self { cfg, map: Mutex::new(HashMap::new()) }
+    }
+
+    fn admit(&self, ip: IpAddr) -> bool {
+        let now = Instant::now();
+        let mut map = self.map.lock().unwrap();
+        if map.len() > MAX_TRACKED {
+            let (burst, per_sec) = (self.cfg.burst, self.cfg.per_sec);
+            map.retain(|_, b| {
+                b.tokens + now.saturating_duration_since(b.last).as_secs_f64() * per_sec < burst
+            });
+            if map.len() > 2 * MAX_TRACKED {
+                // pathological IP churn with zero refill: fail open
+                // (fresh bursts) rather than grow without bound
+                map.clear();
+            }
+        }
+        let b = map
+            .entry(ip)
+            .or_insert(Bucket { tokens: self.cfg.burst, last: now });
+        let refill = now.saturating_duration_since(b.last).as_secs_f64() * self.cfg.per_sec;
+        b.tokens = (b.tokens + refill).min(self.cfg.burst);
+        b.last = now;
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+struct Ctx {
+    server: Arc<Server>,
+    cfg: HttpConfig,
+    limiter: Option<Limiter>,
+    closing: AtomicBool,
+}
+
+/// A running HTTP front-end over an [`Arc<Server>`]. Bind with
+/// [`HttpFrontend::start`]; stop with [`HttpFrontend::shutdown`] (the
+/// `Server` itself is closed/joined separately by its owner).
+pub struct HttpFrontend {
+    local_addr: SocketAddr,
+    ctx: Arc<Ctx>,
+    acceptor: Option<JoinHandle<()>>,
+    handlers: Vec<JoinHandle<()>>,
+}
+
+impl HttpFrontend {
+    /// Bind `addr` (use port 0 for an ephemeral port — read it back via
+    /// [`HttpFrontend::local_addr`]) and start the acceptor + handler
+    /// pool. Handlers submit into `server` and complete requests from
+    /// its responses; its metrics sink also counts every HTTP status
+    /// served.
+    pub fn start(addr: &str, server: Arc<Server>, cfg: HttpConfig) -> crate::Result<Self> {
+        anyhow::ensure!(cfg.handlers > 0, "http front-end needs at least one handler");
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
+        let local_addr = listener.local_addr()?;
+        let ctx = Arc::new(Ctx {
+            limiter: cfg.rate.map(Limiter::new),
+            server,
+            cfg,
+            closing: AtomicBool::new(false),
+        });
+        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(ctx.cfg.backlog);
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut handlers = Vec::with_capacity(ctx.cfg.handlers);
+        for _ in 0..ctx.cfg.handlers {
+            let rx = conn_rx.clone();
+            let ctx = ctx.clone();
+            handlers.push(std::thread::spawn(move || loop {
+                // Scope the lock to the recv: exactly one idle handler
+                // waits on the channel at a time; the rest queue on the
+                // mutex — the `runtime/sharded.rs` pool shape.
+                let next = rx.lock().unwrap().recv();
+                match next {
+                    Ok(stream) => handle_connection(&ctx, stream),
+                    Err(_) => return, // acceptor gone and backlog drained
+                }
+            }));
+        }
+        let acceptor_ctx = ctx.clone();
+        let acceptor = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if acceptor_ctx.closing.load(Ordering::SeqCst) {
+                    return; // drops conn_tx → handlers drain and exit
+                }
+                let Ok(stream) = conn else { continue };
+                match conn_tx.try_send(stream) {
+                    Ok(()) => {}
+                    Err(mpsc::TrySendError::Full(mut s)) => {
+                        // Connection flood: answer, don't drop or queue.
+                        acceptor_ctx.server.metrics.record_http(503);
+                        let _ = write_response(
+                            &mut s,
+                            503,
+                            &err_body("overloaded", "connection backlog full"),
+                            false,
+                        );
+                    }
+                    Err(mpsc::TrySendError::Disconnected(_)) => return,
+                }
+            }
+        });
+        Ok(Self { local_addr, ctx, acceptor: Some(acceptor), handlers })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting, drain queued connections, join every thread.
+    /// In-flight requests finish with `Connection: close`; the wrapped
+    /// `Server` keeps running until its owner shuts it down.
+    pub fn shutdown(mut self) {
+        self.ctx.closing.store(true, Ordering::SeqCst);
+        // Wake the acceptor out of a blocking `accept`.
+        let _ = TcpStream::connect_timeout(&self.local_addr, Duration::from_secs(1));
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        for h in self.handlers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+struct HttpRequest {
+    method: String,
+    path: String,
+    headers: Vec<(String, String)>,
+    body: Vec<u8>,
+    keep_alive: bool,
+}
+
+impl HttpRequest {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.as_str() == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// An error that still gets a well-formed response: a status, a stable
+/// machine-readable code, and a human detail line.
+struct HttpError {
+    status: u16,
+    code: &'static str,
+    detail: String,
+}
+
+impl HttpError {
+    fn new(status: u16, code: &'static str, detail: impl Into<String>) -> Self {
+        Self { status, code, detail: detail.into() }
+    }
+}
+
+fn err_body(code: &str, detail: &str) -> Json {
+    let mut j = Json::obj();
+    j.set("error", Json::Str(code.to_string()))
+        .set("detail", Json::Str(detail.to_string()));
+    j
+}
+
+const MAX_HEADER_BYTES: usize = 8 << 10;
+
+fn handle_connection(ctx: &Ctx, mut stream: TcpStream) {
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.ip())
+        .unwrap_or(IpAddr::V4(Ipv4Addr::UNSPECIFIED));
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(ctx.cfg.read_timeout));
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        if ctx.closing.load(Ordering::SeqCst) {
+            return;
+        }
+        match read_request(&ctx.cfg, &mut stream, &mut buf) {
+            Ok(Some(req)) => {
+                let keep = req.keep_alive && !ctx.closing.load(Ordering::SeqCst);
+                let (status, body) = route(ctx, peer, &req);
+                ctx.server.metrics.record_http(status);
+                if write_response(&mut stream, status, &body, keep).is_err() || !keep {
+                    return;
+                }
+            }
+            Ok(None) => return, // clean EOF or idle timeout between requests
+            Err(e) => {
+                ctx.server.metrics.record_http(e.status);
+                let _ = write_response(
+                    &mut stream,
+                    e.status,
+                    &err_body(e.code, &e.detail),
+                    false,
+                );
+                return;
+            }
+        }
+    }
+}
+
+fn find_header_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Read one request off the connection. `buf` carries leftover bytes
+/// between keep-alive requests. `Ok(None)` means the peer is gone (or
+/// idle past the read timeout) with no request in flight; a timeout
+/// mid-request is a 408.
+fn read_request(
+    cfg: &HttpConfig,
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+) -> Result<Option<HttpRequest>, HttpError> {
+    let started = Instant::now();
+    let mut tmp = [0u8; 4096];
+    let deadline_hit = |buf: &[u8]| -> Result<Option<HttpRequest>, HttpError> {
+        if buf.is_empty() {
+            Ok(None) // idle keep-alive connection: close silently
+        } else {
+            Err(HttpError::new(408, "timeout", "read deadline exceeded"))
+        }
+    };
+    // headers
+    let header_end = loop {
+        if let Some(pos) = find_header_end(buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEADER_BYTES {
+            return Err(HttpError::new(431, "headers_too_large", "header block over 8 KiB"));
+        }
+        if started.elapsed() > cfg.request_deadline {
+            return deadline_hit(buf);
+        }
+        match stream.read(&mut tmp) {
+            Ok(0) => {
+                return if buf.is_empty() {
+                    Ok(None)
+                } else {
+                    Err(HttpError::new(400, "truncated", "connection closed mid-request"))
+                };
+            }
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                return deadline_hit(buf);
+            }
+            Err(_) => return Ok(None), // peer reset
+        }
+    };
+    let head = std::str::from_utf8(&buf[..header_end])
+        .map_err(|_| HttpError::new(400, "bad_request", "non-utf8 request head"))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) if !m.is_empty() && p.starts_with('/') => {
+            (m.to_string(), p.to_string(), v)
+        }
+        _ => {
+            return Err(HttpError::new(
+                400,
+                "bad_request",
+                format!("malformed request line '{request_line}'"),
+            ))
+        }
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::new(400, "bad_request", format!("unsupported {version}")));
+    }
+    let mut headers = Vec::new();
+    let mut keep_alive = version == "HTTP/1.1";
+    let mut content_len = 0usize;
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((name, val)) = line.split_once(':') else {
+            return Err(HttpError::new(400, "bad_request", format!("malformed header '{line}'")));
+        };
+        let name = name.trim().to_ascii_lowercase();
+        let val = val.trim().to_string();
+        match name.as_str() {
+            "content-length" => {
+                content_len = val.parse().map_err(|_| {
+                    HttpError::new(400, "bad_request", format!("bad content-length '{val}'"))
+                })?;
+            }
+            "connection" => {
+                if val.eq_ignore_ascii_case("close") {
+                    keep_alive = false;
+                } else if val.eq_ignore_ascii_case("keep-alive") {
+                    keep_alive = true;
+                }
+            }
+            "transfer-encoding" => {
+                return Err(HttpError::new(
+                    501,
+                    "unsupported",
+                    "chunked bodies unsupported; send content-length",
+                ));
+            }
+            _ => {}
+        }
+        headers.push((name, val));
+    }
+    // Size gate BEFORE reading the body: a hostile content-length never
+    // costs more than the header read.
+    if content_len > cfg.max_body_bytes {
+        return Err(HttpError::new(
+            413,
+            "body_too_large",
+            format!("content-length {content_len} over limit {}", cfg.max_body_bytes),
+        ));
+    }
+    let body_start = header_end + 4;
+    while buf.len() < body_start + content_len {
+        if started.elapsed() > cfg.request_deadline {
+            return Err(HttpError::new(408, "timeout", "read deadline exceeded mid-body"));
+        }
+        match stream.read(&mut tmp) {
+            Ok(0) => {
+                return Err(HttpError::new(400, "truncated", "connection closed mid-body"));
+            }
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                return Err(HttpError::new(408, "timeout", "read deadline exceeded mid-body"));
+            }
+            Err(_) => {
+                return Err(HttpError::new(400, "truncated", "connection lost mid-body"));
+            }
+        }
+    }
+    let body = buf[body_start..body_start + content_len].to_vec();
+    buf.drain(..body_start + content_len); // keep pipelined leftovers
+    Ok(Some(HttpRequest { method, path, headers, body, keep_alive }))
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        401 => "Unauthorized",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        _ => "Status",
+    }
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    body: &Json,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let body = body.to_string();
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+fn authorized(ctx: &Ctx, req: &HttpRequest) -> bool {
+    let Some(key) = &ctx.cfg.api_key else { return true };
+    if req.header("x-api-key") == Some(key.as_str()) {
+        return true;
+    }
+    matches!(req.header("authorization"),
+        Some(v) if v.strip_prefix("Bearer ").map(str::trim) == Some(key.as_str()))
+}
+
+fn route(ctx: &Ctx, peer: IpAddr, req: &HttpRequest) -> (u16, Json) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => {
+            let mut j = Json::obj();
+            j.set("status", Json::Str("ok".into()))
+                .set("queue_depth", Json::Num(ctx.server.queue_depth() as f64));
+            (200, j)
+        }
+        ("GET", "/metrics") => {
+            if !authorized(ctx, req) {
+                return (401, err_body("unauthorized", "missing or wrong api key"));
+            }
+            (200, ctx.server.metrics.report(ctx.server.max_batch()).to_json())
+        }
+        ("POST", "/v1/classify") => {
+            if !authorized(ctx, req) {
+                return (401, err_body("unauthorized", "missing or wrong api key"));
+            }
+            if let Some(limiter) = &ctx.limiter {
+                if !limiter.admit(peer) {
+                    return (429, err_body("rate_limited", "per-client admission limit"));
+                }
+            }
+            match classify(ctx, req) {
+                Ok(j) => (200, j),
+                Err(e) => (e.status, err_body(e.code, &e.detail)),
+            }
+        }
+        (_, "/health" | "/metrics" | "/v1/classify") => {
+            (405, err_body("method_not_allowed", "wrong method for this route"))
+        }
+        _ => (404, err_body("not_found", "unknown route")),
+    }
+}
+
+fn parse_tier(s: &str) -> Option<Tier> {
+    match s {
+        "fast" => Some(Tier::Fast),
+        "balanced" => Some(Tier::Balanced),
+        "accurate" => Some(Tier::Accurate),
+        _ => None,
+    }
+}
+
+fn classify(ctx: &Ctx, req: &HttpRequest) -> Result<Json, HttpError> {
+    let bad = |detail: String| HttpError::new(400, "bad_request", detail);
+    let text = std::str::from_utf8(&req.body)
+        .map_err(|_| bad("body is not utf-8".into()))?;
+    let doc = Json::parse(text).map_err(|e| bad(format!("bad json: {e}")))?;
+    let rows = doc
+        .get("rows")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| bad("missing 'rows' array".into()))?;
+    if rows.is_empty() {
+        return Err(bad("'rows' is empty".into()));
+    }
+    if rows.len() > ctx.cfg.max_rows {
+        return Err(bad(format!("{} rows over limit {}", rows.len(), ctx.cfg.max_rows)));
+    }
+    let tier = match doc.get("tier") {
+        None | Some(Json::Null) => None,
+        Some(Json::Str(s)) => Some(
+            parse_tier(s)
+                .ok_or_else(|| bad(format!("unknown tier '{s}' (fast|balanced|accurate)")))?,
+        ),
+        Some(_) => return Err(bad("'tier' must be a string".into())),
+    };
+    // Validate EVERY row before submitting ANY: a 400 must name the bad
+    // row and leave the queue untouched.
+    let width = ctx.server.num_features();
+    let mut parsed: Vec<Vec<f32>> = Vec::with_capacity(rows.len());
+    for (i, row) in rows.iter().enumerate() {
+        let vals = row
+            .as_arr()
+            .ok_or_else(|| bad(format!("row {i} is not an array")))?;
+        if vals.len() != width {
+            return Err(bad(format!("row {i} has width {}, want {width}", vals.len())));
+        }
+        let mut v = Vec::with_capacity(width);
+        for x in vals {
+            v.push(x.as_f64().ok_or_else(|| bad(format!("row {i} has a non-number")))? as f32);
+        }
+        parsed.push(v);
+    }
+    let n = parsed.len();
+    let (tx, rx) = mpsc::channel();
+    let mut id2row = HashMap::with_capacity(n);
+    for (i, features) in parsed.into_iter().enumerate() {
+        match ctx.server.submit_tiered(features, tier, tx.clone()) {
+            Ok(id) => {
+                id2row.insert(id, i);
+            }
+            // Earlier rows of this request are already in flight; their
+            // completions land on a dropped receiver (harmless) and the
+            // client retries the whole batch — rejecting the remainder
+            // is what keeps the queue bound meaningful under overload.
+            Err(SubmitError::Full) => {
+                return Err(HttpError::new(
+                    429,
+                    "queue_full",
+                    format!("queue full after {i}/{n} rows; retry with backoff"),
+                ));
+            }
+            Err(SubmitError::Closed) => {
+                return Err(HttpError::new(503, "shutting_down", "server is closing"));
+            }
+        }
+    }
+    drop(tx);
+    let mut preds = vec![0usize; n];
+    for _ in 0..n {
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok((id, pred, _scores)) => {
+                if let Some(&row) = id2row.get(&id) {
+                    preds[row] = pred;
+                }
+            }
+            // All senders dropped before n completions: the server shed
+            // this work (failed batch / malformed) — its metrics count it.
+            Err(_) => {
+                return Err(HttpError::new(
+                    500,
+                    "incomplete",
+                    "server dropped part of the batch",
+                ));
+            }
+        }
+    }
+    let mut j = Json::obj();
+    j.set(
+        "predictions",
+        Json::Arr(preds.into_iter().map(|p| Json::Num(p as f64)).collect()),
+    );
+    Ok(j)
+}
+
+/// Minimal loopback HTTP/1.1 client — shared by the integration tests,
+/// the `edge_serving` load-test example and the bench sweep (std-only,
+/// like the server it talks to).
+pub mod client {
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
+    use std::time::Duration;
+
+    /// A parsed response: status code plus the (JSON) body text.
+    #[derive(Debug)]
+    pub struct Response {
+        pub status: u16,
+        pub body: String,
+    }
+
+    /// One request over a fresh connection (`Connection: close`).
+    pub fn request(
+        addr: &str,
+        method: &str,
+        path: &str,
+        api_key: Option<&str>,
+        body: Option<&str>,
+    ) -> std::io::Result<Response> {
+        let mut stream = TcpStream::connect(addr)?;
+        send(&mut stream, method, path, api_key, body, false)?;
+        read_response(&mut stream)
+    }
+
+    /// One request over an existing connection (keep-alive).
+    pub fn request_on(
+        stream: &mut TcpStream,
+        method: &str,
+        path: &str,
+        api_key: Option<&str>,
+        body: Option<&str>,
+    ) -> std::io::Result<Response> {
+        send(stream, method, path, api_key, body, true)?;
+        read_response(stream)
+    }
+
+    fn send(
+        stream: &mut TcpStream,
+        method: &str,
+        path: &str,
+        api_key: Option<&str>,
+        body: Option<&str>,
+        keep_alive: bool,
+    ) -> std::io::Result<()> {
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        let body = body.unwrap_or("");
+        let mut head = format!("{method} {path} HTTP/1.1\r\nHost: uleen\r\n");
+        if let Some(k) = api_key {
+            head.push_str(&format!("x-api-key: {k}\r\n"));
+        }
+        if !body.is_empty() {
+            head.push_str(&format!(
+                "Content-Type: application/json\r\nContent-Length: {}\r\n",
+                body.len()
+            ));
+        }
+        head.push_str(if keep_alive {
+            "Connection: keep-alive\r\n\r\n"
+        } else {
+            "Connection: close\r\n\r\n"
+        });
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(body.as_bytes())?;
+        stream.flush()
+    }
+
+    fn read_response(stream: &mut TcpStream) -> std::io::Result<Response> {
+        let mut buf = Vec::new();
+        let mut tmp = [0u8; 4096];
+        let header_end = loop {
+            if let Some(p) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                break p;
+            }
+            match stream.read(&mut tmp)? {
+                0 => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "connection closed before response headers",
+                    ))
+                }
+                n => buf.extend_from_slice(&tmp[..n]),
+            }
+        };
+        let head = String::from_utf8_lossy(&buf[..header_end]).to_string();
+        let status: u16 = head
+            .split(' ')
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| {
+                std::io::Error::new(std::io::ErrorKind::InvalidData, "bad status line")
+            })?;
+        let content_len: usize = head
+            .lines()
+            .find_map(|l| {
+                let (k, v) = l.split_once(':')?;
+                k.trim()
+                    .eq_ignore_ascii_case("content-length")
+                    .then(|| v.trim().parse().ok())?
+            })
+            .unwrap_or(0);
+        let body_start = header_end + 4;
+        while buf.len() < body_start + content_len {
+            match stream.read(&mut tmp)? {
+                0 => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "connection closed mid-body",
+                    ))
+                }
+                n => buf.extend_from_slice(&tmp[..n]),
+            }
+        }
+        Ok(Response {
+            status,
+            body: String::from_utf8_lossy(&buf[body_start..body_start + content_len])
+                .to_string(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_bucket_spends_and_refills() {
+        let l = Limiter::new(RateLimit { burst: 2.0, per_sec: 0.0 });
+        let ip = IpAddr::V4(Ipv4Addr::LOCALHOST);
+        assert!(l.admit(ip));
+        assert!(l.admit(ip));
+        assert!(!l.admit(ip), "burst exhausted, zero refill");
+        let l = Limiter::new(RateLimit { burst: 1.0, per_sec: 1e6 });
+        assert!(l.admit(ip));
+        std::thread::sleep(Duration::from_millis(1));
+        assert!(l.admit(ip), "fast refill re-admits");
+    }
+
+    #[test]
+    fn limiter_map_stays_bounded() {
+        let l = Limiter::new(RateLimit { burst: 4.0, per_sec: 1e9 });
+        for i in 0..(MAX_TRACKED as u32 + 600) {
+            let ip = IpAddr::V4(Ipv4Addr::from(i));
+            l.admit(ip);
+        }
+        // instant refill means every bucket is prunable the moment the
+        // cap trips, so the sweep holds the map near MAX_TRACKED
+        assert!(
+            l.map.lock().unwrap().len() <= MAX_TRACKED + 1,
+            "replenished buckets must be swept once the cap is hit"
+        );
+    }
+
+    #[test]
+    fn tier_parsing_matches_route_names() {
+        assert_eq!(parse_tier("fast"), Some(Tier::Fast));
+        assert_eq!(parse_tier("balanced"), Some(Tier::Balanced));
+        assert_eq!(parse_tier("accurate"), Some(Tier::Accurate));
+        assert_eq!(parse_tier("warp"), None);
+    }
+
+    #[test]
+    fn header_end_finder() {
+        assert_eq!(find_header_end(b"GET / HTTP/1.1\r\n\r\nrest"), Some(14));
+        assert_eq!(find_header_end(b"partial\r\n"), None);
+    }
+}

@@ -3,13 +3,33 @@
 //! and EXPERIMENTS.md report.
 
 use crate::coordinator::router::RouterStats;
+use crate::util::rng::Rng;
 use crate::util::stats::{percentile, OnlineStats};
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-#[derive(Default)]
+/// Cap on retained latency samples. Latencies feed an Algorithm R
+/// reservoir: every completed request has an equal probability of being
+/// in the sample, so `latency_us_p50/p99` stay unbiased estimates while
+/// memory stays O(1) — the previous unbounded `Vec` grew by 8 bytes per
+/// request forever and made every `/metrics` scrape clone + sort the
+/// whole history.
+pub const LATENCY_RESERVOIR_CAP: usize = 4096;
+
 struct Inner {
-    latencies_us: Vec<f64>,
+    /// ≤ [`LATENCY_RESERVOIR_CAP`] uniformly-sampled latencies (µs).
+    latency_reservoir: Vec<f64>,
+    /// Total latencies ever offered to the reservoir.
+    latency_seen: u64,
+    /// Exact running mean/min/max over ALL latencies (the reservoir only
+    /// approximates percentiles; mean and max stay exact).
+    latency_stats: OnlineStats,
+    /// Deterministic replacement stream (seeded, so identical runs keep
+    /// identical samples).
+    reservoir_rng: Rng,
+    /// HTTP responses served by the front-end, keyed by status code.
+    http_responses: BTreeMap<u16, u64>,
     batch_sizes: OnlineStats,
     completed: u64,
     rejected_full: u64,
@@ -33,6 +53,31 @@ struct Inner {
     num_tiers: usize,
     started: Option<Instant>,
     finished: Option<Instant>,
+}
+
+impl Default for Inner {
+    fn default() -> Self {
+        Self {
+            latency_reservoir: Vec::new(),
+            latency_seen: 0,
+            latency_stats: OnlineStats::new(),
+            reservoir_rng: Rng::new(0x5EED_1A7E),
+            http_responses: BTreeMap::new(),
+            batch_sizes: OnlineStats::new(),
+            completed: 0,
+            rejected_full: 0,
+            rejected_closed: 0,
+            malformed: 0,
+            batches_failed: 0,
+            tier_served: [0; 3],
+            tier_escalations: [0; 3],
+            tier_ns: [0; 3],
+            critical_path_ns: 0,
+            num_tiers: 0,
+            started: None,
+            finished: None,
+        }
+    }
 }
 
 /// Thread-safe metrics sink shared by workers and producers.
@@ -73,6 +118,9 @@ pub struct MetricsReport {
     pub latency_us_p99: f64,
     pub latency_us_mean: f64,
     pub latency_us_max: f64,
+    /// HTTP responses served by the front-end as (status, count),
+    /// ascending by status; empty when no front-end is attached.
+    pub http_responses: Vec<(u16, u64)>,
 }
 
 impl ServerMetrics {
@@ -81,20 +129,52 @@ impl ServerMetrics {
     }
 
     pub fn mark_start(&self) {
+        self.mark_start_at(Instant::now());
+    }
+
+    /// Start the throughput wall-clock at `t` unless already started.
+    /// The server calls this with the enqueue timestamp of the first
+    /// ACCEPTED request — rejected bursts never start the clock.
+    pub fn mark_start_at(&self, t: Instant) {
         let mut g = self.inner.lock().unwrap();
         if g.started.is_none() {
-            g.started = Some(Instant::now());
+            g.started = Some(t);
         }
     }
 
     pub fn record_batch(&self, batch_size: usize, latencies: &[Duration]) {
         let mut g = self.inner.lock().unwrap();
-        g.batch_sizes.push(batch_size as f64);
-        g.completed += latencies.len() as u64;
+        let inner = &mut *g;
+        inner.batch_sizes.push(batch_size as f64);
+        inner.completed += latencies.len() as u64;
         for l in latencies {
-            g.latencies_us.push(l.as_secs_f64() * 1e6);
+            let us = l.as_secs_f64() * 1e6;
+            inner.latency_stats.push(us);
+            inner.latency_seen += 1;
+            if inner.latency_reservoir.len() < LATENCY_RESERVOIR_CAP {
+                inner.latency_reservoir.push(us);
+            } else {
+                // Algorithm R: keep sample i with probability CAP/i.
+                let j = inner.reservoir_rng.below(inner.latency_seen) as usize;
+                if j < LATENCY_RESERVOIR_CAP {
+                    inner.latency_reservoir[j] = us;
+                }
+            }
         }
-        g.finished = Some(Instant::now());
+        inner.finished = Some(Instant::now());
+    }
+
+    /// Count one HTTP response served by the front-end, keyed by status.
+    pub fn record_http(&self, status: u16) {
+        *self.inner.lock().unwrap().http_responses.entry(status).or_insert(0) += 1;
+    }
+
+    /// (retained latency samples, total latencies seen) — the retained
+    /// count never exceeds [`LATENCY_RESERVOIR_CAP`]; the bounded-memory
+    /// regression tests pin this down.
+    pub fn latency_samples(&self) -> (usize, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.latency_reservoir.len(), g.latency_seen)
     }
 
     pub fn record_reject(&self, full: bool) {
@@ -152,19 +232,23 @@ impl ServerMetrics {
 
     pub fn report(&self, max_batch: usize) -> MetricsReport {
         let g = self.inner.lock().unwrap();
+        // `saturating` because started is now stamped on the ACCEPTED
+        // submit path, which can lose a race with the worker completing
+        // that very request — a clock running backwards must report 0,
+        // not panic a scrape.
         let wall = match (g.started, g.finished) {
-            (Some(a), Some(b)) => (b - a).as_secs_f64(),
+            (Some(a), Some(b)) => b.saturating_duration_since(a).as_secs_f64(),
             _ => 0.0,
         };
-        let (p50, p99, mean, max) = if g.latencies_us.is_empty() {
+        let (p50, p99, mean, max) = if g.latency_reservoir.is_empty() {
             (0.0, 0.0, 0.0, 0.0)
         } else {
-            let mut v = g.latencies_us.clone();
+            // The clone is bounded by LATENCY_RESERVOIR_CAP — scrapes
+            // are O(cap log cap) no matter how long the server has run.
+            let mut v = g.latency_reservoir.clone();
             let p50 = percentile(&mut v, 0.50);
             let p99 = percentile(&mut v, 0.99);
-            let mean = v.iter().sum::<f64>() / v.len() as f64;
-            let max = v.last().copied().unwrap_or(0.0);
-            (p50, p99, mean, max)
+            (p50, p99, g.latency_stats.mean(), g.latency_stats.max())
         };
         MetricsReport {
             completed: g.completed,
@@ -190,6 +274,7 @@ impl ServerMetrics {
             latency_us_p99: p99,
             latency_us_mean: mean,
             latency_us_max: max,
+            http_responses: g.http_responses.iter().map(|(&k, &v)| (k, v)).collect(),
         }
     }
 }
@@ -221,6 +306,13 @@ impl MetricsReport {
         }
         if self.num_tiers > 0 {
             j.set("critical_path_ms", Json::Num(self.critical_path_ms));
+        }
+        if !self.http_responses.is_empty() {
+            let mut h = Json::obj();
+            for &(status, count) in &self.http_responses {
+                h.set(&status.to_string(), Json::Num(count as f64));
+            }
+            j.set("http", h);
         }
         j
     }
@@ -314,6 +406,63 @@ mod tests {
             a.critical_path_ms > b.critical_path_ms,
             "summing per-shard paths overcounts — merged-first is the contract"
         );
+    }
+
+    #[test]
+    fn latency_memory_is_bounded_while_percentiles_stay_sound() {
+        // Regression: latencies used to accumulate in an unbounded Vec
+        // (O(requests) memory, O(n log n) per scrape). Record ≫ cap
+        // samples and demand a capped buffer WITH sound percentiles.
+        let m = ServerMetrics::new();
+        m.mark_start();
+        let total = 160_000usize; // ~39× the cap, multiple of 1000
+        assert!(total > 2 * LATENCY_RESERVOIR_CAP);
+        let lats: Vec<Duration> =
+            (0..total).map(|i| Duration::from_micros((i % 1000 + 1) as u64)).collect();
+        for chunk in lats.chunks(512) {
+            m.record_batch(chunk.len(), chunk);
+        }
+        let (kept, seen) = m.latency_samples();
+        assert_eq!(kept, LATENCY_RESERVOIR_CAP, "reservoir must stay at its cap");
+        assert_eq!(seen, total as u64);
+        let r = m.report(512);
+        assert_eq!(r.completed, total as u64);
+        // Uniform 1..=1000 µs: true p50 = 500, p99 = 990. A 4096-sample
+        // uniform reservoir has σ(p50) ≈ 7.8 µs — ±60 is > 7σ.
+        assert!((r.latency_us_p50 - 500.0).abs() < 60.0, "p50 {}", r.latency_us_p50);
+        assert!((r.latency_us_p99 - 990.0).abs() < 60.0, "p99 {}", r.latency_us_p99);
+        // mean and max are exact (running stats, not the reservoir)
+        assert!((r.latency_us_mean - 500.5).abs() < 1e-6, "mean {}", r.latency_us_mean);
+        assert!((r.latency_us_max - 1000.0).abs() < 1e-6, "max {}", r.latency_us_max);
+    }
+
+    #[test]
+    fn http_status_counts_serialize() {
+        let m = ServerMetrics::new();
+        for _ in 0..3 {
+            m.record_http(200);
+        }
+        m.record_http(429);
+        let r = m.report(16);
+        assert_eq!(r.http_responses, vec![(200, 3), (429, 1)]);
+        let json = r.to_json().to_string();
+        assert!(json.contains("\"http\":{\"200\":3,\"429\":1}"), "got {json}");
+    }
+
+    #[test]
+    fn wall_clock_never_starts_on_rejects_and_never_goes_negative() {
+        let m = ServerMetrics::new();
+        m.record_reject(true);
+        let r = m.report(16);
+        assert_eq!(r.wall_secs, 0.0, "a pure-reject run must not start the clock");
+        // started stamped AFTER a completion (the accept-path race):
+        // the scrape must clamp to zero, not panic
+        let m = ServerMetrics::new();
+        m.record_batch(1, &[Duration::from_micros(5)]);
+        m.mark_start();
+        let r = m.report(16);
+        assert!(r.wall_secs >= 0.0);
+        assert_eq!(r.throughput_rps, 0.0);
     }
 
     #[test]

@@ -22,13 +22,22 @@
 //! parallel on a persistent pool, per-tier counters merging
 //! deterministically ([`router::RouterStats::merge`]).
 
+//!
+//! [`http::HttpFrontend`] is the network edge: a std-only HTTP/1.1
+//! server (`uleen serve --listen ADDR`) exposing `/health`, `/metrics`
+//! and `/v1/classify` over the same bounded queue, with API-key auth,
+//! per-client token-bucket admission, and queue-full/closed
+//! backpressure surfaced as 429/503 instead of dropped connections.
+
 pub mod batcher;
 pub mod cli;
+pub mod http;
 pub mod metrics;
 pub mod router;
 pub mod server;
 
 pub use batcher::{BatcherConfig, BoundedQueue, Request, SubmitError};
+pub use http::{HttpConfig, HttpFrontend, RateLimit};
 pub use metrics::ServerMetrics;
 pub use router::{
     canonical_tier, max_response_of, tier_names, ModelRouter, RouterEngine, RouterStats, Tier,

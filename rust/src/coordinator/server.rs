@@ -169,6 +169,13 @@ impl Server {
         self.num_features
     }
 
+    /// The serving micro-batch ceiling — what metrics reports take as
+    /// their batch-fill denominator (the HTTP front-end's `/metrics`
+    /// route needs it without seeing the queue).
+    pub fn max_batch(&self) -> usize {
+        self.queue.config().max_batch
+    }
+
     /// Submit one request on the default path (cascade on zoo servers);
     /// the prediction arrives on `done`.
     pub fn submit(
@@ -198,10 +205,17 @@ impl Server {
             k => tier.map(|t| crate::coordinator::router::canonical_tier(t, k)),
         };
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.metrics.mark_start();
-        let req = Request { id, features, tier, enqueued: Instant::now(), done };
+        let enqueued = Instant::now();
+        let req = Request { id, features, tier, enqueued, done };
         match self.queue.submit(req) {
-            Ok(()) => Ok(id),
+            Ok(()) => {
+                // Start the throughput wall-clock only on ACCEPTED work
+                // (at its enqueue time): a burst that is entirely
+                // rejected must not start — and thereby skew — the
+                // denominator of every later rate.
+                self.metrics.mark_start_at(enqueued);
+                Ok(id)
+            }
             Err((e, _req)) => {
                 self.metrics.record_reject(e == SubmitError::Full);
                 Err(e)

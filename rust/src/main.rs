@@ -46,6 +46,11 @@ fn opt_specs() -> Vec<OptSpec> {
         OptSpec { name: "zoo", takes_value: true, help: "serve a tiered model zoo: comma-separated presets (s,m,l) or .uln paths, small → large" },
         OptSpec { name: "cascade-margin", takes_value: true, help: "zoo cascade escalation threshold on the normalized top1-top2 margin (default 0.05)" },
         OptSpec { name: "hlo", takes_value: true, help: "HLO artifact for the PJRT runtime" },
+        OptSpec { name: "listen", takes_value: true, help: "serve over HTTP on ADDR (e.g. 127.0.0.1:8080; port 0 picks one) instead of synthetic load" },
+        OptSpec { name: "api-key", takes_value: true, help: "require this key on /metrics and /v1/classify (--listen mode)" },
+        OptSpec { name: "rate-rps", takes_value: true, help: "per-client token-bucket rate in req/s, 0 = unlimited (--listen mode)" },
+        OptSpec { name: "duration-secs", takes_value: true, help: "stop --listen serving after N seconds, 0 = until killed (default 0)" },
+        OptSpec { name: "max-body-kib", takes_value: true, help: "HTTP request body cap in KiB (default 1024, --listen mode)" },
         OptSpec { name: "target", takes_value: true, help: "hardware target: fpga | asic" },
         OptSpec { name: "verbose", takes_value: false, help: "extra logging" },
     ]
@@ -59,7 +64,7 @@ fn subcommands() -> Vec<(&'static str, &'static str)> {
         ("eval", "evaluate --model on --dataset"),
         ("info", "describe a .uln model"),
         ("simulate", "hardware-simulate --model on --target (fpga|asic)"),
-        ("serve", "run the serving coordinator on --model (or a tiered zoo: --zoo s,m,l)"),
+        ("serve", "run the serving coordinator on --model (or a tiered zoo: --zoo s,m,l); --listen ADDR exposes it over HTTP"),
     ]
 }
 

@@ -20,6 +20,16 @@
 //! u32 meta_len | meta JSON bytes
 //! u64 FNV-1a checksum of everything before it
 //! ```
+//!
+//! **Hostile input:** the checksum only catches *accidental* corruption
+//! — an adversarial author forges a valid checksum trivially, so the
+//! parser itself must stay safe. Every count field is bounded before it
+//! sizes an allocation (`k_hashes ≤ 16`, `num_classes ≤ 4096`,
+//! `entries_per_filter ≤ 2^24`, encoder dims ≤ 2^26 bits), and every
+//! large buffer is preceded by a remaining-byte check
+//! ([`Reader::need`]) so a forged header can never make `load` allocate
+//! more than ~the file's own size. Truncation, absurd counts and
+//! checksum mismatch all return `Err` — never a panic, never an OOM.
 
 use crate::encoding::thermometer::{ThermometerEncoder, ThermometerKind};
 use crate::hash::h3::{H3Family, H3Hash};
@@ -121,12 +131,26 @@ struct Reader<'a> {
 
 impl<'a> Reader<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.off + n > self.b.len() {
+        if n > self.b.len() - self.off {
             bail!("truncated .uln at offset {}", self.off);
         }
         let s = &self.b[self.off..self.off + n];
         self.off += n;
         Ok(s)
+    }
+
+    /// Pre-allocation guard: verify `n` bytes remain BEFORE a
+    /// header-sized `Vec::with_capacity` — a forged-but-checksummed
+    /// count must not reserve memory the buffer cannot even back.
+    fn need(&self, n: usize, what: &str) -> Result<()> {
+        if n > self.b.len() - self.off {
+            bail!(
+                "truncated .uln: {what} wants {n} bytes at offset {}, {} remain",
+                self.off,
+                self.b.len() - self.off
+            );
+        }
+        Ok(())
     }
     fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
@@ -168,9 +192,12 @@ pub fn from_bytes(bytes: &[u8], name: &str) -> Result<(UleenModel, Json)> {
     };
     let num_inputs = r.u32()? as usize;
     let bits = r.u32()? as usize;
-    if num_inputs == 0 || bits == 0 || num_inputs * bits > 1 << 26 {
+    // u64 math: both fields are attacker-controlled u32s, so the product
+    // must not be trusted to fit usize before the bound check
+    if num_inputs == 0 || bits == 0 || (num_inputs as u64) * (bits as u64) > 1 << 26 {
         bail!("implausible encoder dims {num_inputs}x{bits}");
     }
+    r.need(num_inputs * bits * 4, "thresholds")?;
     let mut thresholds = Vec::with_capacity(num_inputs * bits);
     for _ in 0..num_inputs * bits {
         thresholds.push(r.f32()?);
@@ -187,11 +214,19 @@ pub fn from_bytes(bytes: &[u8], name: &str) -> Result<(UleenModel, Json)> {
         let k_hashes = r.u32()? as usize;
         let num_classes = r.u32()? as usize;
         let num_filters = r.u32()? as usize;
-        if !entries_per_filter.is_power_of_two() || entries_per_filter < 8 {
+        if !entries_per_filter.is_power_of_two()
+            || !(8..=1 << 24).contains(&entries_per_filter)
+        {
             bail!("submodel {si}: bad table size {entries_per_filter}");
         }
         if inputs_per_filter == 0 || inputs_per_filter > 64 {
             bail!("submodel {si}: bad inputs/filter {inputs_per_filter}");
+        }
+        if k_hashes == 0 || k_hashes > 16 {
+            bail!("submodel {si}: implausible hash count {k_hashes}");
+        }
+        if num_classes == 0 || num_classes > 4096 {
+            bail!("submodel {si}: implausible class count {num_classes}");
         }
         let cfg = SubmodelConfig {
             inputs_per_filter,
@@ -207,6 +242,7 @@ pub fn from_bytes(bytes: &[u8], name: &str) -> Result<(UleenModel, Json)> {
                 inputs_per_filter
             );
         }
+        r.need(num_filters * inputs_per_filter * 4, "input_order")?;
         let mut input_order = Vec::with_capacity(num_filters * inputs_per_filter);
         for _ in 0..num_filters * inputs_per_filter {
             let o = r.u32()?;

@@ -123,7 +123,7 @@ impl Json {
     /// Parse a JSON document. Errors carry the byte offset.
     pub fn parse(text: &str) -> Result<Json, String> {
         let bytes = text.as_bytes();
-        let mut p = Parser { b: bytes, i: 0 };
+        let mut p = Parser { b: bytes, i: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -152,9 +152,15 @@ fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
 }
 
+/// Deepest container nesting `parse` accepts. The parser recurses once per
+/// `[`/`{`, so without a cap a hostile document of 100k open brackets
+/// overflows the thread stack before any semantic validation can run.
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -186,14 +192,30 @@ impl<'a> Parser<'a> {
         }
     }
 
+    fn nested(
+        &mut self,
+        f: impl FnOnce(&mut Self) -> Result<Json, String>,
+    ) -> Result<Json, String> {
+        if self.depth >= MAX_DEPTH {
+            return Err(format!(
+                "nesting deeper than {MAX_DEPTH} at byte {}",
+                self.i
+            ));
+        }
+        self.depth += 1;
+        let v = f(self);
+        self.depth -= 1;
+        v
+    }
+
     fn value(&mut self) -> Result<Json, String> {
         match self.peek() {
             Some(b'n') => self.literal("null", Json::Null),
             Some(b't') => self.literal("true", Json::Bool(true)),
             Some(b'f') => self.literal("false", Json::Bool(false)),
             Some(b'"') => self.string().map(Json::Str),
-            Some(b'[') => self.array(),
-            Some(b'{') => self.object(),
+            Some(b'[') => self.nested(Self::array),
+            Some(b'{') => self.nested(Self::object),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
             _ => Err(format!("unexpected byte at {}", self.i)),
         }
@@ -362,6 +384,29 @@ mod tests {
         let doc = Json::Str("quote\" slash\\ nl\n tab\t".into());
         let back = Json::parse(&doc.to_string()).unwrap();
         assert_eq!(doc, back);
+    }
+
+    #[test]
+    fn hostile_nesting_errors_instead_of_overflowing_the_stack() {
+        // 100k unmatched brackets: without the depth cap this recurses
+        // 100k frames deep and aborts the process, not the test.
+        let bomb = "[".repeat(100_000);
+        let err = Json::parse(&bomb).unwrap_err();
+        assert!(err.contains("nesting deeper than"), "got: {err}");
+        // Same shape through objects.
+        let obj_bomb = "{\"k\":".repeat(100_000);
+        assert!(Json::parse(&obj_bomb).is_err());
+    }
+
+    #[test]
+    fn reasonable_nesting_still_parses() {
+        let depth = 100; // below MAX_DEPTH
+        let doc = format!("{}1{}", "[".repeat(depth), "]".repeat(depth));
+        let mut j = &Json::parse(&doc).unwrap();
+        for _ in 0..depth {
+            j = &j.as_arr().unwrap()[0];
+        }
+        assert_eq!(j.as_f64(), Some(1.0));
     }
 
     #[test]

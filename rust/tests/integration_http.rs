@@ -1,0 +1,504 @@
+//! Integration: the std-only HTTP/1.1 front-end over real loopback
+//! sockets — auth, validation, backpressure (429/503), read deadlines,
+//! and shutdown draining. Every test talks to `HttpFrontend` through
+//! `TcpStream`s, never in-process shortcuts: the point is the wire
+//! contract.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+use uleen::coordinator::batcher::BatcherConfig;
+use uleen::coordinator::http::{client, HttpConfig, HttpFrontend, RateLimit};
+use uleen::coordinator::server::{Server, ServerConfig};
+use uleen::data::synth_uci::{synth_uci, uci_spec};
+use uleen::data::Dataset;
+use uleen::model::ensemble::{EnsembleScratch, UleenModel};
+use uleen::runtime::{InferenceEngine, NativeEngine};
+use uleen::train::oneshot::{train_oneshot, OneShotConfig};
+use uleen::util::json::Json;
+
+fn iris() -> (UleenModel, Dataset) {
+    let ds = synth_uci(5, uci_spec("iris").unwrap());
+    let model = train_oneshot(&ds, &OneShotConfig::default()).0;
+    (model, ds)
+}
+
+fn server_cfg(capacity: usize, workers: usize) -> ServerConfig {
+    ServerConfig {
+        batcher: BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(100),
+            capacity,
+        },
+        workers,
+    }
+}
+
+fn start_native(
+    model: &UleenModel,
+    http: HttpConfig,
+) -> (Arc<Server>, HttpFrontend, String) {
+    let mc = model.clone();
+    let server = Arc::new(
+        Server::start(server_cfg(4096, 2), move |_| {
+            Ok(Box::new(NativeEngine::new(mc.clone())) as Box<dyn InferenceEngine>)
+        })
+        .unwrap(),
+    );
+    let frontend = HttpFrontend::start("127.0.0.1:0", server.clone(), http).unwrap();
+    let addr = frontend.local_addr().to_string();
+    (server, frontend, addr)
+}
+
+fn stop(server: Arc<Server>, frontend: HttpFrontend) {
+    frontend.shutdown();
+    let server = Arc::try_unwrap(server).ok().expect("stray Server handle");
+    server.shutdown();
+}
+
+fn classify_body(rows: &[&[f32]], tier: Option<&str>) -> String {
+    let mut j = Json::obj();
+    j.set(
+        "rows",
+        Json::Arr(
+            rows.iter()
+                .map(|r| Json::Arr(r.iter().map(|&v| Json::Num(v as f64)).collect()))
+                .collect(),
+        ),
+    );
+    if let Some(t) = tier {
+        j.set("tier", Json::Str(t.into()));
+    }
+    j.to_string()
+}
+
+fn predictions(body: &str) -> Vec<usize> {
+    Json::parse(body)
+        .unwrap()
+        .get("predictions")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as usize)
+        .collect()
+}
+
+#[test]
+fn health_metrics_and_classify_agree_with_local_inference() {
+    let (model, ds) = iris();
+    let (server, frontend, addr) = start_native(
+        &model,
+        HttpConfig { api_key: Some("secret".into()), ..Default::default() },
+    );
+
+    // /health is open (probes carry no credentials)
+    let r = client::request(&addr, "GET", "/health", None, None).unwrap();
+    assert_eq!(r.status, 200);
+    assert!(Json::parse(&r.body).unwrap().get("queue_depth").is_some());
+
+    // keep-alive classify over one connection, checked against local truth
+    let mut scratch = EnsembleScratch::default();
+    let mut conn = TcpStream::connect(&addr).unwrap();
+    for chunk in (0..ds.n_test().min(24)).collect::<Vec<_>>().chunks(8) {
+        let rows: Vec<&[f32]> = chunk.iter().map(|&i| ds.test_row(i)).collect();
+        let want: Vec<usize> =
+            chunk.iter().map(|&i| model.predict(ds.test_row(i), &mut scratch)).collect();
+        let body = classify_body(&rows, None);
+        let r = client::request_on(&mut conn, "POST", "/v1/classify", Some("secret"), Some(&body))
+            .unwrap();
+        assert_eq!(r.status, 200, "body: {}", r.body);
+        assert_eq!(predictions(&r.body), want, "served must match local inference");
+    }
+
+    // /metrics reports the traffic, including per-status HTTP counters
+    let r = client::request(&addr, "GET", "/metrics", Some("secret"), None).unwrap();
+    assert_eq!(r.status, 200);
+    let m = Json::parse(&r.body).unwrap();
+    assert!(m.get("http").is_some(), "metrics must expose HTTP status counts: {}", r.body);
+    assert!(m.get("http").unwrap().get("200").unwrap().as_f64().unwrap() >= 3.0);
+
+    stop(server, frontend);
+}
+
+#[test]
+fn wrong_width_names_the_row_and_submits_nothing() {
+    let (model, ds) = iris();
+    let (server, frontend, addr) = start_native(&model, HttpConfig::default());
+
+    let good = ds.test_row(0);
+    let short = &good[..good.len() - 1];
+    let body = classify_body(&[good, short, good], None);
+    let r = client::request(&addr, "POST", "/v1/classify", None, Some(&body)).unwrap();
+    assert_eq!(r.status, 400);
+    assert!(r.body.contains("row 1"), "error must name the offending row: {}", r.body);
+
+    // whole-batch validation: the bad request must not have enqueued rows 0/2
+    let (_, seen) = server.metrics.latency_samples();
+    assert_eq!(seen, 0, "nothing may reach the batcher before validation passes");
+
+    // and the connection/server still serve a corrected batch
+    let r = client::request(&addr, "POST", "/v1/classify", None, Some(&classify_body(&[good], None)))
+        .unwrap();
+    assert_eq!(r.status, 200);
+
+    stop(server, frontend);
+}
+
+#[test]
+fn auth_is_enforced_on_metrics_and_classify() {
+    let (model, ds) = iris();
+    let (server, frontend, addr) = start_native(
+        &model,
+        HttpConfig { api_key: Some("secret".into()), ..Default::default() },
+    );
+    let body = classify_body(&[ds.test_row(0)], None);
+
+    for (path, method, req_body) in [
+        ("/metrics", "GET", None),
+        ("/v1/classify", "POST", Some(body.as_str())),
+    ] {
+        let r = client::request(&addr, method, path, None, req_body).unwrap();
+        assert_eq!(r.status, 401, "{method} {path} without key");
+        let r = client::request(&addr, method, path, Some("wrong"), req_body).unwrap();
+        assert_eq!(r.status, 401, "{method} {path} with wrong key");
+        assert!(r.body.contains("unauthorized"));
+    }
+    // Bearer form of the right key works too
+    let mut conn = TcpStream::connect(&addr).unwrap();
+    conn.write_all(
+        b"GET /metrics HTTP/1.1\r\nHost: t\r\nAuthorization: Bearer secret\r\nConnection: close\r\n\r\n",
+    )
+    .unwrap();
+    let mut raw = String::new();
+    conn.read_to_string(&mut raw).unwrap();
+    assert!(raw.starts_with("HTTP/1.1 200"), "bearer auth must pass: {raw}");
+
+    stop(server, frontend);
+}
+
+/// Engine that blocks inside `responses_into` until the test feeds it a
+/// token — lets a test hold the worker busy and fill the queue to a
+/// DETERMINISTIC depth before poking the overflow path.
+struct GateEngine {
+    gate: mpsc::Receiver<()>,
+}
+
+impl InferenceEngine for GateEngine {
+    fn label(&self) -> String {
+        "gate".into()
+    }
+    fn num_features(&self) -> usize {
+        4
+    }
+    fn num_classes(&self) -> usize {
+        2
+    }
+    fn responses_into(&mut self, _x: &[f32], n: usize, out: &mut [f32]) -> uleen::Result<()> {
+        for _ in 0..n {
+            let _ = self.gate.recv(); // closed gate at shutdown = pass-through
+        }
+        for row in out[..2 * n].chunks_mut(2) {
+            row.copy_from_slice(&[1.0, 0.0]);
+        }
+        Ok(())
+    }
+}
+
+fn wait_for_depth(server: &Server, want: usize) {
+    let t0 = Instant::now();
+    while server.queue_depth() != want {
+        assert!(t0.elapsed() < Duration::from_secs(5), "queue never reached depth {want}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+#[test]
+fn queue_full_is_a_429_response_not_a_dropped_connection() {
+    let (gate_tx, gate_rx) = mpsc::channel::<()>();
+    let gate = Mutex::new(Some(gate_rx));
+    let cfg = ServerConfig {
+        batcher: BatcherConfig {
+            max_batch: 1,
+            max_wait: Duration::from_micros(50),
+            capacity: 2,
+        },
+        workers: 1,
+    };
+    let server = Arc::new(
+        Server::start(cfg, move |_| {
+            Ok(Box::new(GateEngine { gate: gate.lock().unwrap().take().unwrap() })
+                as Box<dyn InferenceEngine>)
+        })
+        .unwrap(),
+    );
+    let frontend = HttpFrontend::start("127.0.0.1:0", server.clone(), HttpConfig::default()).unwrap();
+    let addr = frontend.local_addr().to_string();
+
+    let body = classify_body(&[&[0.0, 0.0, 0.0, 0.0]], None);
+    let post = |addr: String, body: String| {
+        std::thread::spawn(move || {
+            client::request(&addr, "POST", "/v1/classify", None, Some(&body)).unwrap()
+        })
+    };
+    // worker drains the first request and blocks on the gate...
+    let a = post(addr.clone(), body.clone());
+    wait_for_depth(&server, 0);
+    // ...two more fill the queue to its capacity of 2...
+    let b = post(addr.clone(), body.clone());
+    wait_for_depth(&server, 1);
+    let c = post(addr.clone(), body.clone());
+    wait_for_depth(&server, 2);
+
+    // ...so the next submit MUST bounce with a well-formed 429.
+    let r = client::request(&addr, "POST", "/v1/classify", None, Some(&body)).unwrap();
+    assert_eq!(r.status, 429);
+    assert!(r.body.contains("queue_full"), "{}", r.body);
+
+    // open the gate: the three queued requests all finish with 200s
+    for _ in 0..3 {
+        gate_tx.send(()).unwrap();
+    }
+    for h in [a, b, c] {
+        let r = h.join().unwrap();
+        assert_eq!(r.status, 200, "gated request must complete: {}", r.body);
+        assert_eq!(predictions(&r.body), vec![0]);
+    }
+    stop(server, frontend);
+}
+
+#[test]
+fn closed_server_answers_503_shutting_down() {
+    let (model, ds) = iris();
+    let (server, frontend, addr) = start_native(&model, HttpConfig::default());
+    server.close();
+    let body = classify_body(&[ds.test_row(0)], None);
+    let r = client::request(&addr, "POST", "/v1/classify", None, Some(&body)).unwrap();
+    assert_eq!(r.status, 503);
+    assert!(r.body.contains("shutting_down"), "{}", r.body);
+    // health stays answerable for probes during drain
+    let r = client::request(&addr, "GET", "/health", None, None).unwrap();
+    assert_eq!(r.status, 200);
+    stop(server, frontend);
+}
+
+#[test]
+fn oversized_body_is_rejected_before_it_is_read() {
+    let (model, _ds) = iris();
+    let (server, frontend, addr) = start_native(
+        &model,
+        HttpConfig { max_body_bytes: 256, ..Default::default() },
+    );
+    let big = classify_body(&[&vec![0.0f32; 200][..]], None);
+    assert!(big.len() > 256);
+    let r = client::request(&addr, "POST", "/v1/classify", None, Some(&big)).unwrap();
+    assert_eq!(r.status, 413);
+    assert!(r.body.contains("body_too_large"), "{}", r.body);
+    stop(server, frontend);
+}
+
+#[test]
+fn slow_loris_is_cut_off_with_408() {
+    let (model, _ds) = iris();
+    let (server, frontend, addr) = start_native(
+        &model,
+        HttpConfig {
+            read_timeout: Duration::from_millis(80),
+            request_deadline: Duration::from_millis(250),
+            ..Default::default()
+        },
+    );
+    let mut conn = TcpStream::connect(&addr).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    // a request line and then... nothing. The handler must not wait
+    // forever for the rest of the head.
+    conn.write_all(b"POST /v1/classify HTTP/1.1\r\n").unwrap();
+    let mut raw = Vec::new();
+    conn.read_to_end(&mut raw).unwrap(); // server responds then closes
+    let raw = String::from_utf8_lossy(&raw);
+    assert!(raw.starts_with("HTTP/1.1 408"), "got: {raw}");
+    stop(server, frontend);
+}
+
+#[test]
+fn per_client_rate_limit_answers_429() {
+    let (model, ds) = iris();
+    let (server, frontend, addr) = start_native(
+        &model,
+        HttpConfig {
+            rate: Some(RateLimit { burst: 2.0, per_sec: 0.0 }),
+            ..Default::default()
+        },
+    );
+    let body = classify_body(&[ds.test_row(0)], None);
+    for _ in 0..2 {
+        let r = client::request(&addr, "POST", "/v1/classify", None, Some(&body)).unwrap();
+        assert_eq!(r.status, 200, "within burst: {}", r.body);
+    }
+    let r = client::request(&addr, "POST", "/v1/classify", None, Some(&body)).unwrap();
+    assert_eq!(r.status, 429);
+    assert!(r.body.contains("rate_limited"), "{}", r.body);
+    // the limit gates classify only; health/metrics stay reachable
+    assert_eq!(client::request(&addr, "GET", "/health", None, None).unwrap().status, 200);
+    stop(server, frontend);
+}
+
+#[test]
+fn unknown_routes_and_methods_get_404_405() {
+    let (model, _ds) = iris();
+    let (server, frontend, addr) = start_native(&model, HttpConfig::default());
+    assert_eq!(client::request(&addr, "GET", "/nope", None, None).unwrap().status, 404);
+    assert_eq!(client::request(&addr, "DELETE", "/health", None, None).unwrap().status, 405);
+    assert_eq!(
+        client::request(&addr, "GET", "/v1/classify", None, None).unwrap().status,
+        405
+    );
+    stop(server, frontend);
+}
+
+#[test]
+fn malformed_and_hostile_json_get_400() {
+    let (model, _ds) = iris();
+    let (server, frontend, addr) = start_native(&model, HttpConfig::default());
+    for bad in [
+        "{nope",
+        "{\"rows\": 3}",
+        "{\"rows\": []}",
+        "{\"rows\": [[0,0,0,0]], \"tier\": 7}",
+    ] {
+        let r = client::request(&addr, "POST", "/v1/classify", None, Some(bad)).unwrap();
+        assert_eq!(r.status, 400, "{bad} -> {}", r.body);
+    }
+    // a 50k-deep bracket bomb must come back as a 400, not a stack
+    // overflow in the handler thread
+    let bomb = "[".repeat(50_000);
+    let r = client::request(&addr, "POST", "/v1/classify", None, Some(&bomb)).unwrap();
+    assert_eq!(r.status, 400);
+    assert!(r.body.contains("bad json"), "{}", r.body);
+    // the connection pool survived: next request is fine
+    assert_eq!(client::request(&addr, "GET", "/health", None, None).unwrap().status, 200);
+    stop(server, frontend);
+}
+
+#[test]
+fn tier_pins_route_through_the_zoo() {
+    let ds = synth_uci(5, uci_spec("vowel").unwrap());
+    let mut models = Vec::new();
+    for (ipf, epf, bits) in [(8usize, 64usize, 2usize), (10, 128, 4)] {
+        models.push(
+            train_oneshot(
+                &ds,
+                &OneShotConfig {
+                    inputs_per_filter: ipf,
+                    entries_per_filter: epf,
+                    therm_bits: bits,
+                    ..Default::default()
+                },
+            )
+            .0,
+        );
+    }
+    let n = 16.min(ds.n_test());
+    let fast_want = NativeEngine::new(models[0].clone())
+        .classify(&ds.test_x[..n * ds.num_features], n)
+        .unwrap();
+    let acc_want = NativeEngine::new(models[1].clone())
+        .classify(&ds.test_x[..n * ds.num_features], n)
+        .unwrap();
+
+    let server = Arc::new(Server::start_zoo(server_cfg(4096, 2), models, 0.05).unwrap());
+    let frontend = HttpFrontend::start("127.0.0.1:0", server.clone(), HttpConfig::default()).unwrap();
+    let addr = frontend.local_addr().to_string();
+
+    let rows: Vec<&[f32]> = (0..n).map(|i| ds.test_row(i)).collect();
+    for (tier, want) in [("fast", &fast_want), ("accurate", &acc_want)] {
+        let r = client::request(
+            &addr,
+            "POST",
+            "/v1/classify",
+            None,
+            Some(&classify_body(&rows, Some(tier))),
+        )
+        .unwrap();
+        assert_eq!(r.status, 200, "{}", r.body);
+        assert_eq!(&predictions(&r.body), want, "tier '{tier}' must pin to its engine");
+    }
+    // a made-up tier is a validation error, not a silent cascade
+    let r = client::request(
+        &addr,
+        "POST",
+        "/v1/classify",
+        None,
+        Some(&classify_body(&rows, Some("warp"))),
+    )
+    .unwrap();
+    assert_eq!(r.status, 400);
+    assert!(r.body.contains("warp"), "{}", r.body);
+
+    // per-tier counters surfaced over /metrics
+    let m = Json::parse(&client::request(&addr, "GET", "/metrics", None, None).unwrap().body)
+        .unwrap();
+    let fast_served = m
+        .get("tier_fast")
+        .and_then(|t| t.get("served"))
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+    assert!(fast_served >= n as f64, "pinned fast traffic must show up: {fast_served}");
+
+    stop(server, frontend);
+}
+
+/// Satellite of the batcher shutdown audit: close the server while 8
+/// socket clients are mid-flight. Every client must keep receiving
+/// well-formed responses — 200s before the close, 503s after — and
+/// never a dropped connection or a hung read.
+#[test]
+fn close_while_draining_over_sockets_keeps_every_response_well_formed() {
+    let (model, ds) = iris();
+    let (server, frontend, addr) = start_native(&model, HttpConfig::default());
+    let ds = Arc::new(ds);
+
+    let clients = 8;
+    let (warm_tx, warm_rx) = mpsc::channel::<()>();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let addr = addr.clone();
+        let ds = ds.clone();
+        let warm = warm_tx.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut oks = 0u32;
+            let mut warm = Some(warm);
+            for it in 0..5000 {
+                let i = (c * 31 + it) % ds.n_test();
+                let body = classify_body(&[ds.test_row(i)], None);
+                let r = client::request(&addr, "POST", "/v1/classify", None, Some(&body))
+                    .expect("connection must never be dropped");
+                match r.status {
+                    200 => {
+                        oks += 1;
+                        if let Some(w) = warm.take() {
+                            let _ = w.send(()); // signal: this client got served
+                        }
+                    }
+                    503 => {
+                        assert!(r.body.contains("shutting_down"), "{}", r.body);
+                        return oks; // drain observed; clean exit
+                    }
+                    s => panic!("unexpected status {s}: {}", r.body),
+                }
+            }
+            panic!("server never closed under client {c}");
+        }));
+    }
+    drop(warm_tx);
+    // close only after every client has been served at least once
+    for _ in 0..clients {
+        warm_rx.recv_timeout(Duration::from_secs(30)).expect("clients never warmed up");
+    }
+    server.close();
+    for h in handles {
+        let oks = h.join().unwrap();
+        assert!(oks >= 1, "every client must see at least one success before the drain");
+    }
+    stop(server, frontend);
+}

@@ -201,3 +201,169 @@ fn corrupted_uln_rejected_loudly() {
         );
     }
 }
+
+// ---------------------------------------------------------------------------
+// Hostile .uln input. `corrupted_uln_rejected_loudly` above relies on the
+// FNV-1a trailer; these tests RE-SEAL the checksum after every mutation, so
+// they exercise the parse-level bounds a deliberate attacker (or a tool that
+// recomputes trailers) would face: forged header counts must fail fast on
+// their own plausibility checks, never trigger a header-sized allocation,
+// and never panic.
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    bytes
+        .iter()
+        .fold(0xcbf29ce484222325u64, |h, &b| (h ^ b as u64).wrapping_mul(0x100000001b3))
+}
+
+/// Append a freshly computed checksum to a checksum-less body.
+fn reseal(mut body: Vec<u8>) -> Vec<u8> {
+    let sum = fnv1a(&body);
+    body.extend_from_slice(&sum.to_le_bytes());
+    body
+}
+
+/// Overwrite the little-endian u32 at `off`, then re-seal, so only the
+/// parse-level guards can reject the result.
+fn patch_u32(bytes: &[u8], off: usize, val: u32) -> Vec<u8> {
+    let mut body = bytes[..bytes.len() - 8].to_vec();
+    body[off..off + 4].copy_from_slice(&val.to_le_bytes());
+    reseal(body)
+}
+
+/// A small trained model serialized to bytes, plus the byte offset of the
+/// first submodel header (fields: ipf, epf, k_hashes, num_classes,
+/// num_filters — each 4 bytes).
+fn hostile_fixture() -> (Vec<u8>, usize) {
+    let ds = synth_uci(11, uci_spec("iris").unwrap());
+    let (model, _) = train_oneshot(&ds, &OneShotConfig::default());
+    let bytes = uln_format::to_bytes(&model, &Json::obj());
+    // Layout: magic(4) version(4) kind(4) num_inputs(4) bits(4),
+    // thresholds (num_inputs*bits f32s), num_submodels(4), submodel 0.
+    let sm0 = 24 + model.encoder.num_inputs * model.encoder.bits * 4;
+    (bytes, sm0)
+}
+
+#[test]
+fn forged_header_counts_rejected_by_bounds_not_checksum() {
+    let (bytes, sm0) = hostile_fixture();
+    // Sanity: the pristine file still loads.
+    uln_format::from_bytes(&bytes, "x").unwrap();
+    let cases: [(usize, u32, &str); 6] = [
+        (12, u32::MAX, "implausible encoder dims"), // num_inputs
+        (16, u32::MAX, "implausible encoder dims"), // bits
+        (sm0 + 4, 1u32 << 31, "bad table size"),    // entries_per_filter
+        (sm0 + 8, u32::MAX, "implausible hash count"), // k_hashes
+        (sm0 + 12, u32::MAX, "implausible class count"), // num_classes
+        (sm0 + 16, u32::MAX, "inconsistent"),       // num_filters
+    ];
+    for (off, val, want) in cases {
+        let bad = patch_u32(&bytes, off, val);
+        let err = uln_format::from_bytes(&bad, "x").unwrap_err().to_string();
+        assert!(
+            !err.contains("checksum"),
+            "offset {off}: must be caught by a parse guard, not the trailer: {err}"
+        );
+        assert!(err.contains(want), "offset {off}: expected '{want}' in: {err}");
+    }
+}
+
+#[test]
+fn truncation_at_any_length_errs_never_panics() {
+    let (bytes, _) = hostile_fixture();
+    let body = &bytes[..bytes.len() - 8];
+    // Every strict prefix, re-sealed so the checksum is valid, must still
+    // fail: some declared field always extends past the cut.
+    let mut k = 0;
+    while k < body.len() {
+        let bad = reseal(body[..k].to_vec());
+        assert!(
+            uln_format::from_bytes(&bad, "x").is_err(),
+            "truncation to {k} bytes must be rejected"
+        );
+        k += 7;
+    }
+}
+
+#[test]
+fn resealed_random_bitflips_never_panic() {
+    let (bytes, _) = hostile_fixture();
+    let body = &bytes[..bytes.len() - 8];
+    let mut rng = Rng::new(0xB17F);
+    for _ in 0..400 {
+        let mut b = body.to_vec();
+        let pos = rng.below(b.len() as u64) as usize;
+        b[pos] ^= 1u8 << rng.below(8);
+        // Ok is allowed — flipping a threshold mantissa yields a different
+        // but well-formed model. Panicking or over-allocating is not.
+        let _ = uln_format::from_bytes(&reseal(b), "x");
+    }
+}
+
+#[test]
+fn prop_uln_roundtrip_over_random_shapes() {
+    use uleen::model::{Submodel, SubmodelConfig, UleenModel};
+    use uleen::util::prop::{check, Config};
+
+    check(
+        "uln-roundtrip-random-shapes",
+        &Config { cases: 24, min_size: 1, max_size: 24, seed: 0x0A1B },
+        |rng, size| {
+            let num_inputs = 1 + rng.below(4 + size as u64) as usize;
+            let bits = 1 + rng.below(6) as usize;
+            let data: Vec<f32> =
+                (0..num_inputs * 40).map(|_| rng.f64() as f32 * 10.0).collect();
+            let encoder = ThermometerEncoder::fit(
+                if rng.below(2) == 0 { ThermometerKind::Linear } else { ThermometerKind::Gaussian },
+                &data,
+                num_inputs,
+                bits,
+            );
+            let total = num_inputs * bits;
+            let num_submodels = 1 + rng.below(3) as usize;
+            let num_classes = 2 + rng.below(5) as usize;
+            let submodels: Vec<Submodel> = (0..num_submodels)
+                .map(|_| {
+                    let cfg = SubmodelConfig {
+                        inputs_per_filter: 1 + rng.below(total.min(16) as u64) as usize,
+                        entries_per_filter: 8 << rng.below(5),
+                        k_hashes: 1 + rng.below(4) as usize,
+                        num_classes,
+                        total_input_bits: total,
+                    };
+                    let mut sm = Submodel::new_random(rng, cfg);
+                    for d in &mut sm.discriminators {
+                        for f in d.filters.iter_mut() {
+                            if rng.below(8) == 0 {
+                                *f = None; // pruned filter
+                                continue;
+                            }
+                            let filt = f.as_mut().unwrap();
+                            for i in 0..filt.entries() {
+                                if rng.below(3) == 0 {
+                                    filt.table.set(i);
+                                }
+                            }
+                        }
+                    }
+                    for b in &mut sm.bias {
+                        *b = rng.below(9) as i32 - 4;
+                    }
+                    sm
+                })
+                .collect();
+            let model = UleenModel { name: "prop".into(), encoder, submodels };
+            uln_format::to_bytes(&model, &Json::obj())
+        },
+        |bytes| {
+            let (back, _) = uln_format::from_bytes(bytes, "prop")
+                .map_err(|e| format!("roundtrip load failed: {e}"))?;
+            let again = uln_format::to_bytes(&back, &Json::obj());
+            if again == *bytes {
+                Ok(())
+            } else {
+                Err("serialize(load(bytes)) != bytes".into())
+            }
+        },
+    );
+}
