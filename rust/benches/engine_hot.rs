@@ -6,9 +6,12 @@
 //! §Perf iterates against.
 //!
 //! Headline numbers: the batch-kernel sweep (per-sample vs bit-sliced
-//! throughput at batch ≥ 256, target ≥ 4× single-thread) and the fused
+//! throughput at batch ≥ 256, target ≥ 4× single-thread), the fused
 //! sweep (fused slice path vs the PR-1 encode+transpose+kernel sequence
-//! at batch 256, target ≥ 1.5×), then the shard sweep, the zoo cascade
+//! at batch 256, target ≥ 1.5×) and the simd sweep (dispatched kernel
+//! tier vs forced scalar at batch 256 — bit-exactness asserted; the
+//! ≥ 1.3× speedup gate arms only with ULEEN_GATE_SIMD set on an AVX2
+//! host), then the shard sweep, the zoo cascade
 //! sweep (tier-pinned Fast/Accurate vs the batched confidence cascade
 //! at batch 256), and the cascade×shard sweep (`ShardedRouterEngine` at
 //! batch 256, with an asserted merge gate: pool-merged per-tier counters
@@ -38,6 +41,7 @@ use uleen::coordinator::server::{Server, ServerConfig};
 use uleen::data::synth_mnist;
 use uleen::model::ensemble::EnsembleScratch;
 use uleen::model::flat::{FlatBatchScratch, FlatModel};
+use uleen::model::simd::KernelPath;
 use uleen::model::submodel::SubmodelScratch;
 use uleen::runtime::{InferenceEngine, NativeEngine, SharedModel, ShardedEngine, ShardedRouterEngine};
 use uleen::util::bitvec::BitVec;
@@ -208,6 +212,60 @@ fn main() -> anyhow::Result<()> {
         if fused_speedup >= 1.5 { "✓" } else { "✗ BELOW TARGET" }
     );
 
+    // == simd sweep: dispatched kernel vs forced scalar, batch 256 ==
+    // Same model, same rows, same fused entry point — only the per-tile
+    // kernel differs (dispatch is resolved once at FlatModel compile and
+    // carried by the model, so `flat` above already runs the dispatched
+    // tier; this stage re-measures with the kernel forced to scalar).
+    // On scalar-only hosts the ratio is ~1.0 by construction, so the
+    // ≥ 1.3x gate only arms when ULEEN_GATE_SIMD is set AND the
+    // dispatched tier is AVX2 (the CI runner class we can vouch for).
+    let kernel_path = flat.kernel_path();
+    println!(
+        "\n== simd sweep: dispatched kernel ({}) vs forced scalar, batch {bs} ==",
+        kernel_path.label()
+    );
+    let flat_scalar = FlatModel::compile_with_kernel(&model, KernelPath::Scalar);
+    let mut scalar_scratch = FlatBatchScratch::default();
+    let mut resp_scalar = vec![0i32; bs * m];
+    let r_scalar = bench_fn("forced scalar      ×256", w_swp, i_swp, bs as f64, || {
+        flat_scalar.responses_batch_fused(&enc, x, bs, &mut scalar_scratch, &mut resp_scalar);
+        std::hint::black_box(&resp_scalar);
+    });
+    let t_scalar = r_scalar.throughput_per_sec();
+    record(&mut report, r_scalar);
+    // bit-exactness gate: one fresh pass through each kernel, compared
+    // element-wise — a SIMD divergence dies here in the CI smoke bench
+    flat.responses_batch_fused(&enc, x, bs, &mut fused_scratch, &mut resp);
+    flat_scalar.responses_batch_fused(&enc, x, bs, &mut scalar_scratch, &mut resp_scalar);
+    assert_eq!(
+        resp, resp_scalar,
+        "dispatched kernel ({}) must be bit-exact with forced scalar",
+        kernel_path.label()
+    );
+    let simd_speedup = t_fused / t_scalar.max(1e-9);
+    let simd_gated =
+        std::env::var_os("ULEEN_GATE_SIMD").is_some() && kernel_path == KernelPath::Avx2;
+    println!(
+        "acceptance: {} {simd_speedup:.2}x vs scalar at batch {bs}, bit-exact ✓ \
+         (≥ 1.3x gate {}) {}",
+        kernel_path.label(),
+        if simd_gated { "ARMED" } else { "off" },
+        if simd_speedup >= 1.3 {
+            "✓"
+        } else if kernel_path == KernelPath::Scalar {
+            "(scalar host — ratio is 1x by construction)"
+        } else {
+            "✗ BELOW TARGET"
+        }
+    );
+    if simd_gated {
+        assert!(
+            simd_speedup >= 1.3,
+            "AVX2 kernel regressed below the 1.3x gate: {simd_speedup:.2}x at batch {bs}"
+        );
+    }
+
     // == alloc gate: steady-state allocations on the fused native path ==
     // The write-into plane contract says a warm NativeEngine serves
     // responses_into/classify_into with ZERO heap allocations. Counted
@@ -259,6 +317,7 @@ fn main() -> anyhow::Result<()> {
     let bs = 1024usize.min(ds.n_test());
     let x = &ds.test_x[..bs * f];
     let shard_counts: &[usize] = if smoke { &[2] } else { &[1, 2, 4, 8] };
+    let mut pool_pinned_max = 0usize;
     for &shards in shard_counts {
         let mut sh = ShardedEngine::new(model.clone(), shards);
         let r = bench_fn(&format!("shards={shards} ×{bs}"), w_swp, i_swp, bs as f64, || {
@@ -270,6 +329,11 @@ fn main() -> anyhow::Result<()> {
             shards,
             "persistent pool must spawn exactly once"
         );
+        // topology witness: how many pool workers landed a core pin
+        // (0 on non-Linux hosts or under ULEEN_NO_PIN — reported, not gated)
+        let pinned = sh.workers_pinned();
+        pool_pinned_max = pool_pinned_max.max(pinned);
+        println!("  (shards={shards}: {pinned}/{shards} workers pinned to distinct cores)");
     }
 
     // == cascade sweep: the ULN-S/M/L zoo through the fused batch kernel ==
@@ -345,6 +409,7 @@ fn main() -> anyhow::Result<()> {
         );
         shard_sweep.push((shards, r.throughput_per_sec()));
         record(&mut report, r);
+        pool_pinned_max = pool_pinned_max.max(eng.workers_pinned());
         // Zero per-worker model clones, witnessed: exactly one Arc handle
         // here + one in the engine's tier list + one per pool worker.
         for (t_idx, t) in shared_tiers.iter().enumerate() {
@@ -517,6 +582,19 @@ fn main() -> anyhow::Result<()> {
             doc.set("bitsliced_speedup_b256", Json::Num(s));
         }
         doc.set("fused_speedup_vs_pr1_b256", Json::Num(fused_speedup));
+        doc.set("kernel_path", Json::Str(kernel_path.label().to_string()));
+        let mut simd_doc = Json::obj();
+        simd_doc
+            .set("path", Json::Str(kernel_path.label().to_string()))
+            .set("scalar_sps", Json::Num(t_scalar))
+            .set("dispatched_sps", Json::Num(t_fused))
+            .set("speedup_b256", Json::Num(simd_speedup))
+            // asserted above — serialized so the trajectory records that
+            // the bit-exactness gate ran, not just that the bench finished
+            .set("bit_exact", Json::Bool(true))
+            .set("gated", Json::Bool(simd_gated))
+            .set("pool_pinned_workers_max", Json::Num(pool_pinned_max as f64));
+        doc.set("simd", simd_doc);
         // present iff built with --features alloc-witness; asserted == 0
         // in-bench, so a serialized value records that the gate RAN
         if let Some(apb) = allocs_per_batch {

@@ -54,9 +54,21 @@ pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let batch = args.get_usize("batch", 16).map_err(anyhow::Error::msg)?;
     let requests = args.get_usize("requests", 10_000).map_err(anyhow::Error::msg)?;
     let workers = args.get_usize("workers", 4).map_err(anyhow::Error::msg)?;
-    let shards = args.get_usize("shards", 0).map_err(anyhow::Error::msg)?;
-    let seed = args.get_u64("seed", 2024).map_err(anyhow::Error::msg)?;
     let hlo = args.get("hlo");
+    // Topology default: unless the caller sizes the pool explicitly
+    // (--shards N, or --workers N to keep the unsharded worker-pool
+    // path) or picks the PJRT engine, shard the engine across every
+    // detected core.
+    let detected = crate::util::detected_cores();
+    let shards = if args.get("shards").is_some() {
+        args.get_usize("shards", 0).map_err(anyhow::Error::msg)?
+    } else if args.get("workers").is_some() || hlo.is_some() {
+        0
+    } else {
+        detected
+    };
+    println!("topology: {detected} cores detected, serving with {shards} shards");
+    let seed = args.get_u64("seed", 2024).map_err(anyhow::Error::msg)?;
 
     let (model, _) = uln_format::load(Path::new(model_path))?;
     let num_features = model.encoder.num_inputs;
@@ -301,7 +313,18 @@ fn cmd_serve_zoo(args: &Args, spec: &str) -> anyhow::Result<()> {
     let requests = args.get_usize("requests", 10_000).map_err(anyhow::Error::msg)?;
     let workers = args.get_usize("workers", 2).map_err(anyhow::Error::msg)?;
     let margin = args.get_f64("cascade-margin", 0.05).map_err(anyhow::Error::msg)? as f32;
-    let shards = args.get_usize("shards", 0).map_err(anyhow::Error::msg)?;
+    // Topology default, mirroring `cmd_serve`: explicit --shards wins,
+    // explicit --workers keeps the per-worker-zoo path, otherwise shard
+    // the cascade across every detected core.
+    let detected = crate::util::detected_cores();
+    let shards = if args.get("shards").is_some() {
+        args.get_usize("shards", 0).map_err(anyhow::Error::msg)?
+    } else if args.get("workers").is_some() {
+        0
+    } else {
+        detected
+    };
+    println!("topology: {detected} cores detected, serving zoo with {shards} shards");
     anyhow::ensure!(args.get("hlo").is_none(), "--zoo and --hlo are mutually exclusive");
     anyhow::ensure!(
         args.get("model").is_none(),

@@ -92,7 +92,8 @@ impl Default for HttpConfig {
     fn default() -> Self {
         Self {
             api_key: None,
-            handlers: 4,
+            // topology default: one handler per detected logical core
+            handlers: crate::util::detected_cores(),
             backlog: 64,
             max_body_bytes: 1 << 20,
             max_rows: 256,

@@ -51,6 +51,9 @@ struct Inner {
     /// zoo depth of the serving engines (0 = tier-blind server); set by
     /// `RouterEngine::with_metrics`, drives which tier keys serialize
     num_tiers: usize,
+    /// SIMD dispatch tier of the serving engines' compiled kernel
+    /// ("avx2" / "neon" / "scalar"; "n/a" until an engine reports in)
+    kernel_path: &'static str,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
@@ -74,6 +77,7 @@ impl Default for Inner {
             tier_ns: [0; 3],
             critical_path_ns: 0,
             num_tiers: 0,
+            kernel_path: "n/a",
             started: None,
             finished: None,
         }
@@ -111,6 +115,10 @@ pub struct MetricsReport {
     pub critical_path_ms: f64,
     /// zoo depth of the serving engines (0 = tier-blind server)
     pub num_tiers: usize,
+    /// SIMD dispatch tier of the serving engines' compiled kernel
+    /// (`"avx2"` / `"neon"` / `"scalar"`; `"n/a"` for engines that don't
+    /// run the flat native kernel)
+    pub kernel_path: &'static str,
     pub wall_secs: f64,
     pub throughput_rps: f64,
     pub mean_batch_fill: f64,
@@ -204,6 +212,14 @@ impl ServerMetrics {
         self.inner.lock().unwrap().num_tiers = num_tiers;
     }
 
+    /// Record the serving engines' SIMD dispatch tier (called once at
+    /// server construction from `InferenceEngine::kernel_path`) so a
+    /// silently-degraded dispatch — scalar where AVX2 was expected —
+    /// shows up on every `/metrics` scrape.
+    pub fn set_kernel_path(&self, kernel_path: &'static str) {
+        self.inner.lock().unwrap().kernel_path = kernel_path;
+    }
+
     /// Fold a router's per-tier counter delta into the serving totals
     /// (called by `RouterEngine` after every zoo micro-batch, and by
     /// `ShardedRouterEngine` with the POOL-MERGED delta of a fanned-out
@@ -267,6 +283,7 @@ impl ServerMetrics {
             }),
             critical_path_ms: g.critical_path_ns as f64 / 1e6,
             num_tiers: g.num_tiers,
+            kernel_path: g.kernel_path,
             wall_secs: wall,
             throughput_rps: if wall > 0.0 { g.completed as f64 / wall } else { 0.0 },
             mean_batch_fill: if max_batch > 0 { g.batch_sizes.mean() / max_batch as f64 } else { 0.0 },
@@ -293,7 +310,8 @@ impl MetricsReport {
             .set("mean_batch_fill", Json::Num(self.mean_batch_fill))
             .set("latency_us_p50", Json::Num(self.latency_us_p50))
             .set("latency_us_p99", Json::Num(self.latency_us_p99))
-            .set("latency_us_mean", Json::Num(self.latency_us_mean));
+            .set("latency_us_mean", Json::Num(self.latency_us_mean))
+            .set("kernel_path", Json::Str(self.kernel_path.to_string()));
         // One key per tier that actually exists, named by the shared
         // index → label mapping (tier-blind servers emit none).
         let names = crate::coordinator::router::tier_names(self.num_tiers);

@@ -156,6 +156,12 @@ pub struct ModelRouter {
 }
 
 impl ModelRouter {
+    /// SIMD dispatch tier of the Fast tier's kernel (all tiers compile
+    /// under the same dispatch decision), `"n/a"` for non-native tiers.
+    pub fn kernel_path(&self) -> &'static str {
+        self.engines.first().map(|e| e.kernel_path()).unwrap_or("n/a")
+    }
+
     pub fn new(engines: Vec<Box<dyn InferenceEngine>>, max_response: Vec<f32>) -> Self {
         assert!(!engines.is_empty() && engines.len() <= 3);
         assert_eq!(engines.len(), max_response.len());
@@ -591,6 +597,10 @@ impl InferenceEngine for RouterEngine {
 
     fn num_tiers(&self) -> usize {
         self.router.num_tiers()
+    }
+
+    fn kernel_path(&self) -> &'static str {
+        self.router.kernel_path()
     }
 
     /// Batched-cascade responses: each row carries the scores of the tier

@@ -65,16 +65,19 @@ impl Server {
         let mut workers = Vec::with_capacity(cfg.workers);
         let mut num_features = 0;
         let mut num_tiers = 0;
+        let mut kernel_path = "n/a";
         for w in 0..cfg.workers {
             let mut engine = make_engine(w)?;
             num_features = engine.num_features();
             num_tiers = engine.num_tiers();
+            kernel_path = engine.kernel_path();
             let queue = queue.clone();
             let metrics = metrics.clone();
             workers.push(std::thread::spawn(move || {
                 worker_loop(&mut *engine, &queue, &metrics);
             }));
         }
+        metrics.set_kernel_path(kernel_path);
         Ok(Self { queue, metrics, workers, next_id: AtomicU64::new(0), num_features, num_tiers })
     }
 

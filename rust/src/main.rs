@@ -42,7 +42,7 @@ fn opt_specs() -> Vec<OptSpec> {
         OptSpec { name: "batch", takes_value: true, help: "serving batch size (default 16)" },
         OptSpec { name: "requests", takes_value: true, help: "serving request count (default 10000)" },
         OptSpec { name: "workers", takes_value: true, help: "serving worker threads (default 4)" },
-        OptSpec { name: "shards", takes_value: true, help: "serve with one sharded engine over N threads (default: per-worker engines); with --zoo, runs the cascade × shard composition" },
+        OptSpec { name: "shards", takes_value: true, help: "serve with one sharded engine over N threads (default: one shard per detected core; pass --workers to keep per-worker engines instead); with --zoo, runs the cascade × shard composition" },
         OptSpec { name: "zoo", takes_value: true, help: "serve a tiered model zoo: comma-separated presets (s,m,l) or .uln paths, small → large" },
         OptSpec { name: "cascade-margin", takes_value: true, help: "zoo cascade escalation threshold on the normalized top1-top2 margin (default 0.05)" },
         OptSpec { name: "hlo", takes_value: true, help: "HLO artifact for the PJRT runtime" },

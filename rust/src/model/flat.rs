@@ -25,6 +25,7 @@
 
 use crate::encoding::thermometer::ThermometerEncoder;
 use crate::model::ensemble::UleenModel;
+use crate::model::simd::{self, KernelPath};
 use crate::model::submodel::SubmodelConfig;
 use crate::util::bitvec::BitVec;
 
@@ -95,12 +96,45 @@ pub struct FlatSubmodel {
 pub struct FlatModel {
     pub submodels: Vec<FlatSubmodel>,
     pub num_classes: usize,
+    /// SIMD dispatch tier for the tile kernel, resolved ONCE here at
+    /// compile time (§Perf v6) — invariant: always host-supported
+    /// (sanitized through [`KernelPath::or_scalar`]).
+    kernel: KernelPath,
 }
 
 impl FlatModel {
+    /// Compile with the default dispatch decision
+    /// ([`KernelPath::resolve`]: `ULEEN_KERNEL` env override, else
+    /// runtime feature detection). Panics on a model the flat layout
+    /// cannot represent — use [`FlatModel::try_compile`] to surface
+    /// that as an error instead.
     pub fn compile(model: &UleenModel) -> Self {
+        Self::compile_with_kernel(model, KernelPath::resolve())
+    }
+
+    /// [`FlatModel::compile`] with a forced dispatch tier — the testing
+    /// override the SIMD conformance suite is built on. An unsupported
+    /// `kernel` is clamped to scalar, never trusted.
+    pub fn compile_with_kernel(model: &UleenModel, kernel: KernelPath) -> Self {
+        Self::try_compile_with_kernel(model, kernel)
+            .expect("FlatModel::compile: model incompatible with the flat engine")
+    }
+
+    /// Fallible compile — the class-capacity check every serving path
+    /// funnels through (the `.uln` loader re-checks at parse time so
+    /// hostile artifacts fail before any allocation).
+    pub fn try_compile(model: &UleenModel) -> crate::Result<Self> {
+        Self::try_compile_with_kernel(model, KernelPath::resolve())
+    }
+
+    fn try_compile_with_kernel(model: &UleenModel, kernel: KernelPath) -> crate::Result<Self> {
         let m = model.num_classes();
-        assert!(m <= 32, "flat engine supports up to 32 classes");
+        anyhow::ensure!(
+            (1..=32).contains(&m),
+            "flat engine: {m} classes exceed the 32-class capacity of the u32 \
+             class-mask planes (one bit per class; split the label space to serve \
+             this model)"
+        );
         let submodels = model
             .submodels
             .iter()
@@ -162,7 +196,21 @@ impl FlatModel {
                 }
             })
             .collect();
-        Self { submodels, num_classes: m }
+        Ok(Self { submodels, num_classes: m, kernel: kernel.or_scalar() })
+    }
+
+    /// The SIMD dispatch tier this model's tile kernel runs on —
+    /// resolved at compile time, surfaced through engine `/metrics`
+    /// (`kernel_path`) and bench JSON.
+    pub fn kernel_path(&self) -> KernelPath {
+        self.kernel
+    }
+
+    /// Force a dispatch tier after compilation (clamped to scalar if
+    /// the host can't run it). Testing/diagnostics hook; normal code
+    /// lets [`FlatModel::compile`] decide once.
+    pub fn set_kernel_path(&mut self, kernel: KernelPath) {
+        self.kernel = kernel.or_scalar();
     }
 
     /// Per-class responses for an encoded input, accumulated into `out`
@@ -396,8 +444,14 @@ impl FlatModel {
 
     /// The bit-sliced tile kernel proper, operating on a borrowed
     /// [`TileSlices`] view (`out` row-major `nt × num_classes`,
-    /// pre-zeroed). Everything downstream of the slice layout lives here;
-    /// both the BitVec adapter and the fused encode feed it.
+    /// pre-zeroed). Per submodel it prepares the shared scratch and
+    /// delegates the three hot phases — CSR hash-slice XOR
+    /// accumulation, per-filter index reassembly, class-mask fold +
+    /// response scatter — to [`simd::submodel_tile_kernel`] on the
+    /// dispatch tier baked in at compile time ([`KernelPath::resolve`];
+    /// scalar is bit-exact reference, AVX2/NEON asserted against it).
+    /// Both the BitVec adapter and the fused encode feed it. The bias
+    /// add stays here: it is path-independent.
     pub fn responses_tile_slices(
         &self,
         tile: TileSlices<'_>,
@@ -419,67 +473,32 @@ impl FlatModel {
             // the probe reassembles indices into u32 (4 Gi-entry filters
             // are far beyond anything compile() could even allocate)
             debug_assert!(ob <= 32, "batch kernel supports out_bits <= 32");
-            // Bit-sliced hashing: hash_slices[(f*k + j)*ob + b] bit s =
-            // bit b of sample s's j-th hash for filter f.
             scratch.hash_slices.clear();
             scratch.hash_slices.resize(nf * k * ob, 0);
-            for (src, &w) in slices.iter().enumerate() {
-                if w == 0 {
-                    continue;
-                }
-                let lo = sm.csr_off[src] as usize;
-                let hi = sm.csr_off[src + 1] as usize;
-                for t in lo..hi {
-                    let f = unsafe { *sm.csr_filter.get_unchecked(t) } as usize;
-                    let base = f * k * ob;
-                    let pbase = t * k;
-                    for j in 0..k {
-                        let mut p = unsafe { *sm.csr_params.get_unchecked(pbase + j) };
-                        let hb = base + j * ob;
-                        while p != 0 {
-                            let b = p.trailing_zeros() as usize;
-                            p &= p - 1;
-                            unsafe {
-                                *scratch.hash_slices.get_unchecked_mut(hb + b) ^= w;
-                            }
-                        }
-                    }
-                }
-            }
-            // Probe: per filter, reassemble each sample's table index from
-            // the hash bit-planes, then fold the k class-mask loads.
             scratch.idx.clear();
             scratch.idx.resize(nt, 0);
             scratch.masks.clear();
             scratch.masks.resize(nt, 0);
-            for f in 0..nf {
-                scratch.masks[..nt].fill(u32::MAX);
-                for j in 0..k {
-                    let idx = &mut scratch.idx[..nt];
-                    idx.fill(0);
-                    let hb = (f * k + j) * ob;
-                    for (b, &w) in scratch.hash_slices[hb..hb + ob].iter().enumerate() {
-                        let mut w = w;
-                        while w != 0 {
-                            let s = w.trailing_zeros() as usize;
-                            w &= w - 1;
-                            debug_assert!(s < nt);
-                            idx[s] |= 1 << b;
-                        }
-                    }
-                    for (s, mask) in scratch.masks[..nt].iter_mut().enumerate() {
-                        *mask &= unsafe {
-                            *sm.class_masks.get_unchecked(f * e + idx[s] as usize)
-                        };
-                    }
-                }
-                for (s, &mask) in scratch.masks[..nt].iter().enumerate() {
-                    let row = &mut out[s * m..(s + 1) * m];
-                    for (c, o) in row.iter_mut().enumerate() {
-                        *o += ((mask >> c) & 1) as i32;
-                    }
-                }
-            }
+            simd::submodel_tile_kernel(
+                self.kernel,
+                simd::SubmodelTileArgs {
+                    slices,
+                    nt,
+                    m,
+                    e,
+                    nf,
+                    k,
+                    ob,
+                    csr_off: &sm.csr_off,
+                    csr_filter: &sm.csr_filter,
+                    csr_params: &sm.csr_params,
+                    class_masks: &sm.class_masks,
+                    hash_slices: &mut scratch.hash_slices,
+                    idx: &mut scratch.idx,
+                    masks: &mut scratch.masks,
+                    out: &mut *out,
+                },
+            );
             for s in 0..nt {
                 for c in 0..m {
                     out[s * m + c] += sm.bias[c];
@@ -633,6 +652,61 @@ mod tests {
                 "n={n}: the suffix beyond n*m must stay untouched"
             );
         }
+    }
+
+    #[test]
+    fn forced_kernel_paths_match_scalar_bit_exactly_end_to_end() {
+        let ds = synth_uci(29, uci_spec("vowel").unwrap());
+        let (mut model, _) = train_oneshot(
+            &ds,
+            &OneShotConfig { inputs_per_filter: 10, entries_per_filter: 128, therm_bits: 6, ..Default::default() },
+        );
+        prune_model(&mut model, &ds, 0.2);
+        let scalar = FlatModel::compile_with_kernel(&model, KernelPath::Scalar);
+        assert_eq!(scalar.kernel_path(), KernelPath::Scalar);
+        let m = model.num_classes();
+        let mut bs_a = FlatBatchScratch::default();
+        let mut bs_b = FlatBatchScratch::default();
+        for path in KernelPath::all_supported() {
+            let forced = FlatModel::compile_with_kernel(&model, path);
+            assert_eq!(forced.kernel_path(), path, "supported paths must stick");
+            for n in [1usize, 63, 64, 65, 130] {
+                let n = n.min(ds.n_test());
+                let x = &ds.test_x[..n * ds.num_features];
+                let mut want = vec![0i32; n * m];
+                scalar.responses_batch_fused(&model.encoder, x, n, &mut bs_a, &mut want);
+                let mut got = vec![0i32; n * m];
+                forced.responses_batch_fused(&model.encoder, x, n, &mut bs_b, &mut got);
+                assert_eq!(got, want, "{} vs scalar at n={n}", path.label());
+            }
+        }
+        // an unsupported forced path clamps to scalar instead of faulting
+        let mut clamped = FlatModel::compile_with_kernel(&model, KernelPath::Scalar);
+        for p in [KernelPath::Avx2, KernelPath::Neon] {
+            clamped.set_kernel_path(p);
+            assert!(clamped.kernel_path().is_supported());
+        }
+    }
+
+    #[test]
+    fn compile_rejects_more_than_32_classes_with_a_clear_error() {
+        use crate::encoding::thermometer::ThermometerKind;
+        use crate::model::submodel::Submodel;
+        use crate::util::rng::Rng;
+        let data: Vec<f32> = (0..400).map(|i| (i % 97) as f32).collect();
+        let encoder = ThermometerEncoder::fit(ThermometerKind::Gaussian, &data, 8, 8);
+        let cfg = SubmodelConfig {
+            inputs_per_filter: 8,
+            entries_per_filter: 64,
+            k_hashes: 2,
+            num_classes: 33, // one past the u32 class-mask capacity
+            total_input_bits: 64,
+        };
+        let mut rng = Rng::new(5);
+        let sm = Submodel::new_random(&mut rng, cfg);
+        let model = UleenModel { name: "too-wide".into(), encoder, submodels: vec![sm] };
+        let err = FlatModel::try_compile(&model).unwrap_err().to_string();
+        assert!(err.contains("32-class capacity"), "got: {err}");
     }
 
     #[test]

@@ -9,10 +9,13 @@
 //!   ULEEN improves on (Table IV, Fig 10).
 //! * [`uln_format`] — the `.uln` binary interchange format shared with the
 //!   Python compile path.
+//! * [`simd`] — runtime-dispatched SIMD tiers (AVX2/NEON/scalar) for the
+//!   [`flat`] engine's bit-sliced tile kernel.
 
 pub mod bloom_wisard;
 pub mod ensemble;
 pub mod flat;
+pub mod simd;
 pub mod submodel;
 pub mod uln_format;
 pub mod wisard;

@@ -1,0 +1,678 @@
+//! Runtime-dispatched SIMD kernels for the bit-sliced tile engine
+//! (§Perf v6 — the software analogue of ULEEN's always-resident FPGA
+//! datapath, chasing the paper's 14.3M inf/s).
+//!
+//! [`FlatModel::responses_tile_slices`](crate::model::flat::FlatModel::responses_tile_slices)
+//! delegates its three hot phases here, one call per submodel per tile:
+//!
+//! 1. **CSR hash-slice XOR accumulation** — for every set slice word,
+//!    XOR it into the `out_bits` hash bit-planes its H3 parameters
+//!    select. Vector form: broadcast the slice word, test 4 (AVX2) / 2
+//!    (NEON) parameter bits at once and XOR under the resulting lane
+//!    masks.
+//! 2. **Per-filter index reassembly** — rebuild each sample's table
+//!    index from the hash bit-planes. Vector form: 8 (AVX2) / 4 (NEON)
+//!    samples per op, one shift-and-OR per plane, then a gathered
+//!    (AVX2 `vpgatherdd`) or staged-scalar (NEON) class-mask load.
+//! 3. **Class-mask fold + response scatter** — unpack the folded mask's
+//!    class bits into the response rows, 8 (AVX2) / 4 (NEON) classes
+//!    per op.
+//!
+//! Offline constraint: `core::arch` intrinsics only, no external
+//! crates. AVX-512 is deliberately not a tier — its intrinsics are not
+//! stable on this crate's MSRV (1.73).
+//!
+//! **Dispatch is resolved ONCE, at `FlatModel` compile time** — never
+//! per call — via [`KernelPath::resolve`]: the `ULEEN_KERNEL` env var
+//! (`scalar` / `avx2` / `neon` / `auto`) wins when it names a path the
+//! host supports, otherwise runtime feature detection picks AVX2 on
+//! capable x86-64, NEON on aarch64 (baseline there), scalar everywhere
+//! else. The scalar path IS the pre-SIMD code, moved here verbatim, and
+//! every vector path is held bit-exact against it by unit tests below
+//! plus the cross-engine conformance proptests.
+//!
+//! Alignment: the kernels demand nothing beyond `Vec`'s natural
+//! alignment — every vector access is an explicitly unaligned
+//! load/store (`loadu`/`storeu`, `vld1q`/`vst1q`), so scratch buffers
+//! need no over-alignment and resizes can never introduce UB.
+
+/// Which instruction set the compiled tile kernel runs on. Carried by
+/// every `FlatModel` (chosen at compile time, see
+/// [`KernelPath::resolve`]) and surfaced through engine labels,
+/// `/metrics` (`kernel_path`) and bench JSON so a silently-degraded
+/// dispatch is visible.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelPath {
+    /// Portable reference path — always available, on every arch.
+    Scalar,
+    /// 256-bit AVX2 path (`x86_64`, runtime-detected).
+    Avx2,
+    /// 128-bit NEON path (`aarch64`, where NEON is ABI-baseline).
+    Neon,
+}
+
+impl KernelPath {
+    /// Env var that forces a dispatch tier: `scalar`, `avx2`, `neon`,
+    /// or `auto` (= detect). A value the host cannot run falls back to
+    /// detection — forcing can downgrade but never fault.
+    pub const ENV: &'static str = "ULEEN_KERNEL";
+
+    /// Stable lowercase name, used in labels / metrics / bench JSON.
+    pub fn label(self) -> &'static str {
+        match self {
+            Self::Scalar => "scalar",
+            Self::Avx2 => "avx2",
+            Self::Neon => "neon",
+        }
+    }
+
+    /// Parse a `ULEEN_KERNEL` value. `auto` and unknown strings map to
+    /// `None` (= use detection).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(Self::Scalar),
+            "avx2" => Some(Self::Avx2),
+            "neon" => Some(Self::Neon),
+            _ => None,
+        }
+    }
+
+    /// Can the host actually execute this path?
+    pub fn is_supported(self) -> bool {
+        match self {
+            Self::Scalar => true,
+            Self::Neon => cfg!(target_arch = "aarch64"),
+            Self::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                let ok = std::arch::is_x86_feature_detected!("avx2");
+                #[cfg(not(target_arch = "x86_64"))]
+                let ok = false;
+                ok
+            }
+        }
+    }
+
+    /// This path if the host supports it, else the scalar fallback.
+    /// The only constructor-facing sanitizer: a `FlatModel` never
+    /// carries a path its host cannot run.
+    pub fn or_scalar(self) -> Self {
+        if self.is_supported() {
+            self
+        } else {
+            Self::Scalar
+        }
+    }
+
+    /// Runtime feature detection: AVX2 on capable x86-64, NEON on
+    /// aarch64, scalar everywhere else.
+    pub fn detect() -> Self {
+        if cfg!(target_arch = "aarch64") {
+            return Self::Neon;
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                return Self::Avx2;
+            }
+        }
+        Self::Scalar
+    }
+
+    /// The dispatch decision `FlatModel::compile` bakes in: an env
+    /// override that names a supported path wins, otherwise
+    /// [`KernelPath::detect`].
+    pub fn resolve() -> Self {
+        match std::env::var(Self::ENV) {
+            Ok(v) => match Self::parse(&v) {
+                Some(p) if p.is_supported() => p,
+                _ => Self::detect(),
+            },
+            Err(_) => Self::detect(),
+        }
+    }
+
+    /// Every path the host can run (scalar always included) — the
+    /// conformance tests' iteration set.
+    pub fn all_supported() -> Vec<Self> {
+        [Self::Scalar, Self::Avx2, Self::Neon]
+            .into_iter()
+            .filter(|p| p.is_supported())
+            .collect()
+    }
+}
+
+/// Borrowed view of everything one submodel's tile pass needs — the
+/// kernel ABI shared by all dispatch tiers. `hash_slices` must arrive
+/// zeroed (length `nf * k * ob`); `idx`/`masks` are uninitialized
+/// sample-width scratch (length `nt`); `out` is the `nt × m` response
+/// plane the kernel ACCUMULATES into (bias is added by the caller —
+/// it is path-independent).
+pub(crate) struct SubmodelTileArgs<'a> {
+    /// one word per encoded input bit; bit `s` = that bit of sample `s`
+    pub slices: &'a [u64],
+    /// samples in the tile (1..=64)
+    pub nt: usize,
+    /// classes
+    pub m: usize,
+    /// table entries per filter (= `1 << ob`)
+    pub e: usize,
+    /// filters
+    pub nf: usize,
+    /// hash functions per filter
+    pub k: usize,
+    /// bits per table index (≤ 32)
+    pub ob: usize,
+    pub csr_off: &'a [u32],
+    pub csr_filter: &'a [u32],
+    /// k hash-param words per CSR entry, each masked to `ob` bits
+    pub csr_params: &'a [u64],
+    /// class-mask bitplanes, layout `[filter][entry]`
+    pub class_masks: &'a [u32],
+    /// bit-sliced H3 accumulators `[(f*k + j) * ob + b]`, pre-zeroed
+    pub hash_slices: &'a mut [u64],
+    /// per-sample table-index scratch (scalar + NEON staging)
+    pub idx: &'a mut [u32],
+    /// per-sample folded class mask for one filter
+    pub masks: &'a mut [u32],
+    /// `nt × m` row-major response accumulation plane
+    pub out: &'a mut [i32],
+}
+
+/// Run one submodel's tile pass on the given dispatch tier. `path`
+/// must be host-supported (guaranteed by [`KernelPath::or_scalar`] at
+/// `FlatModel` construction); a non-compiled variant (e.g. `Neon` on
+/// x86) falls through to scalar rather than faulting.
+pub(crate) fn submodel_tile_kernel(path: KernelPath, args: SubmodelTileArgs<'_>) {
+    debug_assert_eq!(args.hash_slices.len(), args.nf * args.k * args.ob);
+    debug_assert!(args.idx.len() >= args.nt && args.masks.len() >= args.nt);
+    debug_assert_eq!(args.out.len(), args.nt * args.m);
+    match path {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `path == Avx2` only ever reaches a FlatModel via
+        // `or_scalar`, which checked `is_x86_feature_detected!("avx2")`.
+        KernelPath::Avx2 => unsafe { avx2::run(args) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        KernelPath::Neon => unsafe { neon::run(args) },
+        _ => scalar::run(args),
+    }
+}
+
+/// The portable reference kernel — the pre-SIMD
+/// `responses_tile_slices` inner loop, moved verbatim. Every vector
+/// tier is asserted bit-exact against this.
+mod scalar {
+    use super::SubmodelTileArgs;
+
+    pub(super) fn run(a: SubmodelTileArgs<'_>) {
+        let SubmodelTileArgs {
+            slices,
+            nt,
+            m,
+            e,
+            nf,
+            k,
+            ob,
+            csr_off,
+            csr_filter,
+            csr_params,
+            class_masks,
+            hash_slices,
+            idx,
+            masks,
+            out,
+        } = a;
+        // Phase 1 — bit-sliced hashing: hash_slices[(f*k + j)*ob + b]
+        // bit s = bit b of sample s's j-th hash for filter f.
+        for (src, &w) in slices.iter().enumerate() {
+            if w == 0 {
+                continue;
+            }
+            let lo = csr_off[src] as usize;
+            let hi = csr_off[src + 1] as usize;
+            for t in lo..hi {
+                let f = unsafe { *csr_filter.get_unchecked(t) } as usize;
+                let base = f * k * ob;
+                let pbase = t * k;
+                for j in 0..k {
+                    let mut p = unsafe { *csr_params.get_unchecked(pbase + j) };
+                    let hb = base + j * ob;
+                    while p != 0 {
+                        let b = p.trailing_zeros() as usize;
+                        p &= p - 1;
+                        unsafe {
+                            *hash_slices.get_unchecked_mut(hb + b) ^= w;
+                        }
+                    }
+                }
+            }
+        }
+        // Phases 2+3 — per filter: reassemble each sample's table index
+        // from the hash bit-planes, fold the k class-mask loads, then
+        // scatter the mask's class bits into the response rows.
+        for f in 0..nf {
+            masks[..nt].fill(u32::MAX);
+            for j in 0..k {
+                let idx = &mut idx[..nt];
+                idx.fill(0);
+                let hb = (f * k + j) * ob;
+                for (b, &w) in hash_slices[hb..hb + ob].iter().enumerate() {
+                    let mut w = w;
+                    while w != 0 {
+                        let s = w.trailing_zeros() as usize;
+                        w &= w - 1;
+                        debug_assert!(s < nt);
+                        idx[s] |= 1 << b;
+                    }
+                }
+                for (s, mask) in masks[..nt].iter_mut().enumerate() {
+                    *mask &= unsafe { *class_masks.get_unchecked(f * e + idx[s] as usize) };
+                }
+            }
+            for (s, &mask) in masks[..nt].iter().enumerate() {
+                let row = &mut out[s * m..(s + 1) * m];
+                for (c, o) in row.iter_mut().enumerate() {
+                    *o += ((mask >> c) & 1) as i32;
+                }
+            }
+        }
+    }
+}
+
+/// 256-bit AVX2 tier. All loads/stores unaligned; the class-mask probe
+/// uses `vpgatherdd` (in-bounds because every hash param is masked to
+/// `ob` bits at both `.uln` load and H3 construction, so indices are
+/// `< e`).
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::SubmodelTileArgs;
+    use core::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must have verified AVX2 support
+    /// (`is_x86_feature_detected!("avx2")`).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn run(a: SubmodelTileArgs<'_>) {
+        let SubmodelTileArgs {
+            slices,
+            nt,
+            m,
+            e,
+            nf,
+            k,
+            ob,
+            csr_off,
+            csr_filter,
+            csr_params,
+            class_masks,
+            hash_slices,
+            idx: _,
+            masks,
+            out,
+        } = a;
+        // gather offsets are signed 32-bit; anything close to 2^31
+        // entries per filter could never have been compiled anyway
+        debug_assert!(e <= 1 << 30);
+        let ones64 = _mm256_set1_epi64x(1);
+        let ones32 = _mm256_set1_epi32(1);
+        let lane = _mm256_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7);
+        // Phase 1 — broadcast the slice word, test 4 param bits per op
+        // and XOR under the compare masks; scalar tail for ob % 4.
+        for (src, &w) in slices.iter().enumerate() {
+            if w == 0 {
+                continue;
+            }
+            let wv = _mm256_set1_epi64x(w as i64);
+            let lo = *csr_off.get_unchecked(src) as usize;
+            let hi = *csr_off.get_unchecked(src + 1) as usize;
+            for t in lo..hi {
+                let f = *csr_filter.get_unchecked(t) as usize;
+                let base = f * k * ob;
+                let pbase = t * k;
+                for j in 0..k {
+                    let p = *csr_params.get_unchecked(pbase + j);
+                    if p == 0 {
+                        continue;
+                    }
+                    let pv = _mm256_set1_epi64x(p as i64);
+                    let hb = base + j * ob;
+                    let mut b = 0usize;
+                    while b + 4 <= ob {
+                        let sh = _mm256_setr_epi64x(
+                            b as i64,
+                            b as i64 + 1,
+                            b as i64 + 2,
+                            b as i64 + 3,
+                        );
+                        let bits = _mm256_and_si256(_mm256_srlv_epi64(pv, sh), ones64);
+                        let sel = _mm256_cmpeq_epi64(bits, ones64);
+                        let ptr = hash_slices.as_mut_ptr().add(hb + b) as *mut __m256i;
+                        let cur = _mm256_loadu_si256(ptr);
+                        _mm256_storeu_si256(
+                            ptr,
+                            _mm256_xor_si256(cur, _mm256_and_si256(wv, sel)),
+                        );
+                        b += 4;
+                    }
+                    let mut pt = p >> b;
+                    while pt != 0 {
+                        let bb = pt.trailing_zeros() as usize;
+                        pt &= pt - 1;
+                        *hash_slices.get_unchecked_mut(hb + b + bb) ^= w;
+                    }
+                }
+            }
+        }
+        // Phases 2+3 — 8 samples per op: rebuild indices plane-by-plane
+        // (broadcast the plane's relevant byte window, per-lane shift,
+        // mask, OR into position), gather the class masks, fold; then
+        // scatter each sample's mask 8 classes per op.
+        for f in 0..nf {
+            masks[..nt].fill(u32::MAX);
+            let table = class_masks.as_ptr().add(f * e) as *const i32;
+            for j in 0..k {
+                let hb = (f * k + j) * ob;
+                let mut s0 = 0usize;
+                while s0 + 8 <= nt {
+                    let mut iv = _mm256_setzero_si256();
+                    for b in 0..ob {
+                        let pw = *hash_slices.get_unchecked(hb + b);
+                        // lanes 0..7 ← bits s0..s0+7 of the plane word
+                        let lo32 = _mm256_set1_epi32((pw >> s0) as u32 as i32);
+                        let bits = _mm256_and_si256(_mm256_srlv_epi32(lo32, lane), ones32);
+                        iv = _mm256_or_si256(
+                            iv,
+                            _mm256_sll_epi32(bits, _mm_cvtsi32_si128(b as i32)),
+                        );
+                    }
+                    let gathered = _mm256_i32gather_epi32::<4>(table, iv);
+                    let mptr = masks.as_mut_ptr().add(s0) as *mut __m256i;
+                    _mm256_storeu_si256(
+                        mptr,
+                        _mm256_and_si256(_mm256_loadu_si256(mptr), gathered),
+                    );
+                    s0 += 8;
+                }
+                for s in s0..nt {
+                    let mut iw = 0usize;
+                    for b in 0..ob {
+                        iw |= (((*hash_slices.get_unchecked(hb + b) >> s) & 1) as usize) << b;
+                    }
+                    *masks.get_unchecked_mut(s) &= *class_masks.get_unchecked(f * e + iw);
+                }
+            }
+            for s in 0..nt {
+                let mask = *masks.get_unchecked(s);
+                let mv = _mm256_set1_epi32(mask as i32);
+                let row = out.as_mut_ptr().add(s * m);
+                let mut c = 0usize;
+                while c + 8 <= m {
+                    let sh = _mm256_add_epi32(lane, _mm256_set1_epi32(c as i32));
+                    let bits = _mm256_and_si256(_mm256_srlv_epi32(mv, sh), ones32);
+                    let ptr = row.add(c) as *mut __m256i;
+                    _mm256_storeu_si256(
+                        ptr,
+                        _mm256_add_epi32(_mm256_loadu_si256(ptr), bits),
+                    );
+                    c += 8;
+                }
+                while c < m {
+                    *row.add(c) += ((mask >> c) & 1) as i32;
+                    c += 1;
+                }
+            }
+        }
+    }
+}
+
+/// 128-bit NEON tier (aarch64). No vector gather exists, so phase 2
+/// stages reassembled indices through the `idx` scratch and probes the
+/// class masks scalar-wise; phases 1 and 3 are fully vectorized.
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::SubmodelTileArgs;
+    use core::arch::aarch64::*;
+
+    /// # Safety
+    /// NEON must be available (it is ABI-baseline on aarch64).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn run(a: SubmodelTileArgs<'_>) {
+        let SubmodelTileArgs {
+            slices,
+            nt,
+            m,
+            e,
+            nf,
+            k,
+            ob,
+            csr_off,
+            csr_filter,
+            csr_params,
+            class_masks,
+            hash_slices,
+            idx,
+            masks,
+            out,
+        } = a;
+        let one32 = vdupq_n_u32(1);
+        // negative vector shifts = right shifts for vshlq
+        let rsh = vld1q_s32([0i32, -1, -2, -3].as_ptr());
+        // Phase 1 — 2 bit-planes per op under all-ones/all-zeros lane
+        // masks built from the param bits.
+        for (src, &w) in slices.iter().enumerate() {
+            if w == 0 {
+                continue;
+            }
+            let wv = vdupq_n_u64(w);
+            let lo = *csr_off.get_unchecked(src) as usize;
+            let hi = *csr_off.get_unchecked(src + 1) as usize;
+            for t in lo..hi {
+                let f = *csr_filter.get_unchecked(t) as usize;
+                let base = f * k * ob;
+                let pbase = t * k;
+                for j in 0..k {
+                    let p = *csr_params.get_unchecked(pbase + j);
+                    if p == 0 {
+                        continue;
+                    }
+                    let hb = base + j * ob;
+                    let mut b = 0usize;
+                    while b + 2 <= ob {
+                        let sel = vcombine_u64(
+                            vcreate_u64(0u64.wrapping_sub((p >> b) & 1)),
+                            vcreate_u64(0u64.wrapping_sub((p >> (b + 1)) & 1)),
+                        );
+                        let ptr = hash_slices.as_mut_ptr().add(hb + b);
+                        let cur = vld1q_u64(ptr);
+                        vst1q_u64(ptr, veorq_u64(cur, vandq_u64(wv, sel)));
+                        b += 2;
+                    }
+                    if b < ob && (p >> b) & 1 == 1 {
+                        *hash_slices.get_unchecked_mut(hb + b) ^= w;
+                    }
+                }
+            }
+        }
+        // Phases 2+3 — 4 samples per op into the `idx` staging buffer,
+        // scalar class-mask probe, then a 4-classes-per-op scatter.
+        for f in 0..nf {
+            masks[..nt].fill(u32::MAX);
+            for j in 0..k {
+                let hb = (f * k + j) * ob;
+                let mut s0 = 0usize;
+                while s0 + 4 <= nt {
+                    let mut iv = vdupq_n_u32(0);
+                    for b in 0..ob {
+                        let pw = *hash_slices.get_unchecked(hb + b);
+                        let lo32 = vdupq_n_u32((pw >> s0) as u32);
+                        let bits = vandq_u32(vshlq_u32(lo32, rsh), one32);
+                        iv = vorrq_u32(iv, vshlq_u32(bits, vdupq_n_s32(b as i32)));
+                    }
+                    vst1q_u32(idx.as_mut_ptr().add(s0), iv);
+                    s0 += 4;
+                }
+                for s in s0..nt {
+                    let mut iw = 0u32;
+                    for b in 0..ob {
+                        iw |= (((*hash_slices.get_unchecked(hb + b) >> s) & 1) as u32) << b;
+                    }
+                    *idx.get_unchecked_mut(s) = iw;
+                }
+                for s in 0..nt {
+                    *masks.get_unchecked_mut(s) &= *class_masks
+                        .get_unchecked(f * e + *idx.get_unchecked(s) as usize);
+                }
+            }
+            for s in 0..nt {
+                let mask = *masks.get_unchecked(s);
+                let mv = vdupq_n_u32(mask);
+                let row = out.as_mut_ptr().add(s * m);
+                let mut c = 0usize;
+                while c + 4 <= m {
+                    let sh = vld1q_s32(
+                        [-(c as i32), -(c as i32 + 1), -(c as i32 + 2), -(c as i32 + 3)]
+                            .as_ptr(),
+                    );
+                    let bits = vandq_u32(vshlq_u32(mv, sh), one32);
+                    let cur = vld1q_s32(row.add(c));
+                    vst1q_s32(row.add(c), vaddq_s32(cur, vreinterpretq_s32_u32(bits)));
+                    c += 4;
+                }
+                while c < m {
+                    *row.add(c) += ((mask >> c) & 1) as i32;
+                    c += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_label_roundtrip() {
+        for p in [KernelPath::Scalar, KernelPath::Avx2, KernelPath::Neon] {
+            assert_eq!(KernelPath::parse(p.label()), Some(p));
+        }
+        assert_eq!(KernelPath::parse(" AVX2 "), Some(KernelPath::Avx2));
+        assert_eq!(KernelPath::parse("auto"), None);
+        assert_eq!(KernelPath::parse("sse9"), None);
+    }
+
+    #[test]
+    fn detection_yields_a_supported_path_and_or_scalar_never_lies() {
+        assert!(KernelPath::detect().is_supported());
+        assert!(KernelPath::resolve().is_supported());
+        for p in [KernelPath::Scalar, KernelPath::Avx2, KernelPath::Neon] {
+            assert!(p.or_scalar().is_supported());
+            if p.is_supported() {
+                assert_eq!(p.or_scalar(), p);
+            } else {
+                assert_eq!(p.or_scalar(), KernelPath::Scalar);
+            }
+        }
+        let all = KernelPath::all_supported();
+        assert!(all.contains(&KernelPath::Scalar));
+        assert!(all.contains(&KernelPath::detect()));
+    }
+
+    /// Tiny deterministic LCG so the synthetic-kernel conformance cases
+    /// below don't depend on any dataset or trainer.
+    struct Lcg(u64);
+    impl Lcg {
+        fn next(&mut self) -> u64 {
+            self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            self.0
+        }
+    }
+
+    /// Build a random-but-valid synthetic submodel shape and assert
+    /// every host-supported path produces responses bit-identical to
+    /// scalar — directly at the kernel ABI, no model required. Shapes
+    /// chosen to hit every vector width's main loop AND its tail
+    /// (ob % 4, nt % 8, m % 8 all nonzero in at least one case).
+    #[test]
+    fn every_supported_path_matches_scalar_on_synthetic_kernels() {
+        for (seed, nf, ob, k, nt, m, total_bits) in [
+            (1u64, 3usize, 4usize, 2usize, 64usize, 8usize, 24usize),
+            (2, 2, 5, 3, 64, 10, 16),
+            (3, 4, 7, 1, 37, 32, 40),
+            (4, 1, 3, 2, 5, 3, 8),
+            (5, 5, 6, 2, 63, 11, 33),
+        ] {
+            let e = 1usize << ob;
+            let mut rng = Lcg(seed);
+            // CSR: every (filter, slot) pair reads a rotating source bit
+            let slots_per_filter = 3usize;
+            let mut per_src: Vec<Vec<usize>> = vec![Vec::new(); total_bits];
+            for f in 0..nf {
+                for i in 0..slots_per_filter {
+                    per_src[(f * slots_per_filter + i * 7) % total_bits].push(f);
+                }
+            }
+            let mut csr_off = vec![0u32];
+            let mut csr_filter = Vec::new();
+            let mut csr_params = Vec::new();
+            for fs in &per_src {
+                for &f in fs {
+                    csr_filter.push(f as u32);
+                    for _ in 0..k {
+                        // params masked to ob bits, like real H3 params
+                        csr_params.push(rng.next() & ((1u64 << ob) - 1));
+                    }
+                }
+            }
+            csr_off.extend((1..=total_bits).map(|s| {
+                per_src[..s].iter().map(|v| v.len() as u32).sum::<u32>()
+            }));
+            let class_masks: Vec<u32> =
+                (0..nf * e).map(|_| rng.next() as u32).collect();
+            let slices: Vec<u64> = (0..total_bits)
+                .map(|_| {
+                    let w = rng.next();
+                    if nt == 64 { w } else { w & ((1u64 << nt) - 1) }
+                })
+                .collect();
+
+            let run_path = |path: KernelPath| -> Vec<i32> {
+                let mut hash_slices = vec![0u64; nf * k * ob];
+                let mut idx = vec![0u32; nt];
+                let mut masks = vec![0u32; nt];
+                let mut out = vec![0i32; nt * m];
+                submodel_tile_kernel(
+                    path,
+                    SubmodelTileArgs {
+                        slices: &slices,
+                        nt,
+                        m,
+                        e,
+                        nf,
+                        k,
+                        ob,
+                        csr_off: &csr_off,
+                        csr_filter: &csr_filter,
+                        csr_params: &csr_params,
+                        class_masks: &class_masks,
+                        hash_slices: &mut hash_slices,
+                        idx: &mut idx,
+                        masks: &mut masks,
+                        out: &mut out,
+                    },
+                );
+                out
+            };
+
+            let want = run_path(KernelPath::Scalar);
+            for path in KernelPath::all_supported() {
+                assert_eq!(
+                    run_path(path),
+                    want,
+                    "seed {seed}: {} diverges from scalar",
+                    path.label()
+                );
+            }
+        }
+    }
+}

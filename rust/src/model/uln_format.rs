@@ -24,7 +24,8 @@
 //! **Hostile input:** the checksum only catches *accidental* corruption
 //! — an adversarial author forges a valid checksum trivially, so the
 //! parser itself must stay safe. Every count field is bounded before it
-//! sizes an allocation (`k_hashes ≤ 16`, `num_classes ≤ 4096`,
+//! sizes an allocation (`k_hashes ≤ 16`, `num_classes ≤ 4096` for
+//! plausibility and ≤ 32 for the flat engine's u32 class-mask capacity,
 //! `entries_per_filter ≤ 2^24`, encoder dims ≤ 2^26 bits), and every
 //! large buffer is preceded by a remaining-byte check
 //! ([`Reader::need`]) so a forged header can never make `load` allocate
@@ -228,6 +229,16 @@ pub fn from_bytes(bytes: &[u8], name: &str) -> Result<(UleenModel, Json)> {
         if num_classes == 0 || num_classes > 4096 {
             bail!("submodel {si}: implausible class count {num_classes}");
         }
+        // Distinct from the plausibility bound above: the flat engine packs
+        // one bit per class into u32 class-mask planes, so every serving
+        // path tops out at 32 classes. Reject at load time — not deep in
+        // `FlatModel` compile — so a bad artifact fails before allocation.
+        if num_classes > 32 {
+            bail!(
+                "submodel {si}: {num_classes} classes exceed the 32-class capacity \
+                 of the flat engine's u32 class-mask planes"
+            );
+        }
         let cfg = SubmodelConfig {
             inputs_per_filter,
             entries_per_filter,
@@ -393,6 +404,28 @@ mod tests {
             let sample: Vec<f32> = (0..8).map(|_| rng.below(97) as f32).collect();
             assert_eq!(m.predict(&sample, &mut s1), back.predict(&sample, &mut s2));
         }
+    }
+
+    #[test]
+    fn a_33_class_artifact_is_rejected_at_load_time() {
+        // Build a structurally valid 33-class model — within the 4096
+        // plausibility bound but past the flat engine's u32 class-mask
+        // capacity — and assert the loader names the real limit.
+        let data: Vec<f32> = (0..400).map(|i| (i % 97) as f32).collect();
+        let encoder = ThermometerEncoder::fit(ThermometerKind::Gaussian, &data, 8, 4);
+        let mut rng = Rng::new(23);
+        let cfg = SubmodelConfig {
+            inputs_per_filter: 8,
+            entries_per_filter: 32,
+            k_hashes: 2,
+            num_classes: 33,
+            total_input_bits: 32,
+        };
+        let sm = Submodel::new_random(&mut rng, cfg);
+        let m = UleenModel { name: "too-wide".into(), encoder, submodels: vec![sm] };
+        let bytes = to_bytes(&m, &Json::obj());
+        let err = from_bytes(&bytes, "x").unwrap_err().to_string();
+        assert!(err.contains("32-class capacity"), "got: {err}");
     }
 
     #[test]

@@ -72,6 +72,21 @@ impl SharedModel {
         Self { model: Arc::new(model), flat }
     }
 
+    /// [`SharedModel::compile`] with a forced SIMD dispatch tier — the
+    /// testing override the SIMD≡scalar conformance proptests drive
+    /// whole engines through (an unsupported path clamps to scalar,
+    /// exactly like `FlatModel::compile_with_kernel`).
+    pub fn compile_with_kernel(model: UleenModel, kernel: crate::model::simd::KernelPath) -> Self {
+        let flat =
+            Arc::new(crate::model::flat::FlatModel::compile_with_kernel(&model, kernel));
+        Self { model: Arc::new(model), flat }
+    }
+
+    /// The compiled tile kernel's SIMD dispatch tier.
+    pub fn kernel_path(&self) -> crate::model::simd::KernelPath {
+        self.flat.kernel_path()
+    }
+
     pub fn model(&self) -> &Arc<UleenModel> {
         &self.model
     }
@@ -162,6 +177,14 @@ pub trait InferenceEngine: Send {
     /// tier-blind engines.
     fn num_tiers(&self) -> usize {
         0
+    }
+
+    /// The SIMD dispatch tier of the engine's compiled tile kernel
+    /// (`"avx2"` / `"neon"` / `"scalar"`), surfaced in `/metrics` as
+    /// `kernel_path` so a silently-degraded dispatch is observable.
+    /// Engines not built on the flat native kernel report `"n/a"`.
+    fn kernel_path(&self) -> &'static str {
+        "n/a"
     }
 
     /// Tier-routed batch classification into `out[..n]` — what the
@@ -307,6 +330,10 @@ impl InferenceEngine for NativeEngine {
 
     fn num_classes(&self) -> usize {
         self.model().num_classes()
+    }
+
+    fn kernel_path(&self) -> &'static str {
+        self.shared.kernel_path().label()
     }
 
     fn responses_into(&mut self, x: &[f32], n: usize, out: &mut [f32]) -> crate::Result<()> {

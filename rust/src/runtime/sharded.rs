@@ -45,6 +45,18 @@
 //! acknowledged; workers it didn't use stay parked in `recv`. `Drop`
 //! closes the job channels and joins every thread.
 //!
+//! ## Topology
+//!
+//! Pool workers are **pinned to distinct cores** at spawn time
+//! (`sched_setaffinity`, hand-bound — no libc crate offline — behind
+//! `cfg(target_os = "linux")`, a no-op elsewhere): worker `w` goes to
+//! core `w % detected_cores`, so each shard's scratch stays core-local
+//! instead of migrating with the scheduler. Opt out with the
+//! `ULEEN_NO_PIN` env var (set to anything); `workers_pinned()` on both
+//! engines witnesses how many workers the kernel actually accepted, and
+//! the serve CLI defaults the shard count itself from
+//! `std::thread::available_parallelism` (see `util::detected_cores`).
+//!
 //! ## Failure containment
 //!
 //! Workers wrap every job in `catch_unwind`: a panicking kernel or tier
@@ -136,11 +148,35 @@ enum JobFailure {
     Engine(String),
 }
 
+/// Pin the calling thread to one CPU. Linux-only: glibc's
+/// `sched_setaffinity` is declared by hand (the offline environment has
+/// no `libc` crate; std already links glibc, so the symbol resolves at
+/// link time). `pid` 0 = the calling thread; the mask is `cpu_set_t`-
+/// sized (1024 bits). Returns whether the kernel accepted the mask —
+/// failure (e.g. a cgroup cpuset excluding the target core) is benign:
+/// the worker just runs unpinned.
+#[cfg(target_os = "linux")]
+fn pin_current_thread(cpu: usize) -> bool {
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    let mut mask = [0u64; 16]; // 1024 CPUs, matching glibc's cpu_set_t
+    let cpu = cpu % 1024;
+    mask[cpu / 64] |= 1u64 << (cpu % 64);
+    // SAFETY: the mask outlives the call and the size matches the buffer.
+    unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0 }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pin_current_thread(_cpu: usize) -> bool {
+    false
+}
+
 /// The persistent worker pool both sharded engines run on: one job
 /// channel per worker, one shared completion channel, threads spawned
 /// once and joined on drop. Dispatch is engine-specific (each engine
-/// builds its own jobs); the pool owns delivery, failure containment and
-/// the ack rendezvous.
+/// builds its own jobs); the pool owns delivery, failure containment,
+/// the ack rendezvous, and worker→core pinning.
 struct ShardPool {
     /// job channel per worker, index-aligned with `handles`
     job_txs: Vec<Sender<Job>>,
@@ -149,13 +185,22 @@ struct ShardPool {
     done_rx: Receiver<Result<(), JobFailure>>,
     /// total threads ever spawned by this pool (pool-liveness witness)
     spawned: Arc<AtomicUsize>,
+    /// workers whose `sched_setaffinity` the kernel accepted (topology
+    /// witness: 0 on non-Linux, under `ULEEN_NO_PIN`, or in restrictive
+    /// cpusets)
+    pinned: Arc<AtomicUsize>,
 }
 
 impl ShardPool {
     /// Spawn `shards` worker threads (the caller clamps to ≥ 1), parked
-    /// on their job channels until the first dispatch.
+    /// on their job channels until the first dispatch. Each worker pins
+    /// itself to core `w % detected_cores` before first recv (skipped
+    /// when `ULEEN_NO_PIN` is set), keeping shard scratch core-local.
     fn spawn(shards: usize) -> Self {
         let spawned = Arc::new(AtomicUsize::new(0));
+        let pinned = Arc::new(AtomicUsize::new(0));
+        let want_pin = std::env::var_os("ULEEN_NO_PIN").is_none();
+        let cores = crate::util::detected_cores();
         let (done_tx, done_rx) = channel();
         let mut job_txs = Vec::with_capacity(shards);
         let mut handles = Vec::with_capacity(shards);
@@ -163,21 +208,29 @@ impl ShardPool {
             let (tx, rx) = channel::<Job>();
             let done = done_tx.clone();
             let spawned = spawned.clone();
+            let pinned = pinned.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("uleen-shard-{w}"))
                 .spawn(move || {
                     spawned.fetch_add(1, Ordering::SeqCst);
+                    if want_pin && pin_current_thread(w % cores) {
+                        pinned.fetch_add(1, Ordering::SeqCst);
+                    }
                     worker_loop(&rx, &done);
                 })
                 .expect("failed to spawn shard worker");
             job_txs.push(tx);
             handles.push(handle);
         }
-        Self { job_txs, handles, done_rx, spawned }
+        Self { job_txs, handles, done_rx, spawned, pinned }
     }
 
     fn threads_spawned(&self) -> usize {
         self.spawned.load(Ordering::SeqCst)
+    }
+
+    fn workers_pinned(&self) -> usize {
+        self.pinned.load(Ordering::SeqCst)
     }
 
     /// Send job `i` to worker `i`, then block until every job is
@@ -374,6 +427,12 @@ impl ShardedEngine {
         self.pool.threads_spawned()
     }
 
+    /// Workers the kernel accepted a core-affinity mask for (0 on
+    /// non-Linux or under `ULEEN_NO_PIN`).
+    pub fn workers_pinned(&self) -> usize {
+        self.pool.workers_pinned()
+    }
+
     /// Replace the served model in place (recompiles the flat layout).
     /// The pool is untouched: workers hold no model state — each job
     /// carries its model/encoder pointers, and worker scratch reshapes to
@@ -404,6 +463,10 @@ impl InferenceEngine for ShardedEngine {
 
     fn num_classes(&self) -> usize {
         self.model().num_classes()
+    }
+
+    fn kernel_path(&self) -> &'static str {
+        self.shared.kernel_path().label()
     }
 
     fn responses_into(&mut self, x: &[f32], n: usize, out: &mut [f32]) -> crate::Result<()> {
@@ -588,6 +651,12 @@ impl ShardedRouterEngine {
         self.pool.threads_spawned()
     }
 
+    /// Workers the kernel accepted a core-affinity mask for, same
+    /// contract as [`ShardedEngine::workers_pinned`].
+    pub fn workers_pinned(&self) -> usize {
+        self.pool.workers_pinned()
+    }
+
     /// The `Arc`-shared tiers (empty for
     /// [`ShardedRouterEngine::from_routers`]-built engines).
     pub fn tiers(&self) -> &[SharedModel] {
@@ -770,6 +839,16 @@ impl InferenceEngine for ShardedRouterEngine {
 
     fn num_tiers(&self) -> usize {
         self.routers[0].num_tiers()
+    }
+
+    fn kernel_path(&self) -> &'static str {
+        // every tier compiles under the same dispatch decision, so the
+        // first shared tier speaks for the zoo ("n/a" for the
+        // from_routers test path, which holds no shared tiers)
+        self.tiers
+            .first()
+            .map(|t| t.kernel_path().label())
+            .unwrap_or("n/a")
     }
 
     /// Sharded batched-cascade responses: each row carries the scores of

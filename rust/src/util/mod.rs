@@ -29,6 +29,14 @@ pub fn argmax_tie_low<T: PartialOrd>(xs: &[T]) -> usize {
     best
 }
 
+/// Detected logical core count (`std::thread::available_parallelism`),
+/// clamped to 1 where detection is unsupported. The topology default
+/// for shard pools, HTTP handler pools and worker pinning — callers
+/// that want a different size pass it explicitly.
+pub fn detected_cores() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
 #[cfg(test)]
 mod tests {
     use super::argmax_tie_low;
@@ -41,6 +49,11 @@ mod tests {
         assert_eq!(argmax_tie_low(&[-3i32, -1, -2]), 1);
         assert_eq!(argmax_tie_low::<i32>(&[]), 0, "empty defaults to 0");
         assert_eq!(argmax_tie_low(&[4.0f32]), 0);
+    }
+
+    #[test]
+    fn detected_cores_is_at_least_one() {
+        assert!(super::detected_cores() >= 1);
     }
 
     #[test]

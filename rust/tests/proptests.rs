@@ -686,6 +686,114 @@ fn prop_into_matches_vec() {
     );
 }
 
+/// SIMD dispatch conformance: every kernel path the host CPU supports
+/// (AVX2 on x86_64, NEON on aarch64 — `KernelPath::all_supported`
+/// always includes Scalar) must produce BIT-EXACT responses and
+/// predictions against the forced-scalar kernel. Dispatch is resolved
+/// once at compile time and carried by the model, so forcing it through
+/// `FlatModel::compile_with_kernel` / `SharedModel::compile_with_kernel`
+/// exercises the real per-tile dispatch in `responses_tile_slices`, not
+/// a test-only shim. Random model shapes (both threshold kinds, entry
+/// counts crossing the gather-table sizes, k 1–3), half the models
+/// pruned (all-zero slots + bias correction), dead-tie rows half the
+/// time (argmax on equal responses), and batches 1/63/64/65/257 so every
+/// vector-width tail in all three phases (4/8-lane x86, 2/4-lane NEON)
+/// is hit on both full and partial tiles.
+#[test]
+fn prop_simd_kernel_paths_match_scalar_bit_exactly() {
+    use uleen::model::simd::KernelPath;
+    use uleen::runtime::SharedModel;
+    let mut case_no = 0usize;
+    check(
+        "simd-vs-scalar-exact",
+        &Config { cases: 6, ..Config::default() },
+        move |rng, _size| {
+            let i = case_no;
+            case_no += 1;
+            let cfg = OneShotConfig {
+                inputs_per_filter: 4 + rng.below(16) as usize,
+                entries_per_filter: 1 << (4 + rng.below(5)),
+                k_hashes: 1 + rng.below(3) as usize,
+                therm_bits: 1 + rng.below(6) as usize,
+                therm_kind: if rng.below(2) == 0 {
+                    ThermometerKind::Linear
+                } else {
+                    ThermometerKind::Gaussian
+                },
+                val_fraction: 0.1,
+                seed: rng.next_u64(),
+            };
+            let prune = if rng.below(2) == 0 { 0.0 } else { 0.3 };
+            let tie_rows = rng.below(2) == 0;
+            // deterministic batch cycle so the default case budget hits
+            // every tile/vector-tail geometry at least once
+            let n = [1usize, 63, 64, 65, 257][i % 5];
+            (cfg, prune, tie_rows, n)
+        },
+        |(cfg, prune, tie_rows, n)| {
+            let ds = synth_uci(23, uci_spec("vowel").unwrap());
+            let (mut model, _) = train_oneshot(&ds, cfg);
+            if *prune > 0.0 {
+                uleen::train::prune::prune_model(&mut model, &ds, *prune);
+            }
+            let f = ds.num_features;
+            let n = *n;
+            // cycle test rows so batch 257 exists regardless of split size
+            let mut x: Vec<f32> = Vec::with_capacity(n * f);
+            for i in 0..n {
+                x.extend_from_slice(ds.test_row(i % ds.n_test()));
+            }
+            if *tie_rows {
+                // constant rows encode identically → equal responses, so
+                // any path-dependent accumulation order would flip argmax
+                for v in x.iter_mut().take(n * f / 2) {
+                    *v = 0.0;
+                }
+            }
+            let scalar = FlatModel::compile_with_kernel(&model, KernelPath::Scalar);
+            let m = scalar.num_classes;
+            let mut want = vec![0i32; n * m];
+            let mut bs = FlatBatchScratch::default();
+            scalar.responses_batch_fused(&model.encoder, &x, n, &mut bs, &mut want);
+            let want_pred: Vec<usize> =
+                (0..n).map(|i| argmax_tie_low(&want[i * m..(i + 1) * m])).collect();
+            for path in KernelPath::all_supported() {
+                let forced = FlatModel::compile_with_kernel(&model, path);
+                if forced.kernel_path() != path {
+                    return Err(format!("{} did not stick at compile", path.label()));
+                }
+                let mut got = vec![0i32; n * m];
+                let mut fbs = FlatBatchScratch::default();
+                forced.responses_batch_fused(&model.encoder, &x, n, &mut fbs, &mut got);
+                if got != want {
+                    let at = got.iter().zip(&want).position(|(a, b)| a != b).unwrap();
+                    return Err(format!(
+                        "{} response[{at}] = {} != scalar {} (n={n}, prune={prune})",
+                        path.label(),
+                        got[at],
+                        want[at]
+                    ));
+                }
+                // whole engines built over a forced-kernel SharedModel:
+                // dispatch is model-resident, so it must ride through the
+                // engine layers (single-threaded and pooled) unchanged
+                let shared = SharedModel::compile_with_kernel(model.clone(), path);
+                let mut native = NativeEngine::from_shared(shared.clone());
+                let p_native = native.classify(&x, n).map_err(|e| e.to_string())?;
+                if p_native != want_pred {
+                    return Err(format!("{}: NativeEngine != scalar (n={n})", path.label()));
+                }
+                let mut sharded = ShardedEngine::from_shared(shared, 3);
+                let p_sharded = sharded.classify(&x, n).map_err(|e| e.to_string())?;
+                if p_sharded != want_pred {
+                    return Err(format!("{}: ShardedEngine != scalar (n={n})", path.label()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_response_bounded_by_kept_filters() {
     // 0 - bias ≤ response ≤ kept_filters + bias for every input
