@@ -61,7 +61,7 @@ fn serve_on(
     let window = 256usize;
     macro_rules! recv_one {
         () => {{
-            let (id, p, _) = rx.recv_timeout(Duration::from_secs(60))?;
+            let (id, p) = rx.recv_timeout(Duration::from_secs(60))?;
             let idx = id2idx[&id];
             preds[idx] = p;
             if p == ds.test_y[idx % n_test] as usize {
@@ -71,9 +71,10 @@ fn serve_on(
         }};
     }
     for i in 0..requests {
-        let row = ds.test_row(i % n_test).to_vec();
+        // Borrowed row: submit copies it straight into its arena slot.
+        let row = ds.test_row(i % n_test);
         loop {
-            match server.submit(row.clone(), tx.clone()) {
+            match server.submit(row, tx.clone()) {
                 Ok(id) => {
                     id2idx.insert(id, i);
                     submitted += 1;
@@ -164,7 +165,7 @@ fn serve_zoo(
     let tiers = [Tier::Fast, Tier::Balanced, Tier::Accurate];
     macro_rules! recv_one {
         () => {{
-            let (id, p, _) = rx.recv_timeout(Duration::from_secs(60))?;
+            let (id, p) = rx.recv_timeout(Duration::from_secs(60))?;
             let want = id2want[&id];
             anyhow::ensure!(
                 p == want,
@@ -182,7 +183,7 @@ fn serve_zoo(
             (None, cascade_want[row])
         };
         loop {
-            match server.submit_tiered(ds.test_row(row).to_vec(), tier, tx.clone()) {
+            match server.submit_tiered(ds.test_row(row), tier, tx.clone()) {
                 Ok(id) => {
                     id2want.insert(id, want);
                     submitted += 1;
@@ -337,7 +338,11 @@ fn serve_http_loadtest(
     );
     anyhow::ensure!(
         rep.latency_us_p50 > 0.0 && rep.latency_us_p99 >= rep.latency_us_p50,
-        "percentiles must populate from the reservoir"
+        "histogram percentiles must populate"
+    );
+    anyhow::ensure!(
+        rep.latency_us_p50_reservoir > 0.0,
+        "the reservoir cross-check must populate alongside the histogram"
     );
     frontend.shutdown();
     Arc::try_unwrap(server).ok().expect("server handle leaked").shutdown();
@@ -430,6 +435,8 @@ fn serve_http_loadtest(
         .set("http_rps", Json::Num(http_rps))
         .set("latency_us_p50", Json::Num(rep.latency_us_p50))
         .set("latency_us_p99", Json::Num(rep.latency_us_p99))
+        .set("latency_us_p50_reservoir", Json::Num(rep.latency_us_p50_reservoir))
+        .set("latency_us_p99_reservoir", Json::Num(rep.latency_us_p99_reservoir))
         .set("reservoir_kept", Json::Num(kept as f64))
         .set("reservoir_seen", Json::Num(seen as f64))
         .set("reservoir_cap", Json::Num(LATENCY_RESERVOIR_CAP as f64))

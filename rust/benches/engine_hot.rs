@@ -312,6 +312,82 @@ fn main() -> anyhow::Result<()> {
         None
     };
 
+    // == request-plane alloc gate: submit→complete through the Server ==
+    // The PR-8 contract on top of the engine gate above: one request
+    // costs ZERO steady-state heap allocations on the caller thread —
+    // features copy straight into their slab arena slot, the ring
+    // batcher reuses per-worker buffers, and completions ride the slim
+    // (id, pred) tuple. Counted per-thread, so the worker-side mpsc
+    // node alloc (the documented std-channel exception) cannot mask a
+    // caller-side regression — and vice versa.
+    #[cfg(feature = "alloc-witness")]
+    let allocs_per_request: Option<f64> = {
+        use uleen::util::alloc_witness::Witness;
+        println!("\n== request-plane alloc gate: submit→complete, waves of {bs} ==");
+        let mq = model.clone();
+        let srv = Server::start(
+            ServerConfig {
+                batcher: BatcherConfig {
+                    max_batch: 64,
+                    max_wait: std::time::Duration::from_micros(200),
+                    capacity: 4096,
+                },
+                workers: 1,
+            },
+            move |_| Ok(Box::new(NativeEngine::new(mq.clone())) as Box<dyn InferenceEngine>),
+        )?;
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut wave = |witnessed: bool| -> anyhow::Result<u64> {
+            let w = witnessed.then(Witness::begin);
+            for i in 0..bs {
+                loop {
+                    match srv.submit(ds.test_row(i), tx.clone()) {
+                        Ok(_) => break,
+                        Err(uleen::coordinator::batcher::SubmitError::Full) => {
+                            std::thread::sleep(std::time::Duration::from_micros(20))
+                        }
+                        Err(e) => anyhow::bail!("submit: {e:?}"),
+                    }
+                }
+            }
+            for _ in 0..bs {
+                let (_id, p) = rx.recv_timeout(std::time::Duration::from_secs(10))?;
+                std::hint::black_box(p);
+            }
+            Ok(w.map(|w| w.allocations()).unwrap_or(0))
+        };
+        // Warm waves: the first Sender clone upgrades the channel flavor
+        // and every reusable buffer reaches its high-water mark.
+        for _ in 0..3 {
+            wave(false)?;
+        }
+        let gate_waves = 4u64;
+        let mut allocs = 0u64;
+        for _ in 0..gate_waves {
+            allocs += wave(true)?;
+        }
+        let per_request = allocs as f64 / (gate_waves * bs as u64) as f64;
+        println!(
+            "acceptance: {per_request:.4} allocs/request over {} requests (target = 0) {}",
+            gate_waves * bs as u64,
+            if allocs == 0 { "✓" } else { "✗ ALLOCATION REGRESSION" }
+        );
+        assert_eq!(
+            allocs, 0,
+            "steady-state allocations crept back into the submit→complete request plane"
+        );
+        srv.shutdown();
+        Some(per_request)
+    };
+    #[cfg(not(feature = "alloc-witness"))]
+    let allocs_per_request: Option<f64> = {
+        println!(
+            "(skip request-plane alloc gate: rebuild with --features alloc-witness \
+             to count allocs/request through the serving plane)"
+        );
+        None
+    };
+
     // == shard sweep: the fused kernel fanned across the persistent pool ==
     println!("\n== shard sweep: ShardedEngine.classify, batch 1024 ==");
     let bs = 1024usize.min(ds.n_test());
@@ -599,6 +675,11 @@ fn main() -> anyhow::Result<()> {
         // in-bench, so a serialized value records that the gate RAN
         if let Some(apb) = allocs_per_batch {
             doc.set("allocs_per_batch_native_b256", Json::Num(apb));
+        }
+        // present iff built with --features alloc-witness; asserted == 0
+        // in-bench (caller-thread submit→complete waves at batch 256)
+        if let Some(apr) = allocs_per_request {
+            doc.set("allocs_per_request", Json::Num(apr));
         }
         let mut cascade = Json::obj();
         cascade

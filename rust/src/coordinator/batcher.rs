@@ -1,57 +1,98 @@
-//! Bounded request queue + dynamic micro-batcher.
+//! Bounded request queue + dynamic micro-batcher over a slab feature arena.
 //!
-//! Requests enter through [`BoundedQueue::submit`] (non-blocking reject on
-//! overflow = explicit backpressure) and leave in batches via
-//! [`BoundedQueue::next_batch`]: a worker takes up to `max_batch` requests,
-//! waiting at most `max_wait` after the first request arrives — the classic
-//! size-or-deadline batching rule the paper's fixed-batch accelerator
-//! implies for real deployments.
+//! Requests enter through [`BoundedQueue::submit_row`] (non-blocking reject
+//! on overflow = explicit backpressure) and leave in batches via
+//! [`BoundedQueue::next_batch_into`]: a worker takes up to `max_batch`
+//! requests, waiting at most `max_wait` after the first request arrives —
+//! the classic size-or-deadline batching rule the paper's fixed-batch
+//! accelerator implies for real deployments.
 //!
 //! Requests optionally carry a [`Tier`] (zoo serving): a batch is always
-//! **tier-homogeneous** — `next_batch` takes the longest same-tier prefix
+//! **tier-homogeneous** — the batcher takes the longest same-tier prefix
 //! of the queue, so a worker can dispatch the whole micro-batch as one
 //! tier-pinned (`Some(tier)`) or cascade (`None`) engine call. FIFO order
 //! is preserved; mixed traffic simply splits at tier boundaries.
 //!
-//! ## Shutdown-race audit (PR 6)
+//! ## The zero-allocation request plane (PR 8)
 //!
-//! The close/submit/dwell interleavings were re-audited when the HTTP
-//! front-end moved these paths onto untrusted network input:
+//! Three structures make the queue side of the serving stack free of
+//! steady-state heap traffic, matching the write-into inference plane
+//! underneath it:
+//!
+//! - **Slab feature arena.** Feature rows live in one fixed
+//!   `slots × num_features` f32 slab owned by the queue, managed by a
+//!   free-list. A [`Request`] carries a slot *index*, not a `Vec<f32>`:
+//!   submit pops a slot, copies the caller's row straight into it, and
+//!   enqueues; the worker reads the slot through
+//!   [`BoundedQueue::gather`] and returns it with
+//!   [`BoundedQueue::release`] once the engine call finishes (success
+//!   *or* failure — failed batches must not leak capacity). Slot
+//!   ownership is exclusive by construction: an index is either on the
+//!   free-list (nobody touches it), held by the submitting thread
+//!   (between pop and enqueue), parked in the ring (nobody touches it),
+//!   or held by the consumer that popped its request (until `release`).
+//!   Every handoff goes through the state mutex, so the exclusivity
+//!   carries the needed happens-before edges.
+//! - **Ring-buffer batcher.** The queue itself is a fixed ring of
+//!   `capacity` request cells, filled at submit and drained by
+//!   [`BoundedQueue::next_batch_into`] into a caller-owned, grow-only
+//!   `Vec<Request>` — no per-batch `drain().collect()` allocation. The
+//!   historical [`BoundedQueue::next_batch`] remains as a thin
+//!   allocating wrapper for tests and simple callers.
+//! - **Slim completion tuple.** Completions are `(id, predicted class)`;
+//!   the dead per-completion `Vec<f32>` scores field is gone.
+//!
+//! Wrong-width rows still travel the queue (truncated into their slot,
+//! with the submitted width recorded on the request) so the *dispatcher*
+//! counts them malformed and drops them — submit-time behavior is
+//! byte-compatible with the pre-arena queue, which accepted any width.
+//!
+//! ## Shutdown-race audit (PR 6, re-audited for the ring in PR 8)
 //!
 //! - `close` → `notify_all` wakes EVERY parked consumer; each re-checks
 //!   `closed` under the lock, drains any leftover prefix, and only then
-//!   returns `None` — queued work is never stranded by shutdown.
+//!   returns `false` — queued work is never stranded by shutdown.
 //! - A consumer's dwell wait can wake empty (competing consumer stole the
 //!   prefix); it loops back to park rather than returning an empty batch.
 //! - A tier boundary mid-queue re-notifies (`notify_one`) after a partial
 //!   take, so a second parked consumer picks up the remainder without
 //!   waiting for a fresh submit.
-//! - `submit` after `close` fails with [`SubmitError::Closed`] and hands
-//!   the request back to the caller (the HTTP layer maps it to 503).
-//!
-//! The one real defect found was OUTSIDE this module: the server marked
-//! the metrics wall-clock before `submit` could reject, so a load test
-//! that only ever got 429s still reported nonzero serving wall time. The
-//! fix (mark on accept, in `server.rs`) is covered by
-//! `wall_clock_never_starts_on_rejects_and_never_goes_negative`.
+//! - `submit_row` after `close` fails with [`SubmitError::Closed`] (the
+//!   HTTP layer maps it to 503). The row copy happens *outside* the
+//!   state lock, so a close landing between slot reservation and enqueue
+//!   returns the slot to the free-list before reporting `Closed`.
 
 use crate::runtime::Tier;
-use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::cell::UnsafeCell;
+use std::sync::{mpsc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// One inference request travelling through the coordinator.
+/// One inference request travelling through the coordinator. Features
+/// live in the queue's slab arena; the request carries only the slot
+/// index (private — slot access is brokered by [`BoundedQueue::gather`]).
 #[derive(Debug)]
 pub struct Request {
     pub id: u64,
-    pub features: Vec<f32>,
+    /// Arena slot holding this request's feature row.
+    pub(crate) slot: u32,
+    /// The width the caller actually submitted. The arena slot is exactly
+    /// `num_features` wide, so a mismatch marks the request malformed —
+    /// the dispatcher counts and drops it without an engine call.
+    pub(crate) width: u32,
     /// `Some(tier)` pins the request to one zoo tier; `None` means the
     /// default path (confidence cascade on zoo servers, the single model
     /// otherwise).
     pub tier: Option<Tier>,
     pub enqueued: Instant,
-    /// Completion channel: (request id, predicted class, response scores).
-    pub done: std::sync::mpsc::Sender<(u64, usize, Vec<f32>)>,
+    /// Completion channel: (request id, predicted class).
+    pub done: mpsc::Sender<(u64, usize)>,
+}
+
+impl Request {
+    /// Whether the submitted row width matches the arena width `f`.
+    pub fn is_well_formed(&self, f: usize) -> bool {
+        self.width as usize == f
+    }
 }
 
 /// Why a submit was refused.
@@ -76,23 +117,146 @@ impl Default for BatcherConfig {
     }
 }
 
+/// The fixed feature slab: `slots × width` f32s behind an `UnsafeCell`.
+///
+/// Interior mutability is required because producers write rows while
+/// consumers concurrently read *different* slots. Soundness rests on the
+/// slot-exclusivity invariant documented on the module: at any instant a
+/// slot index is reachable from exactly one place (free-list, one
+/// producer's stack, one ring cell, or one consumer's batch), and every
+/// transfer happens under the queue's state mutex.
+struct FeatureArena {
+    width: usize,
+    slots: usize,
+    data: UnsafeCell<Box<[f32]>>,
+}
+
+// SAFETY: see the slot-exclusivity invariant above — distinct slots are
+// disjoint regions, and a single slot is never accessed from two threads
+// without a mutex handoff in between.
+unsafe impl Sync for FeatureArena {}
+
+impl FeatureArena {
+    fn new(slots: usize, width: usize) -> Self {
+        let data = vec![0.0f32; slots * width].into_boxed_slice();
+        Self { width, slots, data: UnsafeCell::new(data) }
+    }
+
+    /// Copy `row` into `slot`, truncated to the arena width (wrong-width
+    /// rows are tagged via [`Request::width`] and never read back).
+    ///
+    /// SAFETY: caller must hold `slot` exclusively (just popped from the
+    /// free-list, not yet enqueued).
+    unsafe fn write(&self, slot: u32, row: &[f32]) {
+        let n = row.len().min(self.width);
+        let base = (*self.data.get()).as_mut_ptr().add(slot as usize * self.width);
+        std::ptr::copy_nonoverlapping(row.as_ptr(), base, n);
+    }
+
+    /// Borrow `count` consecutive slots starting at `first` as one flat
+    /// row-major slice.
+    ///
+    /// SAFETY: caller must hold all `count` slots exclusively and keep
+    /// them held (un-released) while the returned slice is alive.
+    unsafe fn read_run(&self, first: u32, count: usize) -> &[f32] {
+        let base = (*self.data.get()).as_ptr().add(first as usize * self.width);
+        std::slice::from_raw_parts(base, count * self.width)
+    }
+}
+
+/// Fixed ring of request cells — the `VecDeque` replacement. Capacity is
+/// exact: the queue's admission check guarantees `push` never overflows.
+struct Ring {
+    buf: Box<[Option<Request>]>,
+    head: usize,
+    len: usize,
+}
+
+impl Ring {
+    fn with_capacity(cap: usize) -> Self {
+        let mut buf = Vec::with_capacity(cap.max(1));
+        buf.resize_with(cap.max(1), || None);
+        Self { buf: buf.into_boxed_slice(), head: 0, len: 0 }
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn push(&mut self, r: Request) {
+        debug_assert!(self.len < self.buf.len(), "ring admission check violated");
+        let i = (self.head + self.len) % self.buf.len();
+        self.buf[i] = Some(r);
+        self.len += 1;
+    }
+
+    fn pop(&mut self) -> Option<Request> {
+        if self.len == 0 {
+            return None;
+        }
+        let r = self.buf[self.head].take();
+        self.head = (self.head + 1) % self.buf.len();
+        self.len -= 1;
+        r
+    }
+
+    fn tier_at(&self, i: usize) -> Option<Tier> {
+        debug_assert!(i < self.len);
+        let idx = (self.head + i) % self.buf.len();
+        self.buf[idx].as_ref().and_then(|r| r.tier)
+    }
+}
+
 struct State {
-    queue: VecDeque<Request>,
+    ring: Ring,
+    /// Free arena slot indices (LIFO).
+    free: Vec<u32>,
+    /// Slots popped by in-progress submits that have not pushed into the
+    /// ring yet — counted against capacity so two racing producers cannot
+    /// both pass the admission check and overflow the fixed ring.
+    reserved: usize,
     closed: bool,
 }
 
-/// MPMC bounded queue with condvar wakeups.
+/// MPMC bounded queue with condvar wakeups, backed by the slab arena.
 pub struct BoundedQueue {
     cfg: BatcherConfig,
+    arena: FeatureArena,
     state: Mutex<State>,
     nonempty: Condvar,
 }
 
 impl BoundedQueue {
-    pub fn new(cfg: BatcherConfig) -> Self {
+    /// A queue sized for one consumer: `max_batch` extra arena slots
+    /// cover the single in-flight batch. Servers with several workers
+    /// should use [`BoundedQueue::with_in_flight`].
+    pub fn new(cfg: BatcherConfig, num_features: usize) -> Self {
+        let extra = cfg.max_batch;
+        Self::with_in_flight(cfg, num_features, extra)
+    }
+
+    /// A queue whose arena holds `capacity + in_flight_slots` rows.
+    /// `in_flight_slots` must cover the worst-case number of slots held
+    /// by dispatched-but-unreleased batches (`workers × max_batch`); with
+    /// that bound the arena can never be the binding constraint —
+    /// admission rejects on ring capacity first — so `SubmitError::Full`
+    /// keeps meaning exactly "queue full".
+    pub fn with_in_flight(cfg: BatcherConfig, num_features: usize, in_flight_slots: usize) -> Self {
+        let slots = cfg.capacity + in_flight_slots;
+        let free: Vec<u32> = (0..slots as u32).rev().collect();
         Self {
             cfg,
-            state: Mutex::new(State { queue: VecDeque::new(), closed: false }),
+            arena: FeatureArena::new(slots, num_features),
+            state: Mutex::new(State {
+                ring: Ring::with_capacity(cfg.capacity),
+                free,
+                reserved: 0,
+                closed: false,
+            }),
             nonempty: Condvar::new(),
         }
     }
@@ -101,16 +265,53 @@ impl BoundedQueue {
         &self.cfg
     }
 
+    /// The arena's row width (the served model's feature count).
+    pub fn num_features(&self) -> usize {
+        self.arena.width
+    }
+
     /// Non-blocking submit; rejects when full (backpressure) or closed.
-    pub fn submit(&self, req: Request) -> Result<(), (SubmitError, Request)> {
+    /// Copies `row` into a fresh arena slot — truncated to the arena
+    /// width if it mismatches (the request is then tagged malformed and
+    /// dropped, counted, at dispatch). The copy runs outside the state
+    /// lock so producers do not serialize on memcpy.
+    pub fn submit_row(
+        &self,
+        id: u64,
+        row: &[f32],
+        tier: Option<Tier>,
+        enqueued: Instant,
+        done: mpsc::Sender<(u64, usize)>,
+    ) -> Result<(), SubmitError> {
+        let slot = {
+            let mut st = self.state.lock().unwrap();
+            if st.closed {
+                return Err(SubmitError::Closed);
+            }
+            if st.ring.len() + st.reserved >= self.cfg.capacity {
+                return Err(SubmitError::Full);
+            }
+            // Unreachable while the in-flight sizing contract holds
+            // (outstanding = queued + reserved + dispatched < slots), but
+            // a dry free-list must surface as backpressure, not a panic.
+            let Some(slot) = st.free.pop() else {
+                return Err(SubmitError::Full);
+            };
+            st.reserved += 1;
+            slot
+        };
+        // SAFETY: `slot` just left the free-list and is not yet in the
+        // ring — this thread holds it exclusively.
+        unsafe { self.arena.write(slot, row) };
+        let width = u32::try_from(row.len()).unwrap_or(u32::MAX);
         let mut st = self.state.lock().unwrap();
+        st.reserved -= 1;
         if st.closed {
-            return Err((SubmitError::Closed, req));
+            // close() raced the copy: hand the slot back before failing.
+            st.free.push(slot);
+            return Err(SubmitError::Closed);
         }
-        if st.queue.len() >= self.cfg.capacity {
-            return Err((SubmitError::Full, req));
-        }
-        st.queue.push_back(req);
+        st.ring.push(Request { id, slot, width, tier, enqueued, done });
         drop(st);
         self.nonempty.notify_one();
         Ok(())
@@ -118,41 +319,57 @@ impl BoundedQueue {
 
     /// Current depth (approximate — for metrics/backpressure decisions).
     pub fn depth(&self) -> usize {
-        self.state.lock().unwrap().queue.len()
+        self.state.lock().unwrap().ring.len()
     }
 
-    /// Take the next micro-batch: blocks until at least one request is
-    /// available (or closed+empty → None), then waits up to `max_wait` for
-    /// the batch to fill to `max_batch`. The batch is the longest
-    /// same-tier prefix of the queue (≤ `max_batch`), so it can be
-    /// dispatched as a single tier-pinned or cascade engine call.
-    pub fn next_batch(&self) -> Option<Vec<Request>> {
+    /// Arena witness: free slots right now (tests assert the free-list
+    /// refills completely after drains — no slot leaks).
+    pub fn free_slots(&self) -> usize {
+        self.state.lock().unwrap().free.len()
+    }
+
+    /// Arena witness: total slot count (`capacity + in_flight_slots`).
+    pub fn arena_slots(&self) -> usize {
+        self.arena.slots
+    }
+
+    /// Take the next micro-batch into the caller's grow-only buffer:
+    /// blocks until at least one request is available (or closed+empty →
+    /// `false`), then waits up to `max_wait` for the batch to fill to
+    /// `max_batch`. The batch is the longest same-tier prefix of the
+    /// queue (≤ `max_batch`), so it can be dispatched as a single
+    /// tier-pinned or cascade engine call. `out` is cleared first and
+    /// never yields empty on `true`; a warm caller reusing one buffer
+    /// performs zero allocations per batch.
+    pub fn next_batch_into(&self, out: &mut Vec<Request>) -> bool {
+        out.clear();
         // Dwelling is pointless once a tier boundary lands inside the
         // takeable prefix: arrivals only append behind it, so the
         // same-tier batch we will take can never grow — dispatch
         // immediately instead of burning max_wait.
-        let prefix_capped = |q: &VecDeque<Request>| match q.front() {
-            None => false,
-            Some(head) => {
-                let lim = q.len().min(self.cfg.max_batch);
-                (1..lim).any(|i| q[i].tier != head.tier)
+        let prefix_capped = |ring: &Ring| {
+            if ring.is_empty() {
+                return false;
             }
+            let head = ring.tier_at(0);
+            let lim = ring.len().min(self.cfg.max_batch);
+            (1..lim).any(|i| ring.tier_at(i) != head)
         };
         let mut st = self.state.lock().unwrap();
         loop {
             // block until at least one request is queued (or closed+empty)
-            while st.queue.is_empty() {
+            while st.ring.is_empty() {
                 if st.closed {
-                    return None;
+                    return false;
                 }
                 st = self.nonempty.wait(st).unwrap();
             }
             // got a head request; optionally dwell for more
             let deadline = Instant::now() + self.cfg.max_wait;
-            while !st.queue.is_empty()
-                && st.queue.len() < self.cfg.max_batch
+            while !st.ring.is_empty()
+                && st.ring.len() < self.cfg.max_batch
                 && !st.closed
-                && !prefix_capped(&st.queue)
+                && !prefix_capped(&st.ring)
             {
                 let now = Instant::now();
                 if now >= deadline {
@@ -170,29 +387,80 @@ impl BoundedQueue {
             // A competing consumer may have drained the queue while we
             // slept in the dwell (the queue is MPMC) — restart the
             // blocking wait rather than take an empty batch.
-            if st.queue.is_empty() {
+            if st.ring.is_empty() {
                 continue;
             }
             // Longest same-tier prefix: requests behind a tier boundary
             // stay queued for the next batch (FIFO preserved). Never
             // empty: the queue is non-empty and we hold the lock.
-            let lim = st.queue.len().min(self.cfg.max_batch);
-            let tier = st.queue[0].tier;
+            let lim = st.ring.len().min(self.cfg.max_batch);
+            let tier = st.ring.tier_at(0);
             let mut take = 1;
-            while take < lim && st.queue[take].tier == tier {
+            while take < lim && st.ring.tier_at(take) == tier {
                 take += 1;
             }
-            let batch: Vec<Request> = st.queue.drain(..take).collect();
+            for _ in 0..take {
+                out.push(st.ring.pop().expect("take <= ring.len"));
+            }
             // We may have absorbed notifications meant for other
             // consumers while dwelling; if a remainder stays queued
             // (routine with tier splits, not just len > max_batch),
             // wake one peer so it isn't stranded until the next submit.
-            let leftover = !st.queue.is_empty();
+            let leftover = !st.ring.is_empty();
             drop(st);
             if leftover {
                 self.nonempty.notify_one();
             }
-            return Some(batch);
+            return true;
+        }
+    }
+
+    /// Allocating wrapper over [`BoundedQueue::next_batch_into`] — kept
+    /// for tests and callers that do not reuse a batch buffer.
+    pub fn next_batch(&self) -> Option<Vec<Request>> {
+        let mut out = Vec::new();
+        if self.next_batch_into(&mut out) {
+            Some(out)
+        } else {
+            None
+        }
+    }
+
+    /// Flatten a batch's feature rows into one row-major `&[f32]` plane.
+    /// When the batch happens to occupy consecutive ascending slots the
+    /// arena run is borrowed directly (zero copy); otherwise rows are
+    /// gathered into the caller's grow-only `scratch`. Every request must
+    /// be well-formed ([`Request::is_well_formed`]) — the dispatcher
+    /// filters malformed ones first.
+    ///
+    /// The returned slice is valid until the batch's slots are
+    /// [`release`](BoundedQueue::release)d.
+    pub fn gather<'q>(&'q self, batch: &[Request], scratch: &'q mut Vec<f32>) -> &'q [f32] {
+        let f = self.arena.width;
+        debug_assert!(batch.iter().all(|r| r.is_well_formed(f)));
+        if !batch.is_empty() && batch.windows(2).all(|w| w[1].slot == w[0].slot + 1) {
+            // SAFETY: the consumer holds every slot in `batch`
+            // exclusively until `release`, and the run is contiguous.
+            return unsafe { self.arena.read_run(batch[0].slot, batch.len()) };
+        }
+        scratch.clear();
+        for r in batch {
+            // SAFETY: per-slot exclusive hold, as above.
+            scratch.extend_from_slice(unsafe { self.arena.read_run(r.slot, 1) });
+        }
+        scratch
+    }
+
+    /// Return a batch's arena slots to the free-list. Must be called
+    /// exactly once per dispatched request — on engine success AND
+    /// failure — after any slice from [`BoundedQueue::gather`] is dead.
+    pub fn release(&self, batch: &[Request]) {
+        if batch.is_empty() {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        for r in batch {
+            st.free.push(r.slot);
         }
     }
 
@@ -209,28 +477,32 @@ mod tests {
     use std::sync::mpsc;
     use std::sync::Arc;
 
-    fn req(id: u64, tx: &mpsc::Sender<(u64, usize, Vec<f32>)>) -> Request {
-        req_at(id, None, tx)
+    fn submit(q: &BoundedQueue, id: u64, tx: &mpsc::Sender<(u64, usize)>) -> Result<(), SubmitError> {
+        submit_at(q, id, None, tx)
     }
 
-    fn req_at(
+    fn submit_at(
+        q: &BoundedQueue,
         id: u64,
         tier: Option<Tier>,
-        tx: &mpsc::Sender<(u64, usize, Vec<f32>)>,
-    ) -> Request {
-        Request { id, features: vec![0.0], tier, enqueued: Instant::now(), done: tx.clone() }
+        tx: &mpsc::Sender<(u64, usize)>,
+    ) -> Result<(), SubmitError> {
+        q.submit_row(id, &[id as f32], tier, Instant::now(), tx.clone())
     }
 
     #[test]
     fn batch_respects_max_batch() {
-        let q = BoundedQueue::new(BatcherConfig {
-            max_batch: 4,
-            max_wait: Duration::from_millis(1),
-            capacity: 100,
-        });
+        let q = BoundedQueue::new(
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                capacity: 100,
+            },
+            1,
+        );
         let (tx, _rx) = mpsc::channel();
         for i in 0..10 {
-            q.submit(req(i, &tx)).unwrap();
+            submit(&q, i, &tx).unwrap();
         }
         let b1 = q.next_batch().unwrap();
         let b2 = q.next_batch().unwrap();
@@ -242,11 +514,14 @@ mod tests {
 
     #[test]
     fn batches_split_at_tier_boundaries_preserving_fifo() {
-        let q = BoundedQueue::new(BatcherConfig {
-            max_batch: 8,
-            max_wait: Duration::from_micros(10),
-            capacity: 100,
-        });
+        let q = BoundedQueue::new(
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(10),
+                capacity: 100,
+            },
+            1,
+        );
         let (tx, _rx) = mpsc::channel();
         // cascade, cascade | fast, fast, fast | accurate | cascade
         for (id, tier) in [
@@ -258,7 +533,7 @@ mod tests {
             (5, Some(Tier::Accurate)),
             (6, None),
         ] {
-            q.submit(req_at(id, tier, &tx)).unwrap();
+            submit_at(&q, id, tier, &tx).unwrap();
         }
         let batches: Vec<Vec<u64>> = (0..4)
             .map(|_| q.next_batch().unwrap().iter().map(|r| r.id).collect())
@@ -275,14 +550,17 @@ mod tests {
         // Once a different-tier request queues behind the head, the
         // takeable same-tier prefix can never grow — next_batch must
         // dispatch immediately instead of sleeping out max_wait.
-        let q = BoundedQueue::new(BatcherConfig {
-            max_batch: 64,
-            max_wait: Duration::from_secs(5),
-            capacity: 100,
-        });
+        let q = BoundedQueue::new(
+            BatcherConfig {
+                max_batch: 64,
+                max_wait: Duration::from_secs(5),
+                capacity: 100,
+            },
+            1,
+        );
         let (tx, _rx) = mpsc::channel();
-        q.submit(req_at(0, None, &tx)).unwrap();
-        q.submit(req_at(1, Some(Tier::Fast), &tx)).unwrap();
+        submit_at(&q, 0, None, &tx).unwrap();
+        submit_at(&q, 1, Some(Tier::Fast), &tx).unwrap();
         let t0 = Instant::now();
         let b = q.next_batch().unwrap();
         assert_eq!(b.len(), 1, "only the head's same-tier prefix is taken");
@@ -294,26 +572,29 @@ mod tests {
 
     #[test]
     fn backpressure_on_full_queue() {
-        let q = BoundedQueue::new(BatcherConfig {
-            max_batch: 4,
-            max_wait: Duration::from_micros(10),
-            capacity: 2,
-        });
+        let q = BoundedQueue::new(
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_micros(10),
+                capacity: 2,
+            },
+            1,
+        );
         let (tx, _rx) = mpsc::channel();
-        q.submit(req(0, &tx)).unwrap();
-        q.submit(req(1, &tx)).unwrap();
-        let err = q.submit(req(2, &tx)).unwrap_err();
-        assert_eq!(err.0, SubmitError::Full);
+        submit(&q, 0, &tx).unwrap();
+        submit(&q, 1, &tx).unwrap();
+        let err = submit(&q, 2, &tx).unwrap_err();
+        assert_eq!(err, SubmitError::Full);
     }
 
     #[test]
     fn close_rejects_and_drains() {
-        let q = BoundedQueue::new(BatcherConfig::default());
+        let q = BoundedQueue::new(BatcherConfig::default(), 1);
         let (tx, _rx) = mpsc::channel();
-        q.submit(req(0, &tx)).unwrap();
+        submit(&q, 0, &tx).unwrap();
         q.close();
-        let err = q.submit(req(1, &tx)).unwrap_err();
-        assert_eq!(err.0, SubmitError::Closed);
+        let err = submit(&q, 1, &tx).unwrap_err();
+        assert_eq!(err, SubmitError::Closed);
         // drains the remaining request, then None
         assert_eq!(q.next_batch().unwrap().len(), 1);
         assert!(q.next_batch().is_none());
@@ -321,13 +602,16 @@ mod tests {
 
     #[test]
     fn deadline_fires_with_partial_batch() {
-        let q = Arc::new(BoundedQueue::new(BatcherConfig {
-            max_batch: 64,
-            max_wait: Duration::from_millis(5),
-            capacity: 100,
-        }));
+        let q = Arc::new(BoundedQueue::new(
+            BatcherConfig {
+                max_batch: 64,
+                max_wait: Duration::from_millis(5),
+                capacity: 100,
+            },
+            1,
+        ));
         let (tx, _rx) = mpsc::channel();
-        q.submit(req(0, &tx)).unwrap();
+        submit(&q, 0, &tx).unwrap();
         let t0 = Instant::now();
         let b = q.next_batch().unwrap();
         assert_eq!(b.len(), 1);
@@ -339,18 +623,23 @@ mod tests {
         // MPMC race: two consumers can both pass the non-empty check and
         // dwell; the loser wakes to a queue its rival already drained and
         // must loop back to the blocking wait, not index into nothing.
-        let q = Arc::new(BoundedQueue::new(BatcherConfig {
-            max_batch: 64,
-            max_wait: Duration::from_millis(20),
-            capacity: 100,
-        }));
+        let q = Arc::new(BoundedQueue::new(
+            BatcherConfig {
+                max_batch: 64,
+                max_wait: Duration::from_millis(20),
+                capacity: 100,
+            },
+            1,
+        ));
         let consumers: Vec<_> = (0..2)
             .map(|_| {
                 let q = q.clone();
                 std::thread::spawn(move || {
                     let mut got = 0usize;
-                    while let Some(b) = q.next_batch() {
-                        got += b.len();
+                    let mut buf = Vec::new();
+                    while q.next_batch_into(&mut buf) {
+                        got += buf.len();
+                        q.release(&buf);
                     }
                     got
                 })
@@ -358,7 +647,7 @@ mod tests {
             .collect();
         let (tx, _rx) = mpsc::channel();
         for i in 0..5 {
-            q.submit(req(i, &tx)).unwrap();
+            submit(&q, i, &tx).unwrap();
             std::thread::sleep(Duration::from_millis(2));
         }
         std::thread::sleep(Duration::from_millis(30));
@@ -368,15 +657,23 @@ mod tests {
             .map(|h| h.join().expect("consumer must not panic"))
             .sum();
         assert_eq!(total, 5, "every request delivered exactly once");
+        assert_eq!(
+            q.free_slots(),
+            q.arena_slots(),
+            "released batches refill the free-list completely"
+        );
     }
 
     #[test]
     fn concurrent_producers_no_loss_no_dup() {
-        let q = Arc::new(BoundedQueue::new(BatcherConfig {
-            max_batch: 8,
-            max_wait: Duration::from_micros(50),
-            capacity: 10_000,
-        }));
+        let q = Arc::new(BoundedQueue::new(
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(50),
+                capacity: 10_000,
+            },
+            1,
+        ));
         let (tx, _rx) = mpsc::channel();
         let mut handles = Vec::new();
         for p in 0..4u64 {
@@ -384,7 +681,7 @@ mod tests {
             let tx = tx.clone();
             handles.push(std::thread::spawn(move || {
                 for i in 0..250u64 {
-                    q.submit(req(p * 1000 + i, &tx)).unwrap();
+                    submit(&q, p * 1000 + i, &tx).unwrap();
                 }
             }));
         }
@@ -394,10 +691,94 @@ mod tests {
         q.close();
         let mut seen = std::collections::HashSet::new();
         while let Some(batch) = q.next_batch() {
-            for r in batch {
+            for r in &batch {
                 assert!(seen.insert(r.id), "duplicate id {}", r.id);
             }
+            q.release(&batch);
         }
         assert_eq!(seen.len(), 1000, "all requests delivered exactly once");
+        assert_eq!(q.free_slots(), q.arena_slots(), "no slot leaks under producer contention");
+    }
+
+    #[test]
+    fn arena_preserves_row_payloads_across_ring_wraparound() {
+        // Drive several times the ring capacity through the queue so both
+        // the ring head and the slot free-list cycle; every gathered row
+        // must carry exactly the floats its submit wrote.
+        let q = BoundedQueue::new(
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_micros(10),
+                capacity: 6,
+            },
+            3,
+        );
+        let (tx, _rx) = mpsc::channel();
+        let mut buf = Vec::new();
+        let mut scratch = Vec::new();
+        let mut next_id = 0u64;
+        for _round in 0..10 {
+            for _ in 0..6 {
+                let v = next_id as f32;
+                q.submit_row(next_id, &[v, v + 0.25, v + 0.5], None, Instant::now(), tx.clone())
+                    .unwrap();
+                next_id += 1;
+            }
+            while q.depth() > 0 {
+                assert!(q.next_batch_into(&mut buf));
+                let flat = q.gather(&buf, &mut scratch);
+                for (k, r) in buf.iter().enumerate() {
+                    let v = r.id as f32;
+                    assert_eq!(flat[3 * k..3 * k + 3], [v, v + 0.25, v + 0.5], "row {}", r.id);
+                }
+                q.release(&buf);
+            }
+        }
+        assert_eq!(q.free_slots(), q.arena_slots());
+    }
+
+    #[test]
+    fn wrong_width_rows_ride_the_queue_tagged_malformed() {
+        // Submit-time behavior is width-blind (byte-compatible with the
+        // pre-arena queue): wrong-width rows occupy queue capacity and
+        // are tagged for the dispatcher to count and drop.
+        let q = BoundedQueue::new(
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(10),
+                capacity: 8,
+            },
+            4,
+        );
+        let (tx, _rx) = mpsc::channel();
+        q.submit_row(0, &[], None, Instant::now(), tx.clone()).unwrap();
+        q.submit_row(1, &[0.5; 4], None, Instant::now(), tx.clone()).unwrap();
+        q.submit_row(2, &[0.5; 9], None, Instant::now(), tx.clone()).unwrap();
+        let batch = q.next_batch().unwrap();
+        assert_eq!(batch.len(), 3, "malformed rows still travel the queue");
+        let ok: Vec<bool> = batch.iter().map(|r| r.is_well_formed(4)).collect();
+        assert_eq!(ok, [false, true, false]);
+        q.release(&batch);
+        assert_eq!(q.free_slots(), q.arena_slots());
+    }
+
+    #[test]
+    fn close_between_reserve_and_enqueue_returns_the_slot() {
+        // The two-phase submit's close race: closing after every submit
+        // completed must leave the free-list whole — and a close() racing
+        // live submitters (exercised here just by interleaving) must
+        // never strand a reserved slot.
+        let q = BoundedQueue::new(BatcherConfig::default(), 2);
+        let (tx, _rx) = mpsc::channel();
+        q.submit_row(0, &[1.0, 2.0], None, Instant::now(), tx.clone()).unwrap();
+        q.close();
+        assert_eq!(
+            q.submit_row(1, &[3.0, 4.0], None, Instant::now(), tx.clone()).unwrap_err(),
+            SubmitError::Closed
+        );
+        let batch = q.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        q.release(&batch);
+        assert_eq!(q.free_slots(), q.arena_slots(), "rejected submit returned its slot");
     }
 }

@@ -215,14 +215,16 @@ fn drive_load(
     let mut id2label = std::collections::HashMap::new();
     let mut submitted = 0usize;
     for i in 0..requests {
-        let row = ds.test_row(i % n_test).to_vec();
+        // Borrowed row: submit copies it straight into its arena slot,
+        // so the load loop never clones a feature Vec per request.
+        let row = ds.test_row(i % n_test);
         let tier = if mixed_tiers && i % 4 == 3 {
             Some([Tier::Fast, Tier::Balanced, Tier::Accurate][(i / 4) % 3])
         } else {
             None
         };
         loop {
-            match server.submit_tiered(row.clone(), tier, tx.clone()) {
+            match server.submit_tiered(row, tier, tx.clone()) {
                 Ok(id) => {
                     id2label.insert(id, ds.test_y[i % n_test] as usize);
                     submitted += 1;
@@ -240,7 +242,7 @@ fn drive_load(
     let mut delivered = 0usize;
     for _ in 0..submitted {
         match rx.recv_timeout(Duration::from_secs(30)) {
-            Ok((id, pred, _)) => {
+            Ok((id, pred)) => {
                 delivered += 1;
                 if id2label.get(&id) == Some(&pred) {
                     correct += 1;
@@ -261,10 +263,13 @@ fn drive_load(
 /// single-model, no tier lines), and the JSON line.
 fn print_report(report: &MetricsReport, correct: usize, delivered: usize, submitted: usize) {
     println!(
-        "throughput: {:.0} inf/s | latency p50/p99: {:.1}/{:.1} µs | batch fill {:.0}%",
+        "throughput: {:.0} inf/s | latency p50/p99: {:.1}/{:.1} µs \
+         (reservoir cross-check {:.1}/{:.1}) | batch fill {:.0}%",
         report.throughput_rps,
         report.latency_us_p50,
         report.latency_us_p99,
+        report.latency_us_p50_reservoir,
+        report.latency_us_p99_reservoir,
         report.mean_batch_fill * 100.0
     );
     for (i, name) in crate::coordinator::router::tier_names(report.num_tiers)

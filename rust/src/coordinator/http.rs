@@ -221,6 +221,7 @@ impl HttpFrontend {
                             503,
                             &err_body("overloaded", "connection backlog full"),
                             false,
+                            &mut RespBuf::default(),
                         );
                     }
                     Err(mpsc::TrySendError::Disconnected(_)) => return,
@@ -298,6 +299,10 @@ fn handle_connection(ctx: &Ctx, mut stream: TcpStream) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(ctx.cfg.read_timeout));
     let mut buf: Vec<u8> = Vec::new();
+    // Grow-only response scratch: every response on this connection
+    // serializes into the same buffers, so steady-state keep-alive
+    // traffic stops allocating a String pair per response.
+    let mut resp = RespBuf::default();
     loop {
         if ctx.closing.load(Ordering::SeqCst) {
             return;
@@ -307,7 +312,9 @@ fn handle_connection(ctx: &Ctx, mut stream: TcpStream) {
                 let keep = req.keep_alive && !ctx.closing.load(Ordering::SeqCst);
                 let (status, body) = route(ctx, peer, &req);
                 ctx.server.metrics.record_http(status);
-                if write_response(&mut stream, status, &body, keep).is_err() || !keep {
+                if write_response(&mut stream, status, &body, keep, &mut resp).is_err()
+                    || !keep
+                {
                     return;
                 }
             }
@@ -319,6 +326,7 @@ fn handle_connection(ctx: &Ctx, mut stream: TcpStream) {
                     e.status,
                     &err_body(e.code, &e.detail),
                     false,
+                    &mut resp,
                 );
                 return;
             }
@@ -486,21 +494,36 @@ fn reason(status: u16) -> &'static str {
     }
 }
 
+/// Grow-only per-connection response scratch. `write_response` clears
+/// and refills it in place, so a keep-alive connection settles at the
+/// high-water mark of its responses and never reallocates again.
+#[derive(Default)]
+struct RespBuf {
+    head: String,
+    body: String,
+}
+
 fn write_response(
     stream: &mut TcpStream,
     status: u16,
     body: &Json,
     keep_alive: bool,
+    buf: &mut RespBuf,
 ) -> std::io::Result<()> {
-    let body = body.to_string();
-    let head = format!(
+    use std::fmt::Write as _;
+    buf.body.clear();
+    body.write_to(&mut buf.body);
+    buf.head.clear();
+    // write! into a String is infallible; the let _ silences the Result.
+    let _ = write!(
+        buf.head,
         "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
         reason(status),
-        body.len(),
+        buf.body.len(),
         if keep_alive { "keep-alive" } else { "close" },
     );
-    stream.write_all(head.as_bytes())?;
-    stream.write_all(body.as_bytes())?;
+    stream.write_all(buf.head.as_bytes())?;
+    stream.write_all(buf.body.as_bytes())?;
     stream.flush()
 }
 
@@ -583,7 +606,6 @@ fn classify(ctx: &Ctx, req: &HttpRequest) -> Result<Json, HttpError> {
     // Validate EVERY row before submitting ANY: a 400 must name the bad
     // row and leave the queue untouched.
     let width = ctx.server.num_features();
-    let mut parsed: Vec<Vec<f32>> = Vec::with_capacity(rows.len());
     for (i, row) in rows.iter().enumerate() {
         let vals = row
             .as_arr()
@@ -591,17 +613,24 @@ fn classify(ctx: &Ctx, req: &HttpRequest) -> Result<Json, HttpError> {
         if vals.len() != width {
             return Err(bad(format!("row {i} has width {}, want {width}", vals.len())));
         }
-        let mut v = Vec::with_capacity(width);
         for x in vals {
-            v.push(x.as_f64().ok_or_else(|| bad(format!("row {i} has a non-number")))? as f32);
+            x.as_f64().ok_or_else(|| bad(format!("row {i} has a non-number")))?;
         }
-        parsed.push(v);
     }
-    let n = parsed.len();
+    let n = rows.len();
     let (tx, rx) = mpsc::channel();
     let mut id2row = HashMap::with_capacity(n);
-    for (i, features) in parsed.into_iter().enumerate() {
-        match ctx.server.submit_tiered(features, tier, tx.clone()) {
+    // One reusable scratch row: values go parsed JSON → scratch → arena
+    // slot, with no per-row Vec and no Vec<Vec<f32>> staging buffer.
+    let mut row_buf: Vec<f32> = Vec::with_capacity(width);
+    for (i, row) in rows.iter().enumerate() {
+        row_buf.clear();
+        // Both unwraps are unreachable: the validation pass above
+        // rejected non-array rows and non-number values with a 400.
+        for x in row.as_arr().unwrap() {
+            row_buf.push(x.as_f64().unwrap() as f32);
+        }
+        match ctx.server.submit_tiered(&row_buf, tier, tx.clone()) {
             Ok(id) => {
                 id2row.insert(id, i);
             }
@@ -625,7 +654,7 @@ fn classify(ctx: &Ctx, req: &HttpRequest) -> Result<Json, HttpError> {
     let mut preds = vec![0usize; n];
     for _ in 0..n {
         match rx.recv_timeout(Duration::from_secs(30)) {
-            Ok((id, pred, _scores)) => {
+            Ok((id, pred)) => {
                 if let Some(&row) = id2row.get(&id) {
                     preds[row] = pred;
                 }

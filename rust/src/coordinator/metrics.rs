@@ -4,20 +4,25 @@
 
 use crate::coordinator::router::RouterStats;
 use crate::util::rng::Rng;
-use crate::util::stats::{percentile, OnlineStats};
+use crate::util::stats::{percentile, LogHistogram, OnlineStats};
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// Cap on retained latency samples. Latencies feed an Algorithm R
 /// reservoir: every completed request has an equal probability of being
-/// in the sample, so `latency_us_p50/p99` stay unbiased estimates while
-/// memory stays O(1) — the previous unbounded `Vec` grew by 8 bytes per
-/// request forever and made every `/metrics` scrape clone + sort the
-/// whole history.
+/// in the sample, so the reservoir percentiles stay unbiased estimates
+/// while memory stays O(1). Since the log2 histogram landed, the
+/// reservoir is a cross-check witness (`latency_us_p50_reservoir`) —
+/// the headline `latency_us_p50/p99` come from [`LogHistogram`], which
+/// sees EVERY completion exactly (up to ≤1/128 bucket quantization)
+/// instead of a uniform sample.
 pub const LATENCY_RESERVOIR_CAP: usize = 4096;
 
 struct Inner {
+    /// Every completion's latency (µs), log2-bucketed: exact-up-to-
+    /// quantization percentiles in fixed memory, no sort per scrape.
+    latency_hist: LogHistogram,
     /// ≤ [`LATENCY_RESERVOIR_CAP`] uniformly-sampled latencies (µs).
     latency_reservoir: Vec<f64>,
     /// Total latencies ever offered to the reservoir.
@@ -61,7 +66,11 @@ struct Inner {
 impl Default for Inner {
     fn default() -> Self {
         Self {
-            latency_reservoir: Vec::new(),
+            latency_hist: LogHistogram::new(),
+            // Pre-size to the cap: the reservoir never reallocates on
+            // the record path once the steady state is reached (and the
+            // fill phase is alloc-free too).
+            latency_reservoir: Vec::with_capacity(LATENCY_RESERVOIR_CAP),
             latency_seen: 0,
             latency_stats: OnlineStats::new(),
             reservoir_rng: Rng::new(0x5EED_1A7E),
@@ -122,8 +131,15 @@ pub struct MetricsReport {
     pub wall_secs: f64,
     pub throughput_rps: f64,
     pub mean_batch_fill: f64,
+    /// Histogram-exact p50 over EVERY completion (≤1/128 quantization).
     pub latency_us_p50: f64,
+    /// Histogram-exact p99 over EVERY completion (≤1/128 quantization).
     pub latency_us_p99: f64,
+    /// Reservoir-sampled p50 — retained as a cross-check witness for
+    /// the histogram (large disagreement ⇒ a bucketing bug, not load).
+    pub latency_us_p50_reservoir: f64,
+    /// Reservoir-sampled p99 cross-check (see `latency_us_p50_reservoir`).
+    pub latency_us_p99_reservoir: f64,
     pub latency_us_mean: f64,
     pub latency_us_max: f64,
     /// HTTP responses served by the front-end as (status, count),
@@ -157,6 +173,7 @@ impl ServerMetrics {
         inner.completed += latencies.len() as u64;
         for l in latencies {
             let us = l.as_secs_f64() * 1e6;
+            inner.latency_hist.record(us);
             inner.latency_stats.push(us);
             inner.latency_seen += 1;
             if inner.latency_reservoir.len() < LATENCY_RESERVOIR_CAP {
@@ -256,15 +273,28 @@ impl ServerMetrics {
             (Some(a), Some(b)) => b.saturating_duration_since(a).as_secs_f64(),
             _ => 0.0,
         };
-        let (p50, p99, mean, max) = if g.latency_reservoir.is_empty() {
+        // Headline percentiles come from the histogram: every
+        // completion is recorded, so p50/p99 are exact up to ≤1/128
+        // bucket quantization, with no sort and no sampling noise.
+        let (p50, p99, mean, max) = if g.latency_hist.count() == 0 {
             (0.0, 0.0, 0.0, 0.0)
+        } else {
+            (
+                g.latency_hist.percentile(0.50),
+                g.latency_hist.percentile(0.99),
+                g.latency_stats.mean(),
+                g.latency_stats.max(),
+            )
+        };
+        // The reservoir answers the same questions from a uniform
+        // sample — kept as an independent cross-check witness.
+        let (p50_res, p99_res) = if g.latency_reservoir.is_empty() {
+            (0.0, 0.0)
         } else {
             // The clone is bounded by LATENCY_RESERVOIR_CAP — scrapes
             // are O(cap log cap) no matter how long the server has run.
             let mut v = g.latency_reservoir.clone();
-            let p50 = percentile(&mut v, 0.50);
-            let p99 = percentile(&mut v, 0.99);
-            (p50, p99, g.latency_stats.mean(), g.latency_stats.max())
+            (percentile(&mut v, 0.50), percentile(&mut v, 0.99))
         };
         MetricsReport {
             completed: g.completed,
@@ -289,6 +319,8 @@ impl ServerMetrics {
             mean_batch_fill: if max_batch > 0 { g.batch_sizes.mean() / max_batch as f64 } else { 0.0 },
             latency_us_p50: p50,
             latency_us_p99: p99,
+            latency_us_p50_reservoir: p50_res,
+            latency_us_p99_reservoir: p99_res,
             latency_us_mean: mean,
             latency_us_max: max,
             http_responses: g.http_responses.iter().map(|(&k, &v)| (k, v)).collect(),
@@ -310,6 +342,8 @@ impl MetricsReport {
             .set("mean_batch_fill", Json::Num(self.mean_batch_fill))
             .set("latency_us_p50", Json::Num(self.latency_us_p50))
             .set("latency_us_p99", Json::Num(self.latency_us_p99))
+            .set("latency_us_p50_reservoir", Json::Num(self.latency_us_p50_reservoir))
+            .set("latency_us_p99_reservoir", Json::Num(self.latency_us_p99_reservoir))
             .set("latency_us_mean", Json::Num(self.latency_us_mean))
             .set("kernel_path", Json::Str(self.kernel_path.to_string()));
         // One key per tier that actually exists, named by the shared
@@ -349,10 +383,19 @@ mod tests {
         m.record_batch(6, &lats[50..]);
         let r = m.report(10);
         assert_eq!(r.completed, 100);
+        // Histogram nearest-rank over 1..=100: p50 = 51, p99 = 99
+        // (sub-128 values land in exact unit buckets).
         assert!((r.latency_us_p50 - 50.0).abs() <= 1.0);
         assert!((r.latency_us_p99 - 99.0).abs() <= 1.0);
+        // Under the reservoir cap every sample is retained, so the
+        // cross-check percentiles are exact nearest-rank answers.
+        assert_eq!(r.latency_us_p50_reservoir, 51.0);
+        assert_eq!(r.latency_us_p99_reservoir, 99.0);
         assert!((r.mean_batch_fill - 0.8).abs() < 1e-9);
         assert!(r.throughput_rps > 0.0);
+        let json = r.to_json().to_string();
+        assert!(json.contains("latency_us_p50_reservoir"), "cross-check key must serialize");
+        assert!(json.contains("latency_us_p99_reservoir"), "cross-check key must serialize");
     }
 
     #[test]
@@ -445,10 +488,27 @@ mod tests {
         assert_eq!(seen, total as u64);
         let r = m.report(512);
         assert_eq!(r.completed, total as u64);
-        // Uniform 1..=1000 µs: true p50 = 500, p99 = 990. A 4096-sample
-        // uniform reservoir has σ(p50) ≈ 7.8 µs — ±60 is > 7σ.
-        assert!((r.latency_us_p50 - 500.0).abs() < 60.0, "p50 {}", r.latency_us_p50);
-        assert!((r.latency_us_p99 - 990.0).abs() < 60.0, "p99 {}", r.latency_us_p99);
+        // Uniform 1..=1000 µs: true p50 = 500, p99 = 990. The headline
+        // numbers are histogram-exact up to ≤1/128 bucket quantization
+        // (answers 502 and 988 here — bucket midpoints).
+        assert!((r.latency_us_p50 - 500.0).abs() <= 8.0, "p50 {}", r.latency_us_p50);
+        assert!((r.latency_us_p99 - 990.0).abs() <= 10.0, "p99 {}", r.latency_us_p99);
+        // The reservoir cross-check sees a 4096-sample uniform sample:
+        // σ(p50) ≈ 7.8 µs — ±60 is > 7σ.
+        assert!(
+            (r.latency_us_p50_reservoir - 500.0).abs() < 60.0,
+            "reservoir p50 {}",
+            r.latency_us_p50_reservoir
+        );
+        assert!(
+            (r.latency_us_p99_reservoir - 990.0).abs() < 60.0,
+            "reservoir p99 {}",
+            r.latency_us_p99_reservoir
+        );
+        // The two estimators must agree with each other too — a large
+        // split here means a bucketing bug, not sampling noise.
+        assert!((r.latency_us_p50 - r.latency_us_p50_reservoir).abs() < 60.0);
+        assert!((r.latency_us_p99 - r.latency_us_p99_reservoir).abs() < 60.0);
         // mean and max are exact (running stats, not the reservoir)
         assert!((r.latency_us_mean - 500.5).abs() < 1e-6, "mean {}", r.latency_us_mean);
         assert!((r.latency_us_max - 1000.0).abs() < 1e-6, "max {}", r.latency_us_max);

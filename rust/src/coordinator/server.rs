@@ -61,23 +61,33 @@ impl Server {
         metrics: Arc<ServerMetrics>,
         make_engine: impl Fn(usize) -> crate::Result<Box<dyn InferenceEngine>>,
     ) -> crate::Result<Self> {
-        let queue = Arc::new(BoundedQueue::new(cfg.batcher));
+        // Engines are built BEFORE the queue: the slab feature arena is
+        // sized `capacity + workers × max_batch` rows of the engines'
+        // feature width, so in-flight batches can never starve admission
+        // (`SubmitError::Full` keeps meaning exactly "queue full"). A
+        // worker-less server still probes the factory once to learn the
+        // served shape.
+        let mut engines = Vec::with_capacity(cfg.workers.max(1));
+        for w in 0..cfg.workers.max(1) {
+            engines.push(make_engine(w)?);
+        }
+        let num_features = engines[0].num_features();
+        let num_tiers = engines[0].num_tiers();
+        metrics.set_kernel_path(engines[0].kernel_path());
+        let queue = Arc::new(BoundedQueue::with_in_flight(
+            cfg.batcher,
+            num_features,
+            cfg.workers.max(1) * cfg.batcher.max_batch,
+        ));
+        engines.truncate(cfg.workers); // drop the shape probe on workers == 0
         let mut workers = Vec::with_capacity(cfg.workers);
-        let mut num_features = 0;
-        let mut num_tiers = 0;
-        let mut kernel_path = "n/a";
-        for w in 0..cfg.workers {
-            let mut engine = make_engine(w)?;
-            num_features = engine.num_features();
-            num_tiers = engine.num_tiers();
-            kernel_path = engine.kernel_path();
+        for mut engine in engines {
             let queue = queue.clone();
             let metrics = metrics.clone();
             workers.push(std::thread::spawn(move || {
                 worker_loop(&mut *engine, &queue, &metrics);
             }));
         }
-        metrics.set_kernel_path(kernel_path);
         Ok(Self { queue, metrics, workers, next_id: AtomicU64::new(0), num_features, num_tiers })
     }
 
@@ -180,11 +190,13 @@ impl Server {
     }
 
     /// Submit one request on the default path (cascade on zoo servers);
-    /// the prediction arrives on `done`.
+    /// the prediction arrives on `done` as `(id, predicted class)`. The
+    /// row is copied straight into the queue's slab arena — the caller
+    /// keeps ownership of (and may immediately reuse) `features`.
     pub fn submit(
         &self,
-        features: Vec<f32>,
-        done: mpsc::Sender<(u64, usize, Vec<f32>)>,
+        features: &[f32],
+        done: mpsc::Sender<(u64, usize)>,
     ) -> Result<u64, SubmitError> {
         self.submit_tiered(features, None, done)
     }
@@ -199,9 +211,9 @@ impl Server {
     /// identically must not split micro-batches.
     pub fn submit_tiered(
         &self,
-        features: Vec<f32>,
+        features: &[f32],
         tier: Option<Tier>,
-        done: mpsc::Sender<(u64, usize, Vec<f32>)>,
+        done: mpsc::Sender<(u64, usize)>,
     ) -> Result<u64, SubmitError> {
         let tier = match self.num_tiers {
             0 => None,
@@ -209,8 +221,7 @@ impl Server {
         };
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let enqueued = Instant::now();
-        let req = Request { id, features, tier, enqueued, done };
-        match self.queue.submit(req) {
+        match self.queue.submit_row(id, features, tier, enqueued, done) {
             Ok(()) => {
                 // Start the throughput wall-clock only on ACCEPTED work
                 // (at its enqueue time): a burst that is entirely
@@ -219,7 +230,7 @@ impl Server {
                 self.metrics.mark_start_at(enqueued);
                 Ok(id)
             }
-            Err((e, _req)) => {
+            Err(e) => {
                 self.metrics.record_reject(e == SubmitError::Full);
                 Err(e)
             }
@@ -228,6 +239,14 @@ impl Server {
 
     pub fn queue_depth(&self) -> usize {
         self.queue.depth()
+    }
+
+    /// Arena witness: `(free slots now, total slots)`. Leak tests assert
+    /// free == total once the server has drained — every dispatched
+    /// batch (served, malformed, or engine-failed) must hand its slots
+    /// back.
+    pub fn arena_slots(&self) -> (usize, usize) {
+        (self.queue.free_slots(), self.queue.arena_slots())
     }
 
     /// Stop accepting new requests — submitters observe
@@ -275,33 +294,36 @@ fn worker_loop(
 ) {
     let f = engine.num_features();
     // Grow-only per-worker buffers, reused across every micro-batch: the
-    // flattened input plane, the accepted requests, the prediction plane
-    // the engine writes into (`classify_routed_into`), and the latency
+    // popped batch, the gather scratch (used only when a batch's arena
+    // slots are non-consecutive — consecutive runs are borrowed straight
+    // out of the slab), the accepted requests, the prediction plane the
+    // engine writes into (`classify_routed_into`), and the latency
     // staging. A warm worker's serving loop performs no steady-state
     // allocations of its own — the engines underneath uphold the same
     // contract (see the `InferenceEngine` write-into docs).
+    let mut batch: Vec<Request> = Vec::new();
     let mut flat: Vec<f32> = Vec::new();
-    let mut good: Vec<crate::coordinator::batcher::Request> = Vec::new();
+    let mut good: Vec<Request> = Vec::new();
     let mut preds: Vec<usize> = Vec::new();
     let mut lats: Vec<std::time::Duration> = Vec::new();
-    while let Some(batch) = queue.next_batch() {
-        // Batches are tier-homogeneous by construction (next_batch), so
-        // the whole batch dispatches as one routed engine call.
-        // (next_batch never yields an empty batch; guard anyway so a
-        // future batcher change cannot panic the worker.)
+    while queue.next_batch_into(&mut batch) {
+        // Batches are tier-homogeneous by construction, so the whole
+        // batch dispatches as one routed engine call. (next_batch_into
+        // never yields an empty batch; guard anyway so a future batcher
+        // change cannot panic the worker.)
         let Some(first) = batch.first() else { continue };
         let tier = first.tier;
         // Reject ONLY wrong-width requests (their senders disconnect, so
         // callers observe the drop); their batch-mates still complete.
-        flat.clear();
+        // Malformed slots go straight back to the free-list.
         good.clear();
         let mut malformed = 0u64;
-        for r in batch {
-            if r.features.len() == f {
-                flat.extend_from_slice(&r.features);
+        for r in batch.drain(..) {
+            if r.is_well_formed(f) {
                 good.push(r);
             } else {
                 malformed += 1;
+                queue.release(std::slice::from_ref(&r));
             }
         }
         if malformed > 0 {
@@ -314,14 +336,22 @@ fn worker_loop(
         if preds.len() < n {
             preds.resize(n, 0);
         }
-        match engine.classify_routed_into(&flat, n, tier, &mut preds) {
+        let result = {
+            let x = queue.gather(&good, &mut flat);
+            engine.classify_routed_into(x, n, tier, &mut preds)
+        };
+        // Slots return to the free-list on BOTH paths — an engine
+        // failure must not leak arena capacity. The gathered slice is
+        // dead by here, so recycling is safe.
+        queue.release(&good);
+        match result {
             Ok(()) => {
                 let now = Instant::now();
                 lats.clear();
                 lats.extend(good.iter().map(|r| now - r.enqueued));
                 metrics.record_batch(n, &lats);
                 for (r, &p) in good.drain(..).zip(preds.iter()) {
-                    let _ = r.done.send((r.id, p, Vec::new()));
+                    let _ = r.done.send((r.id, p));
                 }
             }
             Err(_) => {
@@ -372,13 +402,13 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         let mut id2row = std::collections::HashMap::new();
         for i in 0..ds.n_test() {
-            let id = server.submit(ds.test_row(i).to_vec(), tx.clone()).unwrap();
+            let id = server.submit(ds.test_row(i), tx.clone()).unwrap();
             id2row.insert(id, i);
         }
         drop(tx);
         let mut got = vec![usize::MAX; ds.n_test()];
         for _ in 0..ds.n_test() {
-            let (id, pred, _) = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            let (id, pred) = rx.recv_timeout(Duration::from_secs(5)).unwrap();
             got[id2row[&id]] = pred;
         }
         server.shutdown();
@@ -394,10 +424,9 @@ mod tests {
         .unwrap();
         let (tx, rx) = mpsc::channel();
         let n = 64;
+        let row = vec![0.5; server.num_features()];
         for _ in 0..n {
-            server
-                .submit(vec![0.5; server.num_features()], tx.clone())
-                .unwrap();
+            server.submit(&row, tx.clone()).unwrap();
         }
         drop(tx);
         server.shutdown();
@@ -444,7 +473,7 @@ mod tests {
                 _ => Some(Tier::Accurate),
             };
             loop {
-                match server.submit_tiered(ds.test_row(i).to_vec(), tier, tx.clone()) {
+                match server.submit_tiered(ds.test_row(i), tier, tx.clone()) {
                     Ok(_) => break,
                     Err(SubmitError::Full) => std::thread::sleep(Duration::from_micros(20)),
                     Err(e) => panic!("{e:?}"),
@@ -498,7 +527,7 @@ mod tests {
         }
         // the shared zoo still serves
         let (tx, rx) = mpsc::channel();
-        server.submit(ds.test_row(0).to_vec(), tx).unwrap();
+        server.submit(ds.test_row(0), tx).unwrap();
         rx.recv_timeout(Duration::from_secs(5)).unwrap();
         server.shutdown();
         for t in &tiers {
@@ -522,16 +551,131 @@ mod tests {
         })
         .unwrap();
         let (tx, _rx) = mpsc::channel();
+        let row = vec![0.5; server.num_features()];
         let mut rejected = 0;
         for _ in 0..256 {
-            if server
-                .submit(vec![0.5; server.num_features()], tx.clone())
-                .is_err()
-            {
+            if server.submit(&row, tx.clone()).is_err() {
                 rejected += 1;
             }
         }
         assert!(rejected > 0, "tiny queue must reject under burst load");
+        server.shutdown();
+    }
+
+    #[test]
+    fn submit_to_complete_is_allocation_free_on_the_caller_thread() {
+        // The queue side of the zero-alloc contract: once the channel
+        // flavor has upgraded and every grow-only buffer is warm, a
+        // submit→complete round trip performs ZERO heap allocations on
+        // the caller thread — the row goes into a slab slot, the request
+        // into a ring cell, and the completion is a plain (id, pred)
+        // tuple. (The worker thread's mpsc send node is the documented
+        // per-thread exception, same as the shard pool's channel nodes.)
+        let model = served_model();
+        let cfg = ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 64,
+                max_wait: Duration::from_micros(50),
+                capacity: 1024,
+            },
+            workers: 1,
+        };
+        let server = Server::start(cfg, move |_| {
+            Ok(Box::new(NativeEngine::new(model.clone())))
+        })
+        .unwrap();
+        let (tx, rx) = mpsc::channel();
+        let row = vec![0.5; server.num_features()];
+        let mut wave = |k: usize| {
+            for _ in 0..k {
+                server.submit(&row, tx.clone()).unwrap();
+            }
+            for _ in 0..k {
+                rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            }
+        };
+        for _ in 0..3 {
+            wave(64); // warm: channel upgrade, ring/scratch/plane growth
+        }
+        let w = crate::util::alloc_witness::Witness::begin();
+        for _ in 0..4 {
+            wave(64);
+        }
+        assert_eq!(
+            w.allocations(),
+            0,
+            "steady-state submit→complete must not allocate on the caller thread"
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn arena_free_list_never_leaks_slots_under_close_while_draining() {
+        // Every dispatched request — served, malformed, or part of a
+        // batch the engine failed — must hand its arena slot back. Close
+        // the server mid-drain and assert the free-list refills to the
+        // arena's full size.
+        let model = served_model();
+        let cfg = ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(50),
+                capacity: 512,
+            },
+            workers: 2,
+        };
+        let server = Server::start(cfg, move |_| {
+            Ok(Box::new(NativeEngine::new(model.clone())))
+        })
+        .unwrap();
+        let (tx, rx) = mpsc::channel();
+        let f = server.num_features();
+        let row = vec![0.5; f];
+        let bad = vec![0.5; f + 2];
+        let mut accepted = 0usize;
+        let mut malformed_sent = 0usize;
+        for i in 0..256 {
+            let r: &[f32] = if i % 9 == 0 { &bad } else { &row };
+            match server.submit(r, tx.clone()) {
+                Ok(_) => {
+                    accepted += 1;
+                    if i % 9 == 0 {
+                        malformed_sent += 1;
+                    }
+                }
+                Err(SubmitError::Full) => std::thread::sleep(Duration::from_micros(20)),
+                // Racing submits after the close below are the point —
+                // they must reject cleanly while the drain continues.
+                Err(SubmitError::Closed) => break,
+            }
+            if i == 128 {
+                server.close(); // close mid-stream; workers keep draining
+            }
+        }
+        drop(tx);
+        let mut served = 0usize;
+        while rx.recv_timeout(Duration::from_secs(5)).is_ok() {
+            served += 1;
+        }
+        assert_eq!(
+            served,
+            accepted - malformed_sent,
+            "every accepted well-formed request completes through the drain"
+        );
+        // Workers release slots after completing; poll briefly for the
+        // last batch's release before asserting.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            let (free, total) = server.arena_slots();
+            if free == total {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "arena leaked slots: {free} free of {total}"
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
         server.shutdown();
     }
 }

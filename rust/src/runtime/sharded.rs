@@ -123,7 +123,11 @@ struct RouterJob {
 /// single call. SAFETY contract (upheld by the dispatching engines):
 /// `flat`/`encoder` point into `Arc` allocations the engine keeps alive,
 /// `router` to the dispatching engine's per-worker router (each worker
-/// receives only its own), `x` into the caller's input and
+/// receives only its own), `x` into the caller's input — which, when a
+/// serving `worker_loop` dispatches here, is the slab feature arena's
+/// gathered slot run (the dispatcher owns every slot in the batch until
+/// after this call returns, so those rows are frozen for the job's
+/// lifetime; see `coordinator/batcher.rs`) — and
 /// `preds`/`scores`/`out` into the call's output buffers; the dispatching
 /// call holds `&mut self` and blocks until every job is acknowledged, so
 /// everything outlives the job, nothing mutates the shared inputs

@@ -17,6 +17,16 @@
 //! the pool's mpsc channel nodes remain the one bounded, O(shards),
 //! batch-size-independent exception.
 //!
+//! Since the slab-arena request plane (see `coordinator::batcher`) the
+//! witnessed scope extends past the engines to the whole submit→complete
+//! loop: a warm caller thread driving `Server::submit` through completion
+//! recv must count ZERO allocations per request — rows copy into arena
+//! slots, batches drain into reused buffers, and completions are plain
+//! `(id, prediction)` tuples. The `engine_hot` bench enforces this as the
+//! `allocs_per_request` gate; the worker-side `mpsc::Sender::send` node
+//! is invisible to the caller-thread witness by design (it lands on the
+//! worker's thread-local counter, not the submitter's).
+//!
 //! Counting must never itself allocate: the counters are a static atomic
 //! and a const-initialized thread-local `Cell`, and the thread-local is
 //! accessed via `try_with` so allocations during TLS teardown fall back

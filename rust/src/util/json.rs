@@ -83,6 +83,13 @@ impl Json {
         s
     }
 
+    /// Compact serialization appended into a caller-owned buffer —
+    /// the alloc-free sibling of [`Json::to_string`] for hot response
+    /// paths that reuse a grow-only `String` (see `coordinator/http.rs`).
+    pub fn write_to(&self, out: &mut String) {
+        self.write(out);
+    }
+
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),

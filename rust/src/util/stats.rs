@@ -61,6 +61,112 @@ pub fn percentile(samples: &mut [f64], q: f64) -> f64 {
     samples[idx.min(samples.len() - 1)]
 }
 
+/// Sub-bucket precision bits of [`LogHistogram`]: 2^7 = 128 linear
+/// sub-buckets per octave, i.e. ≤ 1/128 (~0.8 %) relative quantization
+/// error on every recorded value.
+const HIST_SUB_BITS: u32 = 7;
+const HIST_SUB_COUNT: usize = 1 << HIST_SUB_BITS; // 128
+/// Largest exponent covered: values up to 2^40 (≈ 12.7 days in µs) land
+/// in their own bucket; anything beyond saturates into the last one.
+const HIST_MAX_EXP: u32 = 40;
+/// 128 exact unit buckets for values < 128, then 64 log-spaced buckets
+/// per octave up to 2^40.
+const HIST_BUCKETS: usize =
+    HIST_SUB_COUNT + (HIST_MAX_EXP as usize - HIST_SUB_BITS as usize) * (HIST_SUB_COUNT / 2);
+
+/// Fixed-memory log2-bucketed histogram (HDR-style) for latency
+/// percentiles that are **exact up to bucket quantization** over every
+/// recorded sample — unlike a sampling reservoir, which is only
+/// statistically sound. No sorting, no per-record allocation: `record`
+/// is an index computation plus one counter increment, and `percentile`
+/// is a cumulative walk over ~2.2k fixed buckets.
+///
+/// Layout: values in `[0, 128)` get one bucket per unit (the first
+/// `HIST_SUB_COUNT` buckets); each octave `[2^k, 2^{k+1})` above that
+/// gets 64 linear sub-buckets, so relative error is bounded by 1/128.
+/// Values record truncated to integers (the intended unit is
+/// microseconds); negatives clamp to 0 and overflows saturate into the
+/// last bucket.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self { counts: vec![0; HIST_BUCKETS], total: 0 }
+    }
+
+    fn index(v: f64) -> usize {
+        let u = if v <= 0.0 { 0u64 } else { v as u64 };
+        if u < HIST_SUB_COUNT as u64 {
+            return u as usize;
+        }
+        let msb = 63 - u.leading_zeros(); // >= HIST_SUB_BITS
+        let msb = msb.min(HIST_MAX_EXP - 1); // saturate giant values
+        // Top 7 significant bits: (u >> shift) is in [64, 128).
+        let shift = msb - (HIST_SUB_BITS - 1);
+        let top = ((u >> shift) as usize).min(HIST_SUB_COUNT - 1);
+        HIST_SUB_COUNT
+            + (msb - HIST_SUB_BITS) as usize * (HIST_SUB_COUNT / 2)
+            + (top - HIST_SUB_COUNT / 2)
+    }
+
+    /// The value a bucket reports back: exact buckets answer their lower
+    /// bound (which IS the value for integer samples); octave buckets
+    /// answer their midpoint (halving the worst-case quantization
+    /// error); the sub-unit bucket answers 0.5 so all-sub-unit
+    /// populations still report a positive percentile.
+    fn representative(idx: usize) -> f64 {
+        if idx == 0 {
+            return 0.5;
+        }
+        if idx < HIST_SUB_COUNT {
+            return idx as f64;
+        }
+        let octave = (idx - HIST_SUB_COUNT) / (HIST_SUB_COUNT / 2);
+        let offset = (idx - HIST_SUB_COUNT) % (HIST_SUB_COUNT / 2);
+        let width = 1u64 << (octave + 1);
+        let low = (HIST_SUB_COUNT as u64 / 2 + offset as u64) << (octave + 1);
+        low as f64 + width as f64 / 2.0
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.counts[Self::index(v)] += 1;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Nearest-rank percentile (`q` in `[0,1]`) over every recorded
+    /// value — same rank rule as [`percentile`], so the two agree up to
+    /// bucket quantization. 0.0 when empty.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((self.total - 1) as f64 * q.clamp(0.0, 1.0)).round() as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                return Self::representative(i);
+            }
+        }
+        // Unreachable (cum reaches total > rank); keep the walk total.
+        Self::representative(HIST_BUCKETS - 1)
+    }
+}
+
 /// Wall-clock timer with a convenient elapsed-seconds reading.
 pub struct Timer {
     start: Instant,
@@ -154,6 +260,68 @@ mod tests {
         assert_eq!(percentile(&mut xs, 0.0), 1.0);
         assert_eq!(percentile(&mut xs, 0.5), 3.0);
         assert_eq!(percentile(&mut xs, 1.0), 5.0);
+    }
+
+    #[test]
+    fn log_histogram_is_exact_below_the_sub_bucket_count() {
+        let mut h = LogHistogram::new();
+        for v in 1..=100 {
+            h.record(v as f64);
+        }
+        assert_eq!(h.count(), 100);
+        // Nearest-rank over 1..=100 picks 51 at q=0.5 and 99 at q=0.99
+        // (same rule as `percentile`); sub-128 values are unit buckets,
+        // so the histogram answers them exactly.
+        let mut sorted: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        assert_eq!(h.percentile(0.5), percentile(&mut sorted, 0.5));
+        assert_eq!(h.percentile(0.99), percentile(&mut sorted, 0.99));
+        assert_eq!(h.percentile(0.0), 1.0);
+        assert_eq!(h.percentile(1.0), 100.0);
+    }
+
+    #[test]
+    fn log_histogram_tracks_sorted_percentiles_within_quantization() {
+        // Log-spaced buckets above 128: every answer must sit within
+        // 1/128 relative error of the true nearest-rank percentile.
+        let mut h = LogHistogram::new();
+        let mut vals = Vec::new();
+        for i in 0..10_000u64 {
+            let v = (i * 37 % 50_000) as f64 + 0.25;
+            h.record(v);
+            vals.push(v);
+        }
+        for q in [0.1, 0.5, 0.9, 0.99, 0.999] {
+            let exact = percentile(&mut vals.clone(), q);
+            let approx = h.percentile(q);
+            let tol = exact.abs() / 128.0 + 1.0;
+            assert!(
+                (approx - exact).abs() <= tol,
+                "q={q}: histogram {approx} vs exact {exact} (tol {tol})"
+            );
+        }
+    }
+
+    #[test]
+    fn log_histogram_edge_cases_stay_bounded() {
+        let mut h = LogHistogram::new();
+        assert_eq!(h.percentile(0.5), 0.0, "empty histogram answers 0");
+        // Negatives clamp to the sub-unit bucket; its representative is
+        // positive so all-tiny populations never report p50 == 0.
+        h.record(-3.0);
+        h.record(0.2);
+        assert!(h.percentile(0.5) > 0.0 && h.percentile(0.5) < 1.0);
+        // Values beyond 2^40 saturate into the last bucket, not a panic.
+        let mut big = LogHistogram::new();
+        big.record(1e18);
+        big.record(f64::INFINITY);
+        assert!(big.percentile(0.5) >= (1u64 << 39) as f64);
+        // Percentiles are monotone in q.
+        let mut m = LogHistogram::new();
+        for i in 0..1000 {
+            m.record((i * i) as f64);
+        }
+        assert!(m.percentile(0.99) >= m.percentile(0.5));
+        assert!(m.percentile(0.5) >= m.percentile(0.1));
     }
 
     #[test]

@@ -51,7 +51,7 @@ fn many_producers_many_workers_all_served_correctly() {
             for r in 0..reps {
                 for i in 0..ds.n_test() {
                     loop {
-                        match server.submit(ds.test_row(i).to_vec(), tx.clone()) {
+                        match server.submit(ds.test_row(i), tx.clone()) {
                             Ok(id) => {
                                 ids.push((id, i));
                                 break;
@@ -76,7 +76,7 @@ fn many_producers_many_workers_all_served_correctly() {
         }
     }
     let mut served = 0usize;
-    while let Ok((id, pred, _)) = rx.recv_timeout(Duration::from_secs(20)) {
+    while let Ok((id, pred)) = rx.recv_timeout(Duration::from_secs(20)) {
         let row = id2row[&id];
         assert_eq!(pred, expected[row], "request {id} row {row}");
         served += 1;
@@ -132,7 +132,7 @@ fn worker_engine_failure_does_not_wedge_the_server() {
     let n = 60;
     for _ in 0..n {
         loop {
-            match server.submit(vec![0.0; 4], tx.clone()) {
+            match server.submit(&[0.0; 4], tx.clone()) {
                 Ok(_) => break,
                 Err(SubmitError::Full) => std::thread::sleep(Duration::from_micros(20)),
                 Err(e) => panic!("{e:?}"),
@@ -182,12 +182,12 @@ fn zero_length_submit_is_dropped_without_wedging_the_server() {
     .unwrap();
     // bad request on its own channel: completion never arrives
     let (bad_tx, bad_rx) = mpsc::channel();
-    server.submit(Vec::new(), bad_tx).unwrap();
+    server.submit(&[], bad_tx).unwrap();
     // good requests afterwards must still be served
     let (tx, rx) = mpsc::channel();
     for i in 0..8 {
         loop {
-            match server.submit(ds.test_row(i).to_vec(), tx.clone()) {
+            match server.submit(ds.test_row(i), tx.clone()) {
                 Ok(_) => break,
                 Err(SubmitError::Full) => std::thread::sleep(Duration::from_micros(20)),
                 Err(e) => panic!("{e:?}"),
@@ -241,15 +241,15 @@ fn malformed_request_in_batch_only_drops_the_offender() {
     let (bad_tx, bad_rx) = mpsc::channel();
     let (tx, rx) = mpsc::channel();
     let f = server.num_features();
-    server.submit(vec![0.5; f + 3], bad_tx).unwrap(); // wrong width
+    server.submit(&vec![0.5; f + 3], bad_tx).unwrap(); // wrong width
     let mut id2row = std::collections::HashMap::new();
     for i in 0..5 {
-        let id = server.submit(ds.test_row(i).to_vec(), tx.clone()).unwrap();
+        let id = server.submit(ds.test_row(i), tx.clone()).unwrap();
         id2row.insert(id, i);
     }
     drop(tx);
     let mut served = 0;
-    while let Ok((id, pred, _)) = rx.recv_timeout(Duration::from_secs(5)) {
+    while let Ok((id, pred)) = rx.recv_timeout(Duration::from_secs(5)) {
         assert_eq!(pred, expected[id2row[&id]], "batch-mates get correct predictions");
         served += 1;
         if served == 5 {
@@ -414,7 +414,7 @@ fn zoo_server_end_to_end_matches_local_ground_truth() {
             (Some(Tier::Accurate), acc_want[i]),
         ] {
             loop {
-                match server.submit_tiered(ds.test_row(i).to_vec(), tier, tx.clone()) {
+                match server.submit_tiered(ds.test_row(i), tier, tx.clone()) {
                     Ok(id) => {
                         id2want.insert(id, want);
                         break;
@@ -427,7 +427,7 @@ fn zoo_server_end_to_end_matches_local_ground_truth() {
     }
     drop(tx);
     let mut served = 0usize;
-    while let Ok((id, pred, _)) = rx.recv_timeout(Duration::from_secs(20)) {
+    while let Ok((id, pred)) = rx.recv_timeout(Duration::from_secs(20)) {
         assert_eq!(
             pred, id2want[&id],
             "request {id}: served zoo prediction must match local ground truth"
@@ -471,9 +471,9 @@ fn queue_full_surfaces_submit_error_and_metrics() {
     .unwrap();
     let (tx, _rx) = mpsc::channel();
     for _ in 0..8 {
-        server.submit(vec![0.5; 4], tx.clone()).unwrap();
+        server.submit(&[0.5; 4], tx.clone()).unwrap();
     }
-    let err = server.submit(vec![0.5; 4], tx.clone()).unwrap_err();
+    let err = server.submit(&[0.5; 4], tx.clone()).unwrap_err();
     assert_eq!(err, SubmitError::Full);
     assert_eq!(server.queue_depth(), 8);
     let report = server.metrics.report(4);
@@ -504,8 +504,9 @@ fn shutdown_while_producers_still_submitting_drains_accepted_requests() {
         let tx = tx.clone();
         std::thread::spawn(move || {
             let mut accepted = 0usize;
+            let row = vec![0.5; f];
             loop {
-                match server.submit(vec![0.5; f], tx.clone()) {
+                match server.submit(&row, tx.clone()) {
                     Ok(_) => accepted += 1,
                     Err(SubmitError::Closed) => break, // server closed mid-stream
                     Err(SubmitError::Full) => std::thread::sleep(Duration::from_micros(5)),
@@ -623,13 +624,13 @@ fn sharded_server_serves_identically_to_per_worker_engines() {
     let (tx, rx) = mpsc::channel();
     let mut id2row = std::collections::HashMap::new();
     for i in 0..ds.n_test() {
-        let id = server.submit(ds.test_row(i).to_vec(), tx.clone()).unwrap();
+        let id = server.submit(ds.test_row(i), tx.clone()).unwrap();
         id2row.insert(id, i);
     }
     drop(tx);
     let mut got = vec![usize::MAX; ds.n_test()];
     for _ in 0..ds.n_test() {
-        let (id, pred, _) = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        let (id, pred) = rx.recv_timeout(Duration::from_secs(10)).unwrap();
         got[id2row[&id]] = pred;
     }
     server.shutdown();
@@ -734,11 +735,11 @@ fn sharded_zoo_panicking_tier_counts_batches_failed_without_wedging_pool() {
     let (tx, rx) = mpsc::channel();
     let (poison_tx, poison_rx) = mpsc::channel();
     for _ in 0..5 {
-        server.submit(vec![0.5; 2], tx.clone()).unwrap();
+        server.submit(&[0.5; 2], tx.clone()).unwrap();
     }
-    server.submit(vec![9001.0, 0.5], poison_tx).unwrap();
+    server.submit(&[9001.0, 0.5], poison_tx).unwrap();
     for _ in 0..5 {
-        server.submit(vec![0.5; 2], tx.clone()).unwrap();
+        server.submit(&[0.5; 2], tx.clone()).unwrap();
     }
     drop(tx);
     let mut served = 0;
@@ -779,15 +780,15 @@ fn sharded_zoo_malformed_rows_only_drop_the_offender() {
     let f = server.num_features();
     let (bad_tx, bad_rx) = mpsc::channel();
     let (tx, rx) = mpsc::channel();
-    server.submit(vec![0.5; f + 3], bad_tx).unwrap(); // wrong width
+    server.submit(&vec![0.5; f + 3], bad_tx).unwrap(); // wrong width
     let mut id2row = std::collections::HashMap::new();
     for i in 0..5 {
-        let id = server.submit(ds.test_row(i).to_vec(), tx.clone()).unwrap();
+        let id = server.submit(ds.test_row(i), tx.clone()).unwrap();
         id2row.insert(id, i);
     }
     drop(tx);
     let mut served = 0;
-    while let Ok((id, pred, _)) = rx.recv_timeout(Duration::from_secs(5)) {
+    while let Ok((id, pred)) = rx.recv_timeout(Duration::from_secs(5)) {
         assert_eq!(
             pred, cascade_want[id2row[&id]],
             "batch-mates complete with bit-exact sharded-cascade predictions"
@@ -829,6 +830,7 @@ fn close_while_draining_sharded_zoo_accounts_for_every_request() {
         let tx = tx.clone();
         std::thread::spawn(move || {
             let mut accepted = 0usize;
+            let row = vec![0.5; f];
             // mixed cascade + pinned traffic, so the drain crosses
             // tier-homogeneous batch splits too
             for i in 0.. {
@@ -837,7 +839,7 @@ fn close_while_draining_sharded_zoo_accounts_for_every_request() {
                     1 => Some(Tier::Fast),
                     _ => Some(Tier::Accurate),
                 };
-                match server.submit_tiered(vec![0.5; f], tier, tx.clone()) {
+                match server.submit_tiered(&row, tier, tx.clone()) {
                     Ok(_) => accepted += 1,
                     Err(SubmitError::Closed) => break,
                     Err(SubmitError::Full) => std::thread::sleep(Duration::from_micros(5)),
@@ -947,8 +949,9 @@ fn queue_depth_reflects_backlog_and_drains() {
     };
     let server = Server::start(cfg, move |_| Ok(Box::new(NativeEngine::new(m.clone())) as Box<dyn InferenceEngine>)).unwrap();
     let (tx, rx) = mpsc::channel();
+    let row = vec![0.5; server.num_features()];
     for _ in 0..256 {
-        let _ = server.submit(vec![0.5; server.num_features()], tx.clone());
+        let _ = server.submit(&row, tx.clone());
     }
     drop(tx);
     let mut got = 0;

@@ -794,6 +794,253 @@ fn prop_simd_kernel_paths_match_scalar_bit_exactly() {
     );
 }
 
+/// Pure reference model of the batcher's split semantics, transliterated
+/// from the pre-ring `VecDeque` implementation: FIFO order, each batch is
+/// the longest same-tier prefix of what remains, capped at `max_batch`.
+/// The ring rewrite must be behavior-identical to this.
+fn reference_splits(tiers: &[Option<uleen::runtime::Tier>], max_batch: usize) -> Vec<Vec<usize>> {
+    let max_batch = max_batch.max(1);
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < tiers.len() {
+        let head = tiers[i];
+        let mut j = i + 1;
+        while j < tiers.len() && j - i < max_batch && tiers[j] == head {
+            j += 1;
+        }
+        out.push((i..j).collect());
+        i = j;
+    }
+    out
+}
+
+fn tier_of(v: u64) -> Option<uleen::runtime::Tier> {
+    use uleen::runtime::Tier;
+    match v {
+        0 => None,
+        1 => Some(Tier::Fast),
+        2 => Some(Tier::Balanced),
+        _ => Some(Tier::Accurate),
+    }
+}
+
+/// The slab-arena ring batcher must be BEHAVIOR-IDENTICAL to the old
+/// `VecDeque` batcher it replaced: pre-fill the queue with a random
+/// tier-clustered request sequence, `close()` (which kills the dwell, so
+/// draining is deterministic), then drain with one consumer and compare
+/// the exact batch-by-batch id grouping against the pure
+/// [`reference_splits`] model. `max_batch` cycles 1/63/64/65/257 so ring
+/// wraparound and the capacity cap are both exercised. Along the way the
+/// arena contract is checked too: `gather` hands back exactly the row
+/// bytes each id submitted (slot indirection never scrambles payloads),
+/// and after the drain the free-list holds every slot again.
+#[test]
+fn prop_ring_batcher_matches_reference_splits() {
+    use std::sync::mpsc;
+    use std::time::{Duration, Instant};
+    use uleen::coordinator::batcher::{BatcherConfig, BoundedQueue};
+    let mut case_no = 0usize;
+    check(
+        "ring-batcher-vs-reference",
+        &Config { cases: 15, ..Config::default() },
+        move |rng, _size| {
+            let i = case_no;
+            case_no += 1;
+            let max_batch = [1usize, 63, 64, 65, 257][i % 5];
+            let n = rng.below(400) as usize; // 0 is a valid (empty) case
+            // tier runs, not iid draws: realistic traffic arrives in
+            // bursts, and runs are what make prefix splits interesting
+            let mut tiers = Vec::with_capacity(n);
+            let mut cur = tier_of(rng.below(4));
+            for _ in 0..n {
+                if rng.below(3) == 0 {
+                    cur = tier_of(rng.below(4));
+                }
+                tiers.push(cur);
+            }
+            (max_batch, tiers)
+        },
+        |(max_batch, tiers)| {
+            let f = 3usize;
+            let cfg = BatcherConfig {
+                max_batch: *max_batch,
+                max_wait: Duration::from_millis(5),
+                capacity: tiers.len().max(1),
+            };
+            let q = BoundedQueue::new(cfg, f);
+            let (tx, _rx) = mpsc::channel();
+            for (i, t) in tiers.iter().enumerate() {
+                let row: Vec<f32> = (0..f).map(|j| (i * 31 + j) as f32).collect();
+                q.submit_row(i as u64, &row, *t, Instant::now(), tx.clone())
+                    .map_err(|e| format!("submit {i} refused: {e:?}"))?;
+            }
+            q.close();
+            let want = reference_splits(tiers, *max_batch);
+            let mut batch = Vec::new();
+            let mut scratch = Vec::new();
+            let mut got: Vec<Vec<usize>> = Vec::new();
+            while q.next_batch_into(&mut batch) {
+                if batch.is_empty() {
+                    return Err("next_batch_into returned true with an empty batch".into());
+                }
+                let head = batch[0].tier;
+                if batch.iter().any(|r| r.tier != head) {
+                    return Err(format!("mixed-tier batch at index {}", got.len()));
+                }
+                let plane = q.gather(&batch, &mut scratch);
+                for (k, r) in batch.iter().enumerate() {
+                    for j in 0..f {
+                        let wantv = (r.id as usize * 31 + j) as f32;
+                        if plane[k * f + j] != wantv {
+                            return Err(format!(
+                                "gather scrambled id {} feature {j}: {} != {wantv}",
+                                r.id,
+                                plane[k * f + j]
+                            ));
+                        }
+                    }
+                }
+                q.release(&batch);
+                got.push(batch.iter().map(|r| r.id as usize).collect());
+            }
+            if got != want {
+                let at = got
+                    .iter()
+                    .zip(&want)
+                    .position(|(a, b)| a != b)
+                    .unwrap_or(want.len().min(got.len()));
+                return Err(format!(
+                    "splits diverge from reference at batch {at} \
+                     (max_batch={max_batch}, n={}): ring {:?} vs reference {:?}",
+                    tiers.len(),
+                    got.get(at),
+                    want.get(at)
+                ));
+            }
+            if q.free_slots() != q.arena_slots() {
+                return Err(format!(
+                    "arena leaked slots after full drain: {} free of {}",
+                    q.free_slots(),
+                    q.arena_slots()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// MPMC safety of the ring batcher: 2–4 consumers racing
+/// `next_batch_into` over a closed, pre-filled queue must partition the
+/// requests into batches that are each tier-homogeneous, FIFO-contiguous
+/// (ids `k, k+1, …` — the lock hands out strict queue prefixes), and
+/// ≤ `max_batch`; across all consumers every id appears exactly once
+/// (nothing lost, nothing duplicated), and after the drain the arena
+/// free-list is whole again. Interleaving is scheduler-random, so this
+/// checks invariants rather than one canonical split.
+#[test]
+fn prop_ring_batcher_competing_consumers_partition_fifo() {
+    use std::sync::{mpsc, Mutex};
+    use std::time::{Duration, Instant};
+    use uleen::coordinator::batcher::{BatcherConfig, BoundedQueue};
+    use uleen::runtime::Tier;
+    let mut case_no = 0usize;
+    check(
+        "ring-batcher-mpmc",
+        &Config { cases: 8, ..Config::default() },
+        move |rng, _size| {
+            let i = case_no;
+            case_no += 1;
+            let max_batch = [1usize, 63, 64, 65, 257][i % 5];
+            let consumers = 2 + rng.below(3) as usize;
+            let n = rng.below(500) as usize;
+            let mut tiers = Vec::with_capacity(n);
+            let mut cur = tier_of(rng.below(4));
+            for _ in 0..n {
+                if rng.below(4) == 0 {
+                    cur = tier_of(rng.below(4));
+                }
+                tiers.push(cur);
+            }
+            (max_batch, consumers, tiers)
+        },
+        |(max_batch, consumers, tiers)| {
+            let f = 2usize;
+            let cfg = BatcherConfig {
+                max_batch: *max_batch,
+                max_wait: Duration::from_micros(100),
+                capacity: tiers.len().max(1),
+            };
+            let q = BoundedQueue::new(cfg, f);
+            let (tx, _rx) = mpsc::channel();
+            for (i, t) in tiers.iter().enumerate() {
+                let row: Vec<f32> = (0..f).map(|j| (i * 7 + j) as f32).collect();
+                q.submit_row(i as u64, &row, *t, Instant::now(), tx.clone())
+                    .map_err(|e| format!("submit {i} refused: {e:?}"))?;
+            }
+            q.close();
+            let all: Mutex<Vec<Vec<(u64, Option<Tier>)>>> = Mutex::new(Vec::new());
+            std::thread::scope(|s| {
+                for _ in 0..*consumers {
+                    s.spawn(|| {
+                        let mut batch = Vec::new();
+                        let mut scratch = Vec::new();
+                        let mut mine: Vec<Vec<(u64, Option<Tier>)>> = Vec::new();
+                        while q.next_batch_into(&mut batch) {
+                            let _ = q.gather(&batch, &mut scratch);
+                            q.release(&batch);
+                            mine.push(batch.iter().map(|r| (r.id, r.tier)).collect());
+                        }
+                        all.lock().unwrap().append(&mut mine);
+                    });
+                }
+            });
+            let batches = all.into_inner().unwrap();
+            let mut seen = vec![false; tiers.len()];
+            for (b_idx, b) in batches.iter().enumerate() {
+                if b.is_empty() {
+                    return Err(format!("consumer took an empty batch ({b_idx})"));
+                }
+                if b.len() > *max_batch {
+                    return Err(format!(
+                        "batch {b_idx} has {} requests, cap is {max_batch}",
+                        b.len()
+                    ));
+                }
+                let head = b[0].1;
+                for (k, &(id, t)) in b.iter().enumerate() {
+                    if t != head {
+                        return Err(format!("batch {b_idx} mixes tiers"));
+                    }
+                    if t != tiers[id as usize] {
+                        return Err(format!("id {id} changed tier in flight"));
+                    }
+                    if k > 0 && id != b[k - 1].0 + 1 {
+                        return Err(format!(
+                            "batch {b_idx} is not a FIFO-contiguous run: {} then {id}",
+                            b[k - 1].0
+                        ));
+                    }
+                    if seen[id as usize] {
+                        return Err(format!("id {id} delivered twice"));
+                    }
+                    seen[id as usize] = true;
+                }
+            }
+            if let Some(lost) = seen.iter().position(|&s| !s) {
+                return Err(format!("id {lost} was never delivered"));
+            }
+            if q.free_slots() != q.arena_slots() {
+                return Err(format!(
+                    "arena leaked slots under competing consumers: {} free of {}",
+                    q.free_slots(),
+                    q.arena_slots()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_response_bounded_by_kept_filters() {
     // 0 - bias ≤ response ≤ kept_filters + bias for every input
