@@ -113,7 +113,7 @@ fn main() -> anyhow::Result<()> {
         &["margin thr", "Acc.%", "fast-path %", "mean KiB touched/req"],
     );
     for thr in [0.0f32, 0.03, 0.08, 10.0] {
-        router.margin_threshold = thr;
+        router.set_margin_threshold(thr);
         router.stats = Default::default();
         let mut correct = 0usize;
         let n_eval = 500usize;

@@ -16,7 +16,12 @@
 //! at batch 256), and the cascade×shard sweep (`ShardedRouterEngine` at
 //! batch 256, with an asserted merge gate: pool-merged per-tier counters
 //! bit-exact with the single-router cascade, zero per-worker model
-//! clones Arc-witnessed) on top.
+//! clones Arc-witnessed) on top. The autopilot sweep closes the set:
+//! bursty under-filled traffic against a zoo server whose static config
+//! (margin 0.9, dwell 5 ms) structurally misses a 2 ms p99 target, run
+//! twice — knobs frozen vs steered by `coordinator::autopilot` — with
+//! the "autopilot holds the target the static config misses AND both
+//! knobs moved" gate armed by ULEEN_GATE_AUTOPILOT (nightly).
 //!
 //! Flags (after `--`, e.g. `cargo bench --bench engine_hot -- --json`):
 //! * `--json`  — also emit `BENCH_engine_hot.json` (stage → ns/sample,
@@ -34,6 +39,7 @@ use uleen::bench::harness::{bench_fn, BenchResult};
 #[global_allocator]
 static ALLOC_WITNESS: uleen::util::alloc_witness::CountingAlloc =
     uleen::util::alloc_witness::CountingAlloc;
+use uleen::coordinator::autopilot::{Autopilot, AutopilotConfig};
 use uleen::coordinator::batcher::BatcherConfig;
 use uleen::coordinator::http::{client, HttpConfig, HttpFrontend};
 use uleen::coordinator::router::{ModelRouter, Tier};
@@ -46,6 +52,7 @@ use uleen::model::submodel::SubmodelScratch;
 use uleen::runtime::{InferenceEngine, NativeEngine, SharedModel, ShardedEngine, ShardedRouterEngine};
 use uleen::util::bitvec::BitVec;
 use uleen::util::json::Json;
+use uleen::util::stats::percentile;
 #[cfg(feature = "pjrt")]
 use uleen::runtime::PjrtEngine;
 
@@ -640,6 +647,128 @@ fn main() -> anyhow::Result<()> {
         println!("(skip PJRT: built without --features pjrt)");
     }
 
+    // == autopilot sweep: bursty traffic vs a p99 SLO, static vs steered ==
+    // Bursts of 8 rows against a 32-row micro-batcher: the batch never
+    // fills, so every request waits out the full dwell and the static
+    // config (margin 0.9, dwell 5 ms) structurally misses a 2 ms p99 —
+    // no load spike needed, the miss is deterministic. The same traffic
+    // with `--target-p99-ms`-style steering attached lets the AIMD loop
+    // cut dwell (and margin) until the window p99 sits inside the
+    // hysteresis band under the target. p99 is measured CLIENT-side
+    // (submit → completion) over the post-warmup rounds, i.e. the number
+    // a caller would see, not the server's own histogram.
+    println!("\n== autopilot sweep: bursty zoo traffic, static knobs vs AIMD steering ==");
+    let ap_rounds = if smoke { 150usize } else { 400 };
+    let ap_burst = 8usize;
+    let ap_target_ms = 2.0f64;
+    let ap_static_margin = 0.9f32;
+    let ap_static_dwell = std::time::Duration::from_millis(5);
+    // -> (client p99 ms over post-warmup rounds, final margin, final dwell µs)
+    let run_pass = |steered: bool| -> anyhow::Result<(f64, f32, f64)> {
+        let srv = Server::start_zoo_shared(
+            ServerConfig {
+                batcher: BatcherConfig {
+                    max_batch: 32,
+                    max_wait: ap_static_dwell,
+                    capacity: 4096,
+                },
+                workers: 1,
+            },
+            shared_tiers.clone(),
+            ap_static_margin,
+        )?;
+        let pilot = steered.then(|| {
+            Autopilot::start(
+                AutopilotConfig { target_p99_ms: ap_target_ms, ..Default::default() },
+                srv.metrics.clone(),
+                srv.margin_knob(),
+                srv.dwell_knob(),
+            )
+        });
+        let (tx, rx) = std::sync::mpsc::channel();
+        let warmup_rounds = ap_rounds * 2 / 5;
+        let mut lats_us: Vec<f64> = Vec::with_capacity((ap_rounds - warmup_rounds) * ap_burst);
+        let mut sent: std::collections::HashMap<u64, std::time::Instant> =
+            std::collections::HashMap::with_capacity(ap_burst);
+        for round in 0..ap_rounds {
+            for i in 0..ap_burst {
+                let row = ds.test_row((round * ap_burst + i) % ds.n_test());
+                let t0 = std::time::Instant::now();
+                let id = loop {
+                    match srv.submit(row, tx.clone()) {
+                        Ok(id) => break id,
+                        Err(uleen::coordinator::batcher::SubmitError::Full) => {
+                            std::thread::sleep(std::time::Duration::from_micros(50))
+                        }
+                        Err(e) => anyhow::bail!("submit: {e:?}"),
+                    }
+                };
+                sent.insert(id, t0);
+            }
+            for _ in 0..ap_burst {
+                let (id, _pred) = rx.recv_timeout(std::time::Duration::from_secs(10))?;
+                let t0 = sent.remove(&id).expect("completion for an unknown id");
+                if round >= warmup_rounds {
+                    lats_us.push(t0.elapsed().as_secs_f64() * 1e6);
+                }
+            }
+        }
+        let final_margin = srv.margin_knob().map(|k| k.get()).unwrap_or(f32::NAN);
+        let final_dwell_us = srv.dwell_knob().get().as_secs_f64() * 1e6;
+        if let Some(p) = pilot {
+            p.stop();
+        }
+        srv.shutdown();
+        Ok((percentile(&mut lats_us, 0.99) / 1e3, final_margin, final_dwell_us))
+    };
+    let (ap_static_p99_ms, ap_static_final_margin, ap_static_final_dwell_us) = run_pass(false)?;
+    let (ap_auto_p99_ms, ap_final_margin, ap_final_dwell_us) = run_pass(true)?;
+    // With no autopilot attached the knobs must not move — the flag-off
+    // path stays bit-identical to a static server.
+    assert_eq!(
+        ap_static_final_margin, ap_static_margin,
+        "margin knob moved on the unsteered pass"
+    );
+    assert_eq!(
+        ap_static_final_dwell_us,
+        ap_static_dwell.as_secs_f64() * 1e6,
+        "dwell knob moved on the unsteered pass"
+    );
+    let ap_gated = std::env::var_os("ULEEN_GATE_AUTOPILOT").is_some();
+    println!(
+        "  static:    p99 {ap_static_p99_ms:.2} ms  (margin {ap_static_final_margin:.2}, \
+         dwell {ap_static_final_dwell_us:.0} µs — frozen)"
+    );
+    println!(
+        "  autopilot: p99 {ap_auto_p99_ms:.2} ms  (margin {ap_final_margin:.3}, \
+         dwell {ap_final_dwell_us:.0} µs)  target {ap_target_ms} ms"
+    );
+    let ap_holds = ap_auto_p99_ms <= ap_target_ms && ap_static_p99_ms > ap_target_ms;
+    let ap_knobs_moved = ap_final_margin < ap_static_margin
+        && ap_final_dwell_us < ap_static_dwell.as_secs_f64() * 1e6;
+    println!(
+        "acceptance: autopilot holds the p99 target the static config misses, \
+         both knobs moved (gate {}) {}",
+        if ap_gated { "ARMED" } else { "off" },
+        if ap_holds && ap_knobs_moved { "✓" } else { "✗ TARGET MISSED" }
+    );
+    if ap_gated {
+        assert!(
+            ap_static_p99_ms > ap_target_ms,
+            "the static config was supposed to miss the {ap_target_ms} ms target \
+             (got {ap_static_p99_ms:.2} ms) — the scenario no longer stresses the dwell"
+        );
+        assert!(
+            ap_auto_p99_ms <= ap_target_ms,
+            "autopilot failed to hold p99 <= {ap_target_ms} ms (got {ap_auto_p99_ms:.2} ms)"
+        );
+        assert!(
+            ap_knobs_moved,
+            "autopilot held the target without moving both knobs \
+             (margin {ap_final_margin}, dwell {ap_final_dwell_us} µs)"
+        );
+    }
+
     // == machine-readable trajectory (ROADMAP follow-up d) ==
     if json_out {
         let mut stages = Json::obj();
@@ -698,6 +827,18 @@ fn main() -> anyhow::Result<()> {
             .set("merged_counters_exact", Json::Bool(true))
             .set("zero_model_clones", Json::Bool(true));
         doc.set("cascade_shard_sweep_b256", shard_doc);
+        // the autopilot_sweep schema row in EXPERIMENTS.md — the gate
+        // asserts the hold when ULEEN_GATE_AUTOPILOT is set; the numbers
+        // serialize either way so the trajectory records every run
+        let mut ap_doc = Json::obj();
+        ap_doc
+            .set("target_p99_ms", Json::Num(ap_target_ms))
+            .set("achieved_p99_ms_static", Json::Num(ap_static_p99_ms))
+            .set("achieved_p99_ms_autopilot", Json::Num(ap_auto_p99_ms))
+            .set("final_margin", Json::Num(ap_final_margin as f64))
+            .set("final_dwell_us", Json::Num(ap_final_dwell_us))
+            .set("gated", Json::Bool(ap_gated));
+        doc.set("autopilot_sweep", ap_doc);
         let mut http_doc = Json::obj();
         http_doc
             .set("clients", Json::Num(http_clients as f64))

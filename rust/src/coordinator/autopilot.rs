@@ -1,0 +1,379 @@
+//! Latency autopilot: an SLO controller that tunes the two serving
+//! latency knobs — cascade margin and batcher dwell — online against a
+//! target p99 (`uleen serve --target-p99-ms X`).
+//!
+//! The control loop is bounded AIMD with a hysteresis band: each tick it
+//! drains the windowed latency view from [`ServerMetrics`] (recent
+//! completions only — the cumulative histogram keeps serving `/metrics`)
+//! and compares the window's p99 against the target. Above the band it
+//! **tightens** multiplicatively (halve margin → fewer cascade
+//! escalations, halve dwell → less queueing); below the band it
+//! **relaxes** additively (margin back up toward accuracy, dwell back up
+//! toward batch fill). Both knobs are hard-clamped to configured
+//! `[min, max]` ranges, so a misbehaving window can never drive the
+//! server into a degenerate configuration. Inside the band — or when the
+//! window is too thin to trust — it holds.
+//!
+//! The knobs themselves are lock-free shared handles: [`MarginKnob`] is
+//! one `Arc<AtomicU32>` (f32 bit-cast) read by `ModelRouter`,
+//! `RouterEngine` and every per-worker router inside
+//! `ShardedRouterEngine` (one knob, N readers — cloning the handle
+//! clones the `Arc`, not the value), and [`DwellKnob`] is an
+//! `Arc<AtomicU64>` of nanoseconds the batcher reads at the top of each
+//! dwell. With no autopilot attached both knobs simply hold their static
+//! CLI values, so serving behavior is bit-exact with the pre-autopilot
+//! code path.
+
+use crate::coordinator::metrics::{AutopilotStatus, LatencyWindow, ServerMetrics};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Shared cascade-margin knob: an f32 bit-cast through one
+/// `Arc<AtomicU32>`. Clones share the SAME atomic, so one `set` is seen
+/// by every router holding a handle.
+#[derive(Clone, Debug)]
+pub struct MarginKnob {
+    bits: Arc<AtomicU32>,
+}
+
+impl MarginKnob {
+    pub fn new(margin: f32) -> Self {
+        Self { bits: Arc::new(AtomicU32::new(margin.to_bits())) }
+    }
+
+    pub fn get(&self) -> f32 {
+        f32::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    pub fn set(&self, margin: f32) {
+        self.bits.store(margin.to_bits(), Ordering::Relaxed);
+    }
+
+    /// True when both handles wrap the same underlying atomic — the
+    /// "one knob, N readers" sharing tests pin this down.
+    pub fn shares_with(&self, other: &MarginKnob) -> bool {
+        Arc::ptr_eq(&self.bits, &other.bits)
+    }
+}
+
+/// Shared batch-dwell knob: nanoseconds in one `Arc<AtomicU64>`, read by
+/// the batcher at the top of each dwell (so a change applies from the
+/// next micro-batch on, never mid-dwell).
+#[derive(Clone, Debug)]
+pub struct DwellKnob {
+    nanos: Arc<AtomicU64>,
+}
+
+impl DwellKnob {
+    pub fn new(dwell: Duration) -> Self {
+        Self { nanos: Arc::new(AtomicU64::new(dwell.as_nanos().min(u64::MAX as u128) as u64)) }
+    }
+
+    pub fn get(&self) -> Duration {
+        Duration::from_nanos(self.nanos.load(Ordering::Relaxed))
+    }
+
+    pub fn set(&self, dwell: Duration) {
+        self.nanos
+            .store(dwell.as_nanos().min(u64::MAX as u128) as u64, Ordering::Relaxed);
+    }
+
+    /// True when both handles wrap the same underlying atomic.
+    pub fn shares_with(&self, other: &DwellKnob) -> bool {
+        Arc::ptr_eq(&self.nanos, &other.nanos)
+    }
+}
+
+/// Controller parameters: target, cadence, hysteresis, and the hard
+/// clamp ranges + step sizes for both knobs.
+#[derive(Clone, Debug)]
+pub struct AutopilotConfig {
+    /// The p99 SLO, in milliseconds, the controller steers toward.
+    pub target_p99_ms: f64,
+    /// Control period: one window drain + at most one decision per tick.
+    pub interval: Duration,
+    /// Hysteresis band as a fraction of the target: no action while the
+    /// window p99 sits inside `target * (1 ± hysteresis)`.
+    pub hysteresis: f64,
+    /// Windows with fewer samples than this are held, not acted on —
+    /// a thin window's p99 is noise.
+    pub min_window: u64,
+    /// Hard clamp range for the cascade margin.
+    pub margin_min: f32,
+    pub margin_max: f32,
+    /// Additive margin step on relax (decrease is multiplicative: ×1/2).
+    pub margin_step: f32,
+    /// Hard clamp range for the batch dwell.
+    pub dwell_min: Duration,
+    pub dwell_max: Duration,
+    /// Additive dwell step on relax (decrease is multiplicative: ×1/2).
+    pub dwell_step: Duration,
+}
+
+impl Default for AutopilotConfig {
+    fn default() -> Self {
+        Self {
+            target_p99_ms: 5.0,
+            interval: Duration::from_millis(20),
+            hysteresis: 0.1,
+            min_window: 16,
+            margin_min: 0.0,
+            margin_max: 1.0,
+            margin_step: 0.01,
+            dwell_min: Duration::from_micros(50),
+            dwell_max: Duration::from_millis(5),
+            dwell_step: Duration::from_micros(20),
+        }
+    }
+}
+
+/// What one control tick did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    /// Window p99 above the band: multiplicative decrease of both knobs.
+    Tighten,
+    /// Window p99 below the band: additive increase of both knobs.
+    Relax,
+    /// Inside the band, or the window was too thin to trust.
+    Hold,
+}
+
+/// One AIMD step, pure in everything but the knob stores: reads the
+/// drained window, moves the knobs (margin is optional — tier-blind
+/// servers have no cascade), returns what it decided. The clamps apply
+/// on EVERY write, so knobs that start outside `[min, max]` (a static
+/// CLI value beyond the clamp) are pulled into range on first action.
+pub fn step(
+    cfg: &AutopilotConfig,
+    window: &LatencyWindow,
+    margin: Option<&MarginKnob>,
+    dwell: &DwellKnob,
+) -> Decision {
+    if window.count < cfg.min_window {
+        return Decision::Hold;
+    }
+    let p99_ms = window.p99_us / 1e3;
+    if p99_ms > cfg.target_p99_ms * (1.0 + cfg.hysteresis) {
+        if let Some(m) = margin {
+            // Halving asymptotes toward margin_min but never lands on it,
+            // so sustained overload would leave a uselessly-tiny-but-
+            // nonzero margin forever (and tie rows treat 1e-19 and 0.0
+            // differently). Snap to the floor once a halving lands
+            // within one relax step of it — the AIMD floor.
+            let halved = m.get() * 0.5;
+            let next = if halved <= cfg.margin_min + cfg.margin_step {
+                cfg.margin_min
+            } else {
+                halved
+            };
+            m.set(next.clamp(cfg.margin_min, cfg.margin_max));
+        }
+        dwell.set((dwell.get() / 2).clamp(cfg.dwell_min, cfg.dwell_max));
+        Decision::Tighten
+    } else if p99_ms < cfg.target_p99_ms * (1.0 - cfg.hysteresis) {
+        if let Some(m) = margin {
+            m.set((m.get() + cfg.margin_step).clamp(cfg.margin_min, cfg.margin_max));
+        }
+        dwell.set(
+            dwell
+                .get()
+                .saturating_add(cfg.dwell_step)
+                .clamp(cfg.dwell_min, cfg.dwell_max),
+        );
+        Decision::Relax
+    } else {
+        Decision::Hold
+    }
+}
+
+/// The controller thread. Started only when `--target-p99-ms` is given;
+/// with no autopilot the knobs hold their static values and the serving
+/// path is byte-for-byte the pre-autopilot one.
+pub struct Autopilot {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Autopilot {
+    /// Spawn the control loop over a server's metrics sink and knob
+    /// handles. `margin` is `None` for tier-blind (single-model)
+    /// servers — the autopilot then steers dwell alone.
+    pub fn start(
+        cfg: AutopilotConfig,
+        metrics: Arc<ServerMetrics>,
+        margin: Option<MarginKnob>,
+        dwell: DwellKnob,
+    ) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("uleen-autopilot".into())
+            .spawn(move || {
+                let mut tighten = 0u64;
+                let mut relax = 0u64;
+                let mut hold = 0u64;
+                // Publish the starting knob values immediately so a
+                // `/metrics` scrape shows the controller attached even
+                // before the first decision.
+                publish(&metrics, &cfg, margin.as_ref(), &dwell, tighten, relax, hold);
+                while !stop_flag.load(Ordering::Relaxed) {
+                    // Sleep in small slices so stop() never waits a full
+                    // interval behind a long cadence.
+                    let mut slept = Duration::ZERO;
+                    while slept < cfg.interval && !stop_flag.load(Ordering::Relaxed) {
+                        let chunk = (cfg.interval - slept).min(Duration::from_millis(5));
+                        std::thread::sleep(chunk);
+                        slept += chunk;
+                    }
+                    if stop_flag.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let window = metrics.drain_latency_window();
+                    match step(&cfg, &window, margin.as_ref(), &dwell) {
+                        Decision::Tighten => tighten += 1,
+                        Decision::Relax => relax += 1,
+                        Decision::Hold => hold += 1,
+                    }
+                    publish(&metrics, &cfg, margin.as_ref(), &dwell, tighten, relax, hold);
+                }
+            })
+            .expect("spawn autopilot thread");
+        Self { stop, handle: Some(handle) }
+    }
+
+    /// Signal the loop and join it. Idempotent via Drop.
+    pub fn stop(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Autopilot {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+fn publish(
+    metrics: &ServerMetrics,
+    cfg: &AutopilotConfig,
+    margin: Option<&MarginKnob>,
+    dwell: &DwellKnob,
+    tighten: u64,
+    relax: u64,
+    hold: u64,
+) {
+    metrics.set_autopilot(AutopilotStatus {
+        target_p99_ms: cfg.target_p99_ms,
+        margin: margin.map(|m| m.get()),
+        dwell_us: dwell.get().as_secs_f64() * 1e6,
+        tighten,
+        relax,
+        hold,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn window(count: u64, p99_us: f64) -> LatencyWindow {
+        LatencyWindow { count, p50_us: p99_us / 2.0, p99_us }
+    }
+
+    #[test]
+    fn step_tightens_above_the_band_and_relaxes_below() {
+        let cfg = AutopilotConfig { target_p99_ms: 2.0, ..Default::default() };
+        let margin = MarginKnob::new(0.8);
+        let dwell = DwellKnob::new(Duration::from_millis(4));
+        // 10 ms ≫ 2 ms target: multiplicative decrease on both knobs
+        let d = step(&cfg, &window(100, 10_000.0), Some(&margin), &dwell);
+        assert_eq!(d, Decision::Tighten);
+        assert_eq!(margin.get(), 0.4);
+        assert_eq!(dwell.get(), Duration::from_millis(2));
+        // 0.1 ms ≪ 2 ms target: additive increase on both knobs
+        let d = step(&cfg, &window(100, 100.0), Some(&margin), &dwell);
+        assert_eq!(d, Decision::Relax);
+        assert!((margin.get() - 0.41).abs() < 1e-6);
+        assert_eq!(dwell.get(), Duration::from_millis(2) + cfg.dwell_step);
+        // inside the hysteresis band: hold, knobs untouched
+        let (m0, w0) = (margin.get(), dwell.get());
+        let d = step(&cfg, &window(100, 2_000.0), Some(&margin), &dwell);
+        assert_eq!(d, Decision::Hold);
+        assert_eq!(margin.get(), m0);
+        assert_eq!(dwell.get(), w0);
+    }
+
+    #[test]
+    fn step_holds_on_thin_windows_and_respects_clamps() {
+        let cfg = AutopilotConfig { target_p99_ms: 1.0, min_window: 16, ..Default::default() };
+        let margin = MarginKnob::new(0.05);
+        let dwell = DwellKnob::new(Duration::from_micros(200));
+        assert_eq!(step(&cfg, &window(3, 99_000.0), Some(&margin), &dwell), Decision::Hold);
+        assert_eq!(margin.get(), 0.05);
+        // Hammer tighten: both knobs pin at their minima, never below.
+        for _ in 0..40 {
+            step(&cfg, &window(100, 50_000.0), Some(&margin), &dwell);
+        }
+        assert_eq!(margin.get(), cfg.margin_min);
+        assert_eq!(dwell.get(), cfg.dwell_min);
+        // Hammer relax: both knobs pin at their maxima, never above.
+        for _ in 0..2_000 {
+            step(&cfg, &window(100, 1.0), Some(&margin), &dwell);
+        }
+        assert_eq!(margin.get(), cfg.margin_max);
+        assert_eq!(dwell.get(), cfg.dwell_max);
+    }
+
+    #[test]
+    fn knob_clones_share_one_atomic() {
+        let m = MarginKnob::new(0.1);
+        let m2 = m.clone();
+        m2.set(0.7);
+        assert_eq!(m.get(), 0.7);
+        assert!(m.shares_with(&m2));
+        assert!(!m.shares_with(&MarginKnob::new(0.7)));
+        let d = DwellKnob::new(Duration::from_micros(100));
+        let d2 = d.clone();
+        d2.set(Duration::from_micros(900));
+        assert_eq!(d.get(), Duration::from_micros(900));
+        assert!(d.shares_with(&d2));
+        assert!(!d.shares_with(&DwellKnob::new(Duration::ZERO)));
+    }
+
+    #[test]
+    fn autopilot_thread_publishes_and_steers_to_the_metrics_sink() {
+        let metrics = Arc::new(ServerMetrics::new());
+        let margin = MarginKnob::new(0.9);
+        let dwell = DwellKnob::new(Duration::from_millis(5));
+        let cfg = AutopilotConfig {
+            target_p99_ms: 1.0,
+            interval: Duration::from_millis(5),
+            min_window: 1,
+            ..Default::default()
+        };
+        let ap = Autopilot::start(cfg, metrics.clone(), Some(margin.clone()), dwell.clone());
+        // Feed the window slow completions until the controller reacts.
+        let slow = [Duration::from_millis(20); 4];
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while margin.get() >= 0.9 && std::time::Instant::now() < deadline {
+            metrics.record_batch(4, &slow);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        ap.stop();
+        assert!(margin.get() < 0.9, "controller never tightened the margin");
+        assert!(dwell.get() < Duration::from_millis(5), "controller never cut the dwell");
+        let status = metrics.report(16).autopilot.expect("autopilot status published");
+        assert!(status.tighten >= 1);
+        assert_eq!(status.target_p99_ms, 1.0);
+        assert_eq!(status.margin, Some(margin.get()));
+    }
+}

@@ -62,6 +62,7 @@
 //!   state lock, so a close landing between slot reservation and enqueue
 //!   returns the slot to the free-list before reporting `Closed`.
 
+use crate::coordinator::autopilot::DwellKnob;
 use crate::runtime::Tier;
 use std::cell::UnsafeCell;
 use std::sync::{mpsc, Condvar, Mutex};
@@ -225,6 +226,11 @@ struct State {
 /// MPMC bounded queue with condvar wakeups, backed by the slab arena.
 pub struct BoundedQueue {
     cfg: BatcherConfig,
+    /// Live dwell budget, seeded from `cfg.max_wait`. Read once at the
+    /// top of each dwell (a retune mid-dwell applies to the *next*
+    /// batch), so the autopilot can shrink/grow batching latency online
+    /// without a queue rebuild.
+    dwell: DwellKnob,
     arena: FeatureArena,
     state: Mutex<State>,
     nonempty: Condvar,
@@ -249,6 +255,7 @@ impl BoundedQueue {
         let slots = cfg.capacity + in_flight_slots;
         let free: Vec<u32> = (0..slots as u32).rev().collect();
         Self {
+            dwell: DwellKnob::new(cfg.max_wait),
             cfg,
             arena: FeatureArena::new(slots, num_features),
             state: Mutex::new(State {
@@ -263,6 +270,13 @@ impl BoundedQueue {
 
     pub fn config(&self) -> &BatcherConfig {
         &self.cfg
+    }
+
+    /// Shared handle to the live dwell budget. `cfg.max_wait` is only the
+    /// seed; the autopilot (or a test) retunes through this knob and every
+    /// consumer picks the new value up at its next dwell.
+    pub fn dwell_knob(&self) -> DwellKnob {
+        self.dwell.clone()
     }
 
     /// The arena's row width (the served model's feature count).
@@ -364,8 +378,9 @@ impl BoundedQueue {
                 }
                 st = self.nonempty.wait(st).unwrap();
             }
-            // got a head request; optionally dwell for more
-            let deadline = Instant::now() + self.cfg.max_wait;
+            // got a head request; optionally dwell for more — budget read
+            // through the knob so the autopilot can retune it live
+            let deadline = Instant::now() + self.dwell.get();
             while !st.ring.is_empty()
                 && st.ring.len() < self.cfg.max_batch
                 && !st.closed
@@ -616,6 +631,31 @@ mod tests {
         let b = q.next_batch().unwrap();
         assert_eq!(b.len(), 1);
         assert!(t0.elapsed() >= Duration::from_millis(4), "should dwell ~max_wait");
+    }
+
+    #[test]
+    fn dwell_knob_retunes_the_dwell_without_a_queue_rebuild() {
+        // Config asks for an absurd 5 s dwell; turning the knob down to
+        // 2 ms must take effect on the very next batch.
+        let q = BoundedQueue::new(
+            BatcherConfig {
+                max_batch: 64,
+                max_wait: Duration::from_secs(5),
+                capacity: 100,
+            },
+            1,
+        );
+        assert_eq!(q.dwell_knob().get(), Duration::from_secs(5), "knob seeds from cfg.max_wait");
+        q.dwell_knob().set(Duration::from_millis(2));
+        let (tx, _rx) = mpsc::channel();
+        submit(&q, 0, &tx).unwrap();
+        let t0 = Instant::now();
+        let b = q.next_batch().unwrap();
+        assert_eq!(b.len(), 1);
+        assert!(
+            t0.elapsed() < Duration::from_secs(1),
+            "retuned dwell must cut the 5 s config budget to ~2 ms"
+        );
     }
 
     #[test]

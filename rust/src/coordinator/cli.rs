@@ -26,7 +26,15 @@
 //! elapses (0 = until killed). `--api-key K` gates the authenticated
 //! routes, `--rate-rps R` arms the per-client token bucket, and
 //! `--max-body-kib N` caps request bodies.
+//!
+//! `--target-p99-ms X` (either mode, either load) arms the **latency
+//! autopilot** ([`Autopilot`]): an SLO controller thread that AIMD-tunes
+//! the live cascade-margin and batcher-dwell knobs against the target
+//! p99, reading a windowed (recent, not lifetime) latency view each
+//! interval. Final knob positions and decision counts print in the
+//! shutdown report and ride the `/metrics` JSON.
 
+use crate::coordinator::autopilot::{Autopilot, AutopilotConfig};
 use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::http::{HttpConfig, HttpFrontend, RateLimit};
 use crate::coordinator::metrics::MetricsReport;
@@ -124,12 +132,42 @@ pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             test_y: vec![0; n],
         }
     };
+    let autopilot = start_autopilot(args, &server)?;
     let (correct, delivered, submitted) = drive_load(&server, &ds, requests, false)?;
+    if let Some(ap) = autopilot {
+        ap.stop();
+    }
     let report = server.metrics.report(batch);
     server.shutdown();
     println!("served {} requests on {} workers (batch {})", submitted, workers, batch);
     print_report(&report, correct, delivered, submitted);
     Ok(())
+}
+
+/// `--target-p99-ms X` arms the latency autopilot on a running server:
+/// the controller thread drains the windowed latency view each interval
+/// and AIMD-steers the cascade margin (zoo servers) and the batcher
+/// dwell (every server) toward the target. Returns `None` when the flag
+/// is absent — serving then behaves bit-exactly like the static config.
+fn start_autopilot(args: &Args, server: &Server) -> anyhow::Result<Option<Autopilot>> {
+    if args.get("target-p99-ms").is_none() {
+        return Ok(None);
+    }
+    let target = args.get_f64("target-p99-ms", 5.0).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(target > 0.0, "--target-p99-ms wants a positive millisecond value");
+    let cfg = AutopilotConfig { target_p99_ms: target, ..Default::default() };
+    let steers = if server.margin_knob().is_some() {
+        "cascade margin + batcher dwell"
+    } else {
+        "batcher dwell (single model: no cascade margin)"
+    };
+    println!("autopilot: holding p99 <= {target} ms, steering {steers}");
+    Ok(Some(Autopilot::start(
+        cfg,
+        server.metrics.clone(),
+        server.margin_knob(),
+        server.dwell_knob(),
+    )))
 }
 
 /// `--listen ADDR` mode, shared by both serve paths: expose the running
@@ -151,6 +189,7 @@ fn serve_http(args: &Args, server: Server, batch: usize) -> anyhow::Result<()> {
             .then(|| RateLimit { burst: (2.0 * rate_rps).max(1.0), per_sec: rate_rps }),
         ..Default::default()
     };
+    let autopilot = start_autopilot(args, &server)?;
     let server = std::sync::Arc::new(server);
     let frontend = HttpFrontend::start(&addr, server.clone(), cfg)?;
     println!(
@@ -171,6 +210,9 @@ fn serve_http(args: &Args, server: Server, batch: usize) -> anyhow::Result<()> {
     }
     std::thread::sleep(Duration::from_secs(duration));
     frontend.shutdown();
+    if let Some(ap) = autopilot {
+        ap.stop(); // final knob positions land in the metrics sink
+    }
     let server = std::sync::Arc::try_unwrap(server)
         .ok()
         .expect("shut-down frontend must drop its server handle");
@@ -302,6 +344,17 @@ fn print_report(report: &MetricsReport, correct: usize, delivered: usize, submit
                 .sum::<f64>() / 1e3
         );
     }
+    if let Some(ap) = &report.autopilot {
+        let margin = match ap.margin {
+            Some(m) => format!("{m:.3}"),
+            None => "n/a".to_string(),
+        };
+        println!(
+            "autopilot: target p99 {:.2} ms | final margin {margin} | final dwell {:.0} µs | \
+             decisions tighten/relax/hold {}/{}/{}",
+            ap.target_p99_ms, ap.dwell_us, ap.tighten, ap.relax, ap.hold
+        );
+    }
     println!(
         "accuracy on delivered traffic: {:.4} ({delivered}/{submitted} delivered) | \
          rejected(full): {} | malformed: {} | failed batches: {}",
@@ -403,7 +456,11 @@ fn cmd_serve_zoo(args: &Args, spec: &str) -> anyhow::Result<()> {
         return serve_http(args, server, batch);
     }
 
+    let autopilot = start_autopilot(args, &server)?;
     let (correct, delivered, submitted) = drive_load(&server, &ds, requests, true)?;
+    if let Some(ap) = autopilot {
+        ap.stop();
+    }
     let report = server.metrics.report(batch);
     server.shutdown();
 

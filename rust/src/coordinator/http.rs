@@ -18,6 +18,9 @@
 //!   load-balancer probes).
 //! * `GET /metrics` — the live [`MetricsReport`] serialized by
 //!   [`MetricsReport::to_json`](crate::coordinator::metrics::MetricsReport::to_json).
+//!   When the latency autopilot is armed (`--target-p99-ms`), the JSON
+//!   carries an `"autopilot"` object: target, current knob positions
+//!   (`margin`, `dwell_us`) and AIMD decision counts.
 //! * `POST /v1/classify` — `{"rows": [[f32; width], ...], "tier":
 //!   "fast|balanced|accurate"?}` → `{"predictions": [class, ...]}` in
 //!   row order.

@@ -19,10 +19,48 @@ use std::time::{Duration, Instant};
 /// instead of a uniform sample.
 pub const LATENCY_RESERVOIR_CAP: usize = 4096;
 
+/// One drained epoch of the windowed latency view (µs): the recent
+/// completions recorded since the previous drain. This is what the
+/// autopilot steers by — the cumulative histogram would answer lifetime
+/// p99, which stops reacting to the present after enough history.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencyWindow {
+    pub count: u64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+}
+
+/// Live controller state published by [`coordinator::autopilot`]: the
+/// target, both knobs' current values, and the decision counters.
+/// Serialized under the `"autopilot"` key in `/metrics` and the
+/// shutdown report whenever a controller is attached.
+///
+/// [`coordinator::autopilot`]: crate::coordinator::autopilot
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AutopilotStatus {
+    pub target_p99_ms: f64,
+    /// Current cascade margin (`None` on tier-blind servers, where the
+    /// controller steers dwell alone).
+    pub margin: Option<f32>,
+    pub dwell_us: f64,
+    pub tighten: u64,
+    pub relax: u64,
+    pub hold: u64,
+}
+
 struct Inner {
     /// Every completion's latency (µs), log2-bucketed: exact-up-to-
     /// quantization percentiles in fixed memory, no sort per scrape.
     latency_hist: LogHistogram,
+    /// Epoch-swapped *windowed* latency pair: completions also record
+    /// into `latency_window[window_active]`; `drain_latency_window`
+    /// retires the live half (swap, read, reset) so the autopilot sees
+    /// only the completions since its previous tick. Fixed memory, no
+    /// allocation per epoch.
+    latency_window: [LogHistogram; 2],
+    window_active: usize,
+    /// Controller state, present iff an autopilot is attached.
+    autopilot: Option<AutopilotStatus>,
     /// ≤ [`LATENCY_RESERVOIR_CAP`] uniformly-sampled latencies (µs).
     latency_reservoir: Vec<f64>,
     /// Total latencies ever offered to the reservoir.
@@ -67,6 +105,9 @@ impl Default for Inner {
     fn default() -> Self {
         Self {
             latency_hist: LogHistogram::new(),
+            latency_window: [LogHistogram::new(), LogHistogram::new()],
+            window_active: 0,
+            autopilot: None,
             // Pre-size to the cap: the reservoir never reallocates on
             // the record path once the steady state is reached (and the
             // fill phase is alloc-free too).
@@ -145,6 +186,11 @@ pub struct MetricsReport {
     /// HTTP responses served by the front-end as (status, count),
     /// ascending by status; empty when no front-end is attached.
     pub http_responses: Vec<(u16, u64)>,
+    /// NaN latencies rejected by the histogram (0 in healthy runs; a
+    /// nonzero count means a corrupted clock reading, not load).
+    pub latency_dropped_nan: u64,
+    /// Controller state, present iff a latency autopilot is attached.
+    pub autopilot: Option<AutopilotStatus>,
 }
 
 impl ServerMetrics {
@@ -174,6 +220,7 @@ impl ServerMetrics {
         for l in latencies {
             let us = l.as_secs_f64() * 1e6;
             inner.latency_hist.record(us);
+            inner.latency_window[inner.window_active].record(us);
             inner.latency_stats.push(us);
             inner.latency_seen += 1;
             if inner.latency_reservoir.len() < LATENCY_RESERVOIR_CAP {
@@ -192,6 +239,40 @@ impl ServerMetrics {
     /// Count one HTTP response served by the front-end, keyed by status.
     pub fn record_http(&self, status: u16) {
         *self.inner.lock().unwrap().http_responses.entry(status).or_insert(0) += 1;
+    }
+
+    /// Retire the live latency window: swap the epoch pair so new
+    /// completions record into the other half, then read + reset the
+    /// half that just retired. Returns exactly the completions recorded
+    /// since the previous drain (zero `count` when nothing completed) —
+    /// each epoch is observed once and then gone, so consecutive drains
+    /// of an idle server answer `count == 0`. The cumulative histogram
+    /// behind `/metrics` is untouched.
+    pub fn drain_latency_window(&self) -> LatencyWindow {
+        let mut g = self.inner.lock().unwrap();
+        let retired = g.window_active;
+        g.window_active ^= 1;
+        let h = &mut g.latency_window[retired];
+        let out = LatencyWindow {
+            count: h.count(),
+            p50_us: h.percentile(0.50),
+            p99_us: h.percentile(0.99),
+        };
+        h.reset();
+        out
+    }
+
+    /// Completions recorded into the live (not-yet-drained) window —
+    /// test/debug visibility into the epoch swap.
+    pub fn latency_window_depth(&self) -> u64 {
+        let g = self.inner.lock().unwrap();
+        g.latency_window[g.window_active].count()
+    }
+
+    /// Publish controller state (called by the autopilot each tick);
+    /// `/metrics` and the shutdown report carry it from then on.
+    pub fn set_autopilot(&self, status: AutopilotStatus) {
+        self.inner.lock().unwrap().autopilot = Some(status);
     }
 
     /// (retained latency samples, total latencies seen) — the retained
@@ -324,6 +405,8 @@ impl ServerMetrics {
             latency_us_mean: mean,
             latency_us_max: max,
             http_responses: g.http_responses.iter().map(|(&k, &v)| (k, v)).collect(),
+            latency_dropped_nan: g.latency_hist.dropped(),
+            autopilot: g.autopilot,
         }
     }
 }
@@ -365,6 +448,21 @@ impl MetricsReport {
                 h.set(&status.to_string(), Json::Num(count as f64));
             }
             j.set("http", h);
+        }
+        if self.latency_dropped_nan > 0 {
+            j.set("latency_dropped_nan", Json::Num(self.latency_dropped_nan as f64));
+        }
+        if let Some(ap) = &self.autopilot {
+            let mut a = Json::obj();
+            a.set("target_p99_ms", Json::Num(ap.target_p99_ms))
+                .set("dwell_us", Json::Num(ap.dwell_us))
+                .set("decisions_tighten", Json::Num(ap.tighten as f64))
+                .set("decisions_relax", Json::Num(ap.relax as f64))
+                .set("decisions_hold", Json::Num(ap.hold as f64));
+            if let Some(m) = ap.margin {
+                a.set("margin", Json::Num(m as f64));
+            }
+            j.set("autopilot", a);
         }
         j
     }
@@ -541,6 +639,68 @@ mod tests {
         let r = m.report(16);
         assert!(r.wall_secs >= 0.0);
         assert_eq!(r.throughput_rps, 0.0);
+    }
+
+    #[test]
+    fn zero_request_report_is_all_zeros_and_never_panics() {
+        // Regression: the reservoir path used to reach
+        // `percentile(&mut empty, _)` whose old assert panicked a scrape
+        // of a server that had completed nothing.
+        let m = ServerMetrics::new();
+        let r = m.report(16);
+        assert_eq!(r.completed, 0);
+        assert_eq!(r.latency_us_p50, 0.0);
+        assert_eq!(r.latency_us_p99, 0.0);
+        assert_eq!(r.latency_us_p50_reservoir, 0.0);
+        assert_eq!(r.latency_us_p99_reservoir, 0.0);
+        assert_eq!(r.throughput_rps, 0.0);
+        assert!(r.autopilot.is_none());
+        // and the JSON scrape of the empty server serializes too
+        let json = r.to_json().to_string();
+        assert!(json.contains("\"completed\":0"), "got {json}");
+    }
+
+    #[test]
+    fn latency_window_drains_to_zero_between_epochs() {
+        let m = ServerMetrics::new();
+        let lats: Vec<Duration> = (1..=64).map(Duration::from_micros).collect();
+        m.record_batch(64, &lats);
+        assert_eq!(m.latency_window_depth(), 64);
+        let w = m.drain_latency_window();
+        assert_eq!(w.count, 64);
+        assert!(w.p99_us >= w.p50_us && w.p50_us > 0.0);
+        // the drained epoch is gone: an idle server's next drain is empty
+        assert_eq!(m.latency_window_depth(), 0);
+        let w2 = m.drain_latency_window();
+        assert_eq!(w2, LatencyWindow::default());
+        // the window is RECENT-only, while the cumulative histogram
+        // keeps the full history for /metrics
+        m.record_batch(2, &lats[..2]);
+        let w3 = m.drain_latency_window();
+        assert_eq!(w3.count, 2);
+        assert_eq!(m.report(16).completed, 66);
+        assert!(m.report(16).latency_us_p99 > 0.0);
+    }
+
+    #[test]
+    fn autopilot_status_serializes_in_report_json() {
+        let m = ServerMetrics::new();
+        m.set_autopilot(AutopilotStatus {
+            target_p99_ms: 2.5,
+            margin: Some(0.125),
+            dwell_us: 150.0,
+            tighten: 3,
+            relax: 1,
+            hold: 7,
+        });
+        let r = m.report(16);
+        let ap = r.autopilot.expect("status must surface in the report");
+        assert_eq!(ap.tighten, 3);
+        let json = r.to_json().to_string();
+        assert!(json.contains("\"autopilot\":{"), "got {json}");
+        assert!(json.contains("\"target_p99_ms\":2.5"), "got {json}");
+        assert!(json.contains("\"margin\":0.125"), "got {json}");
+        assert!(json.contains("\"decisions_tighten\":3"), "got {json}");
     }
 
     #[test]

@@ -28,7 +28,15 @@
 //! and `/v1/classify` over the same bounded queue, with API-key auth,
 //! per-client token-bucket admission, and queue-full/closed
 //! backpressure surfaced as 429/503 instead of dropped connections.
+//!
+//! [`autopilot::Autopilot`] closes the latency control loop: an SLO
+//! controller thread that drains the metrics sink's windowed latency
+//! view each interval and AIMD-steers the two live knobs — the shared
+//! cascade margin ([`autopilot::MarginKnob`]) and the batcher dwell
+//! ([`autopilot::DwellKnob`]) — toward a target p99
+//! (`uleen serve --target-p99-ms X`).
 
+pub mod autopilot;
 pub mod batcher;
 pub mod cli;
 pub mod http;
@@ -36,6 +44,7 @@ pub mod metrics;
 pub mod router;
 pub mod server;
 
+pub use autopilot::{Autopilot, AutopilotConfig, DwellKnob, MarginKnob};
 pub use batcher::{BatcherConfig, BoundedQueue, Request, SubmitError};
 pub use http::{HttpConfig, HttpFrontend, RateLimit};
 pub use metrics::ServerMetrics;

@@ -40,6 +40,7 @@
 //!
 //! [`Server::start_zoo`]: crate::coordinator::server::Server::start_zoo
 
+use crate::coordinator::autopilot::MarginKnob;
 use crate::coordinator::metrics::ServerMetrics;
 use crate::runtime::InferenceEngine;
 use std::sync::Arc;
@@ -146,8 +147,12 @@ pub struct ModelRouter {
     /// per-engine maximum possible response (for margin normalization)
     max_response: Vec<f32>,
     pub stats: RouterStats,
-    /// escalate when (top1-top2)/max_response < threshold
-    pub margin_threshold: f32,
+    /// escalate when (top1-top2)/max_response < threshold — a shared
+    /// atomic knob so the latency autopilot can retune it while N
+    /// routers are serving (see [`ModelRouter::margin_knob`]); loaded
+    /// ONCE per classify call, so a mid-batch retune never splits one
+    /// batch across two thresholds
+    margin: MarginKnob,
     cascade_scratch: CascadeScratch,
     /// grow-only prediction arena for scores-only callers
     /// ([`ModelRouter::cascade_scores_into`]); lives outside
@@ -175,10 +180,32 @@ impl ModelRouter {
             engines,
             max_response,
             stats: RouterStats::default(),
-            margin_threshold: 0.05,
+            margin: MarginKnob::new(0.05),
             cascade_scratch: CascadeScratch::default(),
             pred_arena: Vec::new(),
         }
+    }
+
+    /// Current escalation threshold (one relaxed atomic load).
+    pub fn margin_threshold(&self) -> f32 {
+        self.margin.get()
+    }
+
+    /// Set the escalation threshold — through THIS router's knob, so
+    /// every router sharing the knob sees the new value too.
+    pub fn set_margin_threshold(&self, threshold: f32) {
+        self.margin.set(threshold);
+    }
+
+    /// Handle to the shared margin knob (cloning shares the atomic).
+    pub fn margin_knob(&self) -> MarginKnob {
+        self.margin.clone()
+    }
+
+    /// Adopt an existing shared knob in place of this router's own —
+    /// how N per-worker routers become N readers of ONE knob.
+    pub fn share_margin(&mut self, knob: &MarginKnob) {
+        self.margin = knob.clone();
     }
 
     /// Build a router of [`NativeEngine`]s over `models` (ordered small →
@@ -281,6 +308,9 @@ impl ModelRouter {
     /// Cascade: start at Fast; escalate while the decision margin is thin.
     pub fn classify_cascade(&mut self, x: &[f32]) -> crate::Result<usize> {
         let mut pred = 0usize;
+        // one knob load per call: a concurrent retune applies to the
+        // NEXT call, keeping each cascade internally consistent
+        let threshold = self.margin.get();
         for i in 0..self.engines.len() {
             let t0 = Instant::now();
             let resp = self.engines[i].responses(x, 1)?;
@@ -291,7 +321,7 @@ impl ModelRouter {
             pred = arg;
             let margin = (top1 - top2) / self.max_response[i].max(1.0);
             self.stats.served[i] += 1;
-            if margin >= self.margin_threshold || i + 1 == self.engines.len() {
+            if margin >= threshold || i + 1 == self.engines.len() {
                 return Ok(pred);
             }
             self.stats.escalations_from[i] += 1;
@@ -405,6 +435,10 @@ impl ModelRouter {
             return Ok(());
         }
         let tiers = self.engines.len();
+        // one knob load per batch: dynamic-margin runs are bit-exact
+        // with a static cascade re-run at the loaded value, and a
+        // mid-batch retune can never split one batch across thresholds
+        let threshold = self.margin.get();
         // Scratch is taken for the duration of the call and restored on
         // every exit path (including tier-engine errors), so one warmup
         // lasts the router's lifetime. `rows` holds the original row ids
@@ -442,7 +476,7 @@ impl ModelRouter {
                 let rr = &s.resp[r * m..(r + 1) * m];
                 let (top1, top2, arg) = top2(rr);
                 let margin = (top1 - top2) / self.max_response[i].max(1.0);
-                if margin >= self.margin_threshold || last {
+                if margin >= threshold || last {
                     preds[row] = arg;
                     if let Some(sc) = scores.as_deref_mut() {
                         sc[row * m..(row + 1) * m].copy_from_slice(rr);
@@ -568,6 +602,12 @@ impl RouterEngine {
 
     pub fn router_mut(&mut self) -> &mut ModelRouter {
         &mut self.router
+    }
+
+    /// Handle to the wrapped router's shared margin knob — the engine
+    /// and its router are always two readers of the same atomic.
+    pub fn margin_knob(&self) -> MarginKnob {
+        self.router.margin_knob()
     }
 
     /// Run `call` on the router and flush the per-tier stat deltas it
@@ -730,7 +770,7 @@ mod tests {
     #[test]
     fn zero_threshold_never_escalates() {
         let (mut r, ds) = zoo();
-        r.margin_threshold = 0.0;
+        r.set_margin_threshold(0.0);
         for i in 0..20 {
             r.classify_cascade(ds.test_row(i)).unwrap();
         }
@@ -741,7 +781,7 @@ mod tests {
     #[test]
     fn huge_threshold_always_escalates_to_last_tier() {
         let (mut r, ds) = zoo();
-        r.margin_threshold = 10.0;
+        r.set_margin_threshold(10.0);
         for i in 0..10 {
             r.classify_cascade(ds.test_row(i)).unwrap();
         }
@@ -749,6 +789,36 @@ mod tests {
         assert_eq!(r.stats.escalations(), 20);
         assert_eq!(r.stats.escalations_from, [10, 10, 0]);
         assert_eq!(r.fast_path_fraction(), 0.0);
+    }
+
+    #[test]
+    fn dynamic_margin_knob_steers_live_and_matches_a_static_rerun() {
+        // The autopilot contract: retuning the shared knob between calls
+        // must land exactly where a fresh router statically configured
+        // at that margin lands — same predictions, same counters.
+        let (mut dynamic, ds) = zoo();
+        let knob = dynamic.margin_knob();
+        let n = 50.min(ds.n_test());
+        let x = &ds.test_x[..n * ds.num_features];
+        for threshold in [0.0f32, 0.1, 10.0] {
+            knob.set(threshold);
+            dynamic.stats = RouterStats::default();
+            let got = dynamic.classify_cascade_batch(x, n).unwrap();
+            let (mut fixed, _) = zoo();
+            fixed.set_margin_threshold(threshold);
+            let want = fixed.classify_cascade_batch(x, n).unwrap();
+            assert_eq!(got, want, "threshold {threshold}");
+            assert_eq!(dynamic.stats.served, fixed.stats.served, "threshold {threshold}");
+            assert_eq!(
+                dynamic.stats.escalations_from, fixed.stats.escalations_from,
+                "threshold {threshold}"
+            );
+        }
+        // and the knob is truly shared: a clone's set is the router's set
+        let clone = knob.clone();
+        clone.set(0.25);
+        assert_eq!(dynamic.margin_threshold(), 0.25);
+        assert!(knob.shares_with(&clone));
     }
 
     #[test]
@@ -763,7 +833,7 @@ mod tests {
         // On a sequential router every engine call serializes, so the
         // critical path IS the total engine time — bit-for-bit.
         let (mut r, ds) = zoo();
-        r.margin_threshold = 0.1;
+        r.set_margin_threshold(0.1);
         let n = 40.min(ds.n_test());
         r.classify_cascade_batch(&ds.test_x[..n * ds.num_features], n).unwrap();
         r.classify_batch(&ds.test_x[..n * ds.num_features], n, Tier::Accurate).unwrap();
@@ -812,7 +882,7 @@ mod tests {
     #[test]
     fn cascade_into_honors_the_write_into_contract() {
         let (mut r, ds) = zoo();
-        r.margin_threshold = 0.1;
+        r.set_margin_threshold(0.1);
         let m = r.num_classes();
         let n = 30.min(ds.n_test());
         let x = &ds.test_x[..n * ds.num_features];

@@ -3,6 +3,7 @@
 //! instance per worker (engines are stateful: scratch buffers / PJRT
 //! executables), shared queue + metrics.
 
+use crate::coordinator::autopilot::{DwellKnob, MarginKnob};
 use crate::coordinator::batcher::{BatcherConfig, BoundedQueue, Request, SubmitError};
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::router::{ModelRouter, RouterEngine};
@@ -37,6 +38,10 @@ pub struct Server {
     /// aliased tiers (and, on tier-blind servers, every pin) must not
     /// fragment micro-batches at boundaries the engine cannot even see.
     num_tiers: usize,
+    /// The ONE cascade-margin knob shared by every worker's router on
+    /// zoo servers (`None` on single-model servers — no cascade, no
+    /// margin). The autopilot clones this to steer.
+    margin: Option<MarginKnob>,
 }
 
 impl Server {
@@ -88,7 +93,15 @@ impl Server {
                 worker_loop(&mut *engine, &queue, &metrics);
             }));
         }
-        Ok(Self { queue, metrics, workers, next_id: AtomicU64::new(0), num_features, num_tiers })
+        Ok(Self {
+            queue,
+            metrics,
+            workers,
+            next_id: AtomicU64::new(0),
+            num_features,
+            num_tiers,
+            margin: None,
+        })
     }
 
     /// Start a server whose workers each own a **model zoo**: a
@@ -121,12 +134,19 @@ impl Server {
     ) -> crate::Result<Self> {
         let metrics = Arc::new(ServerMetrics::new());
         let shared = metrics.clone();
-        Self::start_with_metrics(cfg, metrics, move |_| {
+        // ONE margin knob across all workers' routers: the autopilot (or
+        // any holder of Server::margin_knob) turns it and every worker
+        // follows at its next batch.
+        let knob = MarginKnob::new(margin_threshold);
+        let worker_knob = knob.clone();
+        let mut server = Self::start_with_metrics(cfg, metrics, move |_| {
             let mut router = ModelRouter::from_shared(&tiers);
-            router.margin_threshold = margin_threshold;
+            router.share_margin(&worker_knob);
             Ok(Box::new(RouterEngine::new(router).with_metrics(shared.clone()))
                 as Box<dyn InferenceEngine>)
-        })
+        })?;
+        server.margin = Some(knob);
+        Ok(server)
     }
 
     /// Start a server whose single worker owns a
@@ -148,12 +168,15 @@ impl Server {
         let cfg = ServerConfig { workers: 1, ..cfg };
         let metrics = Arc::new(ServerMetrics::new());
         let shared = metrics.clone();
-        Self::start_with_metrics(cfg, metrics, move |_| {
-            Ok(Box::new(
-                ShardedRouterEngine::from_shared(tiers.clone(), margin_threshold, shards)
-                    .with_metrics(shared.clone()),
-            ) as Box<dyn InferenceEngine>)
-        })
+        let knob = MarginKnob::new(margin_threshold);
+        let worker_knob = knob.clone();
+        let mut server = Self::start_with_metrics(cfg, metrics, move |_| {
+            let mut eng = ShardedRouterEngine::from_shared(tiers.clone(), margin_threshold, shards);
+            eng.share_margin(&worker_knob);
+            Ok(Box::new(eng.with_metrics(shared.clone())) as Box<dyn InferenceEngine>)
+        })?;
+        server.margin = Some(knob);
+        Ok(server)
     }
 
     /// Start a server whose single worker owns one
@@ -187,6 +210,19 @@ impl Server {
     /// route needs it without seeing the queue).
     pub fn max_batch(&self) -> usize {
         self.queue.config().max_batch
+    }
+
+    /// The shared cascade-margin knob every worker router reads, on zoo
+    /// servers (`None` when there is no cascade to steer). Clone it into
+    /// an [`Autopilot`](crate::coordinator::autopilot::Autopilot).
+    pub fn margin_knob(&self) -> Option<MarginKnob> {
+        self.margin.clone()
+    }
+
+    /// The queue's live dwell budget — every consumer reads it at the
+    /// top of each dwell, so a retune applies to the very next batch.
+    pub fn dwell_knob(&self) -> DwellKnob {
+        self.queue.dwell_knob()
     }
 
     /// Submit one request on the default path (cascade on zoo servers);
@@ -464,6 +500,10 @@ mod tests {
             workers: 2,
         };
         let server = Server::start_zoo(cfg, models, 0.05).unwrap();
+        // zoo servers expose both autopilot knobs, seeded from the config
+        let knob = server.margin_knob().expect("zoo servers expose the margin knob");
+        assert_eq!(knob.get(), 0.05);
+        assert_eq!(server.dwell_knob().get(), Duration::from_micros(100));
         let (tx, rx) = mpsc::channel();
         let n = ds.n_test();
         for i in 0..n {

@@ -45,6 +45,7 @@ fn opt_specs() -> Vec<OptSpec> {
         OptSpec { name: "shards", takes_value: true, help: "serve with one sharded engine over N threads (default: one shard per detected core; pass --workers to keep per-worker engines instead); with --zoo, runs the cascade × shard composition" },
         OptSpec { name: "zoo", takes_value: true, help: "serve a tiered model zoo: comma-separated presets (s,m,l) or .uln paths, small → large" },
         OptSpec { name: "cascade-margin", takes_value: true, help: "zoo cascade escalation threshold on the normalized top1-top2 margin (default 0.05)" },
+        OptSpec { name: "target-p99-ms", takes_value: true, help: "arm the latency autopilot: AIMD-tune cascade margin + batcher dwell to hold this p99 (serve)" },
         OptSpec { name: "hlo", takes_value: true, help: "HLO artifact for the PJRT runtime" },
         OptSpec { name: "listen", takes_value: true, help: "serve over HTTP on ADDR (e.g. 127.0.0.1:8080; port 0 picks one) instead of synthetic load" },
         OptSpec { name: "api-key", takes_value: true, help: "require this key on /metrics and /v1/classify (--listen mode)" },

@@ -67,6 +67,7 @@
 //! going (covered by the fault-injection suite in
 //! `integration_coordinator.rs`).
 
+use crate::coordinator::autopilot::MarginKnob;
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::router::{ModelRouter, RouterStats};
 use crate::encoding::thermometer::ThermometerEncoder;
@@ -348,15 +349,16 @@ fn run_job(job: Job, scratch: &mut ShardScratch) -> crate::Result<()> {
 }
 
 /// One [`ModelRouter`] per pool worker over the same `Arc`-shared tiers,
-/// all at `margin` — the ONE construction loop shared by
-/// [`ShardedRouterEngine::from_shared`] and
+/// every one reading the SAME shared margin knob (one knob, N readers —
+/// the autopilot turns one atomic and all workers follow) — the ONE
+/// construction loop shared by [`ShardedRouterEngine::from_shared`] and
 /// [`ShardedRouterEngine::swap_shared`], so freshly built and swapped-in
 /// zoos can never diverge in router initialization.
-fn build_routers(tiers: &[SharedModel], margin: f32, shards: usize) -> Vec<ModelRouter> {
+fn build_routers(tiers: &[SharedModel], margin: &MarginKnob, shards: usize) -> Vec<ModelRouter> {
     (0..shards)
         .map(|_| {
             let mut r = ModelRouter::from_shared(tiers);
-            r.margin_threshold = margin;
+            r.share_margin(margin);
             r
         })
         .collect()
@@ -548,6 +550,10 @@ pub struct ShardedRouterEngine {
     tiers: Vec<SharedModel>,
     /// one router per pool worker; worker `w`'s jobs address `routers[w]`
     routers: Vec<ModelRouter>,
+    /// the ONE margin knob every per-worker router reads — survives zoo
+    /// swaps, so an autopilot holding a clone keeps steering generation
+    /// after generation
+    margin: MarginKnob,
     shards: usize,
     pool: ShardPool,
     /// counters of routers retired by [`ShardedRouterEngine::swap_shared`]
@@ -586,10 +592,12 @@ impl ShardedRouterEngine {
     pub fn from_shared(tiers: Vec<SharedModel>, margin_threshold: f32, shards: usize) -> Self {
         assert!(!tiers.is_empty(), "sharded zoo wants at least one tier");
         let shards = shards.max(1);
-        let routers = build_routers(&tiers, margin_threshold, shards);
+        let margin = MarginKnob::new(margin_threshold);
+        let routers = build_routers(&tiers, &margin, shards);
         Self {
             tiers,
             routers,
+            margin,
             shards,
             pool: ShardPool::spawn(shards),
             retired: RouterStats::default(),
@@ -606,7 +614,7 @@ impl ShardedRouterEngine {
     /// fault-injection suite uses this to put panicking or failing tier
     /// engines on the pool; production paths use
     /// [`ShardedRouterEngine::from_shared`].
-    pub fn from_routers(routers: Vec<ModelRouter>) -> Self {
+    pub fn from_routers(mut routers: Vec<ModelRouter>) -> Self {
         assert!(!routers.is_empty(), "sharded zoo wants at least one worker router");
         let (f, m, t) = (
             routers[0].num_features(),
@@ -618,10 +626,17 @@ impl ShardedRouterEngine {
             assert_eq!(r.num_classes(), m, "worker routers disagree on class count");
             assert_eq!(r.num_tiers(), t, "worker routers disagree on tier depth");
         }
+        // One knob, N readers — same invariant as from_shared: adopt the
+        // first router's knob and point every sibling at it.
+        let margin = routers[0].margin_knob();
+        for r in &mut routers[1..] {
+            r.share_margin(&margin);
+        }
         let shards = routers.len();
         Self {
             tiers: Vec::new(),
             routers,
+            margin,
             shards,
             pool: ShardPool::spawn(shards),
             retired: RouterStats::default(),
@@ -667,6 +682,24 @@ impl ShardedRouterEngine {
         &self.tiers
     }
 
+    /// The shared cascade-margin knob every per-worker router reads.
+    /// Setting it retunes ALL workers at their next batch; the handle
+    /// stays live across [`ShardedRouterEngine::swap_shared`].
+    pub fn margin_knob(&self) -> MarginKnob {
+        self.margin.clone()
+    }
+
+    /// Adopt a caller-owned margin knob (e.g. the serving layer's, so an
+    /// autopilot outside the engine steers it): the engine and every
+    /// per-worker router drop their own knob for `knob`. The current
+    /// threshold becomes whatever `knob` holds.
+    pub fn share_margin(&mut self, knob: &MarginKnob) {
+        self.margin = knob.clone();
+        for r in &mut self.routers {
+            r.share_margin(knob);
+        }
+    }
+
     /// Per-tier counters merged deterministically across the pool, in
     /// worker order, plus everything accumulated by routers retired via
     /// swap — monotonically non-decreasing across calls, which the
@@ -706,7 +739,6 @@ impl ShardedRouterEngine {
     /// go backwards.
     pub fn swap_shared(&mut self, tiers: Vec<SharedModel>) {
         assert!(!tiers.is_empty(), "sharded zoo wants at least one tier");
-        let margin = self.routers[0].margin_threshold;
         // parallel fold across the outgoing pool, then chain it onto the
         // retired history (generations are serial — see merged_stats)
         let mut pool = RouterStats::default();
@@ -720,7 +752,9 @@ impl ShardedRouterEngine {
         // avoid.
         pool.critical_path_ns = 0;
         self.retired.chain(&pool);
-        self.routers = build_routers(&tiers, margin, self.shards);
+        // Rebuild over the engine's own knob (NOT a fresh one): a clone
+        // held by the autopilot keeps steering the swapped-in generation.
+        self.routers = build_routers(&tiers, &self.margin, self.shards);
         if let Some(m) = &self.metrics {
             m.set_num_tiers(self.routers[0].num_tiers());
         }
@@ -1207,6 +1241,19 @@ mod tests {
     }
 
     #[test]
+    fn worker_routers_all_read_the_engines_one_margin_knob() {
+        let eng = ShardedRouterEngine::new(zoo_models(), 0.05, 4);
+        let knob = eng.margin_knob();
+        for r in &eng.routers {
+            assert!(knob.shares_with(&r.margin_knob()), "one knob, N readers");
+        }
+        knob.set(0.5);
+        for r in &eng.routers {
+            assert_eq!(r.margin_threshold(), 0.5, "one turn retunes every worker");
+        }
+    }
+
+    #[test]
     fn sharded_router_swap_preserves_monotonic_stats_and_margin() {
         let models = zoo_models();
         let ds = synth_uci(5, uci_spec("vowel").unwrap());
@@ -1216,9 +1263,21 @@ mod tests {
         let before = eng.merged_stats();
         assert!(before.served[0] > 0);
         let spawned = eng.threads_spawned();
+        let knob = eng.margin_knob();
+        assert_eq!(knob.get(), 0.2);
         eng.swap_models(models);
         assert_eq!(eng.num_tiers(), 3, "swap adopts the new zoo depth");
         assert_eq!(eng.threads_spawned(), spawned, "swap must not respawn the pool");
+        assert!(
+            knob.shares_with(&eng.margin_knob()),
+            "a pre-swap knob clone keeps steering the swapped-in zoo"
+        );
+        knob.set(0.35);
+        assert_eq!(
+            eng.margin_knob().get(),
+            0.35,
+            "retune through the old handle reaches every rebuilt worker router"
+        );
         let after_swap = eng.merged_stats();
         assert_eq!(after_swap, before, "retired counters survive the swap");
         eng.classify(&ds.test_x, n).unwrap();

@@ -5,13 +5,22 @@
 use std::time::{Duration, Instant};
 
 /// Welford online mean/variance accumulator.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct OnlineStats {
     n: u64,
     mean: f64,
     m2: f64,
     min: f64,
     max: f64,
+}
+
+impl Default for OnlineStats {
+    // A derived Default would zero min/max, so an all-positive sample
+    // set reports min() == 0.0; both constructors must yield the
+    // ±INFINITY sentinels.
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl OnlineStats {
@@ -54,8 +63,13 @@ impl OnlineStats {
 }
 
 /// Percentile (nearest-rank) of an unsorted sample; `q` in `[0,1]`.
+/// Total: an empty sample answers 0.0 (callers like the bench harness
+/// at zero iterations and a zero-request metrics report reach this
+/// legitimately and must not panic).
 pub fn percentile(samples: &mut [f64], q: f64) -> f64 {
-    assert!(!samples.is_empty());
+    if samples.is_empty() {
+        return 0.0;
+    }
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let idx = ((samples.len() as f64 - 1.0) * q).round() as usize;
     samples[idx.min(samples.len() - 1)]
@@ -85,12 +99,17 @@ const HIST_BUCKETS: usize =
 /// `HIST_SUB_COUNT` buckets); each octave `[2^k, 2^{k+1})` above that
 /// gets 64 linear sub-buckets, so relative error is bounded by 1/128.
 /// Values record truncated to integers (the intended unit is
-/// microseconds); negatives clamp to 0 and overflows saturate into the
-/// last bucket.
+/// microseconds); negatives clamp to 0, overflows saturate into the
+/// last bucket, and NaN is **dropped** (counted in [`dropped`], never
+/// filed — `NaN as u64 == 0` would masquerade as a sub-µs sample and
+/// drag p50 down).
+///
+/// [`dropped`]: LogHistogram::dropped
 #[derive(Clone, Debug)]
 pub struct LogHistogram {
     counts: Vec<u64>,
     total: u64,
+    dropped: u64,
 }
 
 impl Default for LogHistogram {
@@ -101,7 +120,15 @@ impl Default for LogHistogram {
 
 impl LogHistogram {
     pub fn new() -> Self {
-        Self { counts: vec![0; HIST_BUCKETS], total: 0 }
+        Self { counts: vec![0; HIST_BUCKETS], total: 0, dropped: 0 }
+    }
+
+    /// Zero every counter in place (no reallocation) — the windowed
+    /// metrics view drains epochs by resetting the retired window.
+    pub fn reset(&mut self) {
+        self.counts.fill(0);
+        self.total = 0;
+        self.dropped = 0;
     }
 
     fn index(v: f64) -> usize {
@@ -139,12 +166,22 @@ impl LogHistogram {
     }
 
     pub fn record(&mut self, v: f64) {
+        if v.is_nan() {
+            self.dropped += 1;
+            return;
+        }
         self.counts[Self::index(v)] += 1;
         self.total += 1;
     }
 
     pub fn count(&self) -> u64 {
         self.total
+    }
+
+    /// NaN samples rejected by [`record`](LogHistogram::record) — they
+    /// never enter a bucket, so percentiles are NaN-proof.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
     }
 
     /// Nearest-rank percentile (`q` in `[0,1]`) over every recorded
@@ -263,6 +300,35 @@ mod tests {
     }
 
     #[test]
+    fn percentile_is_total_on_empty_samples() {
+        // Zero-iteration bench runs and zero-request metrics reports
+        // hand percentile an empty vector; it must answer 0, not panic.
+        let mut none: Vec<f64> = Vec::new();
+        assert_eq!(percentile(&mut none, 0.5), 0.0);
+        assert_eq!(percentile(&mut none, 0.99), 0.0);
+    }
+
+    #[test]
+    fn default_online_stats_keep_the_min_max_sentinels() {
+        // Regression: the old derived Default zeroed min/max, so an
+        // all-positive sample set reported min() == 0.0.
+        let xs = [3.0, 7.0, 5.0];
+        let mut by_default = OnlineStats::default();
+        let mut by_new = OnlineStats::new();
+        for &x in &xs {
+            by_default.push(x);
+            by_new.push(x);
+        }
+        assert_eq!(by_default.min(), 3.0);
+        assert_eq!(by_default.max(), 7.0);
+        assert_eq!(by_default.min(), by_new.min());
+        assert_eq!(by_default.max(), by_new.max());
+        // And before any push, both report the same sentinels.
+        assert_eq!(OnlineStats::default().min(), f64::INFINITY);
+        assert_eq!(OnlineStats::default().max(), f64::NEG_INFINITY);
+    }
+
+    #[test]
     fn log_histogram_is_exact_below_the_sub_bucket_count() {
         let mut h = LogHistogram::new();
         for v in 1..=100 {
@@ -322,6 +388,46 @@ mod tests {
         }
         assert!(m.percentile(0.99) >= m.percentile(0.5));
         assert!(m.percentile(0.5) >= m.percentile(0.1));
+    }
+
+    #[test]
+    fn log_histogram_drops_nan_without_moving_percentiles() {
+        // Regression: `NaN as u64 == 0`, so NaN used to land in bucket 0
+        // and masquerade as a sub-µs sample, dragging p50 down.
+        let mut clean = LogHistogram::new();
+        let mut poisoned = LogHistogram::new();
+        for v in 100..200 {
+            clean.record(v as f64);
+            poisoned.record(v as f64);
+        }
+        for _ in 0..50 {
+            poisoned.record(f64::NAN);
+        }
+        assert_eq!(poisoned.count(), clean.count());
+        assert_eq!(poisoned.dropped(), 50);
+        assert_eq!(clean.dropped(), 0);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(
+                poisoned.percentile(q),
+                clean.percentile(q),
+                "NaN stream moved q={q}"
+            );
+        }
+    }
+
+    #[test]
+    fn log_histogram_reset_zeroes_in_place() {
+        let mut h = LogHistogram::new();
+        for v in 0..300 {
+            h.record(v as f64);
+        }
+        h.record(f64::NAN);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.dropped(), 0);
+        assert_eq!(h.percentile(0.99), 0.0);
+        h.record(42.0);
+        assert_eq!(h.percentile(0.5), 42.0);
     }
 
     #[test]

@@ -560,7 +560,7 @@ fn router_escalation_stats_account_for_forced_low_margin_traffic() {
     let engines: Vec<Box<dyn InferenceEngine>> =
         vec![Box::new(Flat0), Box::new(Flat0), Box::new(Flat0)];
     let mut router = ModelRouter::new(engines, vec![4.0, 4.0, 4.0]);
-    router.margin_threshold = 0.05;
+    router.set_margin_threshold(0.05);
     let n = 25u64;
     for _ in 0..n {
         let p = router.classify_cascade(&[0.0, 0.0, 0.0]).unwrap();

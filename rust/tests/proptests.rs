@@ -380,7 +380,7 @@ fn prop_batched_cascade_matches_sequential() {
             }
             let build = |models: &[uleen::model::ensemble::UleenModel]| {
                 let mut r = ModelRouter::from_models(models);
-                r.margin_threshold = *threshold;
+                r.set_margin_threshold(*threshold);
                 r
             };
             let f = ds.num_features;
@@ -497,7 +497,7 @@ fn prop_sharded_cascade_matches_sequential() {
                 ShardedRouterEngine::from_shared(tiers_shared.clone(), *threshold, *shards);
             let got = eng.classify(&x, n).map_err(|e| e.to_string())?;
             let mut seq = ModelRouter::from_shared(&tiers_shared);
-            seq.margin_threshold = *threshold;
+            seq.set_margin_threshold(*threshold);
             let mut want = Vec::with_capacity(n);
             for i in 0..n {
                 want.push(
@@ -615,7 +615,7 @@ fn prop_into_matches_vec() {
                 Box::new(ShardedEngine::from_shared(tiers[0].clone(), *shards)),
                 {
                     let mut r = ModelRouter::from_shared(&tiers);
-                    r.margin_threshold = *margin;
+                    r.set_margin_threshold(*margin);
                     Box::new(RouterEngine::new(r))
                 },
                 Box::new(ShardedRouterEngine::from_shared(tiers.clone(), *margin, *shards)),
@@ -1035,6 +1035,170 @@ fn prop_ring_batcher_competing_consumers_partition_fifo() {
                     q.free_slots(),
                     q.arena_slots()
                 ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The latency autopilot's safety envelope under random traffic: across
+/// random targets × bursty window schedules (thin windows, log-uniform
+/// p99s from 10 µs to 1 s), (1) both knobs never leave their configured
+/// clamp ranges and a `Hold` tick never moves either; (2) sustained
+/// overload converges both knobs to their minima and sustained idle to
+/// their maxima (bounded AIMD, no runaway); (3) a cascade steered to a
+/// random reachable margin m through the SHARED knob is prediction- and
+/// counter-exact with a sequential cascade re-run statically configured
+/// at m — the dynamic knob cannot take serving outside the existing
+/// conformance envelope; (4) the windowed histogram the controller
+/// drains empties completely between epochs while the cumulative report
+/// keeps its totals.
+#[test]
+fn prop_autopilot_knobs_stay_clamped_and_converge() {
+    use std::time::Duration;
+    use uleen::coordinator::autopilot::{step, AutopilotConfig, Decision, DwellKnob, MarginKnob};
+    use uleen::coordinator::metrics::{LatencyWindow, ServerMetrics};
+    use uleen::coordinator::router::ModelRouter;
+    use uleen::runtime::SharedModel;
+    check(
+        "autopilot-clamped-converge",
+        &Config { cases: 6, ..Config::default() },
+        |rng, _size| {
+            let target_ms = 0.5 + rng.f64() * 19.5;
+            let margin0 = rng.f64() as f32; // inside the [0, 1] clamp range
+            let dwell0_us = 50 + rng.below(4951); // inside [50 µs, 5 ms]
+            let steps = 10 + rng.below(50) as usize;
+            let schedule: Vec<(u64, f64)> = (0..steps)
+                .map(|_| {
+                    let count = rng.below(200);
+                    // log-uniform p99 over 10 µs .. 1 s
+                    let p99_us = 10.0 * 10f64.powf(rng.f64() * 5.0);
+                    (count, p99_us)
+                })
+                .collect();
+            let burst = 1 + rng.below(200);
+            let seed = rng.next_u64();
+            (target_ms, margin0, dwell0_us, schedule, burst, seed)
+        },
+        |(target_ms, margin0, dwell0_us, schedule, burst, seed)| {
+            let cfg = AutopilotConfig { target_p99_ms: *target_ms, ..Default::default() };
+            let margin = MarginKnob::new(*margin0);
+            let dwell = DwellKnob::new(Duration::from_micros(*dwell0_us));
+            for &(count, p99_us) in schedule {
+                let w = LatencyWindow { count, p50_us: p99_us / 2.0, p99_us };
+                let before = (margin.get(), dwell.get());
+                let d = step(&cfg, &w, Some(&margin), &dwell);
+                if count < cfg.min_window && d != Decision::Hold {
+                    return Err(format!(
+                        "thin window (count {count} < {}) acted: {d:?}",
+                        cfg.min_window
+                    ));
+                }
+                if d == Decision::Hold && (margin.get(), dwell.get()) != before {
+                    return Err(format!("Hold moved a knob: {before:?} -> ({}, {:?})",
+                        margin.get(), dwell.get()));
+                }
+                if !(cfg.margin_min..=cfg.margin_max).contains(&margin.get()) {
+                    return Err(format!(
+                        "margin {} escaped [{}, {}] on {d:?} (window p99 {p99_us} µs)",
+                        margin.get(), cfg.margin_min, cfg.margin_max
+                    ));
+                }
+                if dwell.get() < cfg.dwell_min || dwell.get() > cfg.dwell_max {
+                    return Err(format!(
+                        "dwell {:?} escaped [{:?}, {:?}] on {d:?}",
+                        dwell.get(), cfg.dwell_min, cfg.dwell_max
+                    ));
+                }
+            }
+            // a random reachable margin for the conformance check below
+            let m_probe = margin.get();
+            // sustained overload pins both knobs at their minima
+            let slow = LatencyWindow { count: 100, p50_us: 5e8, p99_us: 1e9 };
+            for _ in 0..60 {
+                step(&cfg, &slow, Some(&margin), &dwell);
+            }
+            if margin.get() != cfg.margin_min || dwell.get() != cfg.dwell_min {
+                return Err(format!(
+                    "overload did not converge to the minima: margin {}, dwell {:?}",
+                    margin.get(), dwell.get()
+                ));
+            }
+            // sustained idle pins both knobs at their maxima
+            let fast = LatencyWindow { count: 100, p50_us: 0.5, p99_us: 1.0 };
+            for _ in 0..400 {
+                step(&cfg, &fast, Some(&margin), &dwell);
+            }
+            if margin.get() != cfg.margin_max || dwell.get() != cfg.dwell_max {
+                return Err(format!(
+                    "idle did not converge to the maxima: margin {}, dwell {:?}",
+                    margin.get(), dwell.get()
+                ));
+            }
+            // dynamic-margin conformance: a cascade steered to m_probe
+            // through the shared knob must be bit-exact with a sequential
+            // cascade statically configured at m_probe
+            let ds = synth_uci(17, uci_spec("vowel").unwrap());
+            let mk = |ipf: usize, epf: usize, bits: usize| {
+                train_oneshot(
+                    &ds,
+                    &OneShotConfig {
+                        inputs_per_filter: ipf,
+                        entries_per_filter: epf,
+                        therm_bits: bits,
+                        seed: *seed,
+                        ..Default::default()
+                    },
+                )
+                .0
+            };
+            let tiers =
+                vec![SharedModel::compile(mk(6, 64, 2)), SharedModel::compile(mk(10, 128, 4))];
+            let f = ds.num_features;
+            let n = 64.min(ds.n_test());
+            let x = &ds.test_x[..n * f];
+            let mut dynamic = ModelRouter::from_shared(&tiers);
+            dynamic.margin_knob().set(m_probe); // steer through a knob clone
+            let got = dynamic.classify_cascade_batch(x, n).map_err(|e| e.to_string())?;
+            let mut stat = ModelRouter::from_shared(&tiers);
+            stat.set_margin_threshold(m_probe);
+            let mut want = Vec::with_capacity(n);
+            for i in 0..n {
+                want.push(
+                    stat.classify_cascade(&x[i * f..(i + 1) * f])
+                        .map_err(|e| e.to_string())?,
+                );
+            }
+            if got != want {
+                return Err(format!(
+                    "knob-steered cascade diverged from static margin {m_probe}"
+                ));
+            }
+            if dynamic.stats.served != stat.stats.served
+                || dynamic.stats.escalations_from != stat.stats.escalations_from
+            {
+                return Err(format!(
+                    "counters diverged at margin {m_probe}: dynamic {:?}/{:?} vs static {:?}/{:?}",
+                    dynamic.stats.served, dynamic.stats.escalations_from,
+                    stat.stats.served, stat.stats.escalations_from
+                ));
+            }
+            // the controller's windowed view drains to zero between
+            // epochs; the cumulative report keeps its totals
+            let metrics = ServerMetrics::new();
+            let k = *burst as usize;
+            let lats = vec![Duration::from_micros(123); k];
+            metrics.record_batch(k, &lats);
+            let w1 = metrics.drain_latency_window();
+            if w1.count != *burst {
+                return Err(format!("first drain saw {} of {burst} samples", w1.count));
+            }
+            let w2 = metrics.drain_latency_window();
+            if w2 != LatencyWindow::default() {
+                return Err(format!("window did not drain to zero: {w2:?}"));
+            }
+            if metrics.report(16).completed != *burst {
+                return Err("draining the window must not touch the cumulative totals".into());
             }
             Ok(())
         },
