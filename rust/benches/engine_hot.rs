@@ -46,8 +46,8 @@ use uleen::coordinator::router::{ModelRouter, Tier};
 use uleen::coordinator::server::{Server, ServerConfig};
 use uleen::data::synth_mnist;
 use uleen::model::ensemble::EnsembleScratch;
-use uleen::model::flat::{FlatBatchScratch, FlatModel};
-use uleen::model::simd::KernelPath;
+use uleen::model::flat::{CompileOptions, FlatBatchScratch, FlatModel};
+use uleen::model::simd::{KernelPath, MaskWidth};
 use uleen::model::submodel::SubmodelScratch;
 use uleen::runtime::{InferenceEngine, NativeEngine, SharedModel, ShardedEngine, ShardedRouterEngine};
 use uleen::util::bitvec::BitVec;
@@ -270,6 +270,121 @@ fn main() -> anyhow::Result<()> {
         assert!(
             simd_speedup >= 1.3,
             "AVX2 kernel regressed below the 1.3x gate: {simd_speedup:.2}x at batch {bs}"
+        );
+    }
+
+    // == mem-plane sweep: packed class-mask planes vs forced u32, and
+    // prefetch on/off, batch 256 (PR-10) ==
+    // Widths are forced through CompileOptions — not read from the
+    // environment — so the sweep measures the same pair of layouts on
+    // every runner regardless of ULEEN_MASK_WIDTH/ULEEN_NO_PREFETCH.
+    let mem_width = MaskWidth::required_for(m);
+    println!(
+        "\n== mem-plane sweep: {} planes vs forced u32, prefetch on/off, batch {bs} ==",
+        mem_width.label()
+    );
+    let flat_packed = FlatModel::compile_with(
+        &model,
+        CompileOptions { mask_width: Some(mem_width), prefetch: Some(true), ..Default::default() },
+    );
+    let flat_u32 = FlatModel::compile_with(
+        &model,
+        CompileOptions {
+            mask_width: Some(MaskWidth::U32),
+            prefetch: Some(true),
+            ..Default::default()
+        },
+    );
+    let flat_nopf = FlatModel::compile_with(
+        &model,
+        CompileOptions { mask_width: Some(mem_width), prefetch: Some(false), ..Default::default() },
+    );
+    let mem_model_bytes = flat_packed.model_bytes();
+    let mem_model_bytes_u32 = flat_u32.model_bytes();
+    let mem_baseline_bytes = flat_packed.baseline_u32_bytes();
+    println!(
+        "resident model plane: {} B packed ({}) vs {} B forced-u32 vs {} B pre-v10 layout",
+        mem_model_bytes,
+        mem_width.label(),
+        mem_model_bytes_u32,
+        mem_baseline_bytes
+    );
+    // bytes-touched-per-sample estimate: every (filter, hash) probe is
+    // one random mask-word load; the CSR stream reads each set input
+    // bit's record run, ~half the encoded bits set on average
+    let mem_bytes_touched: f64 = flat_packed
+        .submodels
+        .iter()
+        .map(|sm| {
+            let nf = sm.cfg.num_filters() as f64;
+            let n_in = sm.cfg.inputs_per_filter as f64;
+            let k = sm.k as f64;
+            nf * k * mem_width.bytes() as f64 + 0.5 * nf * n_in * (k + 1.0) * 8.0
+        })
+        .sum();
+    println!("bytes touched / sample (probe + ~half the CSR stream): ~{mem_bytes_touched:.0} B");
+    let mut packed_scratch = FlatBatchScratch::default();
+    let mut resp_packed = vec![0i32; bs * m];
+    let r_packed = bench_fn(
+        &format!("packed {} masks  ×256", mem_width.label()),
+        w_swp,
+        i_swp,
+        bs as f64,
+        || {
+            flat_packed.responses_batch_fused(&enc, x, bs, &mut packed_scratch, &mut resp_packed);
+            std::hint::black_box(&resp_packed);
+        },
+    );
+    let t_packed = r_packed.throughput_per_sec();
+    record(&mut report, r_packed);
+    let mut u32_scratch = FlatBatchScratch::default();
+    let mut resp_u32 = vec![0i32; bs * m];
+    let r_u32 = bench_fn("forced u32 masks   ×256", w_swp, i_swp, bs as f64, || {
+        flat_u32.responses_batch_fused(&enc, x, bs, &mut u32_scratch, &mut resp_u32);
+        std::hint::black_box(&resp_u32);
+    });
+    let t_u32 = r_u32.throughput_per_sec();
+    record(&mut report, r_u32);
+    let mut nopf_scratch = FlatBatchScratch::default();
+    let mut resp_nopf = vec![0i32; bs * m];
+    let r_nopf = bench_fn("prefetch off       ×256", w_swp, i_swp, bs as f64, || {
+        flat_nopf.responses_batch_fused(&enc, x, bs, &mut nopf_scratch, &mut resp_nopf);
+        std::hint::black_box(&resp_nopf);
+    });
+    let t_nopf = r_nopf.throughput_per_sec();
+    record(&mut report, r_nopf);
+    // bit-exactness across the whole matrix, against the scalar/u32
+    // numbers already computed by the simd sweep above
+    flat_packed.responses_batch_fused(&enc, x, bs, &mut packed_scratch, &mut resp_packed);
+    flat_u32.responses_batch_fused(&enc, x, bs, &mut u32_scratch, &mut resp_u32);
+    flat_nopf.responses_batch_fused(&enc, x, bs, &mut nopf_scratch, &mut resp_nopf);
+    assert_eq!(resp_packed, resp_scalar, "packed planes must be bit-exact with scalar/u32");
+    assert_eq!(resp_u32, resp_scalar, "forced-u32 planes must be bit-exact with scalar/u32");
+    assert_eq!(resp_nopf, resp_scalar, "prefetch must never change a response bit");
+    // ALWAYS-ON exact assert (ISSUE 10 acceptance): a 10-class model's
+    // mask plane is exactly HALF its u32 size
+    assert_eq!(mem_width, MaskWidth::U16, "the MNIST shape serves 10 classes");
+    assert_eq!(
+        flat_packed.mask_plane_bytes() * 2,
+        flat_u32.mask_plane_bytes(),
+        "a 10-class mask plane must be exactly half its u32 size"
+    );
+    assert!(
+        mem_model_bytes < mem_baseline_bytes,
+        "the arena layout must shrink vs the pre-v10 resident bytes"
+    );
+    let packed_speedup = t_packed / t_u32.max(1e-9);
+    let prefetch_speedup = t_packed / t_nopf.max(1e-9);
+    let memplane_gated = std::env::var_os("ULEEN_GATE_MEMPLANE").is_some();
+    println!(
+        "acceptance: packed {packed_speedup:.2}x vs u32, prefetch {prefetch_speedup:.2}x vs off, \
+         half-size plane ✓, bit-exact ✓ (≥ 1.15x gate {})",
+        if memplane_gated { "ARMED" } else { "off" }
+    );
+    if memplane_gated {
+        assert!(
+            packed_speedup >= 1.15,
+            "packed planes regressed below the 1.15x gate: {packed_speedup:.2}x at batch {bs}"
         );
     }
 
@@ -800,6 +915,26 @@ fn main() -> anyhow::Result<()> {
             .set("gated", Json::Bool(simd_gated))
             .set("pool_pinned_workers_max", Json::Num(pool_pinned_max as f64));
         doc.set("simd", simd_doc);
+        let mut mem_doc = Json::obj();
+        mem_doc
+            .set("mask_width", Json::Str(mem_width.label().to_string()))
+            .set("model_bytes", Json::Num(mem_model_bytes as f64))
+            .set("model_bytes_u32", Json::Num(mem_model_bytes_u32 as f64))
+            .set("baseline_pre_v10_bytes", Json::Num(mem_baseline_bytes as f64))
+            .set("mask_plane_bytes", Json::Num(flat_packed.mask_plane_bytes() as f64))
+            .set("mask_plane_bytes_u32", Json::Num(flat_u32.mask_plane_bytes() as f64))
+            .set("bytes_touched_per_sample_est", Json::Num(mem_bytes_touched))
+            .set("packed_sps", Json::Num(t_packed))
+            .set("u32_sps", Json::Num(t_u32))
+            .set("prefetch_off_sps", Json::Num(t_nopf))
+            .set("packed_speedup_b256", Json::Num(packed_speedup))
+            .set("prefetch_speedup_b256", Json::Num(prefetch_speedup))
+            // asserted above — serialized so the trajectory records that
+            // the half-plane and bit-exactness gates ran
+            .set("half_plane_exact", Json::Bool(true))
+            .set("bit_exact", Json::Bool(true))
+            .set("gated", Json::Bool(memplane_gated));
+        doc.set("mem_plane", mem_doc);
         // present iff built with --features alloc-witness; asserted == 0
         // in-bench, so a serialized value records that the gate RAN
         if let Some(apb) = allocs_per_batch {

@@ -314,14 +314,24 @@ fn print_report(report: &MetricsReport, correct: usize, delivered: usize, submit
         report.latency_us_p99_reservoir,
         report.mean_batch_fill * 100.0
     );
+    if report.model_bytes > 0 {
+        println!(
+            "resident model plane: {:.1} KiB (compiled tables + bias, Arc-shared across workers)",
+            report.model_bytes as f64 / 1024.0
+        );
+    }
     for (i, name) in crate::coordinator::router::tier_names(report.num_tiers)
         .iter()
         .enumerate()
         .take(report.num_tiers)
     {
         println!(
-            "  tier {name:<9} served {:>8} samples | escalated {:>7} | mean engine {:.2} µs/sample",
-            report.tier_served[i], report.tier_escalations[i], report.tier_mean_us[i]
+            "  tier {name:<9} served {:>8} samples | escalated {:>7} | mean engine {:.2} µs/sample \
+             | model {:.1} KiB",
+            report.tier_served[i],
+            report.tier_escalations[i],
+            report.tier_mean_us[i],
+            report.tier_model_bytes[i] as f64 / 1024.0
         );
     }
     if report.num_tiers > 0 {

@@ -97,6 +97,12 @@ struct Inner {
     /// SIMD dispatch tier of the serving engines' compiled kernel
     /// ("avx2" / "neon" / "scalar"; "n/a" until an engine reports in)
     kernel_path: &'static str,
+    /// resident bytes of the serving engines' compiled model tables
+    /// (summed over tiers; 0 until an engine reports in)
+    model_bytes: u64,
+    /// per-tier resident model bytes, small → large (all zero on
+    /// tier-blind servers)
+    tier_model_bytes: [u64; 3],
     started: Option<Instant>,
     finished: Option<Instant>,
 }
@@ -128,6 +134,8 @@ impl Default for Inner {
             critical_path_ns: 0,
             num_tiers: 0,
             kernel_path: "n/a",
+            model_bytes: 0,
+            tier_model_bytes: [0; 3],
             started: None,
             finished: None,
         }
@@ -169,6 +177,13 @@ pub struct MetricsReport {
     /// (`"avx2"` / `"neon"` / `"scalar"`; `"n/a"` for engines that don't
     /// run the flat native kernel)
     pub kernel_path: &'static str,
+    /// resident bytes of the serving engines' compiled model tables
+    /// (arena + bias, summed over tiers; 0 = unaccounted, e.g. engines
+    /// not built on the flat native layout)
+    pub model_bytes: u64,
+    /// per-tier resident model bytes, small → large (all zero on
+    /// tier-blind servers; indexed like `tier_served`)
+    pub tier_model_bytes: [u64; 3],
     pub wall_secs: f64,
     pub throughput_rps: f64,
     pub mean_batch_fill: f64,
@@ -318,6 +333,18 @@ impl ServerMetrics {
         self.inner.lock().unwrap().kernel_path = kernel_path;
     }
 
+    /// Record the serving engines' resident model footprint (called once
+    /// when an engine hooks in, from `InferenceEngine::model_bytes` /
+    /// `tier_model_bytes`, and again on a zoo swap) so every `/metrics`
+    /// scrape carries the memory side of the accuracy/latency/memory
+    /// trade — the accounting hook the multi-tenant registry (ROADMAP
+    /// item 5) builds on.
+    pub fn set_model_bytes(&self, total: u64, per_tier: [u64; 3]) {
+        let mut g = self.inner.lock().unwrap();
+        g.model_bytes = total;
+        g.tier_model_bytes = per_tier;
+    }
+
     /// Fold a router's per-tier counter delta into the serving totals
     /// (called by `RouterEngine` after every zoo micro-batch, and by
     /// `ShardedRouterEngine` with the POOL-MERGED delta of a fanned-out
@@ -395,6 +422,8 @@ impl ServerMetrics {
             critical_path_ms: g.critical_path_ns as f64 / 1e6,
             num_tiers: g.num_tiers,
             kernel_path: g.kernel_path,
+            model_bytes: g.model_bytes,
+            tier_model_bytes: g.tier_model_bytes,
             wall_secs: wall,
             throughput_rps: if wall > 0.0 { g.completed as f64 / wall } else { 0.0 },
             mean_batch_fill: if max_batch > 0 { g.batch_sizes.mean() / max_batch as f64 } else { 0.0 },
@@ -428,7 +457,8 @@ impl MetricsReport {
             .set("latency_us_p50_reservoir", Json::Num(self.latency_us_p50_reservoir))
             .set("latency_us_p99_reservoir", Json::Num(self.latency_us_p99_reservoir))
             .set("latency_us_mean", Json::Num(self.latency_us_mean))
-            .set("kernel_path", Json::Str(self.kernel_path.to_string()));
+            .set("kernel_path", Json::Str(self.kernel_path.to_string()))
+            .set("model_bytes", Json::Num(self.model_bytes as f64));
         // One key per tier that actually exists, named by the shared
         // index → label mapping (tier-blind servers emit none).
         let names = crate::coordinator::router::tier_names(self.num_tiers);
@@ -436,7 +466,8 @@ impl MetricsReport {
             let mut t = Json::obj();
             t.set("served", Json::Num(self.tier_served[i] as f64))
                 .set("escalations", Json::Num(self.tier_escalations[i] as f64))
-                .set("mean_engine_us", Json::Num(self.tier_mean_us[i]));
+                .set("mean_engine_us", Json::Num(self.tier_mean_us[i]))
+                .set("model_bytes", Json::Num(self.tier_model_bytes[i] as f64));
             j.set(&format!("tier_{name}"), t);
         }
         if self.num_tiers > 0 {
@@ -506,6 +537,7 @@ mod tests {
             critical_path_ns: 14_000,
         };
         m.set_num_tiers(3);
+        m.set_model_bytes(6_000, [1_000, 2_000, 3_000]);
         m.record_tiers(&d);
         m.record_tiers(&d);
         m.record_malformed(3);
@@ -520,9 +552,12 @@ mod tests {
         );
         assert_eq!(r.malformed, 3);
         assert_eq!(r.batches_failed, 1);
+        assert_eq!(r.model_bytes, 6_000);
+        assert_eq!(r.tier_model_bytes, [1_000, 2_000, 3_000]);
         let json = r.to_json().to_string();
         assert!(json.contains("tier_fast"), "per-tier counters must serialize");
         assert!(json.contains("critical_path_ms"), "the SLO metric must serialize");
+        assert!(json.contains("\"model_bytes\":6000"), "footprint must serialize: {json}");
     }
 
     #[test]

@@ -167,6 +167,22 @@ impl ModelRouter {
         self.engines.first().map(|e| e.kernel_path()).unwrap_or("n/a")
     }
 
+    /// Resident model bytes summed over the zoo's tiers (each tier
+    /// answers for its own compiled tables; non-native tiers report 0).
+    pub fn model_bytes(&self) -> u64 {
+        self.engines.iter().map(|e| e.model_bytes()).sum()
+    }
+
+    /// Per-tier resident model bytes, small → large, aligned with
+    /// [`tier_names`]; unused slots stay 0.
+    pub fn tier_model_bytes(&self) -> [u64; 3] {
+        let mut per = [0u64; 3];
+        for (slot, e) in per.iter_mut().zip(self.engines.iter()) {
+            *slot = e.model_bytes();
+        }
+        per
+    }
+
     pub fn new(engines: Vec<Box<dyn InferenceEngine>>, max_response: Vec<f32>) -> Self {
         assert!(!engines.is_empty() && engines.len() <= 3);
         assert_eq!(engines.len(), max_response.len());
@@ -592,6 +608,7 @@ impl RouterEngine {
     /// tiers that exist).
     pub fn with_metrics(mut self, metrics: Arc<ServerMetrics>) -> Self {
         metrics.set_num_tiers(self.router.num_tiers());
+        metrics.set_model_bytes(self.router.model_bytes(), self.router.tier_model_bytes());
         self.metrics = Some(metrics);
         self
     }
@@ -641,6 +658,14 @@ impl InferenceEngine for RouterEngine {
 
     fn kernel_path(&self) -> &'static str {
         self.router.kernel_path()
+    }
+
+    fn model_bytes(&self) -> u64 {
+        self.router.model_bytes()
+    }
+
+    fn tier_model_bytes(&self) -> [u64; 3] {
+        self.router.tier_model_bytes()
     }
 
     /// Batched-cascade responses: each row carries the scores of the tier

@@ -79,6 +79,10 @@ impl Server {
         let num_features = engines[0].num_features();
         let num_tiers = engines[0].num_tiers();
         metrics.set_kernel_path(engines[0].kernel_path());
+        // Workers share Arc'd tables, so engine 0 speaks for the
+        // server's resident model footprint (zoo engines re-report on
+        // swap through their own with_metrics hook).
+        metrics.set_model_bytes(engines[0].model_bytes(), engines[0].tier_model_bytes());
         let queue = Arc::new(BoundedQueue::with_in_flight(
             cfg.batcher,
             num_features,

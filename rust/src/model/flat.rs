@@ -5,13 +5,22 @@
 //! profiling showed the lookup stage dominating the hot path (~70% of
 //! per-sample time) with pointer-chasing through `Vec<Option<BinaryBloom>>`.
 //!
-//! [`FlatModel::compile`] re-lays every submodel into single contiguous
-//! buffers with **filter-major, class-minor** order — all classes' table
-//! words for a filter are adjacent, matching the traversal order of the
-//! response loop (hash filter once → probe every class). Pruned filters
-//! become all-zero table slots plus a keep-bit, so the inner loop is
-//! branchless on structure. Semantics are identical to the reference path
-//! (asserted by tests and the cross-engine integration suite).
+//! [`FlatModel::compile`] re-lays every submodel into one cache-conscious
+//! **memory plane** (§Perf v10): a single 64-byte-aligned arena holding,
+//! per submodel, (1) width-adaptive class-mask planes in **filter-major,
+//! class-minor** order — all classes' table bits for a filter adjacent,
+//! stored as `u8`/`u16`/`u32` elements picked from the class count
+//! ([`MaskWidth`]) so a 10-class model touches half the random-access
+//! bytes of the old always-`u32` layout; (2) the scatter-hash CSR
+//! **AoS-interleaved** (stride `k + 1`: filter index then its `k` H3
+//! params) so each set input bit reads one contiguous record run instead
+//! of two parallel arrays. Pruned filters become all-zero table slots
+//! plus a keep-bit, so the inner loop is branchless on structure.
+//! Compile-only buffers (`input_order`, the flattened `hash_params`) are
+//! folded into the CSR and NOT retained — [`FlatModel::model_bytes`]
+//! counts exactly what inference keeps resident. Semantics are identical
+//! to the reference path (asserted by tests and the cross-engine
+//! integration suite).
 //!
 //! Batch inference is built around one tile kernel,
 //! [`FlatModel::responses_tile_slices`], that consumes a borrowed
@@ -22,10 +31,15 @@
 //! ([`FlatModel::responses_batch`]) transposes pre-encoded inputs — kept
 //! so conformance tests can drive the kernel from the same encoded bits
 //! as the scalar path.
+//!
+//! The kernels software-prefetch the next CSR span while streaming set
+//! bits and the upcoming class-mask lines while probing (resolved once
+//! at compile; `ULEEN_NO_PREFETCH=1` opts out — prefetch is a pure hint
+//! and never changes a response bit).
 
 use crate::encoding::thermometer::ThermometerEncoder;
 use crate::model::ensemble::UleenModel;
-use crate::model::simd::{self, KernelPath};
+use crate::model::simd::{self, prefetch_read, KernelPath, MaskWidth, MaskWord};
 use crate::model::submodel::SubmodelConfig;
 use crate::util::bitvec::BitVec;
 
@@ -63,60 +77,210 @@ impl<'a> TileSlices<'a> {
     }
 }
 
-/// One submodel compiled to flat arrays.
-///
-/// The table storage is TRANSPOSED relative to the hardware's per-
-/// discriminator view: `class_masks[f * E + e]` is a bitmask over classes
-/// — bit `c` set iff discriminator `c`'s filter `f` is kept AND its table
-/// entry `e` is 1. One probe then costs ONE u32 load for all classes
-/// (instead of `classes` separate random loads), and the AND-over-k probes
-/// is a single word AND. Pruning folds into the masks for free.
-pub struct FlatSubmodel {
-    pub cfg: SubmodelConfig,
-    pub input_order: Vec<u32>,
-    /// H3 params flattened: [k][n] row-major (k rows of n params).
-    pub hash_params: Vec<u64>,
-    pub k: usize,
-    /// class-mask bitplanes, layout [filter][entry] (supports ≤32 classes)
-    pub class_masks: Vec<u32>,
-    pub bias: Vec<i32>,
-    /// Scatter-hash CSR (§Perf v3): instead of gathering every key bit,
-    /// iterate the SET bits of the encoded input once and XOR their hash
-    /// contributions into per-filter accumulators. `csr_off[src]..csr_off
-    /// [src+1]` indexes entries of `(filter, k params)` for input bit `src`
-    /// — H3 linearity makes the order irrelevant.
-    pub csr_off: Vec<u32>,
-    /// filter index per entry
-    pub csr_filter: Vec<u32>,
-    /// k hash-param words per entry (stride k, aligned with csr_filter)
-    pub csr_params: Vec<u64>,
+/// One 64-byte cache line — the arena's allocation unit. `repr(C)` over
+/// a byte array with 64-byte alignment makes a `Vec<Line>` a single
+/// contiguous cache-line-aligned byte buffer.
+#[derive(Clone, Copy)]
+#[repr(C, align(64))]
+struct Line([u8; 64]);
+
+/// One table's location inside the arena: a byte offset (always
+/// 64-byte-aligned, see [`Span::reserve`]) and an element count.
+#[derive(Clone, Copy, Debug, Default)]
+struct Span {
+    off: usize,
+    len: usize,
 }
 
-/// A compiled inference-only model.
+impl Span {
+    /// Reserve `len` elements of `elem_bytes` each, starting at the
+    /// next cache-line boundary past `*cursor`; advances the cursor.
+    /// Line-aligning every section start means no table ever shares a
+    /// line with its neighbor and element alignment (≤ 8) is free.
+    fn reserve(cursor: &mut usize, elem_bytes: usize, len: usize) -> Self {
+        let off = (*cursor + 63) & !63;
+        *cursor = off + elem_bytes * len;
+        Self { off, len }
+    }
+}
+
+/// The single 64-byte-aligned allocation holding every submodel's
+/// compiled tables (class-mask planes, CSR offsets, interleaved CSR
+/// records). One allocation per model means shard workers sharing a
+/// `SharedModel` touch one compact footprint instead of a
+/// heap-scattered `Vec` per table — and makes resident-byte accounting
+/// ([`FlatModel::model_bytes`]) exact. Never serialized: `.uln`
+/// artifacts store the source model and re-compile on load.
+struct Arena {
+    lines: Vec<Line>,
+    /// bytes actually laid out (≤ `lines.len() * 64`)
+    len: usize,
+}
+
+impl Arena {
+    fn with_byte_len(len: usize) -> Self {
+        Self { lines: vec![Line([0u8; 64]); len.div_ceil(64)], len }
+    }
+
+    /// Bytes this arena keeps resident (whole cache lines).
+    fn allocated_bytes(&self) -> usize {
+        self.lines.len() * 64
+    }
+
+    fn base(&self) -> *const u8 {
+        self.lines.as_ptr() as *const u8
+    }
+
+    /// Typed read view of a reserved span. Private, and only ever
+    /// instantiated with primitive integer elements (u8/u16/u32/u64)
+    /// for spans reserved with that exact element size.
+    fn typed<T>(&self, s: Span) -> &[T] {
+        debug_assert_eq!(s.off % 64, 0);
+        debug_assert!(s.off + s.len * std::mem::size_of::<T>() <= self.len);
+        // SAFETY: the span lies inside this arena's initialized
+        // (zero-filled at construction) allocation; its offset is
+        // 64-byte-aligned, which satisfies any primitive integer
+        // alignment; and every bit pattern is a valid value for the
+        // integer types this is instantiated with.
+        unsafe { std::slice::from_raw_parts(self.base().add(s.off) as *const T, s.len) }
+    }
+
+    /// Typed write view of a reserved span — the compile step's fill
+    /// hook. Same instantiation contract as [`Arena::typed`].
+    fn typed_mut<T>(&mut self, s: Span) -> &mut [T] {
+        debug_assert_eq!(s.off % 64, 0);
+        debug_assert!(s.off + s.len * std::mem::size_of::<T>() <= self.len);
+        let base = self.lines.as_mut_ptr() as *mut u8;
+        // SAFETY: as `typed`, and the `&mut self` borrow makes the view
+        // exclusive.
+        unsafe { std::slice::from_raw_parts_mut(base.add(s.off) as *mut T, s.len) }
+    }
+}
+
+/// One submodel compiled into the model's arena.
+///
+/// The table storage is TRANSPOSED relative to the hardware's per-
+/// discriminator view: plane entry `[f * E + e]` is a bitmask over
+/// classes — bit `c` set iff discriminator `c`'s filter `f` is kept AND
+/// its table entry `e` is 1. One probe then costs ONE mask-word load for
+/// all classes (instead of `classes` separate random loads), and the
+/// AND-over-k probes is a single word AND. Pruning folds into the masks
+/// for free. The mask element width is the model's [`MaskWidth`].
+pub struct FlatSubmodel {
+    pub cfg: SubmodelConfig,
+    pub k: usize,
+    pub bias: Vec<i32>,
+    /// class-mask planes, layout `[filter][entry]`, element width =
+    /// the owning model's [`MaskWidth`]
+    masks: Span,
+    /// Scatter-hash CSR (§Perf v3): instead of gathering every key bit,
+    /// iterate the SET bits of the encoded input once and XOR their hash
+    /// contributions into per-filter accumulators. `csr_off[src]..
+    /// csr_off[src+1]` indexes records for input bit `src` — H3
+    /// linearity makes the order irrelevant. u32, `total_input_bits + 1`
+    /// entries.
+    csr_off: Span,
+    /// AoS-interleaved CSR records (§Perf v10), stride `k + 1` u64
+    /// words per scatter entry: `[filter, p_0, .., p_{k-1}]` — one
+    /// contiguous read run per entry instead of parallel
+    /// filter/params arrays.
+    csr: Span,
+}
+
+impl FlatSubmodel {
+    fn csr_off<'a>(&self, arena: &'a Arena) -> &'a [u32] {
+        arena.typed(self.csr_off)
+    }
+
+    fn csr<'a>(&self, arena: &'a Arena) -> &'a [u64] {
+        arena.typed(self.csr)
+    }
+
+    fn masks<'a, W: MaskWord>(&self, arena: &'a Arena) -> &'a [W] {
+        arena.typed(self.masks)
+    }
+}
+
+/// Compile-time knobs for [`FlatModel::compile_with`]. `None` fields
+/// take the default decision (env override, else detection/derivation)
+/// — `Default::default()` is exactly [`FlatModel::compile`]. Explicit
+/// forcing exists so tests and benches can pin a configuration without
+/// mutating process-global env vars.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CompileOptions {
+    /// Forced SIMD dispatch tier (clamped to host support); `None` =
+    /// [`KernelPath::resolve`] (`ULEEN_KERNEL`, else detection).
+    pub kernel: Option<KernelPath>,
+    /// Forced class-mask plane width (widened if too narrow for the
+    /// class count); `None` = [`MaskWidth::resolve`]
+    /// (`ULEEN_MASK_WIDTH`, else narrowest sufficient).
+    pub mask_width: Option<MaskWidth>,
+    /// Force software prefetch on/off; `None` = on unless
+    /// `ULEEN_NO_PREFETCH` is set. A pure hint — never changes results.
+    pub prefetch: Option<bool>,
+}
+
+/// A compiled inference-only model: all tables in one 64-byte-aligned
+/// arena, plus the per-submodel shape/bias metadata describing it.
 pub struct FlatModel {
+    arena: Arena,
     pub submodels: Vec<FlatSubmodel>,
     pub num_classes: usize,
     /// SIMD dispatch tier for the tile kernel, resolved ONCE here at
     /// compile time (§Perf v6) — invariant: always host-supported
     /// (sanitized through [`KernelPath::or_scalar`]).
     kernel: KernelPath,
+    /// Class-mask plane element width, resolved ONCE at compile time
+    /// (§Perf v10) — invariant: always holds `num_classes` (sanitized
+    /// through [`MaskWidth::widen_to_hold`]).
+    width: MaskWidth,
+    /// Software-prefetch upcoming CSR spans / mask lines in the hot
+    /// loops (`ULEEN_NO_PREFETCH` opt-out; pure hint, bit-exact either
+    /// way).
+    prefetch: bool,
+}
+
+/// Per-submodel compile staging — everything pass 1 derives from the
+/// source model before the arena exists. `input_order` and the
+/// flattened H3 params live only here: both are folded into the
+/// interleaved CSR and never become resident.
+struct SubBuild {
+    cfg: SubmodelConfig,
+    k: usize,
+    bias: Vec<i32>,
+    masks_u32: Vec<u32>,
+    csr_off_v: Vec<u32>,
+    csr_v: Vec<u64>,
 }
 
 impl FlatModel {
-    /// Compile with the default dispatch decision
-    /// ([`KernelPath::resolve`]: `ULEEN_KERNEL` env override, else
-    /// runtime feature detection). Panics on a model the flat layout
-    /// cannot represent — use [`FlatModel::try_compile`] to surface
-    /// that as an error instead.
+    /// Env var that disables software prefetch in the compiled hot
+    /// loops (any value). Prefetch is a pure hint: responses are
+    /// bit-exact with it on or off (asserted by the kernel conformance
+    /// tests), so this knob exists for benchmarking and for hosts whose
+    /// prefetchers dislike hints.
+    pub const NO_PREFETCH_ENV: &'static str = "ULEEN_NO_PREFETCH";
+
+    /// Compile with the default decisions ([`KernelPath::resolve`],
+    /// [`MaskWidth::resolve`], prefetch on unless `ULEEN_NO_PREFETCH`).
+    /// Panics on a model the flat layout cannot represent — use
+    /// [`FlatModel::try_compile`] to surface that as an error instead.
     pub fn compile(model: &UleenModel) -> Self {
-        Self::compile_with_kernel(model, KernelPath::resolve())
+        Self::compile_with(model, CompileOptions::default())
     }
 
     /// [`FlatModel::compile`] with a forced dispatch tier — the testing
     /// override the SIMD conformance suite is built on. An unsupported
     /// `kernel` is clamped to scalar, never trusted.
     pub fn compile_with_kernel(model: &UleenModel, kernel: KernelPath) -> Self {
-        Self::try_compile_with_kernel(model, kernel)
+        Self::compile_with(model, CompileOptions { kernel: Some(kernel), ..Default::default() })
+    }
+
+    /// [`FlatModel::compile`] with explicit [`CompileOptions`] — force
+    /// any of kernel tier, mask width, prefetch; leave the rest `None`
+    /// for the default decisions.
+    pub fn compile_with(model: &UleenModel, opts: CompileOptions) -> Self {
+        Self::try_compile_with(model, opts)
             .expect("FlatModel::compile: model incompatible with the flat engine")
     }
 
@@ -124,30 +288,42 @@ impl FlatModel {
     /// funnels through (the `.uln` loader re-checks at parse time so
     /// hostile artifacts fail before any allocation).
     pub fn try_compile(model: &UleenModel) -> crate::Result<Self> {
-        Self::try_compile_with_kernel(model, KernelPath::resolve())
+        Self::try_compile_with(model, CompileOptions::default())
     }
 
-    fn try_compile_with_kernel(model: &UleenModel, kernel: KernelPath) -> crate::Result<Self> {
+    /// Fallible [`FlatModel::compile_with`].
+    pub fn try_compile_with(model: &UleenModel, opts: CompileOptions) -> crate::Result<Self> {
         let m = model.num_classes();
         anyhow::ensure!(
             (1..=32).contains(&m),
-            "flat engine: {m} classes exceed the 32-class capacity of the u32 \
-             class-mask planes (one bit per class; split the label space to serve \
-             this model)"
+            "flat engine: {m} classes exceed the 32-class capacity of the class-mask \
+             planes (one bit per class, u32 at the widest; split the label space to \
+             serve this model)"
         );
-        let submodels = model
+        let kernel = opts.kernel.unwrap_or_else(KernelPath::resolve).or_scalar();
+        let width = match opts.mask_width {
+            Some(w) => w.widen_to_hold(m),
+            None => MaskWidth::resolve(m),
+        };
+        let prefetch = opts
+            .prefetch
+            .unwrap_or_else(|| std::env::var_os(Self::NO_PREFETCH_ENV).is_none());
+
+        // Pass 1 — derive every table from the source model into
+        // ordinary Vecs (compile-time only; dropped once copied).
+        let builds: Vec<SubBuild> = model
             .submodels
             .iter()
             .map(|sm| {
                 let nf = sm.cfg.num_filters();
                 let e = sm.cfg.entries_per_filter;
-                let mut class_masks = vec![0u32; nf * e];
+                let mut masks_u32 = vec![0u32; nf * e];
                 for (c, disc) in sm.discriminators.iter().enumerate() {
                     for (f, filt) in disc.filters.iter().enumerate() {
                         if let Some(filt) = filt {
                             for entry in 0..e {
                                 if filt.table.get(entry) {
-                                    class_masks[f * e + entry] |= 1 << c;
+                                    masks_u32[f * e + entry] |= 1 << c;
                                 }
                             }
                         }
@@ -155,13 +331,16 @@ impl FlatModel {
                 }
                 let k = sm.cfg.k_hashes;
                 let n = sm.cfg.inputs_per_filter;
+                // H3 params flattened [k][n] row-major — compile
+                // staging only, folded into the CSR records below.
                 let mut hash_params = vec![0u64; k * n];
                 for (j, h) in sm.hash.fns.iter().enumerate() {
                     hash_params[j * n..(j + 1) * n].copy_from_slice(&h.params);
                 }
-                // Build the scatter CSR: slot s = f*n + i reads input bit
-                // input_order[s] and contributes params_j[i] to filter f's
-                // j-th hash.
+                // Build the scatter CSR: slot s = f*n + i reads input
+                // bit input_order[s] and contributes params_j[i] to
+                // filter f's j-th hash. Records are interleaved:
+                // [filter, p_0 .. p_{k-1}], stride k+1.
                 let total_bits = sm.cfg.total_input_bits;
                 let mut per_src: Vec<Vec<(u32, Vec<u64>)>> = vec![Vec::new(); total_bits];
                 for f in 0..nf {
@@ -172,31 +351,54 @@ impl FlatModel {
                         per_src[src].push((f as u32, ps));
                     }
                 }
-                let mut csr_off = Vec::with_capacity(total_bits + 1);
-                let mut csr_filter = Vec::new();
-                let mut csr_params = Vec::new();
-                csr_off.push(0u32);
+                let mut csr_off_v = Vec::with_capacity(total_bits + 1);
+                let mut csr_v = Vec::new();
+                csr_off_v.push(0u32);
+                let mut entries = 0u32;
                 for src in 0..total_bits {
                     for (f, ps) in &per_src[src] {
-                        csr_filter.push(*f);
-                        csr_params.extend_from_slice(ps);
+                        csr_v.push(*f as u64);
+                        csr_v.extend_from_slice(ps);
+                        entries += 1;
                     }
-                    csr_off.push(csr_filter.len() as u32);
+                    csr_off_v.push(entries);
                 }
-                FlatSubmodel {
-                    cfg: sm.cfg,
-                    input_order: sm.input_order.clone(),
-                    hash_params,
-                    k,
-                    class_masks,
-                    bias: sm.bias.clone(),
-                    csr_off,
-                    csr_filter,
-                    csr_params,
-                }
+                SubBuild { cfg: sm.cfg, k, bias: sm.bias.clone(), masks_u32, csr_off_v, csr_v }
             })
             .collect();
-        Ok(Self { submodels, num_classes: m, kernel: kernel.or_scalar() })
+
+        // Pass 2 — lay every table out in one arena (each section
+        // starting on its own cache line) and copy the staging in.
+        let mut cursor = 0usize;
+        let spans: Vec<(Span, Span, Span)> = builds
+            .iter()
+            .map(|b| {
+                let masks = Span::reserve(&mut cursor, width.bytes(), b.masks_u32.len());
+                let csr_off = Span::reserve(&mut cursor, 4, b.csr_off_v.len());
+                let csr = Span::reserve(&mut cursor, 8, b.csr_v.len());
+                (masks, csr_off, csr)
+            })
+            .collect();
+        let mut arena = Arena::with_byte_len(cursor);
+        let mut submodels = Vec::with_capacity(builds.len());
+        for (b, (masks, csr_off, csr)) in builds.into_iter().zip(spans) {
+            match width {
+                MaskWidth::U8 => fill_masks::<u8>(&mut arena, masks, &b.masks_u32),
+                MaskWidth::U16 => fill_masks::<u16>(&mut arena, masks, &b.masks_u32),
+                MaskWidth::U32 => fill_masks::<u32>(&mut arena, masks, &b.masks_u32),
+            }
+            arena.typed_mut::<u32>(csr_off).copy_from_slice(&b.csr_off_v);
+            arena.typed_mut::<u64>(csr).copy_from_slice(&b.csr_v);
+            submodels.push(FlatSubmodel {
+                cfg: b.cfg,
+                k: b.k,
+                bias: b.bias,
+                masks,
+                csr_off,
+                csr,
+            });
+        }
+        Ok(Self { arena, submodels, num_classes: m, kernel, width, prefetch })
     }
 
     /// The SIMD dispatch tier this model's tile kernel runs on —
@@ -213,6 +415,63 @@ impl FlatModel {
         self.kernel = kernel.or_scalar();
     }
 
+    /// The class-mask plane element width baked in at compile time.
+    pub fn mask_width(&self) -> MaskWidth {
+        self.width
+    }
+
+    /// Whether the compiled hot loops software-prefetch ahead.
+    pub fn prefetch_enabled(&self) -> bool {
+        self.prefetch
+    }
+
+    /// Bytes this compiled model keeps resident for inference: the
+    /// arena (class-mask planes + CSR, whole cache lines) plus the
+    /// per-submodel bias rows. Surfaced through
+    /// `InferenceEngine::model_bytes`, `/metrics` and the serve
+    /// shutdown report — the accounting the multi-tenant registry
+    /// (ROADMAP item 5) builds on.
+    pub fn model_bytes(&self) -> u64 {
+        let bias: usize = self.submodels.iter().map(|sm| sm.bias.len() * 4).sum();
+        (self.arena.allocated_bytes() + bias) as u64
+    }
+
+    /// Bytes of the class-mask planes alone — the random-access tables
+    /// the probe phase hits, `mask_width × filters × entries` summed
+    /// over submodels. The width-adaptive win in one number: a
+    /// ≤16-class model's planes are exactly half their u32-forced size.
+    pub fn mask_plane_bytes(&self) -> u64 {
+        self.submodels
+            .iter()
+            .map(|sm| (sm.masks.len * self.width.bytes()) as u64)
+            .sum()
+    }
+
+    /// What this model would keep resident in the pre-v10 layout
+    /// (always-u32 masks, split `csr_filter`/`csr_params` arrays,
+    /// resident `input_order` + flattened H3 params, per-table `Vec`s
+    /// with no line padding) — the baseline `model_bytes` savings are
+    /// reported against in the mem-plane bench.
+    pub fn baseline_u32_bytes(&self) -> u64 {
+        self.submodels
+            .iter()
+            .map(|sm| {
+                let nf = sm.cfg.num_filters();
+                let e = sm.cfg.entries_per_filter;
+                let n = sm.cfg.inputs_per_filter;
+                let k = sm.k;
+                let entries = sm.csr.len / (k + 1);
+                (nf * e * 4                         // u32 class masks
+                    + (sm.cfg.total_input_bits + 1) * 4 // csr_off
+                    + entries * 4                   // csr_filter
+                    + entries * k * 8               // csr_params (stride k)
+                    + nf * n * 4                    // resident input_order
+                    + k * n * 8                     // resident hash_params
+                    + sm.bias.len() * 4) as u64
+            })
+            .sum()
+    }
+
     /// Per-class responses for an encoded input, accumulated into `out`
     /// (caller zeroes). `scratch` holds the per-filter hash accumulators
     /// (no allocation after warmup).
@@ -220,9 +479,12 @@ impl FlatModel {
     /// §Perf v3 scatter-hash: H3 is linear, so instead of gathering `n`
     /// bits per filter we stream the encoded input's SET bits once and XOR
     /// each bit's precomputed contribution into its filter's `k` hash
-    /// accumulators (sequential CSR reads, work ∝ set bits ≈ I/2). The
-    /// class-mask probe then collapses the per-class Bloom AND into one
-    /// u32 AND per hash.
+    /// accumulators (sequential interleaved-CSR reads, work ∝ set bits ≈
+    /// I/2; the next span is prefetched while the current one streams).
+    /// The class-mask probe then collapses the per-class Bloom AND into
+    /// one mask-word AND per hash, prefetching the NEXT filter's `k`
+    /// probe lines (their indices are already known) while the current
+    /// filter folds.
     pub fn responses_encoded(
         &self,
         encoded: &BitVec,
@@ -236,6 +498,9 @@ impl FlatModel {
             let e = sm.cfg.entries_per_filter;
             let nf = sm.cfg.num_filters();
             let k = sm.k;
+            let stride = k + 1;
+            let csr_off = sm.csr_off(&self.arena);
+            let csr = sm.csr(&self.arena);
             scratch.h.clear();
             scratch.h.resize(nf * k, 0);
             let h = &mut scratch.h[..];
@@ -246,29 +511,35 @@ impl FlatModel {
                     let bit = w.trailing_zeros() as usize;
                     w &= w - 1;
                     let src = (w_idx << 6) | bit;
-                    let lo = unsafe { *sm.csr_off.get_unchecked(src) } as usize;
-                    let hi = unsafe { *sm.csr_off.get_unchecked(src + 1) } as usize;
+                    let lo = unsafe { *csr_off.get_unchecked(src) } as usize;
+                    let hi = unsafe { *csr_off.get_unchecked(src + 1) } as usize;
+                    if self.prefetch {
+                        // SAFETY: hi ≤ total entries ⇒ hi*stride ≤
+                        // csr.len() (at most one past the end).
+                        prefetch_read(unsafe { csr.as_ptr().add(hi * stride) });
+                    }
                     for t in lo..hi {
-                        let f = unsafe { *sm.csr_filter.get_unchecked(t) } as usize;
-                        let pbase = t * k;
+                        let rb = t * stride;
+                        let f = unsafe { *csr.get_unchecked(rb) } as usize;
                         for j in 0..k {
                             unsafe {
                                 *h.get_unchecked_mut(f * k + j) ^=
-                                    *sm.csr_params.get_unchecked(pbase + j);
+                                    *csr.get_unchecked(rb + 1 + j);
                             }
                         }
                     }
                 }
             }
-            // probe class masks per filter
-            for f in 0..nf {
-                let mut mask = u32::MAX;
-                for j in 0..k {
-                    let idx = unsafe { *h.get_unchecked(f * k + j) } as usize;
-                    mask &= unsafe { *sm.class_masks.get_unchecked(f * e + idx) };
+            // probe class masks per filter, at the compiled plane width
+            match self.width {
+                MaskWidth::U8 => {
+                    probe_filters::<u8>(sm.masks(&self.arena), e, nf, k, h, self.prefetch, m, out)
                 }
-                for (c, o) in out.iter_mut().enumerate().take(m) {
-                    *o += ((mask >> c) & 1) as i32;
+                MaskWidth::U16 => {
+                    probe_filters::<u16>(sm.masks(&self.arena), e, nf, k, h, self.prefetch, m, out)
+                }
+                MaskWidth::U32 => {
+                    probe_filters::<u32>(sm.masks(&self.arena), e, nf, k, h, self.prefetch, m, out)
                 }
             }
             for c in 0..m {
@@ -448,10 +719,11 @@ impl FlatModel {
     /// delegates the three hot phases — CSR hash-slice XOR
     /// accumulation, per-filter index reassembly, class-mask fold +
     /// response scatter — to [`simd::submodel_tile_kernel`] on the
-    /// dispatch tier baked in at compile time ([`KernelPath::resolve`];
-    /// scalar is bit-exact reference, AVX2/NEON asserted against it).
-    /// Both the BitVec adapter and the fused encode feed it. The bias
-    /// add stays here: it is path-independent.
+    /// dispatch tier AND plane width baked in at compile time
+    /// ([`KernelPath::resolve`] / [`MaskWidth::resolve`]; the u32
+    /// scalar kernel is the bit-exact reference, every path × width
+    /// asserted against it). Both the BitVec adapter and the fused
+    /// encode feed it. The bias add stays here: it is path-independent.
     pub fn responses_tile_slices(
         &self,
         tile: TileSlices<'_>,
@@ -466,7 +738,6 @@ impl FlatModel {
         let total_bits = self.submodels[0].cfg.total_input_bits;
         assert_eq!(slices.len(), total_bits, "slice view/model width mismatch");
         for sm in &self.submodels {
-            let e = sm.cfg.entries_per_filter;
             let nf = sm.cfg.num_filters();
             let k = sm.k;
             let ob = sm.cfg.out_bits() as usize;
@@ -477,33 +748,97 @@ impl FlatModel {
             scratch.hash_slices.resize(nf * k * ob, 0);
             scratch.idx.clear();
             scratch.idx.resize(nt, 0);
+            scratch.idx2.clear();
+            scratch.idx2.resize(nt, 0);
             scratch.masks.clear();
             scratch.masks.resize(nt, 0);
-            simd::submodel_tile_kernel(
-                self.kernel,
-                simd::SubmodelTileArgs {
-                    slices,
-                    nt,
-                    m,
-                    e,
-                    nf,
-                    k,
-                    ob,
-                    csr_off: &sm.csr_off,
-                    csr_filter: &sm.csr_filter,
-                    csr_params: &sm.csr_params,
-                    class_masks: &sm.class_masks,
-                    hash_slices: &mut scratch.hash_slices,
-                    idx: &mut scratch.idx,
-                    masks: &mut scratch.masks,
-                    out: &mut *out,
-                },
-            );
+            match self.width {
+                MaskWidth::U8 => self.run_tile::<u8>(sm, slices, nt, scratch, out),
+                MaskWidth::U16 => self.run_tile::<u16>(sm, slices, nt, scratch, out),
+                MaskWidth::U32 => self.run_tile::<u32>(sm, slices, nt, scratch, out),
+            }
             for s in 0..nt {
                 for c in 0..m {
                     out[s * m + c] += sm.bias[c];
                 }
             }
+        }
+    }
+
+    /// Monomorphized tile dispatch for one submodel at plane width `W`
+    /// — builds the kernel ABI view over the arena spans and scratch.
+    fn run_tile<W: MaskWord>(
+        &self,
+        sm: &FlatSubmodel,
+        slices: &[u64],
+        nt: usize,
+        scratch: &mut FlatBatchScratch,
+        out: &mut [i32],
+    ) {
+        simd::submodel_tile_kernel(
+            self.kernel,
+            simd::SubmodelTileArgs {
+                slices,
+                nt,
+                m: self.num_classes,
+                e: sm.cfg.entries_per_filter,
+                nf: sm.cfg.num_filters(),
+                k: sm.k,
+                ob: sm.cfg.out_bits() as usize,
+                csr_off: sm.csr_off(&self.arena),
+                csr: sm.csr(&self.arena),
+                class_masks: sm.masks::<W>(&self.arena),
+                prefetch: self.prefetch,
+                hash_slices: &mut scratch.hash_slices,
+                idx: &mut scratch.idx,
+                idx2: &mut scratch.idx2,
+                masks: &mut scratch.masks,
+                out: &mut *out,
+            },
+        );
+    }
+}
+
+/// Copy the compile-staging u32 masks into the arena at width `W`
+/// (truncation is lossless: only bits `< num_classes ≤ W` are set).
+fn fill_masks<W: MaskWord>(arena: &mut Arena, span: Span, vals: &[u32]) {
+    for (d, &v) in arena.typed_mut::<W>(span).iter_mut().zip(vals) {
+        *d = W::from_u32(v);
+    }
+}
+
+/// The single-sample probe loop at plane width `W`: fold each filter's
+/// `k` mask loads, scatter the class bits, and prefetch the NEXT
+/// filter's probe lines one step ahead (every index is already sitting
+/// in the hash accumulators).
+#[allow(clippy::too_many_arguments)]
+fn probe_filters<W: MaskWord>(
+    table: &[W],
+    e: usize,
+    nf: usize,
+    k: usize,
+    h: &[u64],
+    prefetch: bool,
+    m: usize,
+    out: &mut [i32],
+) {
+    for f in 0..nf {
+        if prefetch && f + 1 < nf {
+            let base = (f + 1) * e;
+            for j in 0..k {
+                let idx = unsafe { *h.get_unchecked((f + 1) * k + j) } as usize;
+                // SAFETY: H3 outputs are masked to out_bits ⇒ idx < e,
+                // so base + idx < nf * e = table.len().
+                prefetch_read(unsafe { table.as_ptr().add(base + idx) });
+            }
+        }
+        let mut mask = u32::MAX;
+        for j in 0..k {
+            let idx = unsafe { *h.get_unchecked(f * k + j) } as usize;
+            mask &= unsafe { table.get_unchecked(f * e + idx) }.to_u32();
+        }
+        for (c, o) in out.iter_mut().enumerate().take(m) {
+            *o += ((mask >> c) & 1) as i32;
         }
     }
 }
@@ -532,6 +867,10 @@ pub struct FlatBatchScratch {
     hash_slices: Vec<u64>,
     /// per-sample table index for one (filter, hash) during the probe
     idx: Vec<u32>,
+    /// second per-sample index buffer — the scalar tier pipelines the
+    /// rebuild one (filter, hash) pair ahead through it so the next
+    /// pair's mask lines can be prefetched
+    idx2: Vec<u32>,
     /// per-sample accumulated class mask for one filter
     masks: Vec<u32>,
     /// tile-sized i32 response staging for the f32 write-into path
@@ -542,6 +881,7 @@ pub struct FlatBatchScratch {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::synth_mnist::synth_mnist;
     use crate::data::synth_uci::{synth_uci, uci_spec};
     use crate::model::ensemble::EnsembleScratch;
     use crate::train::oneshot::{train_oneshot, OneShotConfig};
@@ -689,6 +1029,134 @@ mod tests {
     }
 
     #[test]
+    fn forced_mask_widths_and_prefetch_settings_stay_bit_exact() {
+        let ds = synth_uci(31, uci_spec("vowel").unwrap());
+        let (mut model, _) = train_oneshot(
+            &ds,
+            &OneShotConfig { inputs_per_filter: 10, entries_per_filter: 128, therm_bits: 6, ..Default::default() },
+        );
+        prune_model(&mut model, &ds, 0.25);
+        let m = model.num_classes(); // vowel: 11 classes → u16 required
+        let baseline = FlatModel::compile_with(
+            &model,
+            CompileOptions {
+                kernel: Some(KernelPath::Scalar),
+                mask_width: Some(MaskWidth::U32),
+                prefetch: Some(false),
+            },
+        );
+        let mut fs_a = FlatScratch::default();
+        let mut fs_b = FlatScratch::default();
+        let mut bs_a = FlatBatchScratch::default();
+        let mut bs_b = FlatBatchScratch::default();
+        for width in MaskWidth::all() {
+            for prefetch in [false, true] {
+                let forced = FlatModel::compile_with(
+                    &model,
+                    CompileOptions {
+                        kernel: None, // dispatched tier, like production
+                        mask_width: Some(width),
+                        prefetch: Some(prefetch),
+                    },
+                );
+                // too-narrow forcing widens instead of breaking capacity
+                assert_eq!(forced.mask_width(), width.widen_to_hold(m));
+                assert_eq!(forced.prefetch_enabled(), prefetch);
+                for n in [1usize, 64, 130] {
+                    let n = n.min(ds.n_test());
+                    let x = &ds.test_x[..n * ds.num_features];
+                    let mut want = vec![0i32; n * m];
+                    baseline.responses_batch_fused(&model.encoder, x, n, &mut bs_a, &mut want);
+                    let mut got = vec![0i32; n * m];
+                    forced.responses_batch_fused(&model.encoder, x, n, &mut bs_b, &mut got);
+                    assert_eq!(
+                        got,
+                        want,
+                        "{}/prefetch={prefetch} vs u32 baseline at n={n}",
+                        width.label()
+                    );
+                }
+                // the single-sample scatter path too
+                for i in 0..8.min(ds.n_test()) {
+                    let enc = model.encoder.encode(ds.test_row(i));
+                    let mut want = vec![0i32; m];
+                    baseline.responses_encoded(&enc, &mut fs_a, &mut want);
+                    let mut got = vec![0i32; m];
+                    forced.responses_encoded(&enc, &mut fs_b, &mut got);
+                    assert_eq!(got, want, "{} sample {i}", width.label());
+                }
+            }
+        }
+        // the default decisions match the documented resolution rules
+        let flat = FlatModel::compile(&model);
+        assert_eq!(flat.mask_width(), MaskWidth::resolve(m));
+        assert_eq!(
+            flat.prefetch_enabled(),
+            std::env::var_os(FlatModel::NO_PREFETCH_ENV).is_none()
+        );
+    }
+
+    /// The ISSUE-10 acceptance assert: the MNIST ULN-S shape (784
+    /// features × 4 therm bits, 16 inputs/filter, 256 entries, 10
+    /// classes → u16 planes) keeps FEWER resident bytes than the pre-v10
+    /// layout, with `model_bytes` reproduced exactly from the arena
+    /// arithmetic, and the 10-class mask plane exactly HALF its
+    /// u32-forced size.
+    #[test]
+    fn model_bytes_shrinks_vs_the_pr9_layout_on_the_mnist_shape() {
+        let ds = synth_mnist(7, 48, 8);
+        let (model, _) = train_oneshot(
+            &ds,
+            &OneShotConfig {
+                inputs_per_filter: 16,
+                entries_per_filter: 256,
+                therm_bits: 4,
+                ..Default::default()
+            },
+        );
+        assert_eq!(model.num_classes(), 10);
+        // pin the width so the assert is immune to ULEEN_MASK_WIDTH in
+        // the environment (the fallback CI job forces u32 globally)
+        let flat = FlatModel::compile_with(
+            &model,
+            CompileOptions { mask_width: Some(MaskWidth::U16), ..Default::default() },
+        );
+        let forced_u32 = FlatModel::compile_with(
+            &model,
+            CompileOptions { mask_width: Some(MaskWidth::U32), ..Default::default() },
+        );
+        assert_eq!(flat.mask_width(), MaskWidth::U16);
+        assert_eq!(MaskWidth::required_for(model.num_classes()), MaskWidth::U16);
+
+        // exact reproduction of the arena layout arithmetic
+        let align = |x: usize| (x + 63) & !63;
+        let mut cursor = 0usize;
+        let mut bias_bytes = 0usize;
+        for sm in &flat.submodels {
+            let nf = sm.cfg.num_filters();
+            let e = sm.cfg.entries_per_filter;
+            let n = sm.cfg.inputs_per_filter;
+            let tb = sm.cfg.total_input_bits;
+            let k = sm.k;
+            cursor = align(cursor) + nf * e * 2; // u16 mask plane
+            cursor = align(cursor) + (tb + 1) * 4; // csr_off
+            cursor = align(cursor) + nf * n * (k + 1) * 8; // interleaved CSR
+            bias_bytes += sm.bias.len() * 4;
+        }
+        let expect = (align(cursor) + bias_bytes) as u64;
+        assert_eq!(flat.model_bytes(), expect, "model_bytes must be exact");
+
+        // the tentpole shrink: fewer resident bytes than the PR-9
+        // layout — even the u32-forced arena wins (dropped input_order
+        // exactly pays for the interleave; dropped hash_params covers
+        // the line padding), and the u16 plane halves on top
+        assert!(flat.model_bytes() < flat.baseline_u32_bytes());
+        assert!(forced_u32.model_bytes() < forced_u32.baseline_u32_bytes());
+        assert!(flat.model_bytes() < forced_u32.model_bytes());
+        assert_eq!(flat.mask_plane_bytes() * 2, forced_u32.mask_plane_bytes());
+    }
+
+    #[test]
     fn compile_rejects_more_than_32_classes_with_a_clear_error() {
         use crate::encoding::thermometer::ThermometerKind;
         use crate::model::submodel::Submodel;
@@ -699,7 +1167,7 @@ mod tests {
             inputs_per_filter: 8,
             entries_per_filter: 64,
             k_hashes: 2,
-            num_classes: 33, // one past the u32 class-mask capacity
+            num_classes: 33, // one past the widest class-mask capacity
             total_input_bits: 64,
         };
         let mut rng = Rng::new(5);

@@ -9,14 +9,26 @@
 //!    XOR it into the `out_bits` hash bit-planes its H3 parameters
 //!    select. Vector form: broadcast the slice word, test 4 (AVX2) / 2
 //!    (NEON) parameter bits at once and XOR under the resulting lane
-//!    masks.
+//!    masks. The CSR is AoS-interleaved (stride `k + 1`: filter index
+//!    followed by its `k` params), so each scatter entry is one
+//!    contiguous read run; with prefetch enabled the records just past
+//!    the current span are requested ahead of the stream.
 //! 2. **Per-filter index reassembly** — rebuild each sample's table
 //!    index from the hash bit-planes. Vector form: 8 (AVX2) / 4 (NEON)
 //!    samples per op, one shift-and-OR per plane, then a gathered
-//!    (AVX2 `vpgatherdd`) or staged-scalar (NEON) class-mask load.
+//!    (AVX2 `vpgatherdd`, u32 planes only) or staged-scalar class-mask
+//!    load. Staged probes prefetch the mask line a few samples ahead;
+//!    the scalar tier pipelines whole filter/hash pairs one step ahead
+//!    through a second index buffer.
 //! 3. **Class-mask fold + response scatter** — unpack the folded mask's
 //!    class bits into the response rows, 8 (AVX2) / 4 (NEON) classes
 //!    per op.
+//!
+//! The kernels are generic over the class-mask element width
+//! ([`MaskWord`]: `u8`/`u16`/`u32`, chosen per model by [`MaskWidth`]).
+//! Folding stays in `u32` scratch — narrow masks zero-extend, so a
+//! width never changes a response bit, only the bytes the probe phase
+//! touches.
 //!
 //! Offline constraint: `core::arch` intrinsics only, no external
 //! crates. AVX-512 is deliberately not a tier — its intrinsics are not
@@ -34,7 +46,9 @@
 //! Alignment: the kernels demand nothing beyond `Vec`'s natural
 //! alignment — every vector access is an explicitly unaligned
 //! load/store (`loadu`/`storeu`, `vld1q`/`vst1q`), so scratch buffers
-//! need no over-alignment and resizes can never introduce UB.
+//! need no over-alignment and resizes can never introduce UB. (The
+//! model tables themselves live in `FlatModel`'s 64-byte-aligned arena,
+//! but the kernels only require natural element alignment of them.)
 
 /// Which instruction set the compiled tile kernel runs on. Carried by
 /// every `FlatModel` (chosen at compile time, see
@@ -141,13 +155,194 @@ impl KernelPath {
     }
 }
 
+/// Element width of the compiled class-mask planes — one bit per class,
+/// so a model's class count picks the narrowest word that holds it
+/// (≤ 8 classes → `u8`, ≤ 16 → `u16`, else `u32`). Chosen once at
+/// `FlatModel` compile time (see [`MaskWidth::resolve`]), carried by the
+/// model, and surfaced through `model_bytes` accounting and bench JSON.
+/// Narrower planes cut the random-access bytes the probe phase touches
+/// 2–4× without changing a single response bit (masks zero-extend into
+/// the `u32` fold scratch).
+///
+/// `Ord` follows capacity: `U8 < U16 < U32`, so clamping a forced width
+/// up to what a class count requires is `max`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum MaskWidth {
+    /// 1-byte planes — up to 8 classes.
+    U8,
+    /// 2-byte planes — up to 16 classes (MNIST's 10 lands here).
+    U16,
+    /// 4-byte planes — up to 32 classes, the flat engine's capacity.
+    U32,
+}
+
+impl MaskWidth {
+    /// Env var that forces a plane width: `8`/`u8`, `16`/`u16`,
+    /// `32`/`u32`, or `auto` (= narrowest that holds the class count).
+    /// A forced width too narrow for the model is widened, never
+    /// honored unsoundly — forcing can waste bytes but not break
+    /// capacity. Mirrors [`KernelPath::ENV`].
+    pub const ENV: &'static str = "ULEEN_MASK_WIDTH";
+
+    /// Stable lowercase name, used in accounting / bench JSON.
+    pub fn label(self) -> &'static str {
+        match self {
+            Self::U8 => "u8",
+            Self::U16 => "u16",
+            Self::U32 => "u32",
+        }
+    }
+
+    /// Plane element size in bytes.
+    pub fn bytes(self) -> usize {
+        match self {
+            Self::U8 => 1,
+            Self::U16 => 2,
+            Self::U32 => 4,
+        }
+    }
+
+    /// Classes one plane element can hold (one bit per class).
+    pub fn bits(self) -> usize {
+        self.bytes() * 8
+    }
+
+    /// All widths, narrowest first — the conformance tests' iteration
+    /// set (skip those too narrow for the model under test).
+    pub fn all() -> [Self; 3] {
+        [Self::U8, Self::U16, Self::U32]
+    }
+
+    /// Parse a `ULEEN_MASK_WIDTH` value. `auto` and unknown strings map
+    /// to `None` (= derive from the class count).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "8" | "u8" => Some(Self::U8),
+            "16" | "u16" => Some(Self::U16),
+            "32" | "u32" => Some(Self::U32),
+            _ => None,
+        }
+    }
+
+    /// The narrowest width whose element holds `classes` bits. Callers
+    /// have already rejected `classes > 32` (the flat engine's
+    /// capacity check).
+    pub fn required_for(classes: usize) -> Self {
+        if classes <= 8 {
+            Self::U8
+        } else if classes <= 16 {
+            Self::U16
+        } else {
+            Self::U32
+        }
+    }
+
+    /// This width, widened if it cannot hold `classes` — the
+    /// constructor-facing sanitizer (the width analogue of
+    /// [`KernelPath::or_scalar`]): a `FlatModel` never carries planes
+    /// narrower than its class count.
+    pub fn widen_to_hold(self, classes: usize) -> Self {
+        self.max(Self::required_for(classes))
+    }
+
+    /// The width decision `FlatModel::compile` bakes in: an env
+    /// override (widened to what `classes` requires) wins, otherwise
+    /// the narrowest sufficient width.
+    pub fn resolve(classes: usize) -> Self {
+        match std::env::var(Self::ENV) {
+            Ok(v) => match Self::parse(&v) {
+                Some(w) => w.widen_to_hold(classes),
+                None => Self::required_for(classes),
+            },
+            Err(_) => Self::required_for(classes),
+        }
+    }
+}
+
+/// A class-mask plane element — the type-level side of [`MaskWidth`].
+/// Kernels fold masks in `u32` scratch regardless of storage width;
+/// `to_u32` zero-extends on load, `from_u32` truncates on compile-time
+/// store (sound: compilation only ever sets bits `< num_classes ≤`
+/// the chosen width).
+pub(crate) trait MaskWord: Copy + Send + Sync + 'static {
+    /// The [`MaskWidth`] this element implements.
+    const WIDTH: MaskWidth;
+    fn to_u32(self) -> u32;
+    fn from_u32(v: u32) -> Self;
+}
+
+impl MaskWord for u8 {
+    const WIDTH: MaskWidth = MaskWidth::U8;
+    #[inline(always)]
+    fn to_u32(self) -> u32 {
+        self as u32
+    }
+    #[inline(always)]
+    fn from_u32(v: u32) -> Self {
+        v as u8
+    }
+}
+
+impl MaskWord for u16 {
+    const WIDTH: MaskWidth = MaskWidth::U16;
+    #[inline(always)]
+    fn to_u32(self) -> u32 {
+        self as u32
+    }
+    #[inline(always)]
+    fn from_u32(v: u32) -> Self {
+        v as u16
+    }
+}
+
+impl MaskWord for u32 {
+    const WIDTH: MaskWidth = MaskWidth::U32;
+    #[inline(always)]
+    fn to_u32(self) -> u32 {
+        self
+    }
+    #[inline(always)]
+    fn from_u32(v: u32) -> Self {
+        v
+    }
+}
+
+/// Best-effort software prefetch of the cache line holding `*p` into
+/// L1 for reading. Same hand-declared-intrinsics discipline as the
+/// kernels: `_mm_prefetch` on x86-64 (SSE is ABI-baseline there),
+/// `prfm pldl1keep` via inline asm on aarch64, a no-op elsewhere.
+/// Prefetch never faults architecturally; callers still keep `p`
+/// inside (or one past) its allocation so constructing it is sound.
+#[inline(always)]
+pub(crate) fn prefetch_read<T>(p: *const T) {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: prefetch is a hint — it cannot fault and touches no
+    // Rust-visible state; SSE is baseline on x86_64.
+    unsafe {
+        core::arch::x86_64::_mm_prefetch::<{ core::arch::x86_64::_MM_HINT_T0 }>(p as *const i8);
+    }
+    #[cfg(target_arch = "aarch64")]
+    // SAFETY: PRFM is a hint — it cannot fault and touches no
+    // Rust-visible state.
+    unsafe {
+        core::arch::asm!(
+            "prfm pldl1keep, [{ptr}]",
+            ptr = in(reg) p,
+            options(nostack, preserves_flags, readonly)
+        );
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    let _ = p;
+}
+
 /// Borrowed view of everything one submodel's tile pass needs — the
-/// kernel ABI shared by all dispatch tiers. `hash_slices` must arrive
-/// zeroed (length `nf * k * ob`); `idx`/`masks` are uninitialized
-/// sample-width scratch (length `nt`); `out` is the `nt × m` response
-/// plane the kernel ACCUMULATES into (bias is added by the caller —
-/// it is path-independent).
-pub(crate) struct SubmodelTileArgs<'a> {
+/// kernel ABI shared by all dispatch tiers, generic over the class-mask
+/// plane width `W`. `hash_slices` must arrive zeroed (length
+/// `nf * k * ob`); `idx`/`idx2`/`masks` are uninitialized sample-width
+/// scratch (length `nt`); `out` is the `nt × m` response plane the
+/// kernel ACCUMULATES into (bias is added by the caller — it is
+/// path-independent).
+pub(crate) struct SubmodelTileArgs<'a, W: MaskWord> {
     /// one word per encoded input bit; bit `s` = that bit of sample `s`
     pub slices: &'a [u64],
     /// samples in the tile (1..=64)
@@ -162,17 +357,25 @@ pub(crate) struct SubmodelTileArgs<'a> {
     pub k: usize,
     /// bits per table index (≤ 32)
     pub ob: usize,
+    /// CSR span offsets: entries for source bit `src` live at record
+    /// indices `csr_off[src]..csr_off[src + 1]`
     pub csr_off: &'a [u32],
-    pub csr_filter: &'a [u32],
-    /// k hash-param words per CSR entry, each masked to `ob` bits
-    pub csr_params: &'a [u64],
-    /// class-mask bitplanes, layout `[filter][entry]`
-    pub class_masks: &'a [u32],
+    /// AoS-interleaved CSR records, stride `k + 1` u64 words per entry:
+    /// `[filter, p_0, .., p_{k-1}]`, params masked to `ob` bits
+    pub csr: &'a [u64],
+    /// class-mask planes, layout `[filter][entry]`, element width `W`
+    pub class_masks: &'a [W],
+    /// software-prefetch upcoming CSR spans / class-mask lines
+    /// (resolved once at model compile; `ULEEN_NO_PREFETCH` opt-out)
+    pub prefetch: bool,
     /// bit-sliced H3 accumulators `[(f*k + j) * ob + b]`, pre-zeroed
     pub hash_slices: &'a mut [u64],
-    /// per-sample table-index scratch (scalar + NEON staging)
+    /// per-sample table-index scratch (staging + pipeline "current")
     pub idx: &'a mut [u32],
-    /// per-sample folded class mask for one filter
+    /// second index buffer — the scalar tier's one-pair-ahead pipeline
+    pub idx2: &'a mut [u32],
+    /// per-sample folded class mask for one filter (always u32 — narrow
+    /// plane words zero-extend into it)
     pub masks: &'a mut [u32],
     /// `nt × m` row-major response accumulation plane
     pub out: &'a mut [i32],
@@ -182,10 +385,17 @@ pub(crate) struct SubmodelTileArgs<'a> {
 /// must be host-supported (guaranteed by [`KernelPath::or_scalar`] at
 /// `FlatModel` construction); a non-compiled variant (e.g. `Neon` on
 /// x86) falls through to scalar rather than faulting.
-pub(crate) fn submodel_tile_kernel(path: KernelPath, args: SubmodelTileArgs<'_>) {
+pub(crate) fn submodel_tile_kernel<W: MaskWord>(path: KernelPath, args: SubmodelTileArgs<'_, W>) {
     debug_assert_eq!(args.hash_slices.len(), args.nf * args.k * args.ob);
-    debug_assert!(args.idx.len() >= args.nt && args.masks.len() >= args.nt);
+    debug_assert!(
+        args.idx.len() >= args.nt && args.idx2.len() >= args.nt && args.masks.len() >= args.nt
+    );
     debug_assert_eq!(args.out.len(), args.nt * args.m);
+    debug_assert_eq!(args.class_masks.len(), args.nf * args.e);
+    debug_assert_eq!(
+        args.csr.len(),
+        args.csr_off.last().map_or(0, |&t| t as usize) * (args.k + 1)
+    );
     match path {
         #[cfg(target_arch = "x86_64")]
         // SAFETY: `path == Avx2` only ever reaches a FlatModel via
@@ -199,12 +409,31 @@ pub(crate) fn submodel_tile_kernel(path: KernelPath, args: SubmodelTileArgs<'_>)
 }
 
 /// The portable reference kernel — the pre-SIMD
-/// `responses_tile_slices` inner loop, moved verbatim. Every vector
-/// tier is asserted bit-exact against this.
+/// `responses_tile_slices` inner loop with the phase-2 index rebuild
+/// software-pipelined one filter/hash pair ahead (so the next pair's
+/// class-mask lines can be prefetched while the current pair probes).
+/// Every vector tier is asserted bit-exact against this.
 mod scalar {
-    use super::SubmodelTileArgs;
+    use super::{prefetch_read, MaskWord, SubmodelTileArgs};
 
-    pub(super) fn run(a: SubmodelTileArgs<'_>) {
+    /// Rebuild each sample's table index from one pair's `ob` hash
+    /// bit-planes into `idx[..nt]`.
+    #[inline]
+    fn rebuild_indices(planes: &[u64], nt: usize, idx: &mut [u32]) {
+        let idx = &mut idx[..nt];
+        idx.fill(0);
+        for (b, &w) in planes.iter().enumerate() {
+            let mut w = w;
+            while w != 0 {
+                let s = w.trailing_zeros() as usize;
+                w &= w - 1;
+                debug_assert!(s < nt);
+                idx[s] |= 1 << b;
+            }
+        }
+    }
+
+    pub(super) fn run<W: MaskWord>(a: SubmodelTileArgs<'_, W>) {
         let SubmodelTileArgs {
             slices,
             nt,
@@ -214,28 +443,39 @@ mod scalar {
             k,
             ob,
             csr_off,
-            csr_filter,
-            csr_params,
+            csr,
             class_masks,
+            prefetch,
             hash_slices,
             idx,
+            idx2,
             masks,
             out,
         } = a;
+        let stride = k + 1;
         // Phase 1 — bit-sliced hashing: hash_slices[(f*k + j)*ob + b]
-        // bit s = bit b of sample s's j-th hash for filter f.
+        // bit s = bit b of sample s's j-th hash for filter f. Records
+        // are interleaved, so one CSR entry is one contiguous read run.
         for (src, &w) in slices.iter().enumerate() {
             if w == 0 {
                 continue;
             }
             let lo = csr_off[src] as usize;
             let hi = csr_off[src + 1] as usize;
+            if prefetch {
+                // The records just past this span head the next span a
+                // later set bit will stream — spans are adjacent in the
+                // arena, so this warms the stream's continuation.
+                // SAFETY: hi ≤ total entries, so hi*stride ≤ csr.len()
+                // (at most one past the end, which `add` permits).
+                prefetch_read(unsafe { csr.as_ptr().add(hi * stride) });
+            }
             for t in lo..hi {
-                let f = unsafe { *csr_filter.get_unchecked(t) } as usize;
+                let rb = t * stride;
+                let f = unsafe { *csr.get_unchecked(rb) } as usize;
                 let base = f * k * ob;
-                let pbase = t * k;
                 for j in 0..k {
-                    let mut p = unsafe { *csr_params.get_unchecked(pbase + j) };
+                    let mut p = unsafe { *csr.get_unchecked(rb + 1 + j) };
                     let hb = base + j * ob;
                     while p != 0 {
                         let b = p.trailing_zeros() as usize;
@@ -249,25 +489,42 @@ mod scalar {
         }
         // Phases 2+3 — per filter: reassemble each sample's table index
         // from the hash bit-planes, fold the k class-mask loads, then
-        // scatter the mask's class bits into the response rows.
+        // scatter the mask's class bits into the response rows. The
+        // rebuild runs one (filter, hash) pair ahead through a second
+        // buffer so the NEXT pair's mask lines prefetch while the
+        // current pair probes — same probe order and arithmetic as the
+        // unpipelined loop, bit-exact by construction.
+        let pairs = nf * k;
+        if pairs == 0 {
+            return;
+        }
+        let (mut cur, mut nxt) = (idx, idx2);
+        rebuild_indices(&hash_slices[..ob], nt, cur);
         for f in 0..nf {
             masks[..nt].fill(u32::MAX);
             for j in 0..k {
-                let idx = &mut idx[..nt];
-                idx.fill(0);
-                let hb = (f * k + j) * ob;
-                for (b, &w) in hash_slices[hb..hb + ob].iter().enumerate() {
-                    let mut w = w;
-                    while w != 0 {
-                        let s = w.trailing_zeros() as usize;
-                        w &= w - 1;
-                        debug_assert!(s < nt);
-                        idx[s] |= 1 << b;
+                let t = f * k + j;
+                if t + 1 < pairs {
+                    rebuild_indices(&hash_slices[(t + 1) * ob..(t + 2) * ob], nt, nxt);
+                    if prefetch {
+                        let fnext = (t + 1) / k;
+                        let tbase = fnext * e;
+                        for &i in &nxt[..nt] {
+                            // SAFETY: indices are < e (params masked to
+                            // ob bits), so tbase + i < nf * e.
+                            prefetch_read(unsafe {
+                                class_masks.as_ptr().add(tbase + i as usize)
+                            });
+                        }
                     }
                 }
                 for (s, mask) in masks[..nt].iter_mut().enumerate() {
-                    *mask &= unsafe { *class_masks.get_unchecked(f * e + idx[s] as usize) };
+                    *mask &= unsafe {
+                        class_masks.get_unchecked(f * e + cur[s] as usize)
+                    }
+                    .to_u32();
                 }
+                std::mem::swap(&mut cur, &mut nxt);
             }
             for (s, &mask) in masks[..nt].iter().enumerate() {
                 let row = &mut out[s * m..(s + 1) * m];
@@ -279,20 +536,26 @@ mod scalar {
     }
 }
 
-/// 256-bit AVX2 tier. All loads/stores unaligned; the class-mask probe
-/// uses `vpgatherdd` (in-bounds because every hash param is masked to
-/// `ob` bits at both `.uln` load and H3 construction, so indices are
-/// `< e`).
+/// 256-bit AVX2 tier. All loads/stores unaligned; on u32 planes the
+/// class-mask probe uses `vpgatherdd` (in-bounds because every hash
+/// param is masked to `ob` bits at both `.uln` load and H3
+/// construction, so indices are `< e`); narrower planes stage the
+/// vector-built indices through `idx` and probe scalar-wise with the
+/// mask line prefetched a few samples ahead (a 1/2-byte gather would
+/// read past the element — there is no sub-dword gather).
 #[cfg(target_arch = "x86_64")]
 mod avx2 {
-    use super::SubmodelTileArgs;
+    use super::{prefetch_read, MaskWidth, MaskWord, SubmodelTileArgs};
     use core::arch::x86_64::*;
+
+    /// How many samples ahead the staged probe prefetches.
+    const PROBE_AHEAD: usize = 8;
 
     /// # Safety
     /// Caller must have verified AVX2 support
     /// (`is_x86_feature_detected!("avx2")`).
     #[target_feature(enable = "avx2")]
-    pub(super) unsafe fn run(a: SubmodelTileArgs<'_>) {
+    pub(super) unsafe fn run<W: MaskWord>(a: SubmodelTileArgs<'_, W>) {
         let SubmodelTileArgs {
             slices,
             nt,
@@ -302,17 +565,19 @@ mod avx2 {
             k,
             ob,
             csr_off,
-            csr_filter,
-            csr_params,
+            csr,
             class_masks,
+            prefetch,
             hash_slices,
-            idx: _,
+            idx,
+            idx2: _,
             masks,
             out,
         } = a;
         // gather offsets are signed 32-bit; anything close to 2^31
         // entries per filter could never have been compiled anyway
         debug_assert!(e <= 1 << 30);
+        let stride = k + 1;
         let ones64 = _mm256_set1_epi64x(1);
         let ones32 = _mm256_set1_epi32(1);
         let lane = _mm256_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7);
@@ -325,12 +590,16 @@ mod avx2 {
             let wv = _mm256_set1_epi64x(w as i64);
             let lo = *csr_off.get_unchecked(src) as usize;
             let hi = *csr_off.get_unchecked(src + 1) as usize;
+            if prefetch {
+                // warm the next span's records (hi*stride ≤ csr.len())
+                prefetch_read(csr.as_ptr().add(hi * stride));
+            }
             for t in lo..hi {
-                let f = *csr_filter.get_unchecked(t) as usize;
+                let rb = t * stride;
+                let f = *csr.get_unchecked(rb) as usize;
                 let base = f * k * ob;
-                let pbase = t * k;
                 for j in 0..k {
-                    let p = *csr_params.get_unchecked(pbase + j);
+                    let p = *csr.get_unchecked(rb + 1 + j);
                     if p == 0 {
                         continue;
                     }
@@ -365,40 +634,86 @@ mod avx2 {
         }
         // Phases 2+3 — 8 samples per op: rebuild indices plane-by-plane
         // (broadcast the plane's relevant byte window, per-lane shift,
-        // mask, OR into position), gather the class masks, fold; then
-        // scatter each sample's mask 8 classes per op.
+        // mask, OR into position), then either gather the class masks
+        // (u32 planes) or stage the indices and probe with prefetch
+        // ahead (narrow planes); finally scatter each sample's mask 8
+        // classes per op.
         for f in 0..nf {
             masks[..nt].fill(u32::MAX);
-            let table = class_masks.as_ptr().add(f * e) as *const i32;
+            let tbase = class_masks.as_ptr().add(f * e);
+            if prefetch && W::WIDTH == MaskWidth::U32 && f + 1 < nf {
+                // gather gives no per-index hook, so at least warm the
+                // next filter's table head while this one folds
+                prefetch_read(class_masks.as_ptr().add((f + 1) * e));
+            }
             for j in 0..k {
                 let hb = (f * k + j) * ob;
-                let mut s0 = 0usize;
-                while s0 + 8 <= nt {
-                    let mut iv = _mm256_setzero_si256();
-                    for b in 0..ob {
-                        let pw = *hash_slices.get_unchecked(hb + b);
-                        // lanes 0..7 ← bits s0..s0+7 of the plane word
-                        let lo32 = _mm256_set1_epi32((pw >> s0) as u32 as i32);
-                        let bits = _mm256_and_si256(_mm256_srlv_epi32(lo32, lane), ones32);
-                        iv = _mm256_or_si256(
-                            iv,
-                            _mm256_sll_epi32(bits, _mm_cvtsi32_si128(b as i32)),
+                if W::WIDTH == MaskWidth::U32 {
+                    let table = tbase as *const i32;
+                    let mut s0 = 0usize;
+                    while s0 + 8 <= nt {
+                        let mut iv = _mm256_setzero_si256();
+                        for b in 0..ob {
+                            let pw = *hash_slices.get_unchecked(hb + b);
+                            // lanes 0..7 ← bits s0..s0+7 of the plane word
+                            let lo32 = _mm256_set1_epi32((pw >> s0) as u32 as i32);
+                            let bits = _mm256_and_si256(_mm256_srlv_epi32(lo32, lane), ones32);
+                            iv = _mm256_or_si256(
+                                iv,
+                                _mm256_sll_epi32(bits, _mm_cvtsi32_si128(b as i32)),
+                            );
+                        }
+                        let gathered = _mm256_i32gather_epi32::<4>(table, iv);
+                        let mptr = masks.as_mut_ptr().add(s0) as *mut __m256i;
+                        _mm256_storeu_si256(
+                            mptr,
+                            _mm256_and_si256(_mm256_loadu_si256(mptr), gathered),
                         );
+                        s0 += 8;
                     }
-                    let gathered = _mm256_i32gather_epi32::<4>(table, iv);
-                    let mptr = masks.as_mut_ptr().add(s0) as *mut __m256i;
-                    _mm256_storeu_si256(
-                        mptr,
-                        _mm256_and_si256(_mm256_loadu_si256(mptr), gathered),
-                    );
-                    s0 += 8;
-                }
-                for s in s0..nt {
-                    let mut iw = 0usize;
-                    for b in 0..ob {
-                        iw |= (((*hash_slices.get_unchecked(hb + b) >> s) & 1) as usize) << b;
+                    for s in s0..nt {
+                        let mut iw = 0usize;
+                        for b in 0..ob {
+                            iw |=
+                                (((*hash_slices.get_unchecked(hb + b) >> s) & 1) as usize) << b;
+                        }
+                        *masks.get_unchecked_mut(s) &=
+                            (*class_masks.get_unchecked(f * e + iw)).to_u32();
                     }
-                    *masks.get_unchecked_mut(s) &= *class_masks.get_unchecked(f * e + iw);
+                } else {
+                    // narrow planes: same vector index build, staged
+                    // through `idx`, then a prefetch-ahead scalar probe
+                    let mut s0 = 0usize;
+                    while s0 + 8 <= nt {
+                        let mut iv = _mm256_setzero_si256();
+                        for b in 0..ob {
+                            let pw = *hash_slices.get_unchecked(hb + b);
+                            let lo32 = _mm256_set1_epi32((pw >> s0) as u32 as i32);
+                            let bits = _mm256_and_si256(_mm256_srlv_epi32(lo32, lane), ones32);
+                            iv = _mm256_or_si256(
+                                iv,
+                                _mm256_sll_epi32(bits, _mm_cvtsi32_si128(b as i32)),
+                            );
+                        }
+                        _mm256_storeu_si256(idx.as_mut_ptr().add(s0) as *mut __m256i, iv);
+                        s0 += 8;
+                    }
+                    for s in s0..nt {
+                        let mut iw = 0u32;
+                        for b in 0..ob {
+                            iw |= (((*hash_slices.get_unchecked(hb + b) >> s) & 1) as u32) << b;
+                        }
+                        *idx.get_unchecked_mut(s) = iw;
+                    }
+                    for s in 0..nt {
+                        if prefetch && s + PROBE_AHEAD < nt {
+                            prefetch_read(
+                                tbase.add(*idx.get_unchecked(s + PROBE_AHEAD) as usize),
+                            );
+                        }
+                        *masks.get_unchecked_mut(s) &=
+                            (*tbase.add(*idx.get_unchecked(s) as usize)).to_u32();
+                    }
                 }
             }
             for s in 0..nt {
@@ -427,16 +742,20 @@ mod avx2 {
 
 /// 128-bit NEON tier (aarch64). No vector gather exists, so phase 2
 /// stages reassembled indices through the `idx` scratch and probes the
-/// class masks scalar-wise; phases 1 and 3 are fully vectorized.
+/// class masks scalar-wise (with the mask line prefetched a few samples
+/// ahead); phases 1 and 3 are fully vectorized.
 #[cfg(target_arch = "aarch64")]
 mod neon {
-    use super::SubmodelTileArgs;
+    use super::{prefetch_read, MaskWord, SubmodelTileArgs};
     use core::arch::aarch64::*;
+
+    /// How many samples ahead the staged probe prefetches.
+    const PROBE_AHEAD: usize = 8;
 
     /// # Safety
     /// NEON must be available (it is ABI-baseline on aarch64).
     #[target_feature(enable = "neon")]
-    pub(super) unsafe fn run(a: SubmodelTileArgs<'_>) {
+    pub(super) unsafe fn run<W: MaskWord>(a: SubmodelTileArgs<'_, W>) {
         let SubmodelTileArgs {
             slices,
             nt,
@@ -446,14 +765,16 @@ mod neon {
             k,
             ob,
             csr_off,
-            csr_filter,
-            csr_params,
+            csr,
             class_masks,
+            prefetch,
             hash_slices,
             idx,
+            idx2: _,
             masks,
             out,
         } = a;
+        let stride = k + 1;
         let one32 = vdupq_n_u32(1);
         // negative vector shifts = right shifts for vshlq
         let rsh = vld1q_s32([0i32, -1, -2, -3].as_ptr());
@@ -466,12 +787,16 @@ mod neon {
             let wv = vdupq_n_u64(w);
             let lo = *csr_off.get_unchecked(src) as usize;
             let hi = *csr_off.get_unchecked(src + 1) as usize;
+            if prefetch {
+                // warm the next span's records (hi*stride ≤ csr.len())
+                prefetch_read(csr.as_ptr().add(hi * stride));
+            }
             for t in lo..hi {
-                let f = *csr_filter.get_unchecked(t) as usize;
+                let rb = t * stride;
+                let f = *csr.get_unchecked(rb) as usize;
                 let base = f * k * ob;
-                let pbase = t * k;
                 for j in 0..k {
-                    let p = *csr_params.get_unchecked(pbase + j);
+                    let p = *csr.get_unchecked(rb + 1 + j);
                     if p == 0 {
                         continue;
                     }
@@ -494,9 +819,11 @@ mod neon {
             }
         }
         // Phases 2+3 — 4 samples per op into the `idx` staging buffer,
-        // scalar class-mask probe, then a 4-classes-per-op scatter.
+        // prefetch-ahead scalar class-mask probe, then a
+        // 4-classes-per-op scatter.
         for f in 0..nf {
             masks[..nt].fill(u32::MAX);
+            let tbase = class_masks.as_ptr().add(f * e);
             for j in 0..k {
                 let hb = (f * k + j) * ob;
                 let mut s0 = 0usize;
@@ -519,8 +846,11 @@ mod neon {
                     *idx.get_unchecked_mut(s) = iw;
                 }
                 for s in 0..nt {
-                    *masks.get_unchecked_mut(s) &= *class_masks
-                        .get_unchecked(f * e + *idx.get_unchecked(s) as usize);
+                    if prefetch && s + PROBE_AHEAD < nt {
+                        prefetch_read(tbase.add(*idx.get_unchecked(s + PROBE_AHEAD) as usize));
+                    }
+                    *masks.get_unchecked_mut(s) &=
+                        (*tbase.add(*idx.get_unchecked(s) as usize)).to_u32();
                 }
             }
             for s in 0..nt {
@@ -578,6 +908,34 @@ mod tests {
         assert!(all.contains(&KernelPath::detect()));
     }
 
+    #[test]
+    fn mask_width_parse_label_selection_and_clamp() {
+        for w in MaskWidth::all() {
+            assert_eq!(MaskWidth::parse(w.label()), Some(w));
+            assert_eq!(w.bits(), w.bytes() * 8);
+        }
+        assert_eq!(MaskWidth::parse(" U16 "), Some(MaskWidth::U16));
+        assert_eq!(MaskWidth::parse("8"), Some(MaskWidth::U8));
+        assert_eq!(MaskWidth::parse("32"), Some(MaskWidth::U32));
+        assert_eq!(MaskWidth::parse("auto"), None);
+        assert_eq!(MaskWidth::parse("64"), None);
+
+        assert_eq!(MaskWidth::required_for(1), MaskWidth::U8);
+        assert_eq!(MaskWidth::required_for(8), MaskWidth::U8);
+        assert_eq!(MaskWidth::required_for(9), MaskWidth::U16);
+        assert_eq!(MaskWidth::required_for(10), MaskWidth::U16);
+        assert_eq!(MaskWidth::required_for(16), MaskWidth::U16);
+        assert_eq!(MaskWidth::required_for(17), MaskWidth::U32);
+        assert_eq!(MaskWidth::required_for(32), MaskWidth::U32);
+
+        // forcing can widen but never drop below what the class count
+        // needs — the width analogue of or_scalar's "never fault"
+        assert_eq!(MaskWidth::U8.widen_to_hold(12), MaskWidth::U16);
+        assert_eq!(MaskWidth::U8.widen_to_hold(20), MaskWidth::U32);
+        assert_eq!(MaskWidth::U32.widen_to_hold(3), MaskWidth::U32);
+        assert_eq!(MaskWidth::U16.widen_to_hold(10), MaskWidth::U16);
+    }
+
     /// Tiny deterministic LCG so the synthetic-kernel conformance cases
     /// below don't depend on any dataset or trainer.
     struct Lcg(u64);
@@ -588,13 +946,60 @@ mod tests {
         }
     }
 
+    /// Drive one synthetic shape through the kernel ABI on one
+    /// (path, width, prefetch) combination. The u32-valued masks are
+    /// truncated into `W` storage exactly like compilation does — the
+    /// caller guarantees `m ≤ W::WIDTH.bits()` so no set bit is lost.
+    #[allow(clippy::too_many_arguments)]
+    fn run_case<W: MaskWord>(
+        path: KernelPath,
+        prefetch: bool,
+        (nf, ob, k, nt, m): (usize, usize, usize, usize, usize),
+        csr_off: &[u32],
+        csr: &[u64],
+        masks_u32: &[u32],
+        slices: &[u64],
+    ) -> Vec<i32> {
+        let e = 1usize << ob;
+        let class_masks: Vec<W> = masks_u32.iter().map(|&v| W::from_u32(v)).collect();
+        let mut hash_slices = vec![0u64; nf * k * ob];
+        let mut idx = vec![0u32; nt];
+        let mut idx2 = vec![0u32; nt];
+        let mut masks = vec![0u32; nt];
+        let mut out = vec![0i32; nt * m];
+        submodel_tile_kernel(
+            path,
+            SubmodelTileArgs {
+                slices,
+                nt,
+                m,
+                e,
+                nf,
+                k,
+                ob,
+                csr_off,
+                csr,
+                class_masks: &class_masks,
+                prefetch,
+                hash_slices: &mut hash_slices,
+                idx: &mut idx,
+                idx2: &mut idx2,
+                masks: &mut masks,
+                out: &mut out,
+            },
+        );
+        out
+    }
+
     /// Build a random-but-valid synthetic submodel shape and assert
-    /// every host-supported path produces responses bit-identical to
-    /// scalar — directly at the kernel ABI, no model required. Shapes
-    /// chosen to hit every vector width's main loop AND its tail
-    /// (ob % 4, nt % 8, m % 8 all nonzero in at least one case).
+    /// every host-supported path × plane width × prefetch setting
+    /// produces responses bit-identical to the u32 scalar reference —
+    /// directly at the kernel ABI, no model required. Shapes chosen to
+    /// hit every vector width's main loop AND its tail (ob % 4, nt % 8,
+    /// m % 8 all nonzero in at least one case), and class counts that
+    /// exercise every MaskWidth (m = 3 → all three, m = 32 → u32 only).
     #[test]
-    fn every_supported_path_matches_scalar_on_synthetic_kernels() {
+    fn every_supported_path_and_width_matches_scalar_on_synthetic_kernels() {
         for (seed, nf, ob, k, nt, m, total_bits) in [
             (1u64, 3usize, 4usize, 2usize, 64usize, 8usize, 24usize),
             (2, 2, 5, 3, 64, 10, 16),
@@ -612,23 +1017,27 @@ mod tests {
                     per_src[(f * slots_per_filter + i * 7) % total_bits].push(f);
                 }
             }
+            // interleaved records: [filter, p_0 .. p_{k-1}], stride k+1
             let mut csr_off = vec![0u32];
-            let mut csr_filter = Vec::new();
-            let mut csr_params = Vec::new();
+            let mut csr = Vec::new();
+            let mut entries = 0u32;
             for fs in &per_src {
                 for &f in fs {
-                    csr_filter.push(f as u32);
+                    csr.push(f as u64);
                     for _ in 0..k {
                         // params masked to ob bits, like real H3 params
-                        csr_params.push(rng.next() & ((1u64 << ob) - 1));
+                        csr.push(rng.next() & ((1u64 << ob) - 1));
                     }
+                    entries += 1;
                 }
+                csr_off.push(entries);
             }
-            csr_off.extend((1..=total_bits).map(|s| {
-                per_src[..s].iter().map(|v| v.len() as u32).sum::<u32>()
-            }));
+            // mask values restricted to the m class bits compilation
+            // would ever set, so every sufficient width stores them
+            // exactly
+            let mbits = if m == 32 { u32::MAX } else { (1u32 << m) - 1 };
             let class_masks: Vec<u32> =
-                (0..nf * e).map(|_| rng.next() as u32).collect();
+                (0..nf * e).map(|_| rng.next() as u32 & mbits).collect();
             let slices: Vec<u64> = (0..total_bits)
                 .map(|_| {
                     let w = rng.next();
@@ -636,42 +1045,43 @@ mod tests {
                 })
                 .collect();
 
-            let run_path = |path: KernelPath| -> Vec<i32> {
-                let mut hash_slices = vec![0u64; nf * k * ob];
-                let mut idx = vec![0u32; nt];
-                let mut masks = vec![0u32; nt];
-                let mut out = vec![0i32; nt * m];
-                submodel_tile_kernel(
-                    path,
-                    SubmodelTileArgs {
-                        slices: &slices,
-                        nt,
-                        m,
-                        e,
-                        nf,
-                        k,
-                        ob,
-                        csr_off: &csr_off,
-                        csr_filter: &csr_filter,
-                        csr_params: &csr_params,
-                        class_masks: &class_masks,
-                        hash_slices: &mut hash_slices,
-                        idx: &mut idx,
-                        masks: &mut masks,
-                        out: &mut out,
-                    },
-                );
-                out
-            };
-
-            let want = run_path(KernelPath::Scalar);
-            for path in KernelPath::all_supported() {
-                assert_eq!(
-                    run_path(path),
-                    want,
-                    "seed {seed}: {} diverges from scalar",
-                    path.label()
-                );
+            let shape = (nf, ob, k, nt, m);
+            let want = run_case::<u32>(
+                KernelPath::Scalar,
+                false,
+                shape,
+                &csr_off,
+                &csr,
+                &class_masks,
+                &slices,
+            );
+            for width in MaskWidth::all() {
+                if m > width.bits() {
+                    continue;
+                }
+                for path in KernelPath::all_supported() {
+                    for prefetch in [false, true] {
+                        let got = match width {
+                            MaskWidth::U8 => run_case::<u8>(
+                                path, prefetch, shape, &csr_off, &csr, &class_masks, &slices,
+                            ),
+                            MaskWidth::U16 => run_case::<u16>(
+                                path, prefetch, shape, &csr_off, &csr, &class_masks, &slices,
+                            ),
+                            MaskWidth::U32 => run_case::<u32>(
+                                path, prefetch, shape, &csr_off, &csr, &class_masks, &slices,
+                            ),
+                        };
+                        assert_eq!(
+                            got,
+                            want,
+                            "seed {seed}: {}/{}/prefetch={prefetch} diverges from the u32 \
+                             scalar reference",
+                            path.label(),
+                            width.label()
+                        );
+                    }
+                }
             }
         }
     }

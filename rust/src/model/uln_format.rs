@@ -230,13 +230,14 @@ pub fn from_bytes(bytes: &[u8], name: &str) -> Result<(UleenModel, Json)> {
             bail!("submodel {si}: implausible class count {num_classes}");
         }
         // Distinct from the plausibility bound above: the flat engine packs
-        // one bit per class into u32 class-mask planes, so every serving
-        // path tops out at 32 classes. Reject at load time — not deep in
-        // `FlatModel` compile — so a bad artifact fails before allocation.
+        // one bit per class into width-adaptive (u8/u16/u32) class-mask
+        // planes, so every serving path tops out at 32 classes. Reject at
+        // load time — not deep in `FlatModel` compile — so a bad artifact
+        // fails before allocation.
         if num_classes > 32 {
             bail!(
                 "submodel {si}: {num_classes} classes exceed the 32-class capacity \
-                 of the flat engine's u32 class-mask planes"
+                 of the flat engine's class-mask planes (u32 at the widest)"
             );
         }
         let cfg = SubmodelConfig {
@@ -426,6 +427,34 @@ mod tests {
         let bytes = to_bytes(&m, &Json::obj());
         let err = from_bytes(&bytes, "x").unwrap_err().to_string();
         assert!(err.contains("32-class capacity"), "got: {err}");
+    }
+
+    #[test]
+    fn mask_width_choice_survives_save_load() {
+        // The `.uln` format stores the SOURCE model; the mask-plane width
+        // is a pure function of its class count (plus compile options),
+        // so a loaded artifact must compile to the same width — at every
+        // forcing, and at the default resolution — as the original.
+        use crate::model::flat::{CompileOptions, FlatModel};
+        use crate::model::simd::MaskWidth;
+        let m = sample_model(); // 3 classes → u8 when unforced
+        let bytes = to_bytes(&m, &Json::obj());
+        let (back, _) = from_bytes(&bytes, "x").unwrap();
+        assert_eq!(back.num_classes(), m.num_classes());
+        let defaults = (
+            FlatModel::compile(&m).mask_width(),
+            FlatModel::compile(&back).mask_width(),
+        );
+        assert_eq!(defaults.0, defaults.1, "default width must survive save/load");
+        assert_eq!(defaults.0, MaskWidth::resolve(m.num_classes()));
+        for w in MaskWidth::all() {
+            let opts = CompileOptions { mask_width: Some(w), ..Default::default() };
+            let a = FlatModel::compile_with(&m, opts);
+            let b = FlatModel::compile_with(&back, opts);
+            assert_eq!(a.mask_width(), b.mask_width(), "forced {} must survive", w.label());
+            assert_eq!(a.model_bytes(), b.model_bytes(), "identical layouts byte for byte");
+            assert_eq!(a.mask_plane_bytes(), b.mask_plane_bytes());
+        }
     }
 
     #[test]

@@ -82,9 +82,25 @@ impl SharedModel {
         Self { model: Arc::new(model), flat }
     }
 
+    /// [`SharedModel::compile`] with explicit
+    /// [`CompileOptions`](crate::model::flat::CompileOptions) — force any
+    /// of kernel tier, mask-plane width, prefetch. The conformance
+    /// proptests drive whole engines through this to pin a memory-plane
+    /// configuration without mutating process-global env vars.
+    pub fn compile_with(model: UleenModel, opts: crate::model::flat::CompileOptions) -> Self {
+        let flat = Arc::new(crate::model::flat::FlatModel::compile_with(&model, opts));
+        Self { model: Arc::new(model), flat }
+    }
+
     /// The compiled tile kernel's SIMD dispatch tier.
     pub fn kernel_path(&self) -> crate::model::simd::KernelPath {
         self.flat.kernel_path()
+    }
+
+    /// Resident bytes of the compiled inference tables (arena + bias) —
+    /// see [`FlatModel::model_bytes`](crate::model::flat::FlatModel::model_bytes).
+    pub fn model_bytes(&self) -> u64 {
+        self.flat.model_bytes()
     }
 
     pub fn model(&self) -> &Arc<UleenModel> {
@@ -185,6 +201,23 @@ pub trait InferenceEngine: Send {
     /// Engines not built on the flat native kernel report `"n/a"`.
     fn kernel_path(&self) -> &'static str {
         "n/a"
+    }
+
+    /// Resident bytes of the engine's compiled model tables (summed over
+    /// every tier for zoo engines), surfaced in `/metrics` as
+    /// `model_bytes` — the memory-accounting hook the multi-tenant
+    /// registry (ROADMAP item 5) builds on. Engines not built on the
+    /// flat native layout report 0 ("unaccounted", not "free").
+    fn model_bytes(&self) -> u64 {
+        0
+    }
+
+    /// Per-tier resident model bytes for zoo engines, small → large,
+    /// aligned with the `/metrics` tier naming (`fast`/`balanced`/
+    /// `accurate`); unused slots stay 0. Tier-blind engines keep the
+    /// default all-zero answer.
+    fn tier_model_bytes(&self) -> [u64; 3] {
+        [0; 3]
     }
 
     /// Tier-routed batch classification into `out[..n]` — what the
@@ -334,6 +367,10 @@ impl InferenceEngine for NativeEngine {
 
     fn kernel_path(&self) -> &'static str {
         self.shared.kernel_path().label()
+    }
+
+    fn model_bytes(&self) -> u64 {
+        self.shared.model_bytes()
     }
 
     fn responses_into(&mut self, x: &[f32], n: usize, out: &mut [f32]) -> crate::Result<()> {

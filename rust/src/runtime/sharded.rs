@@ -475,6 +475,11 @@ impl InferenceEngine for ShardedEngine {
         self.shared.kernel_path().label()
     }
 
+    fn model_bytes(&self) -> u64 {
+        // one Arc-shared compiled model regardless of shard count
+        self.shared.model_bytes()
+    }
+
     fn responses_into(&mut self, x: &[f32], n: usize, out: &mut [f32]) -> crate::Result<()> {
         let f = self.num_features();
         anyhow::ensure!(x.len() == n * f, "bad input length");
@@ -656,6 +661,7 @@ impl ShardedRouterEngine {
     /// [`RouterEngine::with_metrics`]: crate::coordinator::router::RouterEngine::with_metrics
     pub fn with_metrics(mut self, metrics: Arc<ServerMetrics>) -> Self {
         metrics.set_num_tiers(self.routers[0].num_tiers());
+        metrics.set_model_bytes(self.model_bytes(), self.tier_model_bytes());
         self.metrics = Some(metrics);
         self
     }
@@ -755,10 +761,11 @@ impl ShardedRouterEngine {
         // Rebuild over the engine's own knob (NOT a fresh one): a clone
         // held by the autopilot keeps steering the swapped-in generation.
         self.routers = build_routers(&tiers, &self.margin, self.shards);
+        self.tiers = tiers;
         if let Some(m) = &self.metrics {
             m.set_num_tiers(self.routers[0].num_tiers());
+            m.set_model_bytes(self.model_bytes(), self.tier_model_bytes());
         }
-        self.tiers = tiers;
     }
 
     /// Fan one batch across the pool: contiguous row ranges, one
@@ -887,6 +894,21 @@ impl InferenceEngine for ShardedRouterEngine {
             .first()
             .map(|t| t.kernel_path().label())
             .unwrap_or("n/a")
+    }
+
+    fn model_bytes(&self) -> u64 {
+        // tiers are Arc-shared across the pool: ONE copy per tier, so
+        // the zoo total is a plain sum (0 for the from_routers test
+        // path, which holds no shared tiers — "unaccounted")
+        self.tiers.iter().map(SharedModel::model_bytes).sum()
+    }
+
+    fn tier_model_bytes(&self) -> [u64; 3] {
+        let mut per = [0u64; 3];
+        for (slot, t) in per.iter_mut().zip(self.tiers.iter()) {
+            *slot = t.model_bytes();
+        }
+        per
     }
 
     /// Sharded batched-cascade responses: each row carries the scores of

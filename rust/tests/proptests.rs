@@ -794,6 +794,161 @@ fn prop_simd_kernel_paths_match_scalar_bit_exactly() {
     );
 }
 
+/// PR-10 memory-plane conformance: the width-adaptive class-mask planes
+/// (`u8`/`u16`/`u32`, chosen from the class count or forced via
+/// `CompileOptions`/`ULEEN_MASK_WIDTH`) must be BIT-EXACT against a
+/// forced-u32 forced-scalar prefetch-off baseline — across every forced
+/// width × every supported kernel path × prefetch on/off, on pruned
+/// models with dead-tie rows, at batches straddling the 64-sample tile
+/// (1/63/64/65/257), and through whole engines (`NativeEngine`,
+/// `ShardedRouterEngine`) built over width-forced `SharedModel`s. Width,
+/// kernel and prefetch are all model-resident compile decisions, so
+/// forcing them here exercises the real per-tile dispatch, not a shim.
+/// Too-narrow forcings (u8 on 11-class vowel) must WIDEN to capacity,
+/// never truncate a class bit.
+#[test]
+fn prop_mask_widths_match_u32_baseline() {
+    use uleen::model::flat::CompileOptions;
+    use uleen::model::simd::{KernelPath, MaskWidth};
+    use uleen::runtime::{SharedModel, ShardedRouterEngine};
+    let mut case_no = 0usize;
+    check(
+        "mask-width-vs-u32-exact",
+        &Config { cases: 6, ..Config::default() },
+        move |rng, _size| {
+            let i = case_no;
+            case_no += 1;
+            let cfg = OneShotConfig {
+                inputs_per_filter: 4 + rng.below(16) as usize,
+                entries_per_filter: 1 << (4 + rng.below(5)),
+                k_hashes: 1 + rng.below(3) as usize,
+                therm_bits: 1 + rng.below(6) as usize,
+                therm_kind: if rng.below(2) == 0 {
+                    ThermometerKind::Linear
+                } else {
+                    ThermometerKind::Gaussian
+                },
+                val_fraction: 0.1,
+                seed: rng.next_u64(),
+            };
+            let prune = if rng.below(2) == 0 { 0.0 } else { 0.3 };
+            let tie_rows = rng.below(2) == 0;
+            // deterministic batch cycle so the default case budget hits
+            // every tile/vector-tail geometry at least once
+            let n = [1usize, 63, 64, 65, 257][i % 5];
+            (cfg, prune, tie_rows, n)
+        },
+        |(cfg, prune, tie_rows, n)| {
+            let ds = synth_uci(41, uci_spec("vowel").unwrap());
+            let (mut model, _) = train_oneshot(&ds, cfg);
+            if *prune > 0.0 {
+                uleen::train::prune::prune_model(&mut model, &ds, *prune);
+            }
+            let f = ds.num_features;
+            let n = *n;
+            // cycle test rows so batch 257 exists regardless of split size
+            let mut x: Vec<f32> = Vec::with_capacity(n * f);
+            for i in 0..n {
+                x.extend_from_slice(ds.test_row(i % ds.n_test()));
+            }
+            if *tie_rows {
+                // constant rows encode identically → equal responses, so
+                // a width- or prefetch-dependent accumulation order would
+                // flip argmax
+                for v in x.iter_mut().take(n * f / 2) {
+                    *v = 0.0;
+                }
+            }
+            let baseline = FlatModel::compile_with(
+                &model,
+                CompileOptions {
+                    kernel: Some(KernelPath::Scalar),
+                    mask_width: Some(MaskWidth::U32),
+                    prefetch: Some(false),
+                },
+            );
+            let m = baseline.num_classes;
+            let mut want = vec![0i32; n * m];
+            let mut bs = FlatBatchScratch::default();
+            baseline.responses_batch_fused(&model.encoder, &x, n, &mut bs, &mut want);
+            let want_pred: Vec<usize> =
+                (0..n).map(|i| argmax_tie_low(&want[i * m..(i + 1) * m])).collect();
+            for width in MaskWidth::all() {
+                for path in KernelPath::all_supported() {
+                    for prefetch in [false, true] {
+                        let opts = CompileOptions {
+                            kernel: Some(path),
+                            mask_width: Some(width),
+                            prefetch: Some(prefetch),
+                        };
+                        let forced = FlatModel::compile_with(&model, opts);
+                        if forced.mask_width() != width.widen_to_hold(m) {
+                            return Err(format!(
+                                "{} did not clamp to capacity for {m} classes",
+                                width.label()
+                            ));
+                        }
+                        let mut got = vec![0i32; n * m];
+                        let mut fbs = FlatBatchScratch::default();
+                        forced.responses_batch_fused(&model.encoder, &x, n, &mut fbs, &mut got);
+                        if got != want {
+                            let at =
+                                got.iter().zip(&want).position(|(a, b)| a != b).unwrap();
+                            return Err(format!(
+                                "{}/{}/prefetch={prefetch} response[{at}] = {} != baseline {} \
+                                 (n={n}, prune={prune})",
+                                width.label(),
+                                path.label(),
+                                got[at],
+                                want[at]
+                            ));
+                        }
+                        // the single-sample scatter path probes the same
+                        // planes through different code — spot-check it
+                        let mut fs = FlatScratch::default();
+                        for i in 0..4.min(n) {
+                            let enc = model.encoder.encode(&x[i * f..(i + 1) * f]);
+                            let mut one = vec![0i32; m];
+                            forced.responses_encoded(&enc, &mut fs, &mut one);
+                            if one != want[i * m..(i + 1) * m] {
+                                return Err(format!(
+                                    "{}/{}/prefetch={prefetch}: scalar scatter path diverged \
+                                     at row {i}",
+                                    width.label(),
+                                    path.label()
+                                ));
+                            }
+                        }
+                    }
+                }
+                // whole engines over a width-forced SharedModel: the width
+                // is model-resident, so it must ride through the engine
+                // layers (single-threaded, and the sharded cascade with a
+                // margin that never escalates) unchanged
+                let opts = CompileOptions { mask_width: Some(width), ..Default::default() };
+                let shared = SharedModel::compile_with(model.clone(), opts);
+                if shared.model_bytes() == 0 {
+                    return Err("SharedModel must account its resident bytes".into());
+                }
+                let mut native = NativeEngine::from_shared(shared.clone());
+                let p_native = native.classify(&x, n).map_err(|e| e.to_string())?;
+                if p_native != want_pred {
+                    return Err(format!("{}: NativeEngine != baseline (n={n})", width.label()));
+                }
+                let mut zoo = ShardedRouterEngine::from_shared(vec![shared], 0.0, 3);
+                let p_zoo = zoo.classify(&x, n).map_err(|e| e.to_string())?;
+                if p_zoo != want_pred {
+                    return Err(format!(
+                        "{}: ShardedRouterEngine != baseline (n={n})",
+                        width.label()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Pure reference model of the batcher's split semantics, transliterated
 /// from the pre-ring `VecDeque` implementation: FIFO order, each batch is
 /// the longest same-tier prefix of what remains, capped at `max_batch`.
